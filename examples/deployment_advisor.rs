@@ -1,0 +1,70 @@
+//! Deployment advisor: the paper's Appendix C scenarios end-to-end.
+//!
+//! Three deployments with very different constraints:
+//!   1. Mobile/edge    — LLaMA-2-7B on a 24 GB consumer card, memory-
+//!      constrained preferences;
+//!   2. Cloud API      — LLaMA-2-70B on the 8xH200 node, accuracy-
+//!      critical preferences;
+//!   3. Research       — Mistral-7B on A100, latency-critical.
+//!
+//! For each, AE-LLM produces a configuration card (Appendix C format).
+//!
+//! ```bash
+//! cargo run --release --offline --example deployment_advisor
+//! ```
+
+use ae_llm::coordinator::{optimize, AeLlmParams, Scenario};
+use ae_llm::hardware;
+use ae_llm::metrics::Preferences;
+use ae_llm::report::tables::scenario_card;
+use ae_llm::util::Rng;
+
+fn main() {
+    let scenarios = [
+        (
+            "Scenario 1: Mobile / edge assistant (memory-constrained)",
+            Scenario::for_model("LLaMA-2-7B")
+                .unwrap()
+                .with_platform(hardware::rtx4090())
+                .with_prefs(Preferences::memory_constrained()),
+        ),
+        (
+            "Scenario 2: Cloud API (accuracy-critical)",
+            Scenario::for_model("LLaMA-2-70B")
+                .unwrap()
+                .with_platform(hardware::h200_cluster())
+                .with_prefs(Preferences::accuracy_critical()),
+        ),
+        (
+            "Scenario 3: Research iteration (latency-critical)",
+            Scenario::for_model("Mistral-7B")
+                .unwrap()
+                .with_platform(hardware::a100())
+                .with_prefs(Preferences::latency_critical()),
+        ),
+        (
+            "Scenario 4: Green AI batch processing (energy-first)",
+            Scenario::for_model("Qwen-14B")
+                .unwrap()
+                .with_prefs(Preferences::green_ai()),
+        ),
+    ];
+
+    for (i, (title, scenario)) in scenarios.into_iter().enumerate() {
+        let mut rng = Rng::new(100 + i as u64);
+        let out = optimize(&scenario, &AeLlmParams::small(), &mut rng);
+        println!("{}", scenario_card(title, &scenario, &out));
+
+        // The advisor's sanity contract: feasible on the target platform
+        // and within the paper's accuracy-preservation band.
+        assert!(
+            out.chosen_objectives.memory_gb
+                <= scenario.testbed.platform.mem_capacity_gb,
+            "advisor returned an infeasible configuration"
+        );
+        let acc_drop = out.reference.default.accuracy
+            - out.chosen_objectives.accuracy;
+        assert!(acc_drop <= 2.0, "accuracy drop {acc_drop:.2} too large");
+    }
+    println!("all deployment scenarios solved within constraints");
+}

@@ -1,0 +1,58 @@
+//! Quickstart: optimize the efficiency configuration of one model for
+//! one deployment scenario and print the Pareto front.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use ae_llm::coordinator::{optimize, AeLlmParams, Scenario};
+use ae_llm::metrics::utility;
+use ae_llm::util::Rng;
+
+fn main() {
+    // 1. Describe the deployment: model, task mix, hardware, preferences.
+    //    `for_model` picks the paper's hardware tier for the model scale
+    //    (Mistral-7B -> A100-80GB) and the blended task mix.
+    let scenario = Scenario::for_model("Mistral-7B").expect("model in zoo");
+    println!(
+        "optimizing {} on {} for task {:?}",
+        scenario.model.name, scenario.testbed.platform.name,
+        scenario.task.name
+    );
+
+    // 2. Run AE-LLM (Algorithm 1): surrogate-guided NSGA-II with
+    //    hardware-in-the-loop refinement against the testbed.
+    let mut rng = Rng::new(7);
+    let out = optimize(&scenario, &AeLlmParams::small(), &mut rng);
+
+    // 3. Inspect the Pareto front: each entry is a measured trade-off.
+    println!("\nPareto front ({} configurations):", out.pareto.len());
+    let mut entries: Vec<_> = out.pareto.entries().to_vec();
+    entries.sort_by(|a, b| {
+        a.objectives.latency_ms.partial_cmp(&b.objectives.latency_ms)
+            .unwrap()
+    });
+    for e in &entries {
+        println!(
+            "  {:>6.1} ms | {:>5.1} GB | {:>5.2} J | acc {:>5.1} | {}",
+            e.objectives.latency_ms, e.objectives.memory_gb,
+            e.objectives.energy_j, e.objectives.accuracy,
+            e.config.signature()
+        );
+    }
+
+    // 4. The chosen configuration maximizes the Eq.-4 utility under the
+    //    scenario's preference weights.
+    println!(
+        "\nchosen: {}\n  utility {:.3} | efficiency score {:.2}x \
+         | accuracy {:.1} (default {:.1})\n  search cost: {} testbed \
+         evaluations, {} surrogate predictions",
+        out.chosen.signature(),
+        utility(&out.chosen_objectives, &out.reference, &scenario.prefs),
+        out.chosen_efficiency_score,
+        out.chosen_objectives.accuracy,
+        out.reference.default.accuracy,
+        out.testbed_evals,
+        out.surrogate_evals,
+    );
+}

@@ -1,0 +1,195 @@
+"""AOT pipeline: lower every model variant to HLO text + manifest.
+
+This is the only place Python touches the system.  ``make artifacts``
+runs it once; afterwards the rust coordinator is self-contained: it reads
+``artifacts/manifest.json`` to discover the variants and loads
+``artifacts/<name>.hlo.txt`` through ``HloModuleProto::from_text_file``.
+
+Interchange is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+The variant set covers the axes the paper's search space exercises at
+inference time — attention kind × quantization × MoE × LoRA — at a scale
+the CPU PJRT client executes in milliseconds, so the rust refinement loop
+(Algorithm 1 line 5, "evaluate on actual hardware") performs *real*
+measurements.  Each quantized variant shares its weight seed with an
+fp16 sibling (``fidelity_baseline``) so the runtime can measure numeric
+fidelity (quantized logits vs full-precision logits) as the accuracy
+proxy.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ModelConfig, build_forward_fn, flops_per_token, \
+    param_count, weight_bytes
+
+WEIGHT_SEED = 1234  # shared by all variants -> fidelity is comparable
+
+
+def variant_registry():
+    """(name, ModelConfig, batch, seq, fidelity_baseline) for every artifact.
+
+    The grid: 4 attention kinds × {fp16, int8, int4} quant, plus MoE,
+    LoRA and a larger "serve" variant used by the batched-serving
+    example.  fp16 variants are their own baseline.
+    """
+    out = []
+
+    def add(name, cfg, batch=4, seq=64, baseline=None):
+        out.append((name, cfg, batch, seq, baseline or name))
+
+    for attn in ("mha", "gqa", "mqa", "mla"):
+        base = f"{attn}_fp16"
+        add(base, ModelConfig(attention=attn, quant="fp16"))
+        for quant in ("int8", "int4"):
+            add(f"{attn}_{quant}",
+                ModelConfig(attention=attn, quant=quant), baseline=base)
+
+    # MoE variants (gqa backbone).
+    add("gqa_fp16_moe4",
+        ModelConfig(attention="gqa", quant="fp16", moe_experts=4,
+                    moe_top_k=2))
+    add("gqa_int8_moe4",
+        ModelConfig(attention="gqa", quant="int8", moe_experts=4,
+                    moe_top_k=2), baseline="gqa_fp16_moe4")
+
+    # LoRA variant (QLoRA-shaped: int8 base + f32 adapters).
+    add("gqa_fp16_lora16",
+        ModelConfig(attention="gqa", quant="fp16", lora_rank=16))
+    add("gqa_int8_lora16",
+        ModelConfig(attention="gqa", quant="int8", lora_rank=16),
+        baseline="gqa_fp16_lora16")
+
+    # Serving variant: bigger batch/seq for the batched-request example.
+    add("serve_gqa_int8",
+        ModelConfig(attention="gqa", quant="int8"), batch=8, seq=128,
+        baseline="serve_gqa_fp16")
+    add("serve_gqa_fp16",
+        ModelConfig(attention="gqa", quant="fp16"), batch=8, seq=128)
+    return out
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange).
+
+    ``print_large_constants=True`` is essential: the default HLO printer
+    elides big literals as ``constant({...})``, which the text parser on
+    the rust side re-reads as *zeros* — the model's weights are baked
+    into the graph as constants and must survive the round-trip.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_variant(cfg: ModelConfig, batch: int, seq: int) -> str:
+    fn = build_forward_fn(cfg, seed=WEIGHT_SEED)
+    spec = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    return to_hlo_text(jax.jit(fn).lower(spec))
+
+
+def _inputs_fingerprint() -> str:
+    """Hash of the compile-path sources; lets `make artifacts` skip."""
+    root = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256()
+    for dirpath, _, files in sorted(os.walk(root)):
+        if "__pycache__" in dirpath:
+            continue
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated variant names to (re)build")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    fingerprint = _inputs_fingerprint()
+    stamp = os.path.join(args.out_dir, ".fingerprint")
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    all_files_present = all(
+        os.path.exists(os.path.join(args.out_dir, f"{name}.hlo.txt"))
+        for name, *_ in variant_registry())
+    if (args.only is None and all_files_present and os.path.exists(stamp)
+            and os.path.exists(manifest_path)):
+        with open(stamp) as f:
+            if f.read().strip() == fingerprint:
+                print("artifacts up to date; nothing to do")
+                return
+
+    only = set(args.only.split(",")) if args.only else None
+    entries = []
+    t_all = time.time()
+    for name, cfg, batch, seq, baseline in variant_registry():
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        if only is None or name in only:
+            t0 = time.time()
+            text = lower_variant(cfg, batch, seq)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"  {name:<22} {len(text)/1e6:6.2f} MB HLO  "
+                  f"({time.time()-t0:.1f}s)")
+        entries.append({
+            "name": name,
+            "file": f"{name}.hlo.txt",
+            "fidelity_baseline": baseline,
+            "batch": batch,
+            "seq": seq,
+            "config": cfg.to_dict(),
+            "param_count": param_count(cfg),
+            "weight_bytes": weight_bytes(cfg),
+            "flops_per_token": flops_per_token(cfg, seq),
+        })
+
+    with open(manifest_path, "w") as f:
+        json.dump({"weight_seed": WEIGHT_SEED, "variants": entries}, f,
+                  indent=2)
+
+    # Cross-layer goldens: expected logits for a deterministic token
+    # pattern, so the rust runtime can verify it reproduces the python
+    # numerics exactly (integration test `golden_numerics`).
+    goldens = {}
+    for name in ("gqa_fp16", "gqa_int8", "mla_int4"):
+        cfg, batch, seq = next((c, b, s) for n, c, b, s, _ in
+                               variant_registry() if n == name)
+        tokens = jnp.asarray(
+            [[(i * 7 + 3) % cfg.vocab for i in range(seq)]] * batch,
+            dtype=jnp.int32)
+        logits = build_forward_fn(cfg, seed=WEIGHT_SEED)(tokens)[0]
+        flat = [float(x) for x in jnp.ravel(logits)[:32]]
+        goldens[name] = {
+            "first32": flat,
+            "mean_abs": float(jnp.mean(jnp.abs(logits))),
+        }
+    with open(os.path.join(args.out_dir, "goldens.json"), "w") as f:
+        json.dump(goldens, f, indent=2)
+    if only is None:  # partial rebuilds don't count as up-to-date
+        with open(stamp, "w") as f:
+            f.write(fingerprint)
+    elif os.path.exists(stamp):
+        os.remove(stamp)
+    print(f"wrote {len(entries)} variants + manifest.json "
+          f"({time.time()-t_all:.1f}s total)")
+
+
+if __name__ == "__main__":
+    main()

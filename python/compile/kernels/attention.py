@@ -1,0 +1,129 @@
+"""Pallas tiled attention kernel with grouped KV heads (Layer 1).
+
+One kernel covers the paper's attention-architecture axis:
+
+* **MHA**  — ``kv_heads == q_heads`` (group size 1);
+* **GQA**  — ``kv_heads  < q_heads`` (group size q/kv);
+* **MQA**  — ``kv_heads == 1``;
+* **MLA**  — expressed at Layer 2 as a latent down-/up-projection whose
+  output feeds this same kernel (the KV-cache compression happens in the
+  projection, not the attention loop).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the CUDA flash-attention
+formulation (one threadblock per q-tile, K/V staged through shared
+memory) becomes a Pallas grid over ``(batch, q_head, q_block)`` where the
+``BlockSpec`` index maps route each q head to its kv head
+(``h -> h // group``), and the kernel streams K/V sequence blocks through
+an online-softmax accumulator held in VMEM scratch.  GQA/MQA memory
+savings show up directly as smaller KV ``BlockSpec`` footprints.
+
+``interpret=True`` everywhere — see quant_matmul.py header.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_Q = 32
+BLOCK_KV = 32
+NEG_INF = -1e30
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, o_ref, *, block_kv, causal,
+                      sm_scale):
+    """One (batch, q-head, q-block) program.
+
+    q_ref: (1, 1, block_q, D); k_ref/v_ref: (1, 1, S, D) — the kv head
+    for this q head, full sequence; o_ref: (1, 1, block_q, D).
+    Streams K/V in ``block_kv`` chunks with the online-softmax recurrence
+    (running max ``m``, normalizer ``l``, unnormalized accumulator
+    ``acc``).
+    """
+    block_q, d = q_ref.shape[2], q_ref.shape[3]
+    s = k_ref.shape[2]
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale
+    k_all = k_ref[0, 0]
+    v_all = v_ref[0, 0]
+    q_block_idx = pl.program_id(2)
+    q_offset = q_block_idx * block_q
+
+    num_kv_blocks = s // block_kv
+
+    def body(kv_idx, carry):
+        acc, m_prev, l_prev = carry
+        kv_offset = kv_idx * block_kv
+        k_blk = jax.lax.dynamic_slice(k_all, (kv_offset, 0),
+                                      (block_kv, d)).astype(jnp.float32)
+        v_blk = jax.lax.dynamic_slice(v_all, (kv_offset, 0),
+                                      (block_kv, d)).astype(jnp.float32)
+        logits = q @ k_blk.T  # (block_q, block_kv)
+        if causal:
+            q_pos = q_offset + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 0)
+            k_pos = kv_offset + jax.lax.broadcasted_iota(
+                jnp.int32, (block_q, block_kv), 1)
+            logits = jnp.where(q_pos >= k_pos, logits, NEG_INF)
+        m_cur = jnp.max(logits, axis=1)  # (block_q,)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)  # rescale of old accumulator
+        p = jnp.exp(logits - m_new[:, None])  # (block_q, block_kv)
+        l_new = l_prev * alpha + jnp.sum(p, axis=1)
+        acc_new = acc * alpha[:, None] + p @ v_blk
+        return acc_new, m_new, l_new
+
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+    m0 = jnp.full((block_q,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q,), jnp.float32)
+    if causal:
+        # Blocks strictly after the diagonal contribute nothing; skip them.
+        last = (q_offset + block_q + block_kv - 1) // block_kv
+        upper = jnp.minimum(num_kv_blocks, last)
+    else:
+        upper = num_kv_blocks
+    acc, m, l = jax.lax.fori_loop(0, upper, body, (acc0, m0, l0))
+    # Causal masking guarantees l >= 1 (self-attention term), but guard
+    # anyway for the non-causal empty-block edge.
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0, 0] = acc / l[:, None]
+
+
+def attention(q, k, v, *, causal=True, block_q=BLOCK_Q, block_kv=BLOCK_KV):
+    """Grouped-KV flash-style attention.
+
+    q: (B, Hq, S, D); k/v: (B, Hkv, S, D) with Hq % Hkv == 0.
+    Returns (B, Hq, S, D) f32.
+    """
+    b, hq, s, d = q.shape
+    hkv = k.shape[1]
+    assert hq % hkv == 0, f"Hq={hq} not a multiple of Hkv={hkv}"
+    group = hq // hkv
+    bq = min(block_q, s)
+    while s % bq:
+        bq -= 1
+    bkv = min(block_kv, s)
+    while s % bkv:
+        bkv -= 1
+    grid = (b, hq, s // bq)
+    kernel = functools.partial(_attention_kernel, block_kv=bkv,
+                               causal=causal, sm_scale=1.0 / (d ** 0.5))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            # q: one (bq, d) tile per program
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq: (ib, ih, iq, 0)),
+            # k/v: the kv head this q head maps to, full sequence resident
+            pl.BlockSpec((1, 1, s, d),
+                         lambda ib, ih, iq: (ib, ih // group, 0, 0)),
+            pl.BlockSpec((1, 1, s, d),
+                         lambda ib, ih, iq: (ib, ih // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d),
+                               lambda ib, ih, iq: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, s, d), jnp.float32),
+        interpret=True,
+    )(q, k, v)

@@ -1,0 +1,221 @@
+"""Pallas fused dequantize-matmul kernels (Layer 1 hot-spot).
+
+The paper's inference-stage quantization options (INT8 / INT4 via
+GPTQ/AWQ/SmoothQuant) all bottom out in the same hot loop at serving
+time: a matmul whose weights live in memory at reduced precision and are
+dequantized on the fly.  On GPUs this is a CUDA kernel staging weight
+tiles through shared memory; here we re-express it for a TPU-shaped
+machine (DESIGN.md §Hardware-Adaptation):
+
+* the HBM->VMEM schedule is written with ``BlockSpec``s — a
+  ``(block_m, block_k)`` activation tile, a ``(block_k, block_n)``
+  quantized weight tile and a ``(1, block_n)`` scale sliver are resident
+  per grid step;
+* dequantization happens in registers on the tile (int -> f32 multiply by
+  per-output-channel scale), feeding an MXU-shaped ``jnp.dot`` with an
+  f32 accumulator that lives in the output block across the K grid axis;
+* int4 weights are packed two-per-byte along K, halving the weight
+  traffic; the unpack (mask/shift) is fused into the same tile load.
+
+Kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls — so correctness is the claim checked here
+(vs ``ref.py``) and TPU performance is estimated from the VMEM footprint
+analysis in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes: chosen so x-tile (64x128x4B = 32KiB), w-tile
+# (128x128 int8 = 16KiB), dequantized tile (64KiB) and f32 accumulator
+# (64x128x4B = 32KiB) all fit VMEM (~16MiB) with generous headroom for
+# double-buffering on real hardware.  See EXPERIMENTS.md §Perf for the
+# footprint table.
+BLOCK_M = 64
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pick_blocks(m, k, n, block_m, block_n, block_k):
+    """Shrink default blocks to the problem size (all dims must divide)."""
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    bk = min(block_k, k)
+    while m % bm:
+        bm -= 1
+    while n % bn:
+        bn -= 1
+    while k % bk:
+        bk -= 1
+    return bm, bn, bk
+
+
+# ---------------------------------------------------------------------------
+# f32 tiled matmul (the FP16/"full precision" serving path)
+# ---------------------------------------------------------------------------
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                          preferred_element_type=jnp.float32)
+
+
+def matmul_f32(x, w, *, block_m=BLOCK_M, block_n=BLOCK_N, block_k=BLOCK_K):
+    """Tiled f32 matmul: (M, K) @ (K, N) -> (M, N)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = _pick_blocks(m, k, n, block_m, block_n, block_k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# int8 fused dequant-matmul
+# ---------------------------------------------------------------------------
+
+def _quant_matmul_int8_kernel(x_ref, wq_ref, s_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Dequantize the weight tile in-register: int8 -> f32 * scale sliver.
+    w_tile = wq_ref[...].astype(jnp.float32) * s_ref[...]
+    o_ref[...] += jnp.dot(x_ref[...], w_tile,
+                          preferred_element_type=jnp.float32)
+
+
+def quant_matmul_int8(x, w_q, scales, *, block_m=BLOCK_M, block_n=BLOCK_N,
+                      block_k=BLOCK_K):
+    """Fused int8 dequant + matmul.
+
+    x: (M, K) f32; w_q: (K, N) int8; scales: (1, N) f32 per-out-channel.
+    Returns (M, N) f32.
+    """
+    m, k = x.shape
+    k2, n = w_q.shape
+    assert k == k2
+    assert scales.shape == (1, n), f"scales must be (1, {n})"
+    bm, bn, bk = _pick_blocks(m, k, n, block_m, block_n, block_k)
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _quant_matmul_int8_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((1, bn), lambda i, j, l: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w_q, scales.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# int4 (packed) fused dequant-matmul
+# ---------------------------------------------------------------------------
+
+def _quant_matmul_int4_kernel(x_ref, wp_ref, s_ref, o_ref, *, block_k):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # Unpack the (block_k//2, block_n) packed tile into (block_k, block_n)
+    # centered int values, entirely in-register.  Low nibble = even K row,
+    # high nibble = odd K row (see ref.quantize_int4).
+    packed = wp_ref[...]
+    lo = (packed & 0xF).astype(jnp.int32) - 8   # rows 0,2,4,...
+    hi = ((packed >> 4) & 0xF).astype(jnp.int32) - 8  # rows 1,3,5,...
+    # Interleave along K: stack on a new axis then reshape.
+    half, bn = lo.shape
+    w_int = jnp.stack([lo, hi], axis=1).reshape(half * 2, bn)
+    w_tile = w_int.astype(jnp.float32) * s_ref[...]
+    o_ref[...] += jnp.dot(x_ref[...], w_tile,
+                          preferred_element_type=jnp.float32)
+
+
+def quant_matmul_int4(x, w_packed, scales, *, block_m=BLOCK_M,
+                      block_n=BLOCK_N, block_k=BLOCK_K):
+    """Fused packed-int4 dequant + matmul.
+
+    x: (M, K) f32; w_packed: (K//2, N) uint8 (two nibbles per byte along
+    K); scales: (1, N) f32.  Returns (M, N) f32.
+    """
+    m, k = x.shape
+    kh, n = w_packed.shape
+    assert k == kh * 2, f"packed K mismatch: {k} vs 2*{kh}"
+    assert scales.shape == (1, n)
+    bm, bn, bk = _pick_blocks(m, k, n, block_m, block_n, block_k)
+    if bk % 2:  # packed tiles need even K blocks
+        bk = max(2, bk - 1)
+        while k % bk:
+            bk -= 2
+            if bk <= 0:
+                raise ValueError(f"cannot tile K={k} into even blocks")
+    grid = (m // bm, n // bn, k // bk)
+    kernel = functools.partial(_quant_matmul_int4_kernel, block_k=bk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, l: (i, l)),
+            pl.BlockSpec((bk // 2, bn), lambda i, j, l: (l, j)),
+            pl.BlockSpec((1, bn), lambda i, j, l: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, l: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w_packed, scales.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Dispatch used by model.py
+# ---------------------------------------------------------------------------
+
+def linear(x, weight_pack, quant: str):
+    """Apply a (possibly quantized) linear layer to (..., K) activations.
+
+    ``weight_pack`` is the tuple produced by ``model.pack_weight``:
+      fp16/fp8 -> (w,)                (fp8 is modeled as fp16 numerics;
+                                       its memory effect lives in L3)
+      int8     -> (w_q, scales)
+      int4     -> (w_packed, scales)
+    """
+    lead = x.shape[:-1]
+    k = x.shape[-1]
+    x2 = x.reshape(-1, k)
+    if quant in ("fp16", "fp8", "fp32"):
+        (w,) = weight_pack
+        y = matmul_f32(x2, w)
+    elif quant == "int8":
+        w_q, s = weight_pack
+        y = quant_matmul_int8(x2, w_q, s)
+    elif quant == "int4":
+        w_p, s = weight_pack
+        y = quant_matmul_int4(x2, w_p, s)
+    else:
+        raise ValueError(f"unknown quant mode {quant!r}")
+    return y.reshape(*lead, y.shape[-1])

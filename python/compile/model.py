@@ -1,0 +1,328 @@
+"""Layer 2: configurable transformer forward pass in JAX.
+
+This is the *subject* model that AE-LLM's search tunes: a small decoder
+transformer whose architecture/fine-tuning/inference knobs mirror the
+paper's configuration space (Table 1):
+
+* attention ∈ {mha, gqa, mqa, mla} — grouped KV heads, or multi-head
+  latent attention (DeepSeek-style KV compression);
+* FFN ∈ {dense, MoE with E experts / top-k routing};
+* fine-tuning ∈ {none, LoRA adapters with rank r and scaling alpha};
+* inference quantization ∈ {fp16, fp8, int8, int4} applied to all
+  projection/FFN weights (embeddings, norms and routers stay f32,
+  QLoRA-style the LoRA deltas stay f32 too).
+
+The hot matmuls and the attention inner loop call the Layer-1 Pallas
+kernels (``kernels.quant_matmul``, ``kernels.attention``); with
+``use_pallas=False`` the same graph is built from the pure-jnp oracles in
+``kernels.ref`` so the two paths can be differentially tested.
+
+``aot.py`` lowers ``forward`` for a set of named variants to HLO text;
+the rust runtime (Layer 3) executes them and never imports Python.
+
+Numerics note: "fp16" and "fp8" share f32 arithmetic here — on the CPU
+interpret path their *numeric* difference is irrelevant to the search
+(their memory/latency effects are modeled at L3 from the manifest's
+bytes-per-weight) — while int8/int4 apply real symmetric quantization so
+the measured accuracy-fidelity signal is genuine.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, asdict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as att_k
+from .kernels import quant_matmul as qm_k
+from .kernels import ref
+
+ATTENTION_KINDS = ("mha", "gqa", "mqa", "mla")
+QUANT_KINDS = ("fp16", "fp8", "int8", "int4")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    """Architecture + efficiency-technique configuration of one variant."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 2
+    n_heads: int = 8
+    attention: str = "gqa"       # mha | gqa | mqa | mla
+    gqa_groups: int = 4          # q heads per kv head when attention == gqa
+    mla_latent: int = 32         # latent dim when attention == mla
+    ffn_mult: int = 4
+    moe_experts: int = 0         # 0 = dense FFN
+    moe_top_k: int = 2
+    quant: str = "fp16"          # fp16 | fp8 | int8 | int4
+    lora_rank: int = 0           # 0 = no adapters
+    lora_alpha: float = 32.0
+    use_pallas: bool = True
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def kv_heads(self) -> int:
+        if self.attention == "mha":
+            return self.n_heads
+        if self.attention == "gqa":
+            assert self.n_heads % self.gqa_groups == 0
+            return self.n_heads // self.gqa_groups
+        if self.attention == "mqa":
+            return 1
+        if self.attention == "mla":
+            # MLA keeps full heads after up-projection; the cache saving
+            # comes from storing the latent instead of K/V.
+            return self.n_heads
+        raise ValueError(f"unknown attention kind {self.attention!r}")
+
+    def validate(self) -> None:
+        if self.attention not in ATTENTION_KINDS:
+            raise ValueError(f"attention must be one of {ATTENTION_KINDS}")
+        if self.quant not in QUANT_KINDS:
+            raise ValueError(f"quant must be one of {QUANT_KINDS}")
+        if self.moe_experts not in (0, 2, 4, 8):
+            raise ValueError("moe_experts must be 0/2/4/8")
+        if self.moe_experts and self.moe_top_k > self.moe_experts:
+            raise ValueError("moe_top_k exceeds expert count")
+        if self.d_model % self.n_heads:
+            raise ValueError("d_model must divide by n_heads")
+        if self.quant == "int4" and self.d_model % 2:
+            raise ValueError("int4 packing requires even d_model")
+
+    def to_dict(self) -> dict:
+        return asdict(self)
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization (deterministic numpy; becomes HLO constants)
+# ---------------------------------------------------------------------------
+
+def _init(rng: np.random.Generator, shape, scale=None):
+    scale = scale if scale is not None else (1.0 / np.sqrt(shape[0]))
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+def pack_weight(w: np.ndarray, quant: str):
+    """Quantize a weight matrix per the inference config.
+
+    Returns the tuple consumed by ``kernels.quant_matmul.linear``.
+    """
+    wj = jnp.asarray(w)
+    if quant in ("fp16", "fp8"):
+        return (wj,)
+    if quant == "int8":
+        return tuple(ref.quantize_int8(wj))
+    if quant == "int4":
+        return tuple(ref.quantize_int4(wj))
+    raise ValueError(f"unknown quant mode {quant!r}")
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> dict:
+    """Build the parameter pytree for ``forward`` (weights pre-quantized)."""
+    cfg.validate()
+    rng = np.random.default_rng(seed)
+    d, hd = cfg.d_model, cfg.head_dim
+    q_dim = cfg.n_heads * hd
+    kv_dim = cfg.kv_heads * hd
+    f = cfg.ffn_mult * d
+
+    params = {
+        "embed": jnp.asarray(_init(rng, (cfg.vocab, d), scale=0.02)),
+        "final_norm": jnp.asarray(np.ones(d, np.float32)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        layer = {
+            "attn_norm": jnp.asarray(np.ones(d, np.float32)),
+            "ffn_norm": jnp.asarray(np.ones(d, np.float32)),
+            "wq": pack_weight(_init(rng, (d, q_dim)), cfg.quant),
+            "wo": pack_weight(_init(rng, (q_dim, d)), cfg.quant),
+        }
+        if cfg.attention == "mla":
+            lat = cfg.mla_latent
+            layer["w_dkv"] = pack_weight(_init(rng, (d, lat)), cfg.quant)
+            layer["w_uk"] = pack_weight(_init(rng, (lat, kv_dim)), cfg.quant)
+            layer["w_uv"] = pack_weight(_init(rng, (lat, kv_dim)), cfg.quant)
+        else:
+            layer["wk"] = pack_weight(_init(rng, (d, kv_dim)), cfg.quant)
+            layer["wv"] = pack_weight(_init(rng, (d, kv_dim)), cfg.quant)
+        if cfg.moe_experts:
+            e = cfg.moe_experts
+            layer["moe_router"] = jnp.asarray(_init(rng, (d, e)))
+            layer["moe_gate"] = jnp.asarray(
+                np.stack([_init(rng, (d, f)) for _ in range(e)]))
+            layer["moe_up"] = jnp.asarray(
+                np.stack([_init(rng, (d, f)) for _ in range(e)]))
+            layer["moe_down"] = jnp.asarray(
+                np.stack([_init(rng, (f, d)) for _ in range(e)]))
+        else:
+            layer["w_gate"] = pack_weight(_init(rng, (d, f)), cfg.quant)
+            layer["w_up"] = pack_weight(_init(rng, (d, f)), cfg.quant)
+            layer["w_down"] = pack_weight(_init(rng, (f, d)), cfg.quant)
+        if cfg.lora_rank:
+            r = cfg.lora_rank
+            # QLoRA-style f32 adapters on the q and o projections.
+            layer["lora_qa"] = jnp.asarray(_init(rng, (d, r)))
+            layer["lora_qb"] = jnp.asarray(np.zeros((r, q_dim), np.float32))
+            layer["lora_oa"] = jnp.asarray(_init(rng, (q_dim, r)))
+            layer["lora_ob"] = jnp.asarray(np.zeros((r, d), np.float32))
+            # Give the zero-init B matrices a tiny deterministic kick so
+            # the adapter path is numerically *live* in fidelity tests.
+            layer["lora_qb"] = layer["lora_qb"] + 0.01 * jnp.asarray(
+                _init(rng, (r, q_dim)))
+            layer["lora_ob"] = layer["lora_ob"] + 0.01 * jnp.asarray(
+                _init(rng, (r, d)))
+        params["layers"].append(layer)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward pass
+# ---------------------------------------------------------------------------
+
+def _linear(x, pack, cfg: ModelConfig):
+    if cfg.use_pallas:
+        return qm_k.linear(x, pack, cfg.quant)
+    # Reference path: dequantize then plain matmul.
+    lead, k = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    if cfg.quant in ("fp16", "fp8"):
+        y = ref.matmul_f32_ref(x2, pack[0])
+    elif cfg.quant == "int8":
+        y = ref.quant_matmul_int8_ref(x2, *pack)
+    else:
+        y = ref.quant_matmul_int4_ref(x2, *pack)
+    return y.reshape(*lead, y.shape[-1])
+
+
+def _lora(x, a, b, cfg: ModelConfig):
+    scale = cfg.lora_alpha / cfg.lora_rank
+    lead, k = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    y = (x2 @ a) @ b * scale
+    return y.reshape(*lead, y.shape[-1])
+
+
+def _attention_block(x, layer, cfg: ModelConfig):
+    b, s, d = x.shape
+    hd = cfg.head_dim
+
+    q = _linear(x, layer["wq"], cfg)
+    if cfg.lora_rank:
+        q = q + _lora(x, layer["lora_qa"], layer["lora_qb"], cfg)
+    if cfg.attention == "mla":
+        latent = _linear(x, layer["w_dkv"], cfg)          # (B, S, lat)
+        k = _linear(latent, layer["w_uk"], cfg)
+        v = _linear(latent, layer["w_uv"], cfg)
+    else:
+        k = _linear(x, layer["wk"], cfg)
+        v = _linear(x, layer["wv"], cfg)
+
+    q = q.reshape(b, s, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(b, s, cfg.kv_heads, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, cfg.kv_heads, hd).transpose(0, 2, 1, 3)
+
+    if cfg.use_pallas:
+        o = att_k.attention(q, k, v, causal=True)
+    else:
+        o = ref.attention_ref(q, k, v, causal=True)
+
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, cfg.n_heads * hd)
+    y = _linear(o, layer["wo"], cfg)
+    if cfg.lora_rank:
+        y = y + _lora(o, layer["lora_oa"], layer["lora_ob"], cfg)
+    return y
+
+
+def _ffn_block(x, layer, cfg: ModelConfig):
+    b, s, d = x.shape
+    if cfg.moe_experts:
+        x2 = x.reshape(b * s, d)
+        y = ref.moe_ffn_ref(x2, layer["moe_gate"], layer["moe_up"],
+                            layer["moe_down"], layer["moe_router"],
+                            cfg.moe_top_k)
+        return y.reshape(b, s, d)
+    h_gate = _linear(x, layer["w_gate"], cfg)
+    h_up = _linear(x, layer["w_up"], cfg)
+    h = jnp.where(h_gate > 0, h_gate, h_gate * 0.01) * h_up
+    return _linear(h, layer["w_down"], cfg)
+
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: ModelConfig):
+    """Full decoder forward: int32 tokens (B, S) -> f32 logits (B, S, V)."""
+    x = params["embed"][tokens]  # (B, S, D)
+    for layer in params["layers"]:
+        h = ref.rmsnorm_ref(x, layer["attn_norm"])
+        x = x + _attention_block(h, layer, cfg)
+        h = ref.rmsnorm_ref(x, layer["ffn_norm"])
+        x = x + _ffn_block(h, layer, cfg)
+    x = ref.rmsnorm_ref(x, params["final_norm"])
+    # Tied unembedding.
+    return jnp.einsum("bsd,vd->bsv", x, params["embed"])
+
+
+def build_forward_fn(cfg: ModelConfig, seed: int = 0):
+    """Close over deterministic parameters; returns tokens -> (logits,)."""
+    params = init_params(cfg, seed)
+
+    def fn(tokens):
+        return (forward(params, tokens, cfg),)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Cost accounting used by the AOT manifest (consumed by the rust L3)
+# ---------------------------------------------------------------------------
+
+_BYTES_PER_WEIGHT = {"fp16": 2.0, "fp8": 1.0, "int8": 1.0, "int4": 0.5}
+
+
+def param_count(cfg: ModelConfig) -> int:
+    """Total parameter count of one variant (weights only, incl. MoE)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    q_dim, kv_dim = cfg.n_heads * hd, cfg.kv_heads * hd
+    f = cfg.ffn_mult * d
+    per_layer = d * q_dim + q_dim * d  # wq, wo
+    if cfg.attention == "mla":
+        per_layer += d * cfg.mla_latent + 2 * cfg.mla_latent * kv_dim
+    else:
+        per_layer += 2 * d * kv_dim
+    if cfg.moe_experts:
+        per_layer += d * cfg.moe_experts + cfg.moe_experts * (2 * d * f + f * d)
+    else:
+        per_layer += 2 * d * f + f * d
+    if cfg.lora_rank:
+        per_layer += 2 * cfg.lora_rank * (d + q_dim)
+    return cfg.n_layers * per_layer + cfg.vocab * d
+
+
+def weight_bytes(cfg: ModelConfig) -> int:
+    """Approximate resident weight bytes under the quantization config."""
+    return int(param_count(cfg) * _BYTES_PER_WEIGHT[cfg.quant])
+
+
+def flops_per_token(cfg: ModelConfig, seq: int) -> int:
+    """Forward FLOPs per token (2*MACs), incl. attention quadratic term."""
+    d, hd = cfg.d_model, cfg.head_dim
+    q_dim, kv_dim = cfg.n_heads * hd, cfg.kv_heads * hd
+    f = cfg.ffn_mult * d
+    proj = d * q_dim + q_dim * d
+    if cfg.attention == "mla":
+        proj += d * cfg.mla_latent + 2 * cfg.mla_latent * kv_dim
+    else:
+        proj += 2 * d * kv_dim
+    attn = 2 * cfg.n_heads * hd * seq  # scores + values, per token
+    if cfg.moe_experts:
+        ffn = cfg.moe_top_k * (2 * d * f + f * d) + d * cfg.moe_experts
+    else:
+        ffn = 2 * d * f + f * d
+    unembed = d * cfg.vocab
+    return 2 * cfg.n_layers * (proj + attn + ffn) + 2 * unembed

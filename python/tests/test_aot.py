@@ -1,0 +1,111 @@
+"""AOT pipeline tests: registry coherence, manifest schema, HLO lowering."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile.model import ModelConfig
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+class TestRegistry:
+    def test_names_unique(self):
+        names = [name for name, *_ in aot.variant_registry()]
+        assert len(names) == len(set(names))
+
+    def test_all_configs_valid(self):
+        for _, cfg, batch, seq, _ in aot.variant_registry():
+            cfg.validate()
+            assert batch >= 1 and seq >= 1
+
+    def test_baselines_exist_and_are_fp16(self):
+        reg = {name: cfg for name, cfg, *_ in aot.variant_registry()}
+        for name, cfg, _, _, baseline in aot.variant_registry():
+            assert baseline in reg, f"{name}: baseline {baseline} missing"
+            assert reg[baseline].quant == "fp16"
+
+    def test_baseline_shares_architecture(self):
+        reg = {name: (cfg, b, s)
+               for name, cfg, b, s, _ in aot.variant_registry()}
+        for name, cfg, batch, seq, baseline in aot.variant_registry():
+            bcfg, bb, bs = reg[baseline]
+            assert bcfg.attention == cfg.attention
+            assert bcfg.moe_experts == cfg.moe_experts
+            assert bcfg.lora_rank == cfg.lora_rank
+            assert (bb, bs) == (batch, seq), \
+                f"{name}: baseline shape mismatch"
+
+    def test_covers_all_attention_kinds(self):
+        kinds = {cfg.attention for _, cfg, *_ in aot.variant_registry()}
+        assert kinds == {"mha", "gqa", "mqa", "mla"}
+
+    def test_covers_quant_grid(self):
+        quants = {cfg.quant for _, cfg, *_ in aot.variant_registry()}
+        assert {"fp16", "int8", "int4"} <= quants
+
+    def test_has_moe_and_lora_variants(self):
+        cfgs = [cfg for _, cfg, *_ in aot.variant_registry()]
+        assert any(c.moe_experts for c in cfgs)
+        assert any(c.lora_rank for c in cfgs)
+
+
+class TestLowering:
+    def test_lower_tiny_variant_produces_hlo_text(self):
+        cfg = ModelConfig(attention="gqa", quant="int8", n_layers=1)
+        text = aot.lower_variant(cfg, batch=1, seq=16)
+        assert "HloModule" in text
+        assert "ENTRY" in text
+
+    def test_lowered_entry_signature(self):
+        cfg = ModelConfig(n_layers=1)
+        text = aot.lower_variant(cfg, batch=2, seq=16)
+        # one s32[2,16] parameter, tuple of one f32[2,16,256] result
+        assert "s32[2,16]" in text
+        assert "f32[2,16,256]" in text
+
+    def test_fingerprint_stable(self):
+        assert aot._inputs_fingerprint() == aot._inputs_fingerprint()
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS,
+                                                    "manifest.json")),
+                    reason="artifacts not built (run `make artifacts`)")
+class TestManifest:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ARTIFACTS, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_schema(self, manifest):
+        assert "weight_seed" in manifest
+        for v in manifest["variants"]:
+            for key in ("name", "file", "fidelity_baseline", "batch",
+                        "seq", "config", "param_count", "weight_bytes",
+                        "flops_per_token"):
+                assert key in v, f"{v['name']} missing {key}"
+
+    def test_files_exist(self, manifest):
+        for v in manifest["variants"]:
+            assert os.path.exists(os.path.join(ARTIFACTS, v["file"]))
+
+    def test_quant_bytes_ordering(self, manifest):
+        by_name = {v["name"]: v for v in manifest["variants"]}
+        assert by_name["gqa_int8"]["weight_bytes"] * 2 == \
+            by_name["gqa_fp16"]["weight_bytes"]
+        assert by_name["gqa_int4"]["weight_bytes"] * 4 == \
+            by_name["gqa_fp16"]["weight_bytes"]
+
+    def test_counts_match_model(self, manifest):
+        from compile.model import param_count, weight_bytes, \
+            flops_per_token
+        for v in manifest["variants"]:
+            cfg = ModelConfig(**v["config"])
+            assert v["param_count"] == param_count(cfg)
+            assert v["weight_bytes"] == weight_bytes(cfg)
+            assert v["flops_per_token"] == flops_per_token(cfg, v["seq"])

@@ -1,0 +1,102 @@
+"""Layer-1 correctness: Pallas grouped-KV attention vs jnp oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import attention as att
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=15, deadline=None)
+settings.load_profile("ci")
+
+
+def _qkv(rng, b, hq, hkv, s, d):
+    q = jnp.asarray(rng.standard_normal((b, hq, s, d)).astype(np.float32))
+    k = jnp.asarray(rng.standard_normal((b, hkv, s, d)).astype(np.float32))
+    v = jnp.asarray(rng.standard_normal((b, hkv, s, d)).astype(np.float32))
+    return q, k, v
+
+
+class TestAttentionFixed:
+    @pytest.mark.parametrize("b,hq,hkv,s,d", [
+        (1, 8, 8, 64, 16),   # MHA
+        (2, 8, 2, 64, 16),   # GQA group 4
+        (1, 8, 1, 64, 16),   # MQA
+        (2, 4, 2, 96, 32),   # GQA group 2, non-pow2 seq blocks
+        (1, 2, 1, 32, 8),    # tiny
+        (1, 8, 4, 33, 16),   # seq not divisible by default blocks
+    ])
+    def test_causal_matches_ref(self, b, hq, hkv, s, d):
+        rng = np.random.default_rng(b * 100 + hq + hkv + s + d)
+        q, k, v = _qkv(rng, b, hq, hkv, s, d)
+        np.testing.assert_allclose(att.attention(q, k, v, causal=True),
+                                   ref.attention_ref(q, k, v, causal=True),
+                                   rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("b,hq,hkv,s,d", [
+        (1, 8, 8, 64, 16), (2, 8, 2, 64, 16), (1, 4, 1, 48, 16),
+    ])
+    def test_non_causal_matches_ref(self, b, hq, hkv, s, d):
+        rng = np.random.default_rng(s + d)
+        q, k, v = _qkv(rng, b, hq, hkv, s, d)
+        np.testing.assert_allclose(att.attention(q, k, v, causal=False),
+                                   ref.attention_ref(q, k, v, causal=False),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_causal_first_token_is_v0(self):
+        """Causal row 0 can only attend to position 0 -> output == v[0]."""
+        rng = np.random.default_rng(5)
+        q, k, v = _qkv(rng, 1, 2, 2, 16, 8)
+        out = att.attention(q, k, v, causal=True)
+        np.testing.assert_allclose(out[:, :, 0, :], v[:, :, 0, :],
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_rejects_non_multiple_heads(self):
+        rng = np.random.default_rng(6)
+        q = jnp.asarray(rng.standard_normal((1, 6, 16, 8)).astype(np.float32))
+        k = jnp.asarray(rng.standard_normal((1, 4, 16, 8)).astype(np.float32))
+        with pytest.raises(AssertionError):
+            att.attention(q, k, q if False else k, causal=True)
+
+    def test_permutation_invariance_non_causal(self):
+        """Non-causal attention is invariant to KV position permutation."""
+        rng = np.random.default_rng(7)
+        q, k, v = _qkv(rng, 1, 4, 4, 32, 8)
+        perm = np.asarray(rng.permutation(32))
+        out1 = att.attention(q, k, v, causal=False)
+        out2 = att.attention(q, k[:, :, perm, :], v[:, :, perm, :],
+                             causal=False)
+        np.testing.assert_allclose(out1, out2, rtol=1e-4, atol=1e-4)
+
+    def test_uniform_values_average(self):
+        """With q=0, softmax is uniform; causal output = prefix mean of v."""
+        b, h, s, d = 1, 2, 16, 8
+        rng = np.random.default_rng(8)
+        q = jnp.zeros((b, h, s, d), jnp.float32)
+        k = jnp.asarray(rng.standard_normal((b, h, s, d)).astype(np.float32))
+        v = jnp.asarray(rng.standard_normal((b, h, s, d)).astype(np.float32))
+        out = att.attention(q, k, v, causal=True)
+        prefix_mean = jnp.cumsum(v, axis=2) / jnp.arange(
+            1, s + 1, dtype=jnp.float32)[None, None, :, None]
+        np.testing.assert_allclose(out, prefix_mean, rtol=1e-4, atol=1e-4)
+
+
+class TestAttentionHypothesis:
+    @given(
+        b=st.integers(1, 2),
+        hkv=st.sampled_from([1, 2, 4]),
+        group=st.sampled_from([1, 2, 4]),
+        s=st.integers(4, 80),
+        d=st.sampled_from([8, 16]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_sweep(self, b, hkv, group, s, d, causal, seed):
+        rng = np.random.default_rng(seed)
+        q, k, v = _qkv(rng, b, hkv * group, hkv, s, d)
+        np.testing.assert_allclose(
+            att.attention(q, k, v, causal=causal),
+            ref.attention_ref(q, k, v, causal=causal),
+            rtol=1e-4, atol=1e-4)

@@ -1,0 +1,197 @@
+"""Layer-2 correctness: configurable transformer, pallas vs reference path.
+
+The differential test (use_pallas=True vs use_pallas=False on identical
+seeds) proves the L1 kernels compose correctly inside the full graph for
+every point of the architecture x quantization grid that the AOT
+pipeline ships.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import model as M
+from compile.kernels import ref
+
+TOKENS = jnp.asarray(
+    np.random.default_rng(0).integers(0, 256, size=(2, 64)), dtype=jnp.int32)
+
+
+def _logits(cfg, seed=3, tokens=TOKENS):
+    return M.build_forward_fn(cfg, seed=seed)(tokens)[0]
+
+
+class TestConfigValidation:
+    def test_defaults_valid(self):
+        M.ModelConfig().validate()
+
+    @pytest.mark.parametrize("attn,expected_kv", [
+        ("mha", 8), ("gqa", 2), ("mqa", 1), ("mla", 8)])
+    def test_kv_heads(self, attn, expected_kv):
+        cfg = M.ModelConfig(attention=attn, n_heads=8, gqa_groups=4)
+        assert cfg.kv_heads == expected_kv
+
+    def test_head_dim(self):
+        assert M.ModelConfig(d_model=128, n_heads=8).head_dim == 16
+
+    @pytest.mark.parametrize("bad", [
+        dict(attention="flash"),
+        dict(quant="int2"),
+        dict(moe_experts=3),
+        dict(moe_experts=2, moe_top_k=4),
+        dict(d_model=130, n_heads=8),
+    ])
+    def test_invalid_configs_rejected(self, bad):
+        with pytest.raises(ValueError):
+            M.ModelConfig(**bad).validate()
+
+    def test_to_dict_roundtrip(self):
+        cfg = M.ModelConfig(attention="mla", quant="int4", lora_rank=8)
+        d = cfg.to_dict()
+        assert d["attention"] == "mla" and d["quant"] == "int4"
+        assert M.ModelConfig(**d) == cfg
+
+
+class TestForwardShapes:
+    @pytest.mark.parametrize("attn", ["mha", "gqa", "mqa", "mla"])
+    def test_logit_shape(self, attn):
+        cfg = M.ModelConfig(attention=attn, n_layers=1, use_pallas=False)
+        logits = _logits(cfg)
+        assert logits.shape == (2, 64, cfg.vocab)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+    def test_moe_and_lora_shapes(self):
+        cfg = M.ModelConfig(moe_experts=4, moe_top_k=2, lora_rank=16,
+                            n_layers=1, use_pallas=False)
+        assert _logits(cfg).shape == (2, 64, 256)
+
+    def test_deterministic_across_calls(self):
+        cfg = M.ModelConfig(n_layers=1, use_pallas=False)
+        np.testing.assert_array_equal(_logits(cfg), _logits(cfg))
+
+    def test_seed_changes_logits(self):
+        cfg = M.ModelConfig(n_layers=1, use_pallas=False)
+        a, b = _logits(cfg, seed=1), _logits(cfg, seed=2)
+        assert float(jnp.max(jnp.abs(a - b))) > 1e-3
+
+
+class TestPallasVsReference:
+    @pytest.mark.parametrize("attn", ["mha", "gqa", "mqa", "mla"])
+    @pytest.mark.parametrize("quant", ["fp16", "int8", "int4"])
+    def test_grid(self, attn, quant):
+        kp = M.ModelConfig(attention=attn, quant=quant, n_layers=1,
+                           use_pallas=True)
+        kr = M.ModelConfig(attention=attn, quant=quant, n_layers=1,
+                           use_pallas=False)
+        np.testing.assert_allclose(_logits(kp), _logits(kr),
+                                   rtol=1e-4, atol=2e-3)
+
+    def test_lora_path(self):
+        kp = M.ModelConfig(lora_rank=16, n_layers=1, use_pallas=True)
+        kr = M.ModelConfig(lora_rank=16, n_layers=1, use_pallas=False)
+        np.testing.assert_allclose(_logits(kp), _logits(kr),
+                                   rtol=1e-4, atol=2e-3)
+
+    def test_moe_path(self):
+        kp = M.ModelConfig(moe_experts=4, moe_top_k=2, n_layers=1,
+                           use_pallas=True)
+        kr = M.ModelConfig(moe_experts=4, moe_top_k=2, n_layers=1,
+                           use_pallas=False)
+        np.testing.assert_allclose(_logits(kp), _logits(kr),
+                                   rtol=1e-4, atol=2e-3)
+
+
+class TestQuantFidelityOrdering:
+    def test_int4_noisier_than_int8(self):
+        """Fidelity to fp16 logits must degrade monotonically with bits.
+
+        This ordering is the accuracy-proxy signal the rust runtime
+        measures; if it breaks, the measured-evaluator's accuracy model
+        is meaningless.
+        """
+        base = _logits(M.ModelConfig(quant="fp16", use_pallas=False))
+        e8 = float(jnp.mean(jnp.abs(
+            _logits(M.ModelConfig(quant="int8", use_pallas=False)) - base)))
+        e4 = float(jnp.mean(jnp.abs(
+            _logits(M.ModelConfig(quant="int4", use_pallas=False)) - base)))
+        assert 0 < e8 < e4
+
+    def test_lora_changes_output(self):
+        base = _logits(M.ModelConfig(use_pallas=False))
+        lora = _logits(M.ModelConfig(lora_rank=16, use_pallas=False))
+        assert float(jnp.max(jnp.abs(base - lora))) > 1e-4
+
+
+class TestMoEReference:
+    def test_top1_selects_argmax_expert(self):
+        rng = np.random.default_rng(9)
+        t, d, e, f = 6, 8, 4, 16
+        x = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+        wg = jnp.asarray(rng.standard_normal((e, d, f)).astype(np.float32))
+        wu = jnp.asarray(rng.standard_normal((e, d, f)).astype(np.float32))
+        wd = jnp.asarray(rng.standard_normal((e, f, d)).astype(np.float32))
+        wr = jnp.asarray(rng.standard_normal((d, e)).astype(np.float32))
+        y = ref.moe_ffn_ref(x, wg, wu, wd, wr, top_k=1)
+        # manual: each token -> single argmax expert, gate weight 1
+        router = np.asarray(x @ wr)
+        for t_i in range(t):
+            e_i = int(np.argmax(router[t_i]))
+            hg = np.asarray(x)[t_i] @ np.asarray(wg)[e_i]
+            hu = np.asarray(x)[t_i] @ np.asarray(wu)[e_i]
+            h = np.where(hg > 0, hg, hg * 0.01) * hu
+            expected = h @ np.asarray(wd)[e_i]
+            np.testing.assert_allclose(np.asarray(y)[t_i], expected,
+                                       rtol=1e-4, atol=1e-4)
+
+    def test_topk_gates_sum_to_one(self):
+        rng = np.random.default_rng(10)
+        t, d, e, f = 5, 8, 8, 16
+        x = jnp.asarray(rng.standard_normal((t, d)).astype(np.float32))
+        wr = jnp.asarray(rng.standard_normal((d, e)).astype(np.float32))
+        logits = np.asarray(x @ wr)
+        for k in (1, 2):
+            thr = np.sort(logits, axis=-1)[:, -k][:, None]
+            mask = logits >= thr
+            g = np.where(mask, logits, -1e30)
+            g = np.exp(g - g.max(-1, keepdims=True))
+            g = g / g.sum(-1, keepdims=True)
+            assert np.allclose(g.sum(-1), 1.0)
+            assert (np.count_nonzero(g > 1e-12, axis=-1) == k).all()
+
+
+class TestCostAccounting:
+    def test_param_count_matches_actual_params(self):
+        cfg = M.ModelConfig(attention="gqa", quant="fp16", n_layers=2)
+        params = M.init_params(cfg, seed=0)
+        total = params["embed"].size  # tied unembedding, counted once
+        for layer in params["layers"]:
+            for k, val in layer.items():
+                if k in ("attn_norm", "ffn_norm"):
+                    continue  # norms excluded from weight count
+                if isinstance(val, tuple):
+                    total += val[0].size  # the weight, not the scales
+                else:
+                    total += val.size
+        assert total == M.param_count(cfg)
+
+    def test_quant_reduces_weight_bytes(self):
+        fp = M.weight_bytes(M.ModelConfig(quant="fp16"))
+        i8 = M.weight_bytes(M.ModelConfig(quant="int8"))
+        i4 = M.weight_bytes(M.ModelConfig(quant="int4"))
+        assert fp == 2 * i8 == 4 * i4
+
+    def test_mqa_fewer_flops_than_mha(self):
+        f_mha = M.flops_per_token(M.ModelConfig(attention="mha"), 64)
+        f_mqa = M.flops_per_token(M.ModelConfig(attention="mqa"), 64)
+        assert f_mqa < f_mha
+
+    def test_moe_topk_flops_sublinear_in_experts(self):
+        dense = M.flops_per_token(M.ModelConfig(), 64)
+        moe8 = M.flops_per_token(
+            M.ModelConfig(moe_experts=8, moe_top_k=2), 64)
+        # top-2 of 8 experts ~ 2x dense FFN cost, far below 8x
+        assert moe8 < 3 * dense
+
+    def test_int4_param_count_unaffected(self):
+        assert M.param_count(M.ModelConfig(quant="int4")) == \
+            M.param_count(M.ModelConfig(quant="fp16"))

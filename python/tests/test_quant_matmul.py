@@ -1,0 +1,195 @@
+"""Layer-1 correctness: Pallas quant-matmul kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (including degenerate and non-divisible-by-block
+sizes) and value distributions; every case asserts allclose against
+``ref.py``.  This is the core trust anchor for the AOT artifacts.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import quant_matmul as qm
+from compile.kernels import ref
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _rand(rng, *shape, scale=1.0):
+    return jnp.asarray((rng.standard_normal(shape) * scale)
+                       .astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Quantization helpers round-trip
+# ---------------------------------------------------------------------------
+
+class TestQuantizeHelpers:
+    def test_int8_roundtrip_error_bound(self):
+        rng = np.random.default_rng(0)
+        w = _rand(rng, 64, 32)
+        w_q, s = ref.quantize_int8(w)
+        w_hat = w_q.astype(jnp.float32) * s
+        # max error <= half a quantization step per channel
+        step = s[0]
+        assert float(jnp.max(jnp.abs(w - w_hat) / step)) <= 0.5 + 1e-5
+
+    def test_int8_dtype_and_shapes(self):
+        rng = np.random.default_rng(1)
+        w = _rand(rng, 10, 6)
+        w_q, s = ref.quantize_int8(w)
+        assert w_q.dtype == jnp.int8 and w_q.shape == (10, 6)
+        assert s.shape == (1, 6)
+
+    def test_int8_zero_column_gets_unit_scale(self):
+        w = jnp.zeros((8, 3), jnp.float32)
+        w_q, s = ref.quantize_int8(w)
+        assert jnp.all(s == 1.0) and jnp.all(w_q == 0)
+
+    def test_int4_pack_unpack_identity(self):
+        rng = np.random.default_rng(2)
+        w = _rand(rng, 32, 16)
+        w_p, s = ref.quantize_int4(w)
+        assert w_p.shape == (16, 16) and w_p.dtype == jnp.uint8
+        unpacked = ref.unpack_int4(w_p)
+        assert unpacked.shape == (32, 16)
+        assert int(jnp.min(unpacked)) >= -8 and int(jnp.max(unpacked)) <= 7
+
+    def test_int4_roundtrip_error_bound(self):
+        rng = np.random.default_rng(3)
+        w = _rand(rng, 64, 8)
+        w_p, s = ref.quantize_int4(w)
+        w_hat = ref.unpack_int4(w_p).astype(jnp.float32) * s
+        assert float(jnp.max(jnp.abs(w - w_hat) / s[0])) <= 0.5 + 1e-5
+
+    def test_int4_requires_even_k(self):
+        with pytest.raises(AssertionError):
+            ref.quantize_int4(jnp.ones((7, 4), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs reference, fixed cases
+# ---------------------------------------------------------------------------
+
+class TestKernelsFixed:
+    @pytest.mark.parametrize("m,k,n", [
+        (8, 16, 8), (64, 128, 128), (64, 96, 80), (1, 128, 256),
+        (33, 50, 17),  # awkward, non-power-of-two everything
+        (128, 256, 64),
+    ])
+    def test_matmul_f32(self, m, k, n):
+        rng = np.random.default_rng(m * 1000 + k + n)
+        x, w = _rand(rng, m, k), _rand(rng, k, n)
+        np.testing.assert_allclose(qm.matmul_f32(x, w),
+                                   ref.matmul_f32_ref(x, w),
+                                   rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("m,k,n", [
+        (8, 16, 8), (64, 128, 128), (48, 96, 80), (1, 64, 32),
+        (33, 50, 17),
+    ])
+    def test_quant_matmul_int8(self, m, k, n):
+        rng = np.random.default_rng(m + k + n)
+        x, w = _rand(rng, m, k), _rand(rng, k, n)
+        w_q, s = ref.quantize_int8(w)
+        np.testing.assert_allclose(qm.quant_matmul_int8(x, w_q, s),
+                                   ref.quant_matmul_int8_ref(x, w_q, s),
+                                   rtol=1e-5, atol=1e-4)
+
+    @pytest.mark.parametrize("m,k,n", [
+        (8, 16, 8), (64, 128, 128), (48, 96, 80), (1, 64, 32),
+        (32, 50, 17),  # K=50 even but not power of two
+    ])
+    def test_quant_matmul_int4(self, m, k, n):
+        rng = np.random.default_rng(m * 7 + k + n)
+        x, w = _rand(rng, m, k), _rand(rng, k, n)
+        w_p, s = ref.quantize_int4(w)
+        np.testing.assert_allclose(qm.quant_matmul_int4(x, w_p, s),
+                                   ref.quant_matmul_int4_ref(x, w_p, s),
+                                   rtol=1e-5, atol=1e-4)
+
+    def test_int8_matches_dense_within_quant_error(self):
+        """Fused kernel ~ the unquantized product within quant noise."""
+        rng = np.random.default_rng(11)
+        x, w = _rand(rng, 32, 64), _rand(rng, 64, 48)
+        w_q, s = ref.quantize_int8(w)
+        dense = ref.matmul_f32_ref(x, w)
+        fused = qm.quant_matmul_int8(x, w_q, s)
+        # error bounded by K * max|x| * step/2
+        bound = 64 * float(jnp.max(jnp.abs(x))) * float(jnp.max(s)) * 0.5
+        assert float(jnp.max(jnp.abs(dense - fused))) <= bound
+
+    def test_linear_dispatch_all_modes(self):
+        rng = np.random.default_rng(12)
+        x = _rand(rng, 2, 8, 32)  # leading batch dims exercised
+        w = _rand(rng, 32, 24)
+        from compile.model import pack_weight
+        for quant in ("fp16", "fp8", "int8", "int4"):
+            pack = pack_weight(np.asarray(w), quant)
+            y = qm.linear(x, pack, quant)
+            assert y.shape == (2, 8, 24)
+
+    def test_linear_rejects_unknown_mode(self):
+        rng = np.random.default_rng(13)
+        x, w = _rand(rng, 4, 8), _rand(rng, 8, 8)
+        with pytest.raises(ValueError):
+            qm.linear(x, (w,), "int2")
+
+    def test_mismatched_inner_dim_raises(self):
+        rng = np.random.default_rng(14)
+        x, w = _rand(rng, 4, 8), _rand(rng, 9, 8)
+        with pytest.raises(AssertionError):
+            qm.matmul_f32(x, w)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps
+# ---------------------------------------------------------------------------
+
+dims = st.integers(min_value=1, max_value=96)
+even_dims = st.integers(min_value=1, max_value=48).map(lambda v: v * 2)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+class TestKernelsHypothesis:
+    @given(m=dims, k=dims, n=dims, seed=seeds)
+    def test_matmul_f32_sweep(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, w = _rand(rng, m, k), _rand(rng, k, n)
+        np.testing.assert_allclose(qm.matmul_f32(x, w),
+                                   ref.matmul_f32_ref(x, w),
+                                   rtol=1e-5, atol=1e-4)
+
+    @given(m=dims, k=dims, n=dims, seed=seeds,
+           scale=st.floats(min_value=1e-3, max_value=100.0))
+    def test_quant_matmul_int8_sweep(self, m, k, n, seed, scale):
+        rng = np.random.default_rng(seed)
+        x = _rand(rng, m, k)
+        w = _rand(rng, k, n, scale=scale)
+        w_q, s = ref.quantize_int8(w)
+        np.testing.assert_allclose(qm.quant_matmul_int8(x, w_q, s),
+                                   ref.quant_matmul_int8_ref(x, w_q, s),
+                                   rtol=1e-4, atol=1e-3 * max(1.0, scale))
+
+    @given(m=dims, k=even_dims, n=dims, seed=seeds)
+    def test_quant_matmul_int4_sweep(self, m, k, n, seed):
+        rng = np.random.default_rng(seed)
+        x, w = _rand(rng, m, k), _rand(rng, k, n)
+        w_p, s = ref.quantize_int4(w)
+        np.testing.assert_allclose(qm.quant_matmul_int4(x, w_p, s),
+                                   ref.quant_matmul_int4_ref(x, w_p, s),
+                                   rtol=1e-4, atol=1e-3)
+
+    @given(k=even_dims, n=dims, seed=seeds)
+    def test_int4_pack_unpack_roundtrip_sweep(self, k, n, seed):
+        rng = np.random.default_rng(seed)
+        w = _rand(rng, k, n)
+        w_p, _ = ref.quantize_int4(w)
+        u = ref.unpack_int4(w_p)
+        # re-pack == original packing
+        lo = (u[0::2, :] + 8).astype(jnp.int32)
+        hi = (u[1::2, :] + 8).astype(jnp.int32)
+        repacked = (lo | (hi << 4)).astype(jnp.uint8)
+        assert jnp.array_equal(repacked, w_p)

@@ -1,0 +1,13 @@
+//! Bench: regenerate paper Figure 1 (summary + CSV export) and time it.
+use ae_llm::report::{figures, Budget};
+use ae_llm::util::bench::time_once;
+
+fn main() {
+    let quick = std::env::var("AE_QUICK").map(|v| v != "0").unwrap_or(true);
+    let budget = Budget { quick };
+    println!("== Figure 1 (quick={quick}) ==");
+    let (fig, _ms) = time_once("figure_1 total", || figures::figure_1(&budget, 42));
+    println!("{}", fig.summary);
+    let written = fig.write_csvs(std::path::Path::new("reports")).unwrap();
+    for w in written { println!("wrote {w}"); }
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate paper Figure 3 (summary + CSV export) and time it.
+use ae_llm::report::{figures, Budget};
+use ae_llm::util::bench::time_once;
+
+fn main() {
+    let quick = std::env::var("AE_QUICK").map(|v| v != "0").unwrap_or(true);
+    let budget = Budget { quick };
+    println!("== Figure 3 (quick={quick}) ==");
+    let (fig, _ms) = time_once("figure_3 total", || figures::figure_3(&budget, 42));
+    println!("{}", fig.summary);
+    let written = fig.write_csvs(std::path::Path::new("reports")).unwrap();
+    for w in written { println!("wrote {w}"); }
+}

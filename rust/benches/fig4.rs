@@ -1,0 +1,13 @@
+//! Bench: regenerate paper Figure 4 (summary + CSV export) and time it.
+use ae_llm::report::{figures, Budget};
+use ae_llm::util::bench::time_once;
+
+fn main() {
+    let quick = std::env::var("AE_QUICK").map(|v| v != "0").unwrap_or(true);
+    let budget = Budget { quick };
+    println!("== Figure 4 (quick={quick}) ==");
+    let (fig, _ms) = time_once("figure_4 total", || figures::figure_4(&budget, 42));
+    println!("{}", fig.summary);
+    let written = fig.write_csvs(std::path::Path::new("reports")).unwrap();
+    for w in written { println!("wrote {w}"); }
+}

@@ -1,0 +1,54 @@
+//! Microbenchmarks of the PJRT runtime hot path: artifact compile time,
+//! per-forward latency per variant family, and batched serving
+//! throughput.  These are the real-hardware numbers behind the
+//! measured-evaluator path (EXPERIMENTS.md §Perf L1/L2 notes).
+
+use ae_llm::runtime::{self, Request, Server};
+use ae_llm::util::bench::{time_it, time_once};
+use ae_llm::util::Rng;
+
+fn main() {
+    let dir = runtime::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts not built; run `make artifacts` first");
+        return;
+    }
+    println!("== perf_runtime: PJRT hot path ==");
+    let mut engine = runtime::Engine::new(&dir).unwrap();
+
+    // -- compile times -----------------------------------------------------
+    for name in ["gqa_fp16", "gqa_int8", "gqa_int4", "mla_int8",
+                 "gqa_fp16_moe4"] {
+        let (_, _ms) = time_once(&format!("compile {name}"), || {
+            engine.load(name).unwrap();
+        });
+    }
+
+    // -- forward latency per family -----------------------------------------
+    for name in ["gqa_fp16", "gqa_int8", "gqa_int4", "mla_int8",
+                 "gqa_fp16_moe4"] {
+        let tokens = engine.make_tokens(name, 7).unwrap();
+        time_it(&format!("forward {name} (b=4, s=64)"), 2, 10, || {
+            std::hint::black_box(engine.forward(name, &tokens).unwrap());
+        });
+    }
+
+    // -- serving throughput ---------------------------------------------------
+    engine.load("serve_gqa_int8").unwrap();
+    let mut rng = Rng::new(1);
+    let (report, _) = time_once("serve 64 requests (batch=8)", || {
+        let mut server = Server::new(&engine, "serve_gqa_int8").unwrap();
+        for id in 0..64u64 {
+            let tokens: Vec<i32> =
+                (0..100).map(|_| rng.below(256) as i32).collect();
+            server.submit(Request { id, tokens });
+        }
+        server.drain().unwrap();
+        server.report()
+    });
+    println!(
+        "  serving: p50 {:.1} ms | p95 {:.1} ms | {:.1} req/s | {:.0} tok/s",
+        report.p50_latency_ms, report.p95_latency_ms,
+        report.throughput_rps, report.tokens_per_s
+    );
+}

@@ -1,0 +1,73 @@
+//! Microbenchmarks of the Layer-3 search hot paths (the §Perf targets
+//! of EXPERIMENTS.md): surrogate prediction, GBT training, NSGA-II
+//! machinery, oracle evaluation and the full Algorithm-1 run.
+
+use ae_llm::config::{encode, enumerate, Config};
+use ae_llm::coordinator::{optimize, AeLlmParams, Scenario};
+use ae_llm::models;
+use ae_llm::oracle::Testbed;
+use ae_llm::search::dominance;
+use ae_llm::surrogate::{collect_samples, GbtParams, SurrogateSet};
+use ae_llm::tasks;
+use ae_llm::util::bench::{time_it, time_once};
+use ae_llm::util::Rng;
+
+fn main() {
+    println!("== perf_search: L3 hot paths ==");
+    let m = models::by_name("LLaMA-2-7B").unwrap();
+    let t = tasks::blended_task();
+    let tb = Testbed::new(ae_llm::hardware::a100());
+    let mut rng = Rng::new(1);
+
+    // -- oracle ----------------------------------------------------------
+    let configs: Vec<Config> =
+        (0..512).map(|_| enumerate::sample(&mut rng)).collect();
+    let mut i = 0;
+    time_it("oracle true_objectives (per config)", 100, 2000, || {
+        let c = &configs[i % configs.len()];
+        std::hint::black_box(tb.true_objectives(c, &m, &t));
+        i += 1;
+    });
+
+    // -- encoding ---------------------------------------------------------
+    let mut i = 0;
+    time_it("feature encode (per config)", 100, 5000, || {
+        let c = &configs[i % configs.len()];
+        std::hint::black_box(encode::encode(c, &m, &t));
+        i += 1;
+    });
+
+    // -- surrogate fit + predict -------------------------------------------
+    let samples = collect_samples(&tb, &m, &t, 300, &mut rng);
+    let (sur, _) = time_once("surrogate fit (300 samples, fast params)", || {
+        SurrogateSet::fit(samples.clone(), GbtParams::fast(), &mut Rng::new(2))
+    });
+    let mut i = 0;
+    time_it("surrogate predict (per config)", 200, 5000, || {
+        let c = &configs[i % configs.len()];
+        std::hint::black_box(sur.predict(c, &m, &t));
+        i += 1;
+    });
+
+    // -- dominance machinery ------------------------------------------------
+    let mut rng2 = Rng::new(3);
+    let objs: Vec<[f64; 4]> = (0..200)
+        .map(|_| [rng2.f64(), rng2.f64(), rng2.f64(), rng2.f64()])
+        .collect();
+    time_it("non-dominated sort (N=200, M=4)", 20, 200, || {
+        std::hint::black_box(dominance::non_dominated_sort(&objs));
+    });
+    let front: Vec<usize> = (0..200).collect();
+    time_it("crowding distance (N=200)", 20, 500, || {
+        std::hint::black_box(dominance::crowding_distance(&objs, &front));
+    });
+
+    // -- full runs -----------------------------------------------------------
+    let scenario = Scenario::for_model("LLaMA-2-7B").unwrap();
+    time_once("Algorithm 1 (small params)", || {
+        optimize(&scenario, &AeLlmParams::small(), &mut Rng::new(4))
+    });
+    time_once("Algorithm 1 (paper params)", || {
+        optimize(&scenario, &AeLlmParams::default(), &mut Rng::new(5))
+    });
+}

@@ -1,0 +1,8 @@
+//! Bench: Table 5 (hyper-parameter settings; static echo).
+use ae_llm::report::tables;
+use ae_llm::util::bench::time_once;
+
+fn main() {
+    let (table, _ms) = time_once("table_5 total", tables::table_5);
+    println!("{}", table.render());
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate paper Table 6 end-to-end and time it.
+//! Run with `cargo bench --bench table6` (add AE_QUICK=0 for the
+//! full Table-5 search budget).
+use ae_llm::report::{tables, Budget};
+use ae_llm::util::bench::time_once;
+
+fn main() {
+    let quick = std::env::var("AE_QUICK").map(|v| v != "0").unwrap_or(true);
+    let budget = Budget { quick };
+    println!("== Table 6 (quick={quick}) ==");
+    let (table, _ms) = time_once("table_6 total", || tables::table_6(&budget, 42));
+    println!("{}", table.render());
+}

@@ -1,0 +1,158 @@
+//! Feature encoding of (configuration, model, task) triples for the
+//! surrogate models (paper Eq. 5: `o_hat = f_o(c, phi(M), psi(T))`).
+//!
+//! Gradient-boosted trees split on raw ordinal/one-hot features, so the
+//! encoding is deliberately simple and stable: a fixed-length `Vec<f64>`
+//! whose layout is documented by [`feature_names`].  Categorical axes
+//! are one-hot; magnitudes (rank, experts, params) are log-scaled so
+//! splits distribute sensibly across model scales.
+
+use super::space::*;
+use crate::models::ModelSpec;
+use crate::tasks::TaskSpec;
+
+/// Number of configuration features.
+pub const CONFIG_DIM: usize = 24;
+/// Number of model features (phi).
+pub const MODEL_DIM: usize = 6;
+/// Number of task features (psi).
+pub const TASK_DIM: usize = 6;
+/// Total feature-vector length.
+pub const TOTAL_DIM: usize = CONFIG_DIM + MODEL_DIM + TASK_DIM;
+
+/// Encode just the configuration (first CONFIG_DIM slots).
+pub fn encode_config(c: &Config) -> Vec<f64> {
+    let mut f = Vec::with_capacity(CONFIG_DIM);
+    // attention one-hot (4)
+    for a in Attention::ALL {
+        f.push(if c.arch.attention == a { 1.0 } else { 0.0 });
+    }
+    // kv fraction of the *architecture* (1)
+    f.push(c.arch.attention.kv_fraction());
+    // moe: sparse flag, log2(experts), active fraction (3)
+    f.push(if c.arch.moe.is_sparse() { 1.0 } else { 0.0 });
+    f.push((c.arch.moe.experts() as f64).log2());
+    f.push(c.arch.moe.active() as f64 / c.arch.moe.experts() as f64);
+    // ft method one-hot (5)
+    for m in FtMethod::ALL {
+        f.push(if c.ft.method == m { 1.0 } else { 0.0 });
+    }
+    // rank (log2, 0 for Full), alpha mult (2)
+    f.push(if c.ft.rank > 0 { (c.ft.rank as f64).log2() } else { 0.0 });
+    f.push(c.ft.alpha_mult as f64);
+    // precision one-hot (4) + bits (1)
+    for p in Precision::ALL {
+        f.push(if c.inf.precision == p { 1.0 } else { 0.0 });
+    }
+    f.push(c.inf.precision.bits() as f64);
+    // quant method one-hot (3)
+    for q in QuantMethod::ALL {
+        f.push(if c.inf.quant_method == q { 1.0 } else { 0.0 });
+    }
+    // kv cache fraction (1)
+    f.push(c.inf.kv_cache.fraction());
+    debug_assert_eq!(f.len(), CONFIG_DIM);
+    f
+}
+
+/// Encode model characteristics phi(M).
+pub fn encode_model(m: &ModelSpec) -> Vec<f64> {
+    vec![
+        (m.params_b * 1e9).log10(),
+        m.n_layers as f64,
+        (m.d_model as f64).log2(),
+        m.n_heads as f64,
+        if m.native_moe { 1.0 } else { 0.0 },
+        if m.is_vlm { 1.0 } else { 0.0 },
+    ]
+}
+
+/// Encode task properties psi(T).
+pub fn encode_task(t: &TaskSpec) -> Vec<f64> {
+    vec![
+        t.category as u8 as f64,
+        (t.seq_len as f64).log2(),
+        t.quant_sensitivity,
+        t.moe_affinity,
+        t.reasoning_weight,
+        if t.multimodal { 1.0 } else { 0.0 },
+    ]
+}
+
+/// Full feature vector for the surrogate models.
+pub fn encode(c: &Config, m: &ModelSpec, t: &TaskSpec) -> Vec<f64> {
+    let mut f = encode_config(c);
+    f.extend(encode_model(m));
+    f.extend(encode_task(t));
+    debug_assert_eq!(f.len(), TOTAL_DIM);
+    f
+}
+
+/// Human-readable names for every feature slot (reports / debugging).
+pub fn feature_names() -> Vec<&'static str> {
+    vec![
+        "attn=MHA", "attn=MQA", "attn=GQA", "attn=MLA", "arch_kv_frac",
+        "moe_sparse", "moe_log2_experts", "moe_active_frac",
+        "ft=Full", "ft=LoRA", "ft=QLoRA", "ft=DoRA", "ft=RSLoRA",
+        "ft_log2_rank", "ft_alpha_mult",
+        "prec=FP16", "prec=FP8", "prec=INT8", "prec=INT4", "prec_bits",
+        "qm=GPTQ", "qm=AWQ", "qm=SmoothQuant", "kv_policy_frac",
+        "m_log10_params", "m_layers", "m_log2_dmodel", "m_heads",
+        "m_native_moe", "m_is_vlm",
+        "t_category", "t_log2_seq", "t_quant_sens", "t_moe_affinity",
+        "t_reasoning", "t_multimodal",
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+    use crate::tasks::suite;
+
+    #[test]
+    fn dims_consistent() {
+        assert_eq!(feature_names().len(), TOTAL_DIM);
+        let c = Config::default_baseline();
+        let m = &zoo()[0];
+        let t = &suite()[0];
+        assert_eq!(encode(&c, m, t).len(), TOTAL_DIM);
+        assert_eq!(encode_config(&c).len(), CONFIG_DIM);
+        assert_eq!(encode_model(m).len(), MODEL_DIM);
+        assert_eq!(encode_task(t).len(), TASK_DIM);
+    }
+
+    #[test]
+    fn one_hots_are_exclusive() {
+        let c = Config::default_baseline();
+        let f = encode_config(&c);
+        assert_eq!(f[0..4].iter().sum::<f64>(), 1.0); // attention
+        assert_eq!(f[8..13].iter().sum::<f64>(), 1.0); // ft method
+        assert_eq!(f[15..19].iter().sum::<f64>(), 1.0); // precision
+        assert_eq!(f[20..23].iter().sum::<f64>(), 1.0); // quant method
+    }
+
+    #[test]
+    fn distinct_configs_encode_differently() {
+        let a = Config::default_baseline();
+        let mut b = a;
+        b.inf.precision = Precision::Int4;
+        assert_ne!(encode_config(&a), encode_config(&b));
+    }
+
+    #[test]
+    fn encoding_is_deterministic() {
+        let c = Config::default_baseline();
+        assert_eq!(encode_config(&c), encode_config(&c));
+    }
+
+    #[test]
+    fn all_features_finite_for_entire_zoo_and_suite() {
+        let c = Config::default_baseline();
+        for m in zoo() {
+            for t in suite() {
+                assert!(encode(&c, &m, &t).iter().all(|x| x.is_finite()));
+            }
+        }
+    }
+}

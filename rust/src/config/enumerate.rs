@@ -1,0 +1,176 @@
+//! Enumeration and random sampling of the configuration space.
+//!
+//! The full space (paper §3.3.3: |C| ~ O(10^6) including continuous
+//! relaxations; our discrete grid is ~10^5) is never materialized during
+//! search — NSGA-II samples and mutates — but exhaustive enumeration is
+//! needed by the "- Constraint-Aware Pruning" ablation and by tests.
+
+use super::space::*;
+use super::validity;
+use crate::util::Rng;
+
+/// Iterate every *valid* configuration in the discrete grid.
+pub fn all_valid() -> Vec<Config> {
+    let mut out = Vec::new();
+    for &attention in &Attention::ALL {
+        for &moe in &MoE::ALL {
+            for &method in &FtMethod::ALL {
+                let ft_variants: Vec<FtConfig> = if method.is_peft() {
+                    RANKS
+                        .iter()
+                        .flat_map(|&rank| {
+                            ALPHA_MULTS.iter().map(move |&alpha_mult| FtConfig {
+                                method,
+                                rank,
+                                alpha_mult,
+                            })
+                        })
+                        .collect()
+                } else {
+                    vec![FtConfig::full()]
+                };
+                for ft in ft_variants {
+                    for &precision in &Precision::ALL {
+                        for &quant_method in &QuantMethod::ALL {
+                            for &kv_cache in &KvCache::ALL {
+                                let c = Config {
+                                    arch: ArchConfig { attention, moe },
+                                    ft,
+                                    inf: InfConfig {
+                                        precision,
+                                        quant_method,
+                                        kv_cache,
+                                    },
+                                };
+                                if validity::is_valid(&c) {
+                                    out.push(c);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Size of the unconstrained grid (before validity filtering); used in
+/// reports to echo the paper's search-space-size claim.
+pub fn grid_size() -> usize {
+    let ft = 1 + (FtMethod::ALL.len() - 1) * RANKS.len() * ALPHA_MULTS.len();
+    Attention::ALL.len()
+        * MoE::ALL.len()
+        * ft
+        * Precision::ALL.len()
+        * QuantMethod::ALL.len()
+        * KvCache::ALL.len()
+}
+
+/// Draw one uniformly random configuration (resampling until valid;
+/// validity rejects only a small fraction so this terminates fast).
+pub fn sample(rng: &mut Rng) -> Config {
+    loop {
+        let method = *rng.pick(&FtMethod::ALL);
+        let ft = if method.is_peft() {
+            FtConfig {
+                method,
+                rank: *rng.pick(&RANKS),
+                alpha_mult: *rng.pick(&ALPHA_MULTS),
+            }
+        } else {
+            FtConfig::full()
+        };
+        let c = Config {
+            arch: ArchConfig {
+                attention: *rng.pick(&Attention::ALL),
+                moe: *rng.pick(&MoE::ALL),
+            },
+            ft,
+            inf: InfConfig {
+                precision: *rng.pick(&Precision::ALL),
+                quant_method: *rng.pick(&QuantMethod::ALL),
+                kv_cache: *rng.pick(&KvCache::ALL),
+            },
+        };
+        if validity::is_valid(&c) {
+            return c;
+        }
+    }
+}
+
+/// Sample `n` distinct configurations.
+pub fn sample_distinct(rng: &mut Rng, n: usize) -> Vec<Config> {
+    let mut seen = std::collections::BTreeSet::new();
+    let mut out = Vec::with_capacity(n);
+    let mut guard = 0;
+    while out.len() < n && guard < n * 200 {
+        let c = sample(rng);
+        if seen.insert(c) {
+            out.push(c);
+        }
+        guard += 1;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn enumeration_nonempty_and_all_valid() {
+        let all = all_valid();
+        assert!(all.len() > 10_000, "got {}", all.len());
+        assert!(all.iter().all(validity::is_valid));
+    }
+
+    #[test]
+    fn enumeration_has_no_duplicates() {
+        let all = all_valid();
+        let set: std::collections::BTreeSet<_> = all.iter().collect();
+        assert_eq!(set.len(), all.len());
+    }
+
+    #[test]
+    fn grid_size_upper_bounds_valid_count() {
+        assert!(all_valid().len() <= grid_size());
+        // sanity: 4 attn * 7 moe * (1 + 4*5*3) ft * 4 prec * 3 qm * 3 kv
+        assert_eq!(grid_size(), 4 * 7 * 61 * 4 * 3 * 3);
+    }
+
+    #[test]
+    fn default_baseline_is_in_grid() {
+        assert!(all_valid().contains(&Config::default_baseline()));
+    }
+
+    #[test]
+    fn samples_are_valid_and_deterministic() {
+        let mut r1 = Rng::new(5);
+        let mut r2 = Rng::new(5);
+        for _ in 0..200 {
+            let a = sample(&mut r1);
+            assert!(validity::is_valid(&a));
+            assert_eq!(a, sample(&mut r2));
+        }
+    }
+
+    #[test]
+    fn sample_distinct_returns_unique() {
+        let mut rng = Rng::new(6);
+        let v = sample_distinct(&mut rng, 100);
+        assert_eq!(v.len(), 100);
+        let set: std::collections::BTreeSet<_> = v.iter().collect();
+        assert_eq!(set.len(), 100);
+    }
+
+    #[test]
+    fn sampling_covers_every_attention_kind() {
+        let mut rng = Rng::new(7);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..500 {
+            seen.insert(sample(&mut rng).arch.attention);
+        }
+        assert_eq!(seen.len(), Attention::ALL.len());
+    }
+}

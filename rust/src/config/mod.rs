@@ -1,0 +1,16 @@
+//! S1: the AE-LLM configuration space (paper §3.2, Table 1).
+//!
+//! * [`space`] — the typed configuration grid `(arch, ft, inf)`;
+//! * [`validity`] — structural consistency rules (§5.5 conflicts);
+//! * [`enumerate`] — exhaustive iteration + seeded random sampling;
+//! * [`encode`] — feature vectors for the surrogate models (Eq. 5).
+
+pub mod encode;
+pub mod enumerate;
+pub mod space;
+pub mod validity;
+
+pub use space::{
+    ArchConfig, Attention, Config, FtConfig, FtMethod, InfConfig, KvCache,
+    MoE, Precision, QuantMethod, ALPHA_MULTS, RANKS,
+};

@@ -1,0 +1,394 @@
+//! The AE-LLM configuration space (paper §3.2, Table 1).
+//!
+//! A configuration `c = (c_arch, c_ft, c_inf)` combines choices across
+//! the three lifecycle stages.  The enums below mirror Table 1 exactly:
+//!
+//! | stage        | axis          | options                                   |
+//! |--------------|---------------|-------------------------------------------|
+//! | architecture | attention     | MHA, MQA, GQA, MLA                        |
+//! | architecture | MoE           | dense, sparse-MoE {2,4,8} × top-{1,2}     |
+//! | fine-tuning  | method        | Full, LoRA, QLoRA, DoRA, RSLoRA           |
+//! | fine-tuning  | rank / alpha  | r ∈ {8..128}, α ∈ {r, 2r, 4r}             |
+//! | inference    | quantization  | {FP16, FP8, INT8, INT4} × {GPTQ,AWQ,SQ}   |
+//! | inference    | KV cache      | Full, MQA-style, GQA-style                |
+
+use std::fmt;
+
+/// Attention mechanism (architecture stage).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Attention {
+    Mha,
+    Mqa,
+    Gqa,
+    Mla,
+}
+
+impl Attention {
+    pub const ALL: [Attention; 4] =
+        [Attention::Mha, Attention::Mqa, Attention::Gqa, Attention::Mla];
+
+    /// Fraction of full KV heads this variant keeps (drives KV-cache
+    /// memory and bandwidth in the cost model).  GQA assumes the common
+    /// groups-of-4 setting; MLA's latent cache is ~1/8 of full KV.
+    pub fn kv_fraction(self) -> f64 {
+        match self {
+            Attention::Mha => 1.0,
+            Attention::Gqa => 0.25,
+            Attention::Mqa => 0.125, // one head of a typical 8-head group
+            Attention::Mla => 0.125,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Attention::Mha => "MHA",
+            Attention::Mqa => "MQA",
+            Attention::Gqa => "GQA",
+            Attention::Mla => "MLA",
+        }
+    }
+}
+
+/// Mixture-of-experts setting (architecture stage).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum MoE {
+    Dense,
+    /// `experts` total, `top_k` active per token.
+    Sparse { experts: u8, top_k: u8 },
+}
+
+impl MoE {
+    pub const ALL: [MoE; 7] = [
+        MoE::Dense,
+        MoE::Sparse { experts: 2, top_k: 1 },
+        MoE::Sparse { experts: 2, top_k: 2 },
+        MoE::Sparse { experts: 4, top_k: 1 },
+        MoE::Sparse { experts: 4, top_k: 2 },
+        MoE::Sparse { experts: 8, top_k: 1 },
+        MoE::Sparse { experts: 8, top_k: 2 },
+    ];
+
+    pub fn experts(self) -> u8 {
+        match self {
+            MoE::Dense => 1,
+            MoE::Sparse { experts, .. } => experts,
+        }
+    }
+
+    pub fn active(self) -> u8 {
+        match self {
+            MoE::Dense => 1,
+            MoE::Sparse { top_k, .. } => top_k,
+        }
+    }
+
+    pub fn is_sparse(self) -> bool {
+        !matches!(self, MoE::Dense)
+    }
+
+    pub fn name(self) -> String {
+        match self {
+            MoE::Dense => "Dense".into(),
+            MoE::Sparse { experts, top_k } => {
+                format!("MoE{experts}t{top_k}")
+            }
+        }
+    }
+}
+
+/// Fine-tuning method (fine-tuning stage).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum FtMethod {
+    Full,
+    LoRA,
+    QLoRA,
+    DoRA,
+    RsLoRA,
+}
+
+impl FtMethod {
+    pub const ALL: [FtMethod; 5] = [
+        FtMethod::Full,
+        FtMethod::LoRA,
+        FtMethod::QLoRA,
+        FtMethod::DoRA,
+        FtMethod::RsLoRA,
+    ];
+
+    pub fn is_peft(self) -> bool {
+        !matches!(self, FtMethod::Full)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FtMethod::Full => "Full",
+            FtMethod::LoRA => "LoRA",
+            FtMethod::QLoRA => "QLoRA",
+            FtMethod::DoRA => "DoRA",
+            FtMethod::RsLoRA => "RSLoRA",
+        }
+    }
+}
+
+/// LoRA rank options.
+pub const RANKS: [u16; 5] = [8, 16, 32, 64, 128];
+/// Alpha multiplier options (alpha = mult * rank).
+pub const ALPHA_MULTS: [u8; 3] = [1, 2, 4];
+
+/// Weight precision (inference stage).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Precision {
+    Fp16,
+    Fp8,
+    Int8,
+    Int4,
+}
+
+impl Precision {
+    pub const ALL: [Precision; 4] =
+        [Precision::Fp16, Precision::Fp8, Precision::Int8, Precision::Int4];
+
+    pub fn bytes_per_weight(self) -> f64 {
+        match self {
+            Precision::Fp16 => 2.0,
+            Precision::Fp8 => 1.0,
+            Precision::Int8 => 1.0,
+            Precision::Int4 => 0.5,
+        }
+    }
+
+    pub fn bits(self) -> u8 {
+        match self {
+            Precision::Fp16 => 16,
+            Precision::Fp8 => 8,
+            Precision::Int8 => 8,
+            Precision::Int4 => 4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Fp16 => "FP16",
+            Precision::Fp8 => "FP8",
+            Precision::Int8 => "INT8",
+            Precision::Int4 => "INT4",
+        }
+    }
+}
+
+/// Post-training quantization algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum QuantMethod {
+    Gptq,
+    Awq,
+    SmoothQuant,
+}
+
+impl QuantMethod {
+    pub const ALL: [QuantMethod; 3] =
+        [QuantMethod::Gptq, QuantMethod::Awq, QuantMethod::SmoothQuant];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            QuantMethod::Gptq => "GPTQ",
+            QuantMethod::Awq => "AWQ",
+            QuantMethod::SmoothQuant => "SmoothQuant",
+        }
+    }
+}
+
+/// KV-cache layout policy (inference stage; independent of the trained
+/// attention architecture — e.g. post-hoc GQA-style cache sharing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KvCache {
+    Full,
+    GqaStyle,
+    MqaStyle,
+}
+
+impl KvCache {
+    pub const ALL: [KvCache; 3] =
+        [KvCache::Full, KvCache::GqaStyle, KvCache::MqaStyle];
+
+    pub fn fraction(self) -> f64 {
+        match self {
+            KvCache::Full => 1.0,
+            KvCache::GqaStyle => 0.25,
+            KvCache::MqaStyle => 0.125,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KvCache::Full => "Full",
+            KvCache::GqaStyle => "GQA-style",
+            KvCache::MqaStyle => "MQA-style",
+        }
+    }
+}
+
+/// Architecture-stage configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ArchConfig {
+    pub attention: Attention,
+    pub moe: MoE,
+}
+
+/// Fine-tuning-stage configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FtConfig {
+    pub method: FtMethod,
+    /// rank is meaningful only for PEFT methods (0 for Full).
+    pub rank: u16,
+    /// alpha = alpha_mult * rank.
+    pub alpha_mult: u8,
+}
+
+impl FtConfig {
+    pub fn full() -> Self {
+        FtConfig { method: FtMethod::Full, rank: 0, alpha_mult: 1 }
+    }
+
+    pub fn alpha(&self) -> f64 {
+        self.alpha_mult as f64 * self.rank as f64
+    }
+}
+
+/// Inference-stage configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct InfConfig {
+    pub precision: Precision,
+    pub quant_method: QuantMethod,
+    pub kv_cache: KvCache,
+}
+
+/// A complete efficiency configuration (paper Definition 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Config {
+    pub arch: ArchConfig,
+    pub ft: FtConfig,
+    pub inf: InfConfig,
+}
+
+impl Config {
+    /// The paper's "Default" baseline: vanilla dense MHA, full
+    /// fine-tuning, FP16, full KV cache.
+    pub fn default_baseline() -> Self {
+        Config {
+            arch: ArchConfig { attention: Attention::Mha, moe: MoE::Dense },
+            ft: FtConfig::full(),
+            inf: InfConfig {
+                precision: Precision::Fp16,
+                quant_method: QuantMethod::Gptq,
+                kv_cache: KvCache::Full,
+            },
+        }
+    }
+
+    /// Short human-readable signature, e.g.
+    /// `GQA/MoE4t2/LoRA-r32a2/INT8-AWQ/KV-GQA`.
+    pub fn signature(&self) -> String {
+        let ft = if self.ft.method.is_peft() {
+            format!("{}-r{}a{}", self.ft.method.name(), self.ft.rank,
+                    self.ft.alpha_mult)
+        } else {
+            "Full".to_string()
+        };
+        format!(
+            "{}/{}/{}/{}-{}/KV-{}",
+            self.arch.attention.name(),
+            self.arch.moe.name(),
+            ft,
+            self.inf.precision.name(),
+            self.inf.quant_method.name(),
+            self.inf.kv_cache.name(),
+        )
+    }
+}
+
+impl fmt::Display for Config {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.signature())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_baseline_is_vanilla() {
+        let c = Config::default_baseline();
+        assert_eq!(c.arch.attention, Attention::Mha);
+        assert_eq!(c.arch.moe, MoE::Dense);
+        assert_eq!(c.ft.method, FtMethod::Full);
+        assert_eq!(c.inf.precision, Precision::Fp16);
+        assert_eq!(c.inf.kv_cache, KvCache::Full);
+    }
+
+    #[test]
+    fn kv_fractions_ordered() {
+        assert!(Attention::Mha.kv_fraction() > Attention::Gqa.kv_fraction());
+        assert!(Attention::Gqa.kv_fraction() > Attention::Mqa.kv_fraction());
+        assert_eq!(Attention::Mla.kv_fraction(), Attention::Mqa.kv_fraction());
+    }
+
+    #[test]
+    fn precision_bytes_ordered() {
+        let mut prev = f64::INFINITY;
+        for p in Precision::ALL {
+            assert!(p.bytes_per_weight() <= prev);
+            prev = p.bytes_per_weight();
+        }
+        assert_eq!(Precision::Int4.bytes_per_weight(), 0.5);
+    }
+
+    #[test]
+    fn moe_active_le_experts() {
+        for m in MoE::ALL {
+            assert!(m.active() <= m.experts());
+        }
+    }
+
+    #[test]
+    fn signature_contains_all_stages() {
+        let c = Config {
+            arch: ArchConfig {
+                attention: Attention::Gqa,
+                moe: MoE::Sparse { experts: 4, top_k: 2 },
+            },
+            ft: FtConfig { method: FtMethod::LoRA, rank: 32, alpha_mult: 2 },
+            inf: InfConfig {
+                precision: Precision::Int8,
+                quant_method: QuantMethod::Awq,
+                kv_cache: KvCache::GqaStyle,
+            },
+        };
+        let s = c.signature();
+        for part in ["GQA", "MoE4t2", "LoRA-r32a2", "INT8-AWQ", "KV-GQA"] {
+            assert!(s.contains(part), "{s} missing {part}");
+        }
+    }
+
+    #[test]
+    fn full_ft_signature_has_no_rank() {
+        let s = Config::default_baseline().signature();
+        assert!(s.contains("Full"));
+        assert!(!s.contains("r0"));
+    }
+
+    #[test]
+    fn alpha_computation() {
+        let ft = FtConfig { method: FtMethod::RsLoRA, rank: 64, alpha_mult: 4 };
+        assert_eq!(ft.alpha(), 256.0);
+    }
+
+    #[test]
+    fn config_is_hashable_and_ord() {
+        use std::collections::BTreeSet;
+        let mut set = BTreeSet::new();
+        set.insert(Config::default_baseline());
+        set.insert(Config::default_baseline());
+        assert_eq!(set.len(), 1);
+    }
+}

@@ -1,0 +1,137 @@
+//! Structural validity rules for configurations.
+//!
+//! These encode *semantic* consistency (not hardware feasibility — that
+//! is Definition 3 and lives in `hardware`): combinations that make no
+//! sense or that the paper's §5.5 identifies as unstable are rejected at
+//! the space level so the search never wastes evaluations on them.
+
+use super::space::*;
+
+/// Reasons a configuration can be structurally invalid.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Violation {
+    /// PEFT methods need a rank; Full must not carry one.
+    RankInconsistent,
+    /// QLoRA definitionally fine-tunes on a quantized base model; running
+    /// it with FP16 inference weights contradicts the method.
+    QloraNeedsQuantBase,
+    /// §5.5 "Cross-Stage Conflicts": INT4 on top-1-routed sparse MoE
+    /// causes routing instability; the space excludes it outright.
+    Int4MoeTop1Unstable,
+    /// A KV-cache policy *more aggressive than the attention architecture
+    /// already provides* is meaningless (e.g. MQA attention + "GQA-style"
+    /// cache reduction — there is nothing left to share).
+    KvCacheRedundant,
+}
+
+/// Check all rules; returns every violation (empty = valid).
+pub fn violations(c: &Config) -> Vec<Violation> {
+    let mut out = Vec::new();
+
+    let peft = c.ft.method.is_peft();
+    if peft != (c.ft.rank > 0) {
+        out.push(Violation::RankInconsistent);
+    }
+
+    if c.ft.method == FtMethod::QLoRA
+        && matches!(c.inf.precision, Precision::Fp16)
+    {
+        out.push(Violation::QloraNeedsQuantBase);
+    }
+
+    if c.inf.precision == Precision::Int4 {
+        if let MoE::Sparse { top_k: 1, .. } = c.arch.moe {
+            out.push(Violation::Int4MoeTop1Unstable);
+        }
+    }
+
+    // A cache-reduction policy is only meaningful if the attention
+    // architecture keeps more KV than the policy's target fraction.
+    let arch_kv = c.arch.attention.kv_fraction();
+    let policy_kv = c.inf.kv_cache.fraction();
+    if policy_kv < 1.0 && arch_kv <= policy_kv {
+        out.push(Violation::KvCacheRedundant);
+    }
+
+    out
+}
+
+/// True when the configuration is structurally valid.
+pub fn is_valid(c: &Config) -> bool {
+    violations(c).is_empty()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> Config {
+        Config::default_baseline()
+    }
+
+    #[test]
+    fn default_is_valid() {
+        assert!(is_valid(&base()));
+    }
+
+    #[test]
+    fn peft_without_rank_invalid() {
+        let mut c = base();
+        c.ft.method = FtMethod::LoRA;
+        c.ft.rank = 0;
+        assert!(violations(&c).contains(&Violation::RankInconsistent));
+    }
+
+    #[test]
+    fn full_with_rank_invalid() {
+        let mut c = base();
+        c.ft.rank = 16;
+        assert!(violations(&c).contains(&Violation::RankInconsistent));
+    }
+
+    #[test]
+    fn qlora_fp16_invalid() {
+        let mut c = base();
+        c.ft.method = FtMethod::QLoRA;
+        c.ft.rank = 16;
+        assert!(violations(&c).contains(&Violation::QloraNeedsQuantBase));
+        c.inf.precision = Precision::Int8;
+        assert!(is_valid(&c));
+    }
+
+    #[test]
+    fn int4_top1_moe_invalid() {
+        let mut c = base();
+        c.arch.moe = MoE::Sparse { experts: 4, top_k: 1 };
+        c.inf.precision = Precision::Int4;
+        assert!(violations(&c).contains(&Violation::Int4MoeTop1Unstable));
+        c.arch.moe = MoE::Sparse { experts: 4, top_k: 2 };
+        assert!(is_valid(&c));
+    }
+
+    #[test]
+    fn kv_policy_on_mqa_arch_redundant() {
+        let mut c = base();
+        c.arch.attention = Attention::Mqa;
+        c.inf.kv_cache = KvCache::GqaStyle;
+        assert!(violations(&c).contains(&Violation::KvCacheRedundant));
+        c.inf.kv_cache = KvCache::Full;
+        assert!(is_valid(&c));
+    }
+
+    #[test]
+    fn kv_gqa_policy_on_mha_arch_fine() {
+        let mut c = base();
+        c.inf.kv_cache = KvCache::GqaStyle;
+        assert!(is_valid(&c));
+    }
+
+    #[test]
+    fn mqa_policy_on_gqa_arch_fine() {
+        // GQA arch keeps 0.25, MQA-style policy targets 0.125 < 0.25 -> OK
+        let mut c = base();
+        c.arch.attention = Attention::Gqa;
+        c.inf.kv_cache = KvCache::MqaStyle;
+        assert!(is_valid(&c));
+    }
+}

@@ -1,0 +1,421 @@
+//! Algorithm 1: Adaptive Efficiency Optimization — the AE-LLM
+//! coordinator tying together surrogates, NSGA-II and the testbed.
+//!
+//! ```text
+//! Require: model M, task T, hardware H, preferences w
+//! Require: initial sample n0, refinement iterations R, evals/iter k
+//!  1: train surrogate models on initial sample C0
+//!  2: for r = 1 to R do
+//!  3:   run NSGA-II with current surrogates -> Pareto set P_r
+//!  4:   select top-k *uncertain* configurations from P_r
+//!  5:   evaluate selected configurations on actual hardware
+//!  6:   update surrogate models with new evaluations
+//!  7: end for
+//!  8: return Pareto-optimal configurations P*
+//! ```
+//!
+//! "Actual hardware" is the [`crate::oracle::Testbed`] (simulated fleet)
+//! by default; the end-to-end example swaps in the PJRT-measured
+//! evaluator (`runtime::measured`) to close the loop on real artifact
+//! executions.
+
+use crate::config::{encode, Config};
+use crate::metrics::{efficiency_score, utility, Reference};
+use crate::oracle::Objectives;
+use crate::search::archive::ParetoArchive;
+use crate::search::nsga2::{self, Nsga2Params, Toggles};
+use crate::surrogate::{GbtParams, Sample, SurrogateSet};
+use crate::util::Rng;
+
+use super::scenario::{Scenario, SpaceMask};
+
+/// AE-LLM hyper-parameters (defaults mirror §3.5 / Table 5, scaled to
+/// the simulated testbed's cost).
+#[derive(Clone, Copy, Debug)]
+pub struct AeLlmParams {
+    /// |C0|: initial random sample measured on the testbed (paper: 500).
+    pub initial_sample: usize,
+    /// R: refinement iterations (paper default: 3).
+    pub refine_iters: usize,
+    /// k: hardware evaluations per refinement iteration.
+    pub evals_per_iter: usize,
+    pub nsga: Nsga2Params,
+    pub gbt: GbtParams,
+    pub toggles: Toggles,
+    /// Ablation "- Predictive Models": skip surrogates, run NSGA-II
+    /// against random-forest—free direct measurement of a small random
+    /// subset (the paper's "random search" variant).
+    pub use_surrogates: bool,
+    /// Restriction of the configuration space (Table 3 ablations).
+    pub mask: SpaceMask,
+}
+
+impl Default for AeLlmParams {
+    fn default() -> Self {
+        AeLlmParams {
+            initial_sample: 300,
+            refine_iters: 3,
+            evals_per_iter: 12,
+            nsga: Nsga2Params::default(),
+            gbt: GbtParams::fast(),
+            toggles: Toggles::default(),
+            use_surrogates: true,
+            mask: SpaceMask::default(),
+        }
+    }
+}
+
+impl AeLlmParams {
+    /// Reduced setting for tests and quick demos.
+    pub fn small() -> Self {
+        AeLlmParams {
+            initial_sample: 120,
+            refine_iters: 2,
+            evals_per_iter: 8,
+            nsga: Nsga2Params::small(),
+            ..Default::default()
+        }
+    }
+}
+
+/// Result of one AE-LLM optimization run.
+pub struct Outcome {
+    /// P*: Pareto front with *measured* objectives.
+    pub pareto: ParetoArchive,
+    /// argmax-utility member of P* (Definition 4's c*).
+    pub chosen: Config,
+    pub chosen_objectives: Objectives,
+    /// Eq. 4 utility and the composite efficiency score of `chosen`.
+    pub chosen_utility: f64,
+    pub chosen_efficiency_score: f64,
+    /// Default-config reference used for normalization.
+    pub reference: Reference,
+    /// Total testbed measurements consumed (the paper's "search cost").
+    pub testbed_evals: usize,
+    /// Surrogate-prediction calls during NSGA-II (cheap evaluations).
+    pub surrogate_evals: usize,
+}
+
+/// Run Algorithm 1 on a scenario against its testbed oracle.
+pub fn optimize(scenario: &Scenario, params: &AeLlmParams,
+                rng: &mut Rng) -> Outcome {
+    let mut measure_count = 0usize;
+    let s = scenario.clone();
+    let mut measure = |c: &Config, rng: &mut Rng| {
+        measure_count += 1;
+        s.testbed.measure(c, &s.model, &s.task, rng)
+    };
+    let out = optimize_with(scenario, params, &mut measure, rng);
+    debug_assert_eq!(out.testbed_evals, measure_count);
+    out
+}
+
+/// Run Algorithm 1 with an arbitrary "actual hardware" evaluator —
+/// this is the entry point the PJRT-backed end-to-end driver uses.
+pub fn optimize_with<F>(
+    scenario: &Scenario,
+    params: &AeLlmParams,
+    measure: &mut F,
+    rng: &mut Rng,
+) -> Outcome
+where
+    F: FnMut(&Config, &mut Rng) -> Objectives,
+{
+    let m = &scenario.model;
+    let t = &scenario.task;
+    let tb = &scenario.testbed;
+    let mask = params.mask;
+    let mut testbed_evals = 0usize;
+    let mut surrogate_evals = 0usize;
+
+    // Reference for Eq. 4 normalization: the Default configuration.
+    let default_cfg = Config::default_baseline();
+    let reference = Reference {
+        default: tb.true_objectives(&default_cfg, m, t),
+    };
+
+    // Predicted Definition-3 feasibility (Eq. 6): memory from the
+    // surrogate once trained; power from the deterministic cost model.
+    let power_ok = |c: &Config| {
+        tb.power_w(c, m, t) <= tb.platform.power_budget_w
+    };
+
+    // ---- line 1: initial sample + surrogate training --------------------
+    let mut surrogates: Option<SurrogateSet> = if params.use_surrogates {
+        let configs =
+            crate::config::enumerate::sample_distinct(rng, params.initial_sample);
+        let samples: Vec<Sample> = configs
+            .into_iter()
+            .map(|c| {
+                let c = mask.clamp(c);
+                testbed_evals += 1;
+                Sample {
+                    features: encode::encode(&c, m, t),
+                    objectives: measure(&c, rng),
+                }
+            })
+            .collect();
+        Some(SurrogateSet::fit(samples, params.gbt, rng))
+    } else {
+        None
+    };
+
+    // Measured results accumulate here; P* is built from measurements,
+    // never from raw surrogate guesses.
+    let mut measured = ParetoArchive::new(params.nsga.archive_capacity);
+    let mut measured_configs: std::collections::BTreeSet<Config> =
+        Default::default();
+
+    let iters = if params.use_surrogates {
+        params.refine_iters.max(1)
+    } else {
+        1
+    };
+
+    for _iteration in 0..iters {
+        // ---- line 3: NSGA-II against the current surrogates -------------
+        let surrogate_archive = {
+            let mask_ref = &mask;
+            match &surrogates {
+                Some(sur) => {
+                    // §Perf: populations revisit configurations heavily
+                    // (tournament winners, crossover clones), so predict
+                    // through a memo table — ~3x fewer GBT traversals,
+                    // see EXPERIMENTS.md §Perf.
+                    let cache: std::cell::RefCell<
+                        std::collections::BTreeMap<Config, Objectives>,
+                    > = Default::default();
+                    let mut eval_count = 0usize;
+                    let cached_predict = |c: &Config| -> Objectives {
+                        let c = mask_ref.clamp(*c);
+                        if let Some(o) = cache.borrow().get(&c) {
+                            return *o;
+                        }
+                        let o = sur.predict(&c, m, t).objectives;
+                        cache.borrow_mut().insert(c, o);
+                        o
+                    };
+                    let res = nsga2::run(
+                        &params.nsga,
+                        &params.toggles,
+                        |c| {
+                            eval_count += 1;
+                            cached_predict(c)
+                        },
+                        |c| {
+                            let mem = cached_predict(c).memory_gb;
+                            mem <= tb.platform.mem_capacity_gb
+                                && power_ok(&mask_ref.clamp(*c))
+                        },
+                        rng,
+                    );
+                    surrogate_evals += eval_count;
+                    res.archive
+                }
+                None => {
+                    // Ablation: NSGA-II evaluates the testbed directly
+                    // with a tightly capped budget (random-search tier).
+                    let budget_params = Nsga2Params {
+                        population: params.nsga.population.min(24),
+                        generations: params.nsga.generations.min(8),
+                        ..params.nsga
+                    };
+                    // separate measurement noise stream: `rng` drives the
+                    // evolutionary operators inside nsga2::run
+                    let mut noise_rng = rng.split();
+                    let res = nsga2::run(
+                        &budget_params,
+                        &params.toggles,
+                        |c| {
+                            testbed_evals += 1;
+                            measure(&mask_ref.clamp(*c), &mut noise_rng)
+                        },
+                        |c| {
+                            let c = mask_ref.clamp(*c);
+                            tb.true_objectives(&c, m, t).memory_gb
+                                <= tb.platform.mem_capacity_gb
+                                && power_ok(&c)
+                        },
+                        rng,
+                    );
+                    res.archive
+                }
+            }
+        };
+
+        // ---- line 4: pick top-k uncertain candidates from P_r ------------
+        let mut candidates: Vec<Config> = surrogate_archive
+            .entries()
+            .iter()
+            .map(|e| mask.clamp(e.config))
+            .filter(|c| !measured_configs.contains(c))
+            .collect();
+        candidates.sort();
+        candidates.dedup();
+        if let Some(sur) = &surrogates {
+            candidates.sort_by(|a, b| {
+                let ua = sur.predict(a, m, t).total_relative_uncertainty();
+                let ub = sur.predict(b, m, t).total_relative_uncertainty();
+                ub.partial_cmp(&ua).unwrap()
+            });
+        }
+        candidates.truncate(params.evals_per_iter.max(1));
+
+        // ---- lines 5+6: measure on hardware, update surrogates ----------
+        let mut fresh: Vec<Sample> = Vec::new();
+        for c in candidates {
+            testbed_evals += 1;
+            let o = measure(&c, rng);
+            measured_configs.insert(c);
+            if tb.platform.feasible(o.memory_gb, tb.power_w(&c, m, t)) {
+                measured.insert(c, o);
+            }
+            fresh.push(Sample {
+                features: encode::encode(&c, m, t),
+                objectives: o,
+            });
+        }
+        if let Some(sur) = &mut surrogates {
+            if !fresh.is_empty() {
+                sur.update(fresh, rng);
+            }
+        }
+    }
+
+    // Always include the default as a fallback so `chosen` exists.
+    {
+        testbed_evals += 1;
+        let o = measure(&mask.clamp(default_cfg), rng);
+        measured.insert(mask.clamp(default_cfg), o);
+    }
+
+    // ---- line 8: select c* from the measured Pareto set -----------------
+    let best = measured
+        .best_by(|e| utility(&e.objectives, &reference, &scenario.prefs))
+        .expect("archive non-empty");
+    let chosen = best.config;
+    let chosen_objectives = best.objectives;
+    let chosen_utility = utility(&chosen_objectives, &reference,
+                                 &scenario.prefs);
+    let chosen_efficiency_score =
+        efficiency_score(&chosen_objectives, &reference);
+
+    Outcome {
+        pareto: measured,
+        chosen,
+        chosen_objectives,
+        chosen_utility,
+        chosen_efficiency_score,
+        reference,
+        testbed_evals,
+        surrogate_evals,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Precision;
+
+    fn scenario() -> Scenario {
+        Scenario::for_model("LLaMA-2-7B").unwrap()
+    }
+
+    #[test]
+    fn optimizer_beats_default_utility() {
+        let s = scenario();
+        let mut rng = Rng::new(1);
+        let out = optimize(&s, &AeLlmParams::small(), &mut rng);
+        let u_def = utility(&out.reference.default, &out.reference, &s.prefs);
+        assert!(out.chosen_utility > u_def,
+                "chosen={} default={u_def}", out.chosen_utility);
+        assert!(out.chosen_efficiency_score > 1.3,
+                "es={}", out.chosen_efficiency_score);
+    }
+
+    #[test]
+    fn accuracy_stays_within_paper_band() {
+        // §4.2: "within 1.2% of the default configuration"
+        let s = scenario();
+        let mut rng = Rng::new(2);
+        let out = optimize(&s, &AeLlmParams::small(), &mut rng);
+        let drop = out.reference.default.accuracy
+            - out.chosen_objectives.accuracy;
+        assert!(drop < 2.0, "accuracy drop {drop}");
+    }
+
+    #[test]
+    fn surrogate_mode_uses_fewer_testbed_evals_than_direct() {
+        let s = scenario();
+        let mut rng = Rng::new(3);
+        let with = optimize(&s, &AeLlmParams::small(), &mut rng);
+        let mut p_direct = AeLlmParams::small();
+        p_direct.use_surrogates = false;
+        let mut rng2 = Rng::new(3);
+        let without = optimize(&s, &p_direct, &mut rng2);
+        // surrogate path: bounded by n0 + R*k + 1; direct path: a full
+        // (small) NSGA-II of testbed calls
+        assert!(with.surrogate_evals > 0);
+        assert!(without.surrogate_evals == 0);
+        assert!(with.testbed_evals
+                <= 120 + 2 * 8 + 1 + 1,
+                "testbed evals {}", with.testbed_evals);
+        assert!(without.testbed_evals > 24 * 8,
+                "direct evals {}", without.testbed_evals);
+    }
+
+    #[test]
+    fn refinement_iterations_help() {
+        let s = scenario().noiseless();
+        let score_with_iters = |r: usize, seed: u64| {
+            let mut p = AeLlmParams::small();
+            p.refine_iters = r.max(1);
+            p.evals_per_iter = if r == 0 { 1 } else { 10 };
+            let mut rng = Rng::new(seed);
+            optimize(&s, &p, &mut rng).chosen_efficiency_score
+        };
+        // average over seeds to damp search stochasticity
+        let mean = |r: usize| -> f64 {
+            (0..4).map(|seed| score_with_iters(r, seed)).sum::<f64>() / 4.0
+        };
+        // Search stochasticity is real; require only that more
+        // refinement is not systematically *worse* (Table 3's +8% trend
+        // is verified at full budget by the table3 bench).
+        let lo = mean(1);
+        let hi = mean(3);
+        assert!(hi >= lo - 0.30, "1 iter {lo} vs 3 iters {hi}");
+    }
+
+    #[test]
+    fn mask_restricts_chosen_config() {
+        let s = scenario();
+        let mut p = AeLlmParams::small();
+        p.mask = SpaceMask::without_quant();
+        let mut rng = Rng::new(5);
+        let out = optimize(&s, &p, &mut rng);
+        assert_eq!(out.chosen.inf.precision, Precision::Fp16);
+        for e in out.pareto.entries() {
+            assert_eq!(e.config.inf.precision, Precision::Fp16);
+        }
+    }
+
+    #[test]
+    fn chosen_is_feasible_on_platform() {
+        let s = scenario();
+        let mut rng = Rng::new(6);
+        let out = optimize(&s, &AeLlmParams::small(), &mut rng);
+        assert!(out.chosen_objectives.memory_gb
+                <= s.testbed.platform.mem_capacity_gb);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let s = scenario();
+        let mut r1 = Rng::new(7);
+        let mut r2 = Rng::new(7);
+        let o1 = optimize(&s, &AeLlmParams::small(), &mut r1);
+        let o2 = optimize(&s, &AeLlmParams::small(), &mut r2);
+        assert_eq!(o1.chosen, o2.chosen);
+        assert_eq!(o1.testbed_evals, o2.testbed_evals);
+    }
+}

@@ -1,0 +1,10 @@
+//! S9: the AE-LLM coordinator — Algorithm 1 (surrogate-guided NSGA-II
+//! with hardware-in-the-loop refinement), deployment scenarios, space
+//! masks for ablations, and the Fig. 4 sensitivity sweeps.
+
+pub mod algorithm1;
+pub mod scenario;
+pub mod sensitivity;
+
+pub use algorithm1::{optimize, optimize_with, AeLlmParams, Outcome};
+pub use scenario::{Scenario, SpaceMask};

@@ -1,0 +1,188 @@
+//! Deployment scenarios: the (model, task, hardware, preferences)
+//! tuples Definition 4 optimizes over, plus the space-restriction mask
+//! used by the Table 3 configuration-space ablations.
+
+use crate::config::{Config, FtConfig, MoE, Precision};
+use crate::hardware::Platform;
+use crate::metrics::Preferences;
+use crate::models::{self, ModelSpec};
+use crate::oracle::Testbed;
+use crate::tasks::{self, TaskSpec};
+
+/// One deployment scenario.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub model: ModelSpec,
+    pub task: TaskSpec,
+    pub testbed: Testbed,
+    pub prefs: Preferences,
+}
+
+impl Scenario {
+    /// Paper-default scenario for a model: its scale-tier platform and
+    /// the blended task mix (what Table 2 aggregates).
+    pub fn for_model(name: &str) -> Option<Scenario> {
+        let model = models::by_name(name)?;
+        Some(Scenario {
+            testbed: Testbed::for_model(&model),
+            model,
+            task: tasks::blended_task(),
+            prefs: Preferences::default(),
+        })
+    }
+
+    pub fn with_task(mut self, task_name: &str) -> Option<Scenario> {
+        self.task = tasks::by_name(task_name)?;
+        Some(self)
+    }
+
+    pub fn with_platform(mut self, platform: Platform) -> Scenario {
+        let noise = self.testbed.noise_sigma;
+        self.testbed = Testbed::new(platform);
+        self.testbed.noise_sigma = noise;
+        self
+    }
+
+    pub fn with_prefs(mut self, prefs: Preferences) -> Scenario {
+        self.prefs = prefs;
+        self
+    }
+
+    pub fn noiseless(mut self) -> Scenario {
+        self.testbed.noise_sigma = 0.0;
+        self.testbed.acc_noise = 0.0;
+        self
+    }
+}
+
+/// Search-space restriction mask (Table 3 "Configuration Space
+/// Components" ablations).  A disabled stage is clamped to the Default
+/// configuration's value before evaluation, so the search effectively
+/// runs in the restricted space.
+#[derive(Clone, Copy, Debug)]
+pub struct SpaceMask {
+    pub arch: bool,
+    pub ft: bool,
+    pub inf: bool,
+    /// finer-grained cuts inside the architecture / inference stages
+    pub allow_moe: bool,
+    pub allow_quant: bool,
+}
+
+impl Default for SpaceMask {
+    fn default() -> Self {
+        SpaceMask { arch: true, ft: true, inf: true, allow_moe: true,
+                    allow_quant: true }
+    }
+}
+
+impl SpaceMask {
+    pub fn without_arch() -> Self {
+        SpaceMask { arch: false, ..Default::default() }
+    }
+
+    pub fn without_ft() -> Self {
+        SpaceMask { ft: false, ..Default::default() }
+    }
+
+    pub fn without_inf() -> Self {
+        SpaceMask { inf: false, ..Default::default() }
+    }
+
+    pub fn without_moe() -> Self {
+        SpaceMask { allow_moe: false, ..Default::default() }
+    }
+
+    pub fn without_quant() -> Self {
+        SpaceMask { allow_quant: false, ..Default::default() }
+    }
+
+    /// Clamp a configuration into the masked space.
+    pub fn clamp(&self, mut c: Config) -> Config {
+        let d = Config::default_baseline();
+        if !self.arch {
+            c.arch = d.arch;
+        }
+        if !self.ft {
+            c.ft = FtConfig::full();
+        }
+        if !self.inf {
+            c.inf = d.inf;
+            // Default inference = FP16 base, which invalidates QLoRA.
+            if c.ft.method == crate::config::FtMethod::QLoRA {
+                c.ft.method = crate::config::FtMethod::LoRA;
+            }
+        }
+        if !self.allow_moe {
+            c.arch.moe = MoE::Dense;
+        }
+        if !self.allow_quant {
+            c.inf.precision = Precision::Fp16;
+            // FP16 base invalidates QLoRA; fall back to LoRA.
+            if c.ft.method == crate::config::FtMethod::QLoRA {
+                c.ft.method = crate::config::FtMethod::LoRA;
+            }
+        }
+        debug_assert!(crate::config::validity::is_valid(&c),
+                      "mask produced invalid {c}");
+        c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{enumerate, validity};
+    use crate::util::Rng;
+
+    #[test]
+    fn scenario_builders() {
+        let s = Scenario::for_model("Mistral-7B").unwrap();
+        assert_eq!(s.model.name, "Mistral-7B");
+        assert_eq!(s.testbed.platform.name, "A100-80GB");
+        let s = s.with_task("GSM8K").unwrap();
+        assert_eq!(s.task.name, "GSM8K");
+        assert!(Scenario::for_model("GPT-5").is_none());
+    }
+
+    #[test]
+    fn noiseless_kills_noise() {
+        let s = Scenario::for_model("Phi-2").unwrap().noiseless();
+        assert_eq!(s.testbed.noise_sigma, 0.0);
+        assert_eq!(s.testbed.acc_noise, 0.0);
+    }
+
+    #[test]
+    fn default_mask_is_identity() {
+        let mut rng = Rng::new(1);
+        let mask = SpaceMask::default();
+        for _ in 0..100 {
+            let c = enumerate::sample(&mut rng);
+            assert_eq!(mask.clamp(c), c);
+        }
+    }
+
+    #[test]
+    fn masks_clamp_their_stage_and_stay_valid() {
+        let mut rng = Rng::new(2);
+        let d = Config::default_baseline();
+        for _ in 0..300 {
+            let c = enumerate::sample(&mut rng);
+            let a = SpaceMask::without_arch().clamp(c);
+            assert_eq!(a.arch, d.arch);
+            assert!(validity::is_valid(&a));
+            let f = SpaceMask::without_ft().clamp(c);
+            assert_eq!(f.ft, FtConfig::full());
+            assert!(validity::is_valid(&f));
+            let i = SpaceMask::without_inf().clamp(c);
+            assert_eq!(i.inf, d.inf);
+            assert!(validity::is_valid(&i));
+            let m = SpaceMask::without_moe().clamp(c);
+            assert_eq!(m.arch.moe, MoE::Dense);
+            assert!(validity::is_valid(&m));
+            let q = SpaceMask::without_quant().clamp(c);
+            assert_eq!(q.inf.precision, Precision::Fp16);
+            assert!(validity::is_valid(&q));
+        }
+    }
+}

@@ -1,0 +1,163 @@
+//! Sensitivity analysis (§3.5 "we also provide sensitivity analysis",
+//! Figure 4): one-dimensional sweeps of the key hyper-parameters with
+//! per-task ranges.
+
+use crate::config::{Config, FtConfig, FtMethod, MoE, Precision};
+use crate::models::ModelSpec;
+use crate::oracle::{accuracy, Testbed};
+use crate::tasks::{suite, TaskSpec};
+
+/// One sweep point: x value, accuracy stats across tasks, and the
+/// efficiency metrics on the blended task.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub x: f64,
+    pub label: String,
+    /// accuracy delta (percentage points) vs default: mean/min/max
+    /// across the task suite (the shaded region of Fig. 4)
+    pub acc_mean: f64,
+    pub acc_min: f64,
+    pub acc_max: f64,
+    pub latency_ms: f64,
+    pub memory_gb: f64,
+}
+
+fn sweep_config(
+    m: &ModelSpec,
+    tb: &Testbed,
+    blended: &TaskSpec,
+    configs: Vec<(f64, String, Config)>,
+) -> Vec<SweepPoint> {
+    configs
+        .into_iter()
+        .map(|(x, label, c)| {
+            let mut deltas: Vec<f64> = Vec::new();
+            for t in suite() {
+                let base = accuracy::default_score(m, &t);
+                let s = accuracy::score(&c, m, &t);
+                // normalize to percentage points of a 100-scale
+                let scale = if t.unit == "/10" { 10.0 } else { 1.0 };
+                deltas.push((s - base) * scale);
+            }
+            let o = tb.true_objectives(&c, m, blended);
+            let (lo, hi) = crate::util::stats::min_max(&deltas);
+            SweepPoint {
+                x,
+                label,
+                acc_mean: crate::util::stats::mean(&deltas),
+                acc_min: lo,
+                acc_max: hi,
+                latency_ms: o.latency_ms,
+                memory_gb: o.memory_gb,
+            }
+        })
+        .collect()
+}
+
+/// Fig. 4a: LoRA rank sweep (accuracy saturates, cost grows ~linearly).
+pub fn lora_rank_sweep(m: &ModelSpec, tb: &Testbed,
+                       blended: &TaskSpec) -> Vec<SweepPoint> {
+    let configs = crate::config::RANKS
+        .iter()
+        .map(|&r| {
+            let mut c = Config::default_baseline();
+            c.ft = FtConfig { method: FtMethod::LoRA, rank: r, alpha_mult: 2 };
+            (r as f64, format!("r={r}"), c)
+        })
+        .collect();
+    sweep_config(m, tb, blended, configs)
+}
+
+/// Fig. 4b: quantization bit-width sweep (graceful to INT8, cliff at
+/// INT4).
+pub fn quant_bits_sweep(m: &ModelSpec, tb: &Testbed,
+                        blended: &TaskSpec) -> Vec<SweepPoint> {
+    let configs = [
+        (16.0, Precision::Fp16),
+        (8.0, Precision::Fp8),
+        (8.0, Precision::Int8),
+        (4.0, Precision::Int4),
+    ]
+    .into_iter()
+    .map(|(bits, p)| {
+        let mut c = Config::default_baseline();
+        c.inf.precision = p;
+        (bits, p.name().to_string(), c)
+    })
+    .collect();
+    sweep_config(m, tb, blended, configs)
+}
+
+/// Fig. 4c: MoE expert-count sweep (diminishing accuracy returns,
+/// linear memory overhead).
+pub fn moe_experts_sweep(m: &ModelSpec, tb: &Testbed,
+                         blended: &TaskSpec) -> Vec<SweepPoint> {
+    let mut configs = vec![(1.0, "Dense".to_string(),
+                            Config::default_baseline())];
+    for e in [2u8, 4, 8] {
+        let mut c = Config::default_baseline();
+        c.arch.moe = MoE::Sparse { experts: e, top_k: 2 };
+        configs.push((e as f64, format!("E={e}"), c));
+    }
+    sweep_config(m, tb, blended, configs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::by_name;
+    use crate::tasks::blended_task;
+
+    fn setup() -> (ModelSpec, Testbed, TaskSpec) {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let tb = Testbed::noiseless(crate::hardware::a100());
+        (m, tb, blended_task())
+    }
+
+    #[test]
+    fn rank_sweep_saturates() {
+        let (m, tb, t) = setup();
+        let pts = lora_rank_sweep(&m, &tb, &t);
+        assert_eq!(pts.len(), 5);
+        // gains from 8 -> 32 exceed gains from 32 -> 128 (saturation)
+        let g_low = pts[2].acc_mean - pts[0].acc_mean;
+        let g_high = pts[4].acc_mean - pts[2].acc_mean;
+        assert!(g_low > g_high, "low={g_low} high={g_high}");
+    }
+
+    #[test]
+    fn quant_sweep_shows_cliff() {
+        let (m, tb, t) = setup();
+        let pts = quant_bits_sweep(&m, &tb, &t);
+        let fp16 = pts[0].acc_mean;
+        let int8 = pts[2].acc_mean;
+        let int4 = pts[3].acc_mean;
+        assert!(fp16 - int8 < 0.6, "int8 drop {}", fp16 - int8);
+        assert!(int8 - int4 > 2.0 * (fp16 - int8),
+                "no cliff: int8={int8} int4={int4}");
+        // spread across tasks grows at int4 (the shaded region widens)
+        assert!(pts[3].acc_max - pts[3].acc_min
+                > pts[2].acc_max - pts[2].acc_min);
+    }
+
+    #[test]
+    fn experts_sweep_diminishing_returns_linear_memory() {
+        let (m, tb, t) = setup();
+        let pts = moe_experts_sweep(&m, &tb, &t);
+        assert_eq!(pts.len(), 4);
+        let g24 = pts[2].acc_mean - pts[1].acc_mean;
+        let g48 = pts[3].acc_mean - pts[2].acc_mean;
+        assert!(g48 < g24, "returns not diminishing");
+        // memory strictly increasing with expert count
+        assert!(pts[3].memory_gb > pts[2].memory_gb);
+        assert!(pts[2].memory_gb > pts[1].memory_gb);
+    }
+
+    #[test]
+    fn quant_sweep_latency_monotone() {
+        let (m, tb, t) = setup();
+        let pts = quant_bits_sweep(&m, &tb, &t);
+        assert!(pts[3].latency_ms < pts[2].latency_ms);
+        assert!(pts[2].latency_ms < pts[0].latency_ms);
+    }
+}

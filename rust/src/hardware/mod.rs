@@ -1,0 +1,164 @@
+//! S4: hardware platform models (paper §4.1 + Definition 3).
+//!
+//! Three tiers — consumer (RTX 4090), data-center (A100-80GB) and
+//! high-performance (8×H200) — modeled by the roofline quantities the
+//! cost model needs (peak FLOPs, memory bandwidth, capacity, power) plus
+//! the constraint bounds of Definition 3 (`Mem <= M_max`,
+//! `Power <= P_max`).  Numbers follow the public spec sheets.
+
+/// One deployment platform H.
+#[derive(Clone, Debug)]
+pub struct Platform {
+    pub name: &'static str,
+    /// Peak dense FP16 tensor throughput, TFLOP/s (per platform, i.e.
+    /// aggregated across the 8 GPUs for the H200 cluster).
+    pub peak_tflops: f64,
+    /// Aggregate HBM bandwidth, GB/s.
+    pub mem_bandwidth_gbs: f64,
+    /// Total device memory, GB (M_max of Definition 3).
+    pub mem_capacity_gb: f64,
+    /// Board power budget, W (P_max of Definition 3).
+    pub power_budget_w: f64,
+    /// Idle/overhead power fraction drawn regardless of utilization.
+    pub idle_power_frac: f64,
+    /// Low-precision integer throughput multiplier vs FP16 (tensor cores
+    /// double throughput per halving of width).
+    pub int8_speedup: f64,
+    pub int4_speedup: f64,
+}
+
+impl Platform {
+    /// Definition 3 feasibility check.
+    pub fn feasible(&self, mem_gb: f64, power_w: f64) -> bool {
+        mem_gb <= self.mem_capacity_gb && power_w <= self.power_budget_w
+    }
+
+    /// Throughput multiplier for a given weight precision.
+    pub fn precision_speedup(&self, bits: u8) -> f64 {
+        match bits {
+            16 => 1.0,
+            8 => self.int8_speedup,
+            4 => self.int4_speedup,
+            _ => 1.0,
+        }
+    }
+}
+
+/// Consumer tier: RTX 4090 (24 GB GDDR6X).
+pub fn rtx4090() -> Platform {
+    Platform {
+        name: "RTX-4090",
+        peak_tflops: 165.0,
+        mem_bandwidth_gbs: 1008.0,
+        mem_capacity_gb: 24.0,
+        power_budget_w: 450.0,
+        idle_power_frac: 0.15,
+        int8_speedup: 2.0,
+        int4_speedup: 4.0,
+    }
+}
+
+/// Data-center tier: A100-80GB SXM.
+pub fn a100() -> Platform {
+    Platform {
+        name: "A100-80GB",
+        peak_tflops: 312.0,
+        mem_bandwidth_gbs: 2039.0,
+        mem_capacity_gb: 80.0,
+        power_budget_w: 400.0,
+        idle_power_frac: 0.20,
+        int8_speedup: 2.0,
+        int4_speedup: 2.0, // no INT4 tensor-core path on Ampere beyond INT8
+    }
+}
+
+/// High-performance tier: 8×H200 node (aggregate).
+pub fn h200_cluster() -> Platform {
+    Platform {
+        name: "8xH200",
+        peak_tflops: 8.0 * 989.0,
+        mem_bandwidth_gbs: 8.0 * 4800.0,
+        mem_capacity_gb: 8.0 * 141.0,
+        power_budget_w: 8.0 * 700.0,
+        idle_power_frac: 0.25,
+        int8_speedup: 2.0,
+        int4_speedup: 4.0,
+    }
+}
+
+/// All platforms in paper order.
+pub fn platforms() -> Vec<Platform> {
+    vec![rtx4090(), a100(), h200_cluster()]
+}
+
+/// Look up by name.
+pub fn by_name(name: &str) -> Option<Platform> {
+    platforms().into_iter().find(|p| p.name == name)
+}
+
+/// The platform tier each Table 2 scale bucket was evaluated on
+/// (small models on consumer, medium on A100, large on the H200 node).
+pub fn tier_for_scale(scale: crate::models::Scale) -> Platform {
+    match scale {
+        crate::models::Scale::Small => rtx4090(),
+        crate::models::Scale::Medium => a100(),
+        crate::models::Scale::Large => h200_cluster(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_platforms_ordered_by_capability() {
+        let p = platforms();
+        assert_eq!(p.len(), 3);
+        assert!(p[0].peak_tflops < p[1].peak_tflops);
+        assert!(p[1].peak_tflops < p[2].peak_tflops);
+        assert!(p[0].mem_capacity_gb < p[1].mem_capacity_gb);
+    }
+
+    #[test]
+    fn feasibility_boundaries() {
+        let p = rtx4090();
+        assert!(p.feasible(24.0, 450.0)); // exactly at both bounds
+        assert!(!p.feasible(24.1, 100.0));
+        assert!(!p.feasible(1.0, 451.0));
+        assert!(p.feasible(0.0, 0.0));
+    }
+
+    #[test]
+    fn precision_speedups_monotone() {
+        for p in platforms() {
+            assert!(p.precision_speedup(8) >= p.precision_speedup(16));
+            assert!(p.precision_speedup(4) >= p.precision_speedup(8));
+        }
+    }
+
+    #[test]
+    fn a100_lacks_int4_tensor_path() {
+        assert_eq!(a100().precision_speedup(4), a100().precision_speedup(8));
+        assert!(rtx4090().precision_speedup(4) >
+                rtx4090().precision_speedup(8));
+    }
+
+    #[test]
+    fn by_name_and_tiers() {
+        assert!(by_name("A100-80GB").is_some());
+        assert!(by_name("TPUv5").is_none());
+        assert_eq!(tier_for_scale(crate::models::Scale::Small).name,
+                   "RTX-4090");
+        assert_eq!(tier_for_scale(crate::models::Scale::Large).name,
+                   "8xH200");
+    }
+
+    #[test]
+    fn seventy_b_fp16_only_fits_large_tier() {
+        // 70B params * 2 bytes = 140GB weights
+        let weights_gb = 70.0 * 2.0;
+        assert!(!rtx4090().feasible(weights_gb, 100.0));
+        assert!(!a100().feasible(weights_gb, 100.0));
+        assert!(h200_cluster().feasible(weights_gb, 100.0));
+    }
+}

@@ -1,0 +1,33 @@
+//! # AE-LLM: Adaptive Efficiency Optimization for Large Language Models
+//!
+//! A reproduction of the AE-LLM framework (SANNO University, CS.LG 2026)
+//! as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 3 (this crate)** — the paper's contribution: a
+//!   multi-objective auto-tuner over LLM efficiency configurations
+//!   (attention variant × MoE × PEFT × quantization × KV policy) built
+//!   from surrogate-guided NSGA-II with constraint-aware pruning and a
+//!   hardware-in-the-loop refinement phase (Algorithm 1).
+//! * **Layer 2** — a configurable JAX transformer (`python/compile/`)
+//!   AOT-lowered per variant to HLO text.
+//! * **Layer 1** — Pallas kernels for the quantized-matmul and
+//!   grouped-KV-attention hot spots.
+//!
+//! Python never runs at search/serve time: the [`runtime`] module loads
+//! the AOT artifacts through PJRT and performs real measurements.
+//!
+//! See `DESIGN.md` for the system inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod config;
+pub mod coordinator;
+pub mod hardware;
+pub mod metrics;
+pub mod models;
+pub mod oracle;
+pub mod report;
+pub mod runtime;
+pub mod search;
+pub mod surrogate;
+pub mod tasks;
+pub mod util;

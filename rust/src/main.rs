@@ -1,0 +1,363 @@
+//! AE-LLM command-line interface (Layer-3 leader entrypoint).
+//!
+//! ```text
+//! ae-llm search  --model Mistral-7B [--task GSM8K] [--platform A100-80GB]
+//!                [--prefs latency] [--quick] [--seed N]
+//! ae-llm table   --id 2|3|4|5|6 [--quick] [--seed N]
+//! ae-llm figure  --id 1|2|3|4 [--quick] [--out reports/]
+//! ae-llm e2e     [--repeats N]       # hardware-in-the-loop Algorithm 1
+//! ae-llm serve   [--requests N]      # batched serving on PJRT
+//! ae-llm check   # artifacts sanity: load + execute every variant
+//! ae-llm space   # print the configuration-space inventory
+//! ```
+//!
+//! (The argument parser is hand-rolled: `clap` is not in the offline
+//! vendor set.)
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use ae_llm::config::Config;
+use ae_llm::coordinator::{optimize, optimize_with, Scenario};
+use ae_llm::metrics::utility;
+use ae_llm::report::{self, figures, tables, Budget};
+use ae_llm::runtime;
+use ae_llm::util::Rng;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+/// Parsed `--key value` / `--flag` options after the subcommand.
+struct Opts {
+    map: BTreeMap<String, String>,
+}
+
+impl Opts {
+    fn parse(args: &[String]) -> anyhow::Result<Opts> {
+        let mut map = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            anyhow::ensure!(a.starts_with("--"), "unexpected argument {a:?}");
+            let key = a.trim_start_matches("--").to_string();
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                map.insert(key, args[i + 1].clone());
+                i += 2;
+            } else {
+                map.insert(key, "true".to_string());
+                i += 1;
+            }
+        }
+        Ok(Opts { map })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.map.get(key).map(|s| s.as_str())
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.get(key) == Some("true")
+    }
+
+    fn u64_or(&self, key: &str, default: u64) -> anyhow::Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("--{key} expects a number")),
+        }
+    }
+}
+
+fn run(args: &[String]) -> anyhow::Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let opts = Opts::parse(&args[1..])?;
+    let budget = Budget { quick: opts.flag("quick") };
+    let seed = opts.u64_or("seed", 42)?;
+
+    match cmd.as_str() {
+        "search" => cmd_search(&opts, &budget, seed),
+        "table" => cmd_table(&opts, &budget, seed),
+        "figure" => cmd_figure(&opts, &budget, seed),
+        "e2e" => cmd_e2e(&opts, seed),
+        "serve" => cmd_serve(&opts, seed),
+        "check" => cmd_check(),
+        "space" => cmd_space(),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command {other:?} (try `help`)"),
+    }
+}
+
+fn cmd_search(opts: &Opts, budget: &Budget, seed: u64) -> anyhow::Result<()> {
+    let model = opts.get("model").unwrap_or("LLaMA-2-7B");
+    let mut scenario = Scenario::for_model(model)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
+    if let Some(task) = opts.get("task") {
+        scenario = scenario
+            .with_task(task)
+            .ok_or_else(|| anyhow::anyhow!("unknown task {task:?}"))?;
+    }
+    if let Some(p) = opts.get("platform") {
+        let platform = ae_llm::hardware::by_name(p)
+            .ok_or_else(|| anyhow::anyhow!("unknown platform {p:?}"))?;
+        scenario = scenario.with_platform(platform);
+    }
+    if let Some(w) = opts.get("prefs") {
+        let prefs = report::prefs_by_name(w)
+            .ok_or_else(|| anyhow::anyhow!("unknown prefs {w:?}"))?;
+        scenario = scenario.with_prefs(prefs);
+    }
+
+    println!(
+        "AE-LLM search: model={} task={} platform={} (|C| grid = {})",
+        scenario.model.name,
+        scenario.task.name,
+        scenario.testbed.platform.name,
+        ae_llm::config::enumerate::grid_size(),
+    );
+    let mut rng = Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    let out = optimize(&scenario, &budget.ae_params(), &mut rng);
+    println!(
+        "search done in {:.2}s: {} testbed evals, {} surrogate evals\n",
+        t0.elapsed().as_secs_f64(),
+        out.testbed_evals,
+        out.surrogate_evals
+    );
+
+    // Pareto front, sorted by latency.
+    let mut entries: Vec<_> = out.pareto.entries().to_vec();
+    entries.sort_by(|a, b| {
+        a.objectives.latency_ms.partial_cmp(&b.objectives.latency_ms).unwrap()
+    });
+    let mut t = ae_llm::util::table::Table::new(&[
+        "Configuration", "Acc", "Lat (ms)", "Mem (GB)", "En (J)", "Utility",
+    ])
+    .with_title("Pareto-optimal configurations P*");
+    for e in &entries {
+        t.row(&[
+            e.config.signature(),
+            format!("{:.1}", e.objectives.accuracy),
+            format!("{:.1}", e.objectives.latency_ms),
+            format!("{:.1}", e.objectives.memory_gb),
+            format!("{:.2}", e.objectives.energy_j),
+            format!("{:.3}",
+                    utility(&e.objectives, &out.reference, &scenario.prefs)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("chosen c* = {}", out.chosen.signature());
+    println!(
+        "efficiency score {:.2} (accuracy {:.1} vs default {:.1})",
+        out.chosen_efficiency_score,
+        out.chosen_objectives.accuracy,
+        out.reference.default.accuracy
+    );
+    Ok(())
+}
+
+fn cmd_table(opts: &Opts, budget: &Budget, seed: u64) -> anyhow::Result<()> {
+    let id = opts.u64_or("id", 2)?;
+    let t0 = std::time::Instant::now();
+    let table = match id {
+        2 => tables::table_2(budget, seed),
+        3 => tables::table_3(budget, seed),
+        4 => tables::table_4(budget, seed),
+        5 => tables::table_5(),
+        6 => tables::table_6(budget, seed),
+        other => anyhow::bail!("no table {other} (paper has 2-6)"),
+    };
+    println!("{}", table.render());
+    println!("(regenerated in {:.1}s)", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_figure(opts: &Opts, budget: &Budget, seed: u64) -> anyhow::Result<()> {
+    let id = opts.u64_or("id", 1)?;
+    let out_dir = PathBuf::from(opts.get("out").unwrap_or("reports"));
+    let t0 = std::time::Instant::now();
+    let fig = match id {
+        1 => figures::figure_1(budget, seed),
+        2 => figures::figure_2(budget, seed),
+        3 => figures::figure_3(budget, seed),
+        4 => figures::figure_4(budget, seed),
+        other => anyhow::bail!("no figure {other} (paper has 1-4)"),
+    };
+    println!("{}", fig.summary);
+    for path in fig.write_csvs(&out_dir)? {
+        println!("wrote {path}");
+    }
+    println!("(regenerated in {:.1}s)", t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+/// Hardware-in-the-loop Algorithm 1: surrogates + NSGA-II as usual, but
+/// line-5 measurements come from real PJRT executions of the AOT
+/// artifacts (latency ratios + numeric fidelity), then the chosen
+/// configuration is deployed on the batched server.
+fn cmd_e2e(opts: &Opts, seed: u64) -> anyhow::Result<()> {
+    let repeats = opts.u64_or("repeats", 5)? as usize;
+    let dir = runtime::artifacts_dir();
+    println!("== loading artifacts from {dir:?} ==");
+    let mut engine = runtime::Engine::new(&dir)?;
+    let names = engine.load_all()?;
+    println!("compiled {} variants on {}", names.len(), engine.platform());
+
+    println!("== measuring variants ({repeats} repeats) ==");
+    let table = runtime::measure_all(&mut engine, 1, repeats)?;
+    let mut mt = ae_llm::util::table::Table::new(&[
+        "Variant", "Wall (ms)", "CV", "Fidelity err", "Weight bytes",
+    ])
+    .with_title("PJRT variant measurements");
+    for row in table.rows.values() {
+        mt.row(&[
+            row.name.clone(),
+            format!("{:.2}", row.wall_ms),
+            format!("{:.3}", row.wall_cv),
+            format!("{:.4}", row.fidelity_err),
+            row.weight_bytes.to_string(),
+        ]);
+    }
+    println!("{}", mt.render());
+
+    let scenario = Scenario::for_model("LLaMA-2-7B").unwrap();
+    let evaluator = runtime::MeasuredEvaluator::new(
+        table, scenario.testbed.clone());
+    println!("== Algorithm 1 with PJRT-measured evaluation ==");
+    let mut params = ae_llm::coordinator::AeLlmParams::small();
+    params.initial_sample = 160;
+    let mut rng = Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    let out = optimize_with(
+        &scenario,
+        &params,
+        &mut |c: &Config, _rng: &mut Rng| {
+            evaluator.objectives(c, &scenario.model, &scenario.task)
+        },
+        &mut rng,
+    );
+    println!(
+        "done in {:.2}s: {} measured evals, chosen {}",
+        t0.elapsed().as_secs_f64(),
+        out.testbed_evals,
+        out.chosen.signature()
+    );
+    println!(
+        "efficiency score {:.2}, accuracy {:.1} vs default {:.1}",
+        out.chosen_efficiency_score,
+        out.chosen_objectives.accuracy,
+        out.reference.default.accuracy
+    );
+
+    // Deploy the chosen configuration's serve variant.
+    let serve_variant = if matches!(out.chosen.inf.precision,
+                                    ae_llm::config::Precision::Fp16
+                                    | ae_llm::config::Precision::Fp8) {
+        "serve_gqa_fp16"
+    } else {
+        "serve_gqa_int8"
+    };
+    cmd_serve_inner(&mut engine, serve_variant, 64, seed)
+}
+
+fn cmd_serve(opts: &Opts, seed: u64) -> anyhow::Result<()> {
+    let n = opts.u64_or("requests", 64)? as usize;
+    let variant = opts.get("variant").unwrap_or("serve_gqa_int8").to_string();
+    let dir = runtime::artifacts_dir();
+    let mut engine = runtime::Engine::new(&dir)?;
+    cmd_serve_inner(&mut engine, &variant, n, seed)
+}
+
+fn cmd_serve_inner(engine: &mut runtime::Engine, variant: &str, n: usize,
+                   seed: u64) -> anyhow::Result<()> {
+    println!("== batched serving on {variant} ({n} requests) ==");
+    engine.load(variant)?;
+    let mut server = runtime::Server::new(engine, variant)?;
+    let mut rng = Rng::new(seed);
+    let seq = engine.manifest.get(variant).unwrap().seq as usize;
+    for id in 0..n as u64 {
+        let len = 8 + rng.below(seq - 8);
+        let tokens: Vec<i32> =
+            (0..len).map(|_| rng.below(256) as i32).collect();
+        server.submit(runtime::Request { id, tokens });
+    }
+    server.drain()?;
+    let r = server.report();
+    println!(
+        "completed {} requests in {} batches\n  p50 latency {:.1} ms | p95 \
+         {:.1} ms | batch exec {:.1} ms\n  throughput {:.1} req/s | {:.0} \
+         tok/s",
+        r.completed, r.batches, r.p50_latency_ms, r.p95_latency_ms,
+        r.mean_batch_exec_ms, r.throughput_rps, r.tokens_per_s
+    );
+    Ok(())
+}
+
+fn cmd_check() -> anyhow::Result<()> {
+    let dir = runtime::artifacts_dir();
+    let mut engine = runtime::Engine::new(&dir)?;
+    let names = engine.load_all()?;
+    println!("platform {}", engine.platform());
+    for name in &names {
+        let tokens = engine.make_tokens(name, 0)?;
+        let f = engine.forward(name, &tokens)?;
+        let finite = f.logits.iter().all(|x| x.is_finite());
+        let nonzero = f.logits.iter().any(|x| *x != 0.0);
+        anyhow::ensure!(finite && nonzero,
+                        "{name}: degenerate logits (finite={finite})");
+        println!("  {name:<22} ok  ({:.2} ms, {} logits)", f.wall_ms,
+                 f.logits.len());
+    }
+    println!("all {} variants execute correctly", names.len());
+    Ok(())
+}
+
+fn cmd_space() -> anyhow::Result<()> {
+    use ae_llm::config::enumerate;
+    println!("configuration-space inventory");
+    println!("  grid size (unconstrained) : {}", enumerate::grid_size());
+    println!("  valid configurations      : {}", enumerate::all_valid().len());
+    println!("  models in zoo             : {}",
+             ae_llm::models::zoo().len());
+    println!("  VLMs                      : {}",
+             ae_llm::models::vlm_zoo().len());
+    println!("  tasks                     : {} + {} VLM",
+             ae_llm::tasks::suite().len(),
+             ae_llm::tasks::vlm_suite().len());
+    println!("  platforms                 : {}",
+             ae_llm::hardware::platforms().len());
+    let d = Config::default_baseline();
+    println!("  default baseline          : {}", d.signature());
+    Ok(())
+}
+
+fn print_help() {
+    println!(
+        "AE-LLM: Adaptive Efficiency Optimization for LLMs\n\n\
+         USAGE: ae-llm <command> [options]\n\n\
+         COMMANDS:\n  \
+         search  --model M [--task T] [--platform P] [--prefs W] [--quick]\n  \
+         table   --id 2|3|4|5|6 [--quick] [--seed N]\n  \
+         figure  --id 1|2|3|4 [--quick] [--out DIR]\n  \
+         e2e     [--repeats N]    hardware-in-the-loop Algorithm 1 + serving\n  \
+         serve   [--requests N] [--variant V]\n  \
+         check   load + execute every AOT artifact\n  \
+         space   print the configuration-space inventory\n\n\
+         prefs: balanced | latency | memory | accuracy | green"
+    );
+}

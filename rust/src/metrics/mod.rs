@@ -1,0 +1,165 @@
+//! S12: scalar metrics — the paper's utility function (Eq. 4) and the
+//! composite Efficiency Score used throughout the evaluation tables.
+
+use crate::oracle::Objectives;
+use crate::util::stats;
+
+/// User preference weights w = (w_acc, w_lat, w_mem, w_energy) (Def. 4).
+#[derive(Clone, Copy, Debug)]
+pub struct Preferences {
+    pub w_acc: f64,
+    pub w_lat: f64,
+    pub w_mem: f64,
+    pub w_energy: f64,
+}
+
+impl Default for Preferences {
+    fn default() -> Self {
+        // balanced deployment preference
+        Preferences { w_acc: 1.0, w_lat: 0.4, w_mem: 0.3, w_energy: 0.3 }
+    }
+}
+
+impl Preferences {
+    pub fn latency_critical() -> Self {
+        Preferences { w_acc: 0.8, w_lat: 1.0, w_mem: 0.2, w_energy: 0.2 }
+    }
+
+    pub fn memory_constrained() -> Self {
+        Preferences { w_acc: 0.8, w_lat: 0.3, w_mem: 1.0, w_energy: 0.2 }
+    }
+
+    pub fn accuracy_critical() -> Self {
+        Preferences { w_acc: 1.0, w_lat: 0.1, w_mem: 0.1, w_energy: 0.05 }
+    }
+
+    pub fn green_ai() -> Self {
+        Preferences { w_acc: 0.8, w_lat: 0.2, w_mem: 0.2, w_energy: 1.0 }
+    }
+}
+
+/// Normalization reference: the Default configuration's objectives on
+/// the same (model, task, platform).  Eq. 4's `norm(·)` maps each
+/// efficiency metric to [0, 1]-ish scale by dividing by the default.
+#[derive(Clone, Copy, Debug)]
+pub struct Reference {
+    pub default: Objectives,
+}
+
+/// Accuracy-degradation hinge: the paper's evaluation keeps accuracy
+/// "within 1.2% of baseline", i.e. accuracy preservation acts as a soft
+/// constraint, not a linear trade-off.  Degradation beyond ~1% of the
+/// default score is punished steeply.
+const HINGE_AT: f64 = 0.992;
+const HINGE_SLOPE: f64 = 40.0;
+
+/// Utility U(c) (Eq. 4): weighted accuracy minus weighted normalized
+/// efficiency costs, with the accuracy-preservation hinge.  Accuracy
+/// enters relative to the default score so utilities are comparable
+/// across models.
+pub fn utility(o: &Objectives, r: &Reference, w: &Preferences) -> f64 {
+    let norm = |x: f64, d: f64| if d > 0.0 { x / d } else { x };
+    let ratio = o.accuracy / r.default.accuracy.max(1e-9);
+    let hinge = (ratio - HINGE_AT).min(0.0) * HINGE_SLOPE * w.w_acc;
+    w.w_acc * ratio + hinge
+        - w.w_lat * norm(o.latency_ms, r.default.latency_ms)
+        - w.w_mem * norm(o.memory_gb, r.default.memory_gb)
+        - w.w_energy * norm(o.energy_j, r.default.energy_j)
+}
+
+/// The paper's composite Efficiency Score: geometric mean of the
+/// latency/memory/energy improvement ratios vs the Default config,
+/// normalized by accuracy degradation ("geometric mean of improvements
+/// ... normalized by accuracy degradation", §4.2).  Default = 1.0.
+pub fn efficiency_score(o: &Objectives, r: &Reference) -> f64 {
+    let gains = [
+        r.default.latency_ms / o.latency_ms.max(1e-9),
+        r.default.memory_gb / o.memory_gb.max(1e-9),
+        r.default.energy_j / o.energy_j.max(1e-9),
+    ];
+    let g = stats::geometric_mean(&gains);
+    let acc_ratio = (o.accuracy / r.default.accuracy.max(1e-9)).min(1.0);
+    // degradation is penalized super-linearly so "fast but broken"
+    // configurations don't top the score
+    g * acc_ratio.powf(3.0)
+}
+
+/// Relative improvement in percent vs the default's score of 1.0
+/// (Table 3's "Rel. Improvement" column).
+pub fn relative_improvement(score: f64) -> f64 {
+    (score - 1.0) * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn default_obj() -> Objectives {
+        Objectives { accuracy: 68.5, latency_ms: 45.2, memory_gb: 13.5,
+                     energy_j: 0.85 }
+    }
+
+    #[test]
+    fn default_scores_one() {
+        let r = Reference { default: default_obj() };
+        assert!((efficiency_score(&default_obj(), &r) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pure_efficiency_gain_raises_score() {
+        let r = Reference { default: default_obj() };
+        let better = Objectives { accuracy: 68.5, latency_ms: 22.6,
+                                  memory_gb: 6.75, energy_j: 0.425 };
+        assert!((efficiency_score(&better, &r) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_loss_penalized() {
+        let r = Reference { default: default_obj() };
+        let fast_broken = Objectives { accuracy: 40.0, latency_ms: 11.3,
+                                       memory_gb: 3.4, energy_j: 0.21 };
+        let fast_fine = Objectives { accuracy: 68.0, latency_ms: 11.3,
+                                     memory_gb: 3.4, energy_j: 0.21 };
+        assert!(efficiency_score(&fast_broken, &r)
+            < efficiency_score(&fast_fine, &r) * 0.3);
+    }
+
+    #[test]
+    fn accuracy_gain_does_not_inflate_score() {
+        let r = Reference { default: default_obj() };
+        let mut o = default_obj();
+        o.accuracy = 75.0;
+        assert!((efficiency_score(&o, &r) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn utility_prefers_better_everything() {
+        let r = Reference { default: default_obj() };
+        let w = Preferences::default();
+        let mut better = default_obj();
+        better.latency_ms *= 0.5;
+        better.energy_j *= 0.5;
+        assert!(utility(&better, &r, &w) > utility(&default_obj(), &r, &w));
+    }
+
+    #[test]
+    fn preference_presets_weight_their_axis() {
+        let r = Reference { default: default_obj() };
+        let mut fast = default_obj();
+        fast.latency_ms *= 0.5;
+        fast.accuracy -= 0.5;
+        let mut lean = default_obj();
+        lean.memory_gb *= 0.5;
+        lean.accuracy -= 0.5;
+        let w_lat = Preferences::latency_critical();
+        let w_mem = Preferences::memory_constrained();
+        assert!(utility(&fast, &r, &w_lat) > utility(&lean, &r, &w_lat));
+        assert!(utility(&lean, &r, &w_mem) > utility(&fast, &r, &w_mem));
+    }
+
+    #[test]
+    fn relative_improvement_maths() {
+        assert!((relative_improvement(1.95) - 95.0).abs() < 1e-9);
+        assert_eq!(relative_improvement(1.0), 0.0);
+    }
+}

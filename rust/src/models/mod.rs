@@ -1,0 +1,247 @@
+//! S2: model zoo — descriptors of the 15 LLMs (0.5B–70B) and the VLMs
+//! the paper evaluates (§4.1), plus the mapping onto the locally
+//! executable PJRT transformer variants.
+//!
+//! Substitution note (DESIGN.md §3): the real checkpoints are not
+//! available; the search consumes only `phi(M)` model features and the
+//! cost model consumes the scale numbers below, so faithful descriptors
+//! preserve everything the *framework* sees.  The `proxy_prefix` links a
+//! zoo entry to the AOT artifact family used when Algorithm 1 runs real
+//! hardware-in-the-loop measurements.
+
+/// Scale buckets used throughout the paper's tables.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Scale {
+    Small,  // 0.5B–2B
+    Medium, // 7B–14B
+    Large,  // 30B–70B
+}
+
+impl Scale {
+    pub fn name(self) -> &'static str {
+        match self {
+            Scale::Small => "Small (0.5B-2B)",
+            Scale::Medium => "Medium (7B-14B)",
+            Scale::Large => "Large (30B-70B)",
+        }
+    }
+}
+
+/// Descriptor of one evaluated model (phi(M) source).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: &'static str,
+    pub params_b: f64, // billions of parameters
+    pub n_layers: u32,
+    pub d_model: u32,
+    pub n_heads: u32,
+    /// Model ships as MoE already (Mixtral-style): MoE "configuration"
+    /// then tunes routing rather than adding experts.
+    pub native_moe: bool,
+    pub is_vlm: bool,
+    pub scale: Scale,
+    /// Robustness of the model to low-bit quantization, in [0, 1];
+    /// 1.0 = degrades least (the paper notes Mistral-7B > LLaMA-2-7B
+    /// under INT4, §5.4).
+    pub quant_robustness: f64,
+    /// Data/training-recipe quality multiplier on *effective* parameters
+    /// for the accuracy scaling law (Mistral-7B scores far above
+    /// LLaMA-2-7B at equal size; this captures that).
+    pub quality_boost: f64,
+}
+
+impl ModelSpec {
+    /// Active parameters per token in billions (MoE models activate a
+    /// subset of experts; dense models activate everything).
+    pub fn active_params_b(&self) -> f64 {
+        if self.native_moe {
+            // Mixtral-8x7B: ~12.9B active of 46.7B total.
+            self.params_b * 0.28
+        } else {
+            self.params_b
+        }
+    }
+
+    /// Effective parameter count for the accuracy scaling law.
+    pub fn effective_params_b(&self) -> f64 {
+        self.active_params_b() * self.quality_boost
+            * if self.native_moe { 2.2 } else { 1.0 } // routing capacity
+    }
+}
+
+/// The 15 LLMs of §4.1 (three scale buckets) — names, scales and shape
+/// numbers follow the public model cards.
+pub fn zoo() -> Vec<ModelSpec> {
+    use Scale::*;
+    vec![
+        // -- Small (0.5B–2B) --------------------------------------------
+        // (Phi-2 is listed at 2.0B here, matching the paper's bucket and
+        //  its Table 2 memory row; the public card says 2.7B.)
+        m("Qwen-0.5B", 0.5, 24, 1024, 16, false, Small, 0.45, 1.2),
+        m("LLaMA-2-1B", 1.05, 22, 2048, 32, false, Small, 0.50, 1.0),
+        m("Qwen-1.8B", 1.8, 24, 2048, 16, false, Small, 0.55, 1.3),
+        m("Phi-2", 2.0, 32, 2560, 32, false, Small, 0.62, 2.6),
+        // -- Medium (7B–14B) --------------------------------------------
+        m("Yi-6B", 6.1, 32, 4096, 32, false, Medium, 0.60, 1.8),
+        m("LLaMA-2-7B", 6.7, 32, 4096, 32, false, Medium, 0.55, 1.0),
+        m("Mistral-7B", 7.2, 32, 4096, 32, false, Medium, 0.78, 3.8),
+        m("Qwen-7B", 7.7, 32, 4096, 32, false, Medium, 0.65, 2.2),
+        m("LLaMA-3-8B", 8.0, 32, 4096, 32, false, Medium, 0.70, 3.0),
+        m("LLaMA-2-13B", 13.0, 40, 5120, 40, false, Medium, 0.60, 1.1),
+        m("Qwen-14B", 14.2, 40, 5120, 40, false, Medium, 0.66, 2.0),
+        // -- Large (30B–70B) --------------------------------------------
+        m("Yi-34B", 34.4, 60, 7168, 56, false, Large, 0.68, 1.6),
+        m_moe("Mixtral-8x7B", 46.7, 32, 4096, 32, Large, 0.72, 3.4),
+        m("LLaMA-2-70B", 69.0, 80, 8192, 64, false, Large, 0.65, 1.0),
+        m("Qwen-72B", 72.3, 80, 8192, 64, false, Large, 0.70, 1.15),
+    ]
+}
+
+/// Vision-language models for the cross-modal experiments (Table 4).
+pub fn vlm_zoo() -> Vec<ModelSpec> {
+    vec![
+        ModelSpec {
+            name: "LLaVA-1.5-7B",
+            params_b: 7.1,
+            n_layers: 32,
+            d_model: 4096,
+            n_heads: 32,
+            native_moe: false,
+            is_vlm: true,
+            scale: Scale::Medium,
+            quant_robustness: 0.58,
+            quality_boost: 1.4,
+        },
+        ModelSpec {
+            name: "InternVL-Chat",
+            params_b: 13.0,
+            n_layers: 40,
+            d_model: 5120,
+            n_heads: 40,
+            native_moe: false,
+            is_vlm: true,
+            scale: Scale::Medium,
+            quant_robustness: 0.62,
+            quality_boost: 1.6,
+        },
+    ]
+}
+
+/// Look up a model (LLM or VLM) by name.
+pub fn by_name(name: &str) -> Option<ModelSpec> {
+    zoo().into_iter()
+        .chain(vlm_zoo())
+        .find(|m| m.name == name)
+}
+
+/// The 8 models Table 2 prints rows for, in paper order.
+pub fn table2_models() -> Vec<&'static str> {
+    vec![
+        "LLaMA-2-1B", "Phi-2",                       // small
+        "LLaMA-2-7B", "Mistral-7B", "LLaMA-3-8B",    // medium
+        "LLaMA-2-70B", "Mixtral-8x7B", "Qwen-72B",   // large
+    ]
+}
+
+#[allow(clippy::too_many_arguments)]
+fn m(name: &'static str, params_b: f64, n_layers: u32, d_model: u32,
+     n_heads: u32, native_moe: bool, scale: Scale,
+     quant_robustness: f64, quality_boost: f64) -> ModelSpec {
+    ModelSpec {
+        name,
+        params_b,
+        n_layers,
+        d_model,
+        n_heads,
+        native_moe,
+        is_vlm: false,
+        scale,
+        quant_robustness,
+        quality_boost,
+    }
+}
+
+fn m_moe(name: &'static str, params_b: f64, n_layers: u32, d_model: u32,
+         n_heads: u32, scale: Scale, quant_robustness: f64,
+         quality_boost: f64) -> ModelSpec {
+    ModelSpec { native_moe: true, ..m(name, params_b, n_layers, d_model,
+                                      n_heads, false, scale,
+                                      quant_robustness, quality_boost) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifteen_models_three_buckets() {
+        let z = zoo();
+        assert_eq!(z.len(), 15);
+        let small = z.iter().filter(|m| m.scale == Scale::Small).count();
+        let medium = z.iter().filter(|m| m.scale == Scale::Medium).count();
+        let large = z.iter().filter(|m| m.scale == Scale::Large).count();
+        assert!(small >= 3 && medium >= 5 && large >= 4);
+        assert_eq!(small + medium + large, 15);
+    }
+
+    #[test]
+    fn names_unique() {
+        let z = zoo();
+        let set: std::collections::BTreeSet<_> =
+            z.iter().map(|m| m.name).collect();
+        assert_eq!(set.len(), z.len());
+    }
+
+    #[test]
+    fn table2_models_resolve() {
+        for name in table2_models() {
+            assert!(by_name(name).is_some(), "{name} missing from zoo");
+        }
+    }
+
+    #[test]
+    fn vlms_flagged() {
+        for v in vlm_zoo() {
+            assert!(v.is_vlm);
+            assert!(by_name(v.name).is_some());
+        }
+        assert!(zoo().iter().all(|m| !m.is_vlm));
+    }
+
+    #[test]
+    fn mixtral_active_params_below_total() {
+        let mx = by_name("Mixtral-8x7B").unwrap();
+        assert!(mx.native_moe);
+        assert!(mx.active_params_b() < mx.params_b * 0.5);
+        let dense = by_name("LLaMA-2-7B").unwrap();
+        assert_eq!(dense.active_params_b(), dense.params_b);
+    }
+
+    #[test]
+    fn scales_consistent_with_params() {
+        for m in zoo() {
+            match m.scale {
+                Scale::Small => assert!(m.params_b <= 3.0),
+                Scale::Medium => {
+                    assert!(m.params_b > 3.0 && m.params_b < 20.0)
+                }
+                Scale::Large => assert!(m.params_b >= 30.0),
+            }
+        }
+    }
+
+    #[test]
+    fn quant_robustness_in_unit_interval() {
+        for m in zoo().into_iter().chain(vlm_zoo()) {
+            assert!((0.0..=1.0).contains(&m.quant_robustness));
+        }
+    }
+
+    #[test]
+    fn mistral_more_robust_than_llama2_7b() {
+        // paper §5.4: Mistral-7B maintains accuracy better under INT4
+        let mistral = by_name("Mistral-7B").unwrap();
+        let llama = by_name("LLaMA-2-7B").unwrap();
+        assert!(mistral.quant_robustness > llama.quant_robustness);
+    }
+}

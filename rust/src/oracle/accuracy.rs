@@ -1,0 +1,373 @@
+//! Accuracy model: task score of (configuration, model, task).
+//!
+//! The *shape* of this model is the paper's §5 analysis, implemented as
+//! a composable set of effects on top of a saturating capability scaling
+//! law.  It is the ground truth the surrogates must learn and the search
+//! must navigate — including the cross-stage interactions (§3.5, §5.5)
+//! that make joint optimization beat single-stage tuning.
+
+use crate::config::{
+    Attention, Config, FtMethod, KvCache, MoE, Precision, QuantMethod,
+};
+use crate::models::{ModelSpec, Scale};
+use crate::tasks::{Category, TaskSpec};
+
+/// Reference effective capacity (LLaMA-2-7B).
+const REF_PARAMS_B: f64 = 6.7;
+/// Headroom decay exponent of the saturating scaling law.
+const DELTA: f64 = 0.25;
+
+/// Score ceiling per unit (percent-like metrics saturate at 100; CIDEr
+/// at ~200; MT-Bench at 10).
+fn ceiling(t: &TaskSpec) -> f64 {
+    match t.unit {
+        "CIDEr" => 200.0,
+        "/10" => 10.0,
+        _ => 100.0,
+    }
+}
+
+/// Default-configuration score: saturating law anchored at the task's
+/// 7B base score — `score = C - (C - base) * (P_eff / P_ref)^-delta`.
+pub fn default_score(m: &ModelSpec, t: &TaskSpec) -> f64 {
+    let c = ceiling(t);
+    let ratio = (m.effective_params_b() / REF_PARAMS_B).max(0.01);
+    (c - (c - t.base_score_7b) * ratio.powf(-DELTA)).max(0.5)
+}
+
+/// Signed relative quality delta (fraction of current score) introduced
+/// by the configuration's techniques.  Deterministic; noise is added by
+/// the Testbed on top.
+pub fn quality_delta(c: &Config, m: &ModelSpec, t: &TaskSpec) -> f64 {
+    let mut d = 0.0;
+
+    // ---- inference: quantization (§5.3, §5.4) --------------------------
+    // Graceful FP16->INT8, cliff INT8->INT4; scaled by task sensitivity
+    // and the model's robustness; calibration method modulates it.
+    let bits_loss = match c.inf.precision {
+        Precision::Fp16 => 0.0,
+        Precision::Fp8 => 0.004,
+        Precision::Int8 => 0.009,
+        Precision::Int4 => 0.048,
+    };
+    let method_factor = match c.inf.quant_method {
+        QuantMethod::Gptq => 1.0,
+        QuantMethod::Awq => 0.80, // activation-aware: least degradation
+        QuantMethod::SmoothQuant => 0.90,
+    };
+    let robustness = 1.0 - 0.6 * m.quant_robustness;
+    d -= bits_loss * method_factor * robustness
+        * (0.5 + 1.5 * t.quant_sensitivity);
+
+    // ---- architecture: attention quality ordering (§5.1) ---------------
+    d += match c.arch.attention {
+        Attention::Mla => 0.004,  // best quality (latent bottleneck helps)
+        Attention::Mha => 0.0,
+        Attention::Gqa => -0.002,
+        Attention::Mqa => -0.009,
+    };
+    // KV-cache policy degrades long-context tasks most.
+    let kv_tax = match c.inf.kv_cache {
+        KvCache::Full => 0.0,
+        KvCache::GqaStyle => 0.003,
+        KvCache::MqaStyle => 0.008,
+    };
+    let long_ctx = if t.category == Category::LongContext { 2.5 } else { 1.0 };
+    d -= kv_tax * long_ctx;
+
+    // ---- architecture: MoE (§5.3) --------------------------------------
+    if let MoE::Sparse { experts, top_k } = c.arch.moe {
+        // Diminishing returns in expert count; benefit gated by the
+        // task's routing affinity; top-1 routing is brittle.
+        let gain = match experts {
+            2 => 0.004,
+            4 => 0.009,
+            8 => 0.011,
+            _ => 0.0,
+        };
+        let routing_tax = if top_k == 1 { 0.004 } else { 0.0 };
+        d += gain * (0.3 + 1.4 * t.moe_affinity) - routing_tax;
+        // §5.5 cross-stage conflict: aggressive quantization destabilizes
+        // routing (top-1/INT4 is excluded by validity; top-2/INT4 pays).
+        if c.inf.precision == Precision::Int4 {
+            d -= 0.006;
+        }
+        // MLA pairs well with sparse MoE (DeepSeek-style affinity).
+        if c.arch.attention == Attention::Mla {
+            d += 0.002;
+        }
+    }
+
+    // ---- fine-tuning (§5.1, §5.4) ---------------------------------------
+    d += ft_delta(c, m);
+
+    // ---- cross-stage: quantization shifts the optimal rank (§3.5) ------
+    // Low-bit bases need more adapter capacity to recover; reward higher
+    // ranks under INT4/INT8 beyond what ft_delta alone gives.
+    if c.ft.method.is_peft() {
+        let bits = c.inf.precision.bits() as f64;
+        if bits <= 8.0 && c.ft.rank >= 64 {
+            d += 0.002;
+        }
+        if bits <= 4.0 && c.ft.rank <= 16 {
+            d -= 0.004;
+        }
+    }
+
+    d
+}
+
+/// Fine-tuning method/rank contribution.
+fn ft_delta(c: &Config, m: &ModelSpec) -> f64 {
+    // Optimal rank grows with scale (§5.4): 16 / 32 / 96.
+    let opt_rank: f64 = match m.scale {
+        Scale::Small => 16.0,
+        Scale::Medium => 32.0,
+        Scale::Large => 96.0,
+    };
+    match c.ft.method {
+        // Full fine-tuning is the Default baseline: delta 0 by anchoring.
+        FtMethod::Full => 0.0,
+        method => {
+            let r = c.ft.rank as f64;
+            // Log-parabola around the scale-appropriate optimum:
+            // saturating gains up to opt, slow decay beyond.
+            let x = (r / opt_rank).ln();
+            // Full FT is competitive for small models (§5.1): PEFT's
+            // peak gain shrinks with decreasing scale.
+            let peak = match m.scale {
+                Scale::Small => 0.000,
+                Scale::Medium => 0.003,
+                Scale::Large => 0.004,
+            };
+            let rank_curve = peak - 0.003 * x * x;
+            let method_bonus = match method {
+                FtMethod::RsLoRA => {
+                    // better scaling behaviour on large models (§5.3)
+                    if m.scale == Scale::Large { 0.003 } else { -0.001 }
+                }
+                FtMethod::DoRA => 0.001,
+                FtMethod::QLoRA => -0.001,
+                _ => 0.0,
+            };
+            // Alpha: 2r is the sweet spot; 4r over-amplifies at high rank.
+            let alpha_tax = match c.ft.alpha_mult {
+                2 => 0.0,
+                1 => -0.0005,
+                _ => {
+                    if r >= 64.0 {
+                        -0.002
+                    } else {
+                        -0.0005
+                    }
+                }
+            };
+            rank_curve + method_bonus + alpha_tax
+        }
+    }
+}
+
+/// Final deterministic score.
+pub fn score(c: &Config, m: &ModelSpec, t: &TaskSpec) -> f64 {
+    let base = default_score(m, t);
+    (base * (1.0 + quality_delta(c, m, t))).clamp(0.0, ceiling(t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::FtConfig;
+    use crate::models::by_name;
+    use crate::tasks::{by_name as task, suite};
+
+    fn base_cfg() -> Config {
+        Config::default_baseline()
+    }
+
+    #[test]
+    fn default_delta_is_zero() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        for t in suite() {
+            assert_eq!(
+                score(&base_cfg(), &m, &t),
+                default_score(&m, &t),
+                "{}", t.name
+            );
+        }
+    }
+
+    #[test]
+    fn scaling_law_monotone_in_params() {
+        let t = task("MMLU").unwrap();
+        let s7 = default_score(&by_name("LLaMA-2-7B").unwrap(), &t);
+        let s70 = default_score(&by_name("LLaMA-2-70B").unwrap(), &t);
+        let s1 = default_score(&by_name("LLaMA-2-1B").unwrap(), &t);
+        assert!(s1 < s7 && s7 < s70);
+        assert!(s70 < 100.0);
+    }
+
+    #[test]
+    fn llama70b_mmlu_near_paper_anchor() {
+        // Table 6: LLaMA-2-70B Default MMLU = 70.8
+        let t = task("MMLU").unwrap();
+        let s = default_score(&by_name("LLaMA-2-70B").unwrap(), &t);
+        assert!((s - 70.8).abs() < 3.0, "got {s}");
+    }
+
+    #[test]
+    fn mistral_beats_llama7b() {
+        let t = task("MMLU").unwrap();
+        assert!(default_score(&by_name("Mistral-7B").unwrap(), &t)
+            > default_score(&by_name("LLaMA-2-7B").unwrap(), &t));
+    }
+
+    #[test]
+    fn int4_hurts_gsm8k_more_than_hellaswag() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let mut c = base_cfg();
+        c.inf.precision = Precision::Int4;
+        let gsm = task("GSM8K").unwrap();
+        let hs = task("HellaSwag").unwrap();
+        let drop_gsm = quality_delta(&c, &m, &gsm);
+        let drop_hs = quality_delta(&c, &m, &hs);
+        assert!(drop_gsm < drop_hs && drop_hs < 0.0,
+                "gsm={drop_gsm} hs={drop_hs}");
+    }
+
+    #[test]
+    fn int8_graceful_int4_cliff() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = task("MMLU").unwrap();
+        let mut c = base_cfg();
+        c.inf.precision = Precision::Int8;
+        let d8 = quality_delta(&c, &m, &t);
+        c.inf.precision = Precision::Int4;
+        let d4 = quality_delta(&c, &m, &t);
+        assert!(d8 > 4.0 * d4, "d8={d8} d4={d4}"); // cliff, not linear
+    }
+
+    #[test]
+    fn mistral_more_robust_under_int4() {
+        let t = task("MMLU").unwrap();
+        let mut c = base_cfg();
+        c.inf.precision = Precision::Int4;
+        let d_mistral = quality_delta(&c, &by_name("Mistral-7B").unwrap(), &t);
+        let d_llama = quality_delta(&c, &by_name("LLaMA-2-7B").unwrap(), &t);
+        assert!(d_mistral > d_llama);
+    }
+
+    #[test]
+    fn awq_degrades_less_than_gptq() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = task("GSM8K").unwrap();
+        let mut c = base_cfg();
+        c.inf.precision = Precision::Int4;
+        c.inf.quant_method = QuantMethod::Gptq;
+        let gptq = quality_delta(&c, &m, &t);
+        c.inf.quant_method = QuantMethod::Awq;
+        assert!(quality_delta(&c, &m, &t) > gptq);
+    }
+
+    #[test]
+    fn attention_quality_ordering() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = task("MMLU").unwrap();
+        let mut scores = vec![];
+        for a in [Attention::Mla, Attention::Mha, Attention::Gqa,
+                  Attention::Mqa] {
+            let mut c = base_cfg();
+            c.arch.attention = a;
+            scores.push(score(&c, &m, &t));
+        }
+        assert!(scores[0] > scores[1]);
+        assert!(scores[1] > scores[2]);
+        assert!(scores[2] > scores[3]);
+    }
+
+    #[test]
+    fn moe_helps_code_more_than_understanding() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let mut c = base_cfg();
+        c.arch.moe = MoE::Sparse { experts: 8, top_k: 2 };
+        let code = quality_delta(&c, &m, &task("HumanEval").unwrap());
+        let mmlu = quality_delta(&c, &m, &task("MMLU").unwrap());
+        assert!(code > mmlu && code > 0.0);
+    }
+
+    #[test]
+    fn moe_experts_diminishing_returns() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = task("HumanEval").unwrap();
+        let mut deltas = vec![];
+        for e in [2u8, 4, 8] {
+            let mut c = base_cfg();
+            c.arch.moe = MoE::Sparse { experts: e, top_k: 2 };
+            deltas.push(quality_delta(&c, &m, &t));
+        }
+        assert!(deltas[1] - deltas[0] > deltas[2] - deltas[1]);
+    }
+
+    #[test]
+    fn optimal_rank_scales_with_model_size() {
+        let t = task("MMLU").unwrap();
+        let best_rank = |name: &str| -> u16 {
+            let m = by_name(name).unwrap();
+            *crate::config::RANKS
+                .iter()
+                .max_by(|&&a, &&b| {
+                    let mk = |r: u16| {
+                        let mut c = base_cfg();
+                        c.ft = FtConfig {
+                            method: FtMethod::LoRA,
+                            rank: r,
+                            alpha_mult: 2,
+                        };
+                        quality_delta(&c, &m, &t)
+                    };
+                    mk(a).partial_cmp(&mk(b)).unwrap()
+                })
+                .unwrap()
+        };
+        assert_eq!(best_rank("LLaMA-2-1B"), 16);
+        assert_eq!(best_rank("LLaMA-2-7B"), 32);
+        assert!(best_rank("LLaMA-2-70B") >= 64);
+    }
+
+    #[test]
+    fn rslora_wins_only_at_scale() {
+        let t = task("MMLU").unwrap();
+        let delta_for = |name: &str, method: FtMethod| {
+            let m = by_name(name).unwrap();
+            let mut c = base_cfg();
+            c.ft = FtConfig { method, rank: 64, alpha_mult: 2 };
+            quality_delta(&c, &m, &t)
+        };
+        assert!(delta_for("LLaMA-2-70B", FtMethod::RsLoRA)
+            > delta_for("LLaMA-2-70B", FtMethod::LoRA));
+        assert!(delta_for("LLaMA-2-7B", FtMethod::RsLoRA)
+            <= delta_for("LLaMA-2-7B", FtMethod::LoRA));
+    }
+
+    #[test]
+    fn kv_policy_hurts_long_context_most() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let mut c = base_cfg();
+        c.inf.kv_cache = KvCache::MqaStyle;
+        let long = quality_delta(&c, &m, &task("LongBench").unwrap());
+        let short = quality_delta(&c, &m, &task("HellaSwag").unwrap());
+        assert!(long < short);
+    }
+
+    #[test]
+    fn scores_always_in_range() {
+        let m = by_name("Qwen-72B").unwrap();
+        let mut rng = crate::util::Rng::new(3);
+        for _ in 0..300 {
+            let c = crate::config::enumerate::sample(&mut rng);
+            for t in suite() {
+                let s = score(&c, &m, &t);
+                assert!(s >= 0.0 && s <= ceiling(&t), "{s} for {}", t.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,315 @@
+//! S5: the testbed oracle — the simulated measurement fleet standing in
+//! for the paper's GPU testbeds (DESIGN.md §3 substitution table).
+//!
+//! `Testbed::measure` plays the role of "evaluate on actual hardware"
+//! (Algorithm 1 line 5): it is treated as expensive by the coordinator,
+//! returns *noisy* observations (§5.5 reports 5–10% hardware
+//! variability), and hides ground truth the surrogates must learn.
+//! Raw physics come from [`cost`] and [`accuracy`]; absolute scales are
+//! calibrated so the Default configuration on each Table 2 model lands
+//! on the paper's Default row.
+
+pub mod accuracy;
+pub mod cost;
+
+use crate::config::Config;
+use crate::hardware::{self, Platform};
+use crate::models::ModelSpec;
+use crate::tasks::TaskSpec;
+use crate::util::Rng;
+
+/// The four performance objectives of Definition 2.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Objectives {
+    pub accuracy: f64,   // maximize (task units)
+    pub latency_ms: f64, // minimize
+    pub memory_gb: f64,  // minimize
+    pub energy_j: f64,   // minimize
+}
+
+impl Objectives {
+    /// True iff `self` Pareto-dominates `other` (>= everywhere with at
+    /// least one strict improvement; accuracy maximized, rest minimized).
+    pub fn dominates(&self, other: &Objectives) -> bool {
+        let ge = self.accuracy >= other.accuracy
+            && self.latency_ms <= other.latency_ms
+            && self.memory_gb <= other.memory_gb
+            && self.energy_j <= other.energy_j;
+        let strict = self.accuracy > other.accuracy
+            || self.latency_ms < other.latency_ms
+            || self.memory_gb < other.memory_gb
+            || self.energy_j < other.energy_j;
+        ge && strict
+    }
+
+    /// Objective vector in minimization convention (for NSGA-II).
+    pub fn as_min_vec(&self) -> [f64; 4] {
+        [-self.accuracy, self.latency_ms, self.memory_gb, self.energy_j]
+    }
+}
+
+/// Table 2 "Default" anchor rows: (accuracy %, latency ms, memory GB,
+/// energy J) per model, on the paper's per-scale hardware tier.
+fn table2_anchor(name: &str) -> Option<[f64; 4]> {
+    Some(match name {
+        "LLaMA-2-1B" => [43.2, 12.5, 2.1, 0.08],
+        "Phi-2" => [56.8, 18.3, 4.2, 0.15],
+        "LLaMA-2-7B" => [68.5, 45.2, 13.5, 0.85],
+        "Mistral-7B" => [71.2, 42.8, 14.1, 0.88],
+        "LLaMA-3-8B" => [72.1, 48.5, 15.2, 0.95],
+        "LLaMA-2-70B" => [82.5, 185.2, 138.5, 4.52],
+        "Mixtral-8x7B" => [81.8, 165.8, 98.5, 3.85],
+        "Qwen-72B" => [83.2, 192.5, 145.2, 4.82],
+        // Table 4 VLM Default rows (accuracy is task-specific there; the
+        // anchor carries the efficiency triple measured on LLaVA's tier).
+        "LLaVA-1.5-7B" => [78.5, 85.2, 18.5, 1.25],
+        "InternVL-Chat" => [81.2, 92.5, 22.5, 1.42],
+        _ => return None,
+    })
+}
+
+/// Power-law fallbacks for unanchored models, fit to the Table 2 rows
+/// (see DESIGN.md §7): latency ≈ 11.7·P^0.65 ms, energy ≈ 0.075·P^0.97 J,
+/// memory comes straight from the cost model.
+fn fallback_anchor(m: &ModelSpec) -> [f64; 4] {
+    let p = m.params_b;
+    let acc = accuracy::default_score(
+        m, &crate::tasks::blended_task());
+    [
+        acc,
+        11.7 * p.powf(0.65),
+        f64::NAN, // memory: use raw cost model (already calibrated)
+        0.075 * p.powf(0.97),
+    ]
+}
+
+/// The simulated measurement testbed for one hardware platform.
+#[derive(Clone, Debug)]
+pub struct Testbed {
+    pub platform: Platform,
+    /// Multiplicative measurement noise sigma for efficiency metrics
+    /// (§5.5: 5–10% variability; default 4% sigma ~ 8% spread).
+    pub noise_sigma: f64,
+    /// Additive accuracy measurement noise (absolute points).
+    pub acc_noise: f64,
+}
+
+impl Testbed {
+    pub fn new(platform: Platform) -> Self {
+        Testbed { platform, noise_sigma: 0.04, acc_noise: 0.15 }
+    }
+
+    /// Noise-free testbed (for reports and unit tests).
+    pub fn noiseless(platform: Platform) -> Self {
+        Testbed { platform, noise_sigma: 0.0, acc_noise: 0.0 }
+    }
+
+    /// The testbed the paper pairs with this model's scale bucket.
+    pub fn for_model(m: &ModelSpec) -> Self {
+        Testbed::new(hardware::tier_for_scale(m.scale))
+    }
+
+    /// Ground-truth objectives (deterministic; what reports use).
+    pub fn true_objectives(&self, c: &Config, m: &ModelSpec,
+                           t: &TaskSpec) -> Objectives {
+        let default = Config::default_baseline();
+        let anchor = table2_anchor(m.name).unwrap_or_else(|| fallback_anchor(m));
+
+        // Raw physics, config vs default, on this platform.
+        let raw_lat = cost::latency_ms(c, m, t, &self.platform);
+        let raw_lat_def = cost::latency_ms(&default, m, t, &self.platform);
+        let raw_mem = cost::memory_gb(c, m, t);
+        let raw_mem_def = cost::memory_gb(&default, m, t);
+        let raw_en = cost::energy_j(c, m, t, &self.platform);
+        let raw_en_def = cost::energy_j(&default, m, t, &self.platform);
+
+        // Anchor-calibrated absolute values.
+        let latency_ms = anchor[1] * raw_lat / raw_lat_def;
+        let memory_gb = if anchor[2].is_nan() {
+            raw_mem
+        } else {
+            anchor[2] * raw_mem / raw_mem_def
+        };
+        let energy_j = anchor[3] * raw_en / raw_en_def;
+
+        Objectives {
+            accuracy: accuracy::score(c, m, t),
+            latency_ms,
+            memory_gb,
+            energy_j,
+        }
+    }
+
+    /// One noisy measurement — the expensive call of Algorithm 1 line 5.
+    pub fn measure(&self, c: &Config, m: &ModelSpec, t: &TaskSpec,
+                   rng: &mut Rng) -> Objectives {
+        let o = self.true_objectives(c, m, t);
+        let jitter = |rng: &mut Rng| {
+            (1.0 + self.noise_sigma * rng.normal()).max(0.5)
+        };
+        Objectives {
+            accuracy: (o.accuracy + self.acc_noise * rng.normal()).max(0.0),
+            latency_ms: o.latency_ms * jitter(rng),
+            memory_gb: o.memory_gb * (1.0 + 0.25 * self.noise_sigma
+                * rng.normal()).max(0.5),
+            energy_j: o.energy_j * jitter(rng),
+        }
+    }
+
+    /// Sustained power draw (for the Definition 3 power constraint).
+    pub fn power_w(&self, c: &Config, m: &ModelSpec, t: &TaskSpec) -> f64 {
+        cost::power_w(c, m, t, &self.platform)
+    }
+
+    /// Definition 3 feasibility on this testbed's platform.
+    pub fn feasible(&self, c: &Config, m: &ModelSpec, t: &TaskSpec) -> bool {
+        let o = self.true_objectives(c, m, t);
+        self.platform.feasible(o.memory_gb, self.power_w(c, m, t))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{enumerate, Precision};
+    use crate::models::by_name;
+    use crate::tasks::blended_task;
+
+    fn setup() -> (Testbed, ModelSpec, TaskSpec) {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        (Testbed::noiseless(hardware::a100()), m, blended_task())
+    }
+
+    #[test]
+    fn default_hits_table2_anchor_exactly() {
+        let (tb, m, t) = setup();
+        let o = tb.true_objectives(&Config::default_baseline(), &m, &t);
+        assert!((o.latency_ms - 45.2).abs() < 1e-9);
+        assert!((o.memory_gb - 13.5).abs() < 1e-9);
+        assert!((o.energy_j - 0.85).abs() < 1e-9);
+    }
+
+    #[test]
+    fn anchors_cover_all_table2_models() {
+        for name in crate::models::table2_models() {
+            assert!(table2_anchor(name).is_some(), "{name}");
+        }
+    }
+
+    #[test]
+    fn unanchored_model_uses_fallback() {
+        let m = by_name("Qwen-14B").unwrap();
+        let tb = Testbed::noiseless(hardware::a100());
+        let o = tb.true_objectives(&Config::default_baseline(), &m,
+                                   &blended_task());
+        assert!(o.latency_ms > 45.0 && o.latency_ms < 120.0,
+                "lat={}", o.latency_ms);
+        assert!(o.memory_gb > 25.0, "mem={}", o.memory_gb);
+    }
+
+    #[test]
+    fn int4_improves_all_efficiency_metrics() {
+        let (tb, m, t) = setup();
+        let def = tb.true_objectives(&Config::default_baseline(), &m, &t);
+        let mut c = Config::default_baseline();
+        c.inf.precision = Precision::Int4;
+        let q = tb.true_objectives(&c, &m, &t);
+        assert!(q.latency_ms < def.latency_ms);
+        assert!(q.memory_gb < def.memory_gb);
+        assert!(q.energy_j < def.energy_j);
+        assert!(q.accuracy < def.accuracy); // pays in quality
+    }
+
+    #[test]
+    fn measurement_noise_has_expected_spread() {
+        let (mut tb, m, t) = setup();
+        tb.noise_sigma = 0.04;
+        tb.acc_noise = 0.15;
+        let mut rng = Rng::new(7);
+        let c = Config::default_baseline();
+        let lats: Vec<f64> = (0..400)
+            .map(|_| tb.measure(&c, &m, &t, &mut rng).latency_ms)
+            .collect();
+        let cv = crate::util::stats::cv(&lats);
+        assert!((0.02..0.07).contains(&cv), "cv={cv}");
+        // unbiased within tolerance
+        let truth = tb.true_objectives(&c, &m, &t).latency_ms;
+        assert!((crate::util::stats::mean(&lats) / truth - 1.0).abs() < 0.02);
+    }
+
+    #[test]
+    fn noiseless_measure_equals_truth() {
+        let (tb, m, t) = setup();
+        let mut rng = Rng::new(1);
+        let c = Config::default_baseline();
+        assert_eq!(tb.measure(&c, &m, &t, &mut rng),
+                   tb.true_objectives(&c, &m, &t));
+    }
+
+    #[test]
+    fn dominance_relation() {
+        let a = Objectives { accuracy: 70.0, latency_ms: 10.0,
+                             memory_gb: 5.0, energy_j: 0.5 };
+        let mut b = a;
+        assert!(!a.dominates(&b)); // equal: no strict improvement
+        b.latency_ms = 12.0;
+        assert!(a.dominates(&b));
+        assert!(!b.dominates(&a));
+        b.accuracy = 75.0; // trade-off: neither dominates
+        assert!(!a.dominates(&b));
+        assert!(!b.dominates(&a));
+    }
+
+    #[test]
+    fn feasibility_catches_oversized_models() {
+        let small_platform = Testbed::noiseless(hardware::rtx4090());
+        let m70 = by_name("LLaMA-2-70B").unwrap();
+        let t = blended_task();
+        assert!(!small_platform.feasible(&Config::default_baseline(),
+                                         &m70, &t));
+        // INT4 70B ~ 35GB still too big for 24GB
+        let mut c = Config::default_baseline();
+        c.inf.precision = Precision::Int4;
+        assert!(!small_platform.feasible(&c, &m70, &t));
+        // but a 7B INT4 fits easily
+        let m7 = by_name("LLaMA-2-7B").unwrap();
+        assert!(small_platform.feasible(&c, &m7, &t));
+    }
+
+    #[test]
+    fn random_configs_never_beat_ceiling_nor_go_negative() {
+        let (tb, m, t) = setup();
+        let mut rng = Rng::new(9);
+        for _ in 0..200 {
+            let c = enumerate::sample(&mut rng);
+            let o = tb.true_objectives(&c, &m, &t);
+            assert!(o.accuracy >= 0.0 && o.accuracy <= 100.0);
+            assert!(o.latency_ms > 0.0);
+            assert!(o.memory_gb > 0.0);
+            assert!(o.energy_j > 0.0);
+        }
+    }
+
+    #[test]
+    fn some_config_achieves_big_efficiency_gain() {
+        // The paper's headline: ~2-3x efficiency attainable. Verify the
+        // oracle's landscape actually contains such configs.
+        let (tb, m, t) = setup();
+        let def = tb.true_objectives(&Config::default_baseline(), &m, &t);
+        let mut rng = Rng::new(11);
+        let mut best = 0.0f64;
+        for _ in 0..500 {
+            let c = enumerate::sample(&mut rng);
+            let o = tb.true_objectives(&c, &m, &t);
+            let gain = crate::util::stats::geometric_mean(&[
+                def.latency_ms / o.latency_ms,
+                def.memory_gb / o.memory_gb,
+                def.energy_j / o.energy_j,
+            ]);
+            if o.accuracy > def.accuracy - 1.5 {
+                best = best.max(gain);
+            }
+        }
+        assert!(best > 1.8, "best accuracy-preserving gain {best}");
+    }
+}

@@ -1,0 +1,297 @@
+//! Paper figures 1–4: each function runs the underlying experiment and
+//! returns (ASCII summary, CSV exports) so benches/CLI can both print
+//! and persist the raw series.
+
+use std::path::Path;
+
+use crate::config::{enumerate, Attention, Config, MoE, Precision};
+use crate::coordinator::{optimize, sensitivity, Scenario};
+use crate::hardware;
+use crate::metrics::Reference;
+use crate::models;
+use crate::oracle::Testbed;
+use crate::tasks;
+use crate::util::csv::Csv;
+use crate::util::table::{fnum, Table};
+use crate::util::Rng;
+
+use super::Budget;
+
+/// A figure's regenerated artifacts.
+pub struct Figure {
+    pub summary: String,
+    pub csvs: Vec<(String, Csv)>,
+}
+
+impl Figure {
+    /// Persist all CSVs under `dir`.
+    pub fn write_csvs(&self, dir: &Path) -> std::io::Result<Vec<String>> {
+        let mut written = Vec::new();
+        for (name, csv) in &self.csvs {
+            let path = dir.join(name);
+            csv.write_to(&path)?;
+            written.push(path.display().to_string());
+        }
+        Ok(written)
+    }
+}
+
+/// Figure 1: distribution of optimal configuration choices across tasks
+/// and hardware platforms.
+pub fn figure_1(budget: &Budget, seed: u64) -> Figure {
+    let mut csv = Csv::new(&["task", "platform", "attention", "moe",
+                             "ft", "precision", "kv_cache"]);
+    let mut attn_by_cat: std::collections::BTreeMap<(String, String), usize> =
+        Default::default();
+    let mut prec_by_platform: std::collections::BTreeMap<(String, String),
+                                                         usize> =
+        Default::default();
+
+    let model = "LLaMA-2-7B";
+    for task in tasks::suite() {
+        for platform in hardware::platforms() {
+            let scenario = Scenario::for_model(model)
+                .unwrap()
+                .with_task(task.name)
+                .unwrap()
+                .with_platform(platform.clone());
+            let mut rng = Rng::new(seed ^ (task.seq_len as u64)
+                ^ platform.name.len() as u64);
+            let out = optimize(&scenario, &budget.ae_params(), &mut rng);
+            let c = out.chosen;
+            csv.row(&[
+                task.name.to_string(),
+                platform.name.to_string(),
+                c.arch.attention.name().to_string(),
+                c.arch.moe.name(),
+                c.ft.method.name().to_string(),
+                c.inf.precision.name().to_string(),
+                c.inf.kv_cache.name().to_string(),
+            ]);
+            *attn_by_cat
+                .entry((format!("{:?}", task.category),
+                        c.arch.attention.name().to_string()))
+                .or_default() += 1;
+            *prec_by_platform
+                .entry((platform.name.to_string(),
+                        c.inf.precision.name().to_string()))
+                .or_default() += 1;
+        }
+    }
+
+    let mut t = Table::new(&["Group", "Choice", "Count"]).with_title(
+        "Figure 1: optimal-configuration distribution (counts)");
+    t.section("Attention by task category");
+    for ((cat, attn), n) in &attn_by_cat {
+        t.row(&[cat.clone(), attn.clone(), n.to_string()]);
+    }
+    t.section("Precision by platform");
+    for ((plat, prec), n) in &prec_by_platform {
+        t.row(&[plat.clone(), prec.clone(), n.to_string()]);
+    }
+    Figure {
+        summary: t.render(),
+        csvs: vec![("fig1_config_distribution.csv".into(), csv)],
+    }
+}
+
+/// Figure 2: Pareto fronts (accuracy vs latency) per model.
+pub fn figure_2(budget: &Budget, seed: u64) -> Figure {
+    let mut csv = Csv::new(&["model", "accuracy", "latency_ms",
+                             "memory_gb", "energy_j", "config"]);
+    let mut t = Table::new(&["Model", "Front size", "Acc range",
+                             "Latency range (ms)"])
+        .with_title("Figure 2: Pareto fronts (accuracy vs latency)");
+    for model in ["Phi-2", "LLaMA-2-7B", "Mistral-7B", "LLaMA-2-70B"] {
+        let scenario = Scenario::for_model(model).unwrap();
+        let mut rng = Rng::new(seed);
+        let out = optimize(&scenario, &budget.ae_params(), &mut rng);
+        let truth = Testbed::noiseless(scenario.testbed.platform.clone());
+        let mut accs = Vec::new();
+        let mut lats = Vec::new();
+        for e in out.pareto.entries() {
+            let o = truth.true_objectives(&e.config, &scenario.model,
+                                          &scenario.task);
+            accs.push(o.accuracy);
+            lats.push(o.latency_ms);
+            csv.row(&[
+                model.to_string(),
+                fnum(o.accuracy, 2),
+                fnum(o.latency_ms, 2),
+                fnum(o.memory_gb, 2),
+                fnum(o.energy_j, 3),
+                e.config.signature(),
+            ]);
+        }
+        let (alo, ahi) = crate::util::stats::min_max(&accs);
+        let (llo, lhi) = crate::util::stats::min_max(&lats);
+        t.row(&[
+            model.to_string(),
+            out.pareto.len().to_string(),
+            format!("{alo:.1}..{ahi:.1}"),
+            format!("{llo:.1}..{lhi:.1}"),
+        ]);
+    }
+    Figure {
+        summary: t.render(),
+        csvs: vec![("fig2_pareto_fronts.csv".into(), csv)],
+    }
+}
+
+/// Figure 3: efficiency gain vs accuracy change, by technique family.
+pub fn figure_3(_budget: &Budget, seed: u64) -> Figure {
+    let model = models::by_name("LLaMA-2-7B").unwrap();
+    let task = tasks::blended_task();
+    let tb = Testbed::noiseless(hardware::a100());
+    let reference = Reference {
+        default: tb.true_objectives(&Config::default_baseline(), &model,
+                                    &task),
+    };
+
+    let family = |c: &Config| -> &'static str {
+        if c.inf.precision == Precision::Int4 {
+            "INT4-quant"
+        } else if c.inf.precision == Precision::Int8
+            || c.inf.precision == Precision::Fp8
+        {
+            "INT8/FP8-quant"
+        } else if matches!(c.arch.moe, MoE::Sparse { .. }) {
+            "MoE"
+        } else if c.ft.method.is_peft() {
+            "PEFT"
+        } else if c.arch.attention != Attention::Mha {
+            "Attention"
+        } else {
+            "Other"
+        }
+    };
+
+    let mut csv = Csv::new(&["family", "efficiency_gain", "accuracy_delta",
+                             "config"]);
+    let mut per_family: std::collections::BTreeMap<&str, Vec<(f64, f64)>> =
+        Default::default();
+    let mut rng = Rng::new(seed);
+    for _ in 0..600 {
+        let c = enumerate::sample(&mut rng);
+        let o = tb.true_objectives(&c, &model, &task);
+        let gain = crate::util::stats::geometric_mean(&[
+            reference.default.latency_ms / o.latency_ms,
+            reference.default.memory_gb / o.memory_gb,
+            reference.default.energy_j / o.energy_j,
+        ]);
+        let acc_delta = o.accuracy - reference.default.accuracy;
+        let fam = family(&c);
+        per_family.entry(fam).or_default().push((gain, acc_delta));
+        csv.row(&[
+            fam.to_string(),
+            fnum(gain, 3),
+            fnum(acc_delta, 3),
+            c.signature(),
+        ]);
+    }
+
+    let mut t = Table::new(&["Family", "N", "Mean gain", "Max gain",
+                             "Mean acc delta", "Acc delta spread"])
+        .with_title("Figure 3: efficiency gain vs accuracy change by family");
+    for (fam, pts) in &per_family {
+        let gains: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let deltas: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let (dlo, dhi) = crate::util::stats::min_max(&deltas);
+        t.row(&[
+            fam.to_string(),
+            pts.len().to_string(),
+            fnum(crate::util::stats::mean(&gains), 2),
+            fnum(gains.iter().fold(0.0f64, |a, &b| a.max(b)), 2),
+            fnum(crate::util::stats::mean(&deltas), 2),
+            format!("{dlo:.2}..{dhi:.2}"),
+        ]);
+    }
+    Figure {
+        summary: t.render(),
+        csvs: vec![("fig3_efficiency_accuracy_scatter.csv".into(), csv)],
+    }
+}
+
+/// Figure 4: sensitivity of accuracy/cost to LoRA rank, quantization
+/// bits and MoE expert count.
+pub fn figure_4(_budget: &Budget, _seed: u64) -> Figure {
+    let tb = Testbed::noiseless(hardware::a100());
+    let blended = tasks::blended_task();
+    let mut csvs = Vec::new();
+    let mut t = Table::new(&["Sweep", "Point", "Acc delta (mean)",
+                             "Acc delta (min..max)", "Latency (ms)",
+                             "Memory (GB)"])
+        .with_title("Figure 4: sensitivity analysis (LLaMA-2-7B)");
+
+    let model = models::by_name("LLaMA-2-7B").unwrap();
+    let sweeps: Vec<(&str, String, Vec<sensitivity::SweepPoint>)> = vec![
+        ("lora_rank", "fig4a_lora_rank.csv".into(),
+         sensitivity::lora_rank_sweep(&model, &tb, &blended)),
+        ("quant_bits", "fig4b_quant_bits.csv".into(),
+         sensitivity::quant_bits_sweep(&model, &tb, &blended)),
+        ("moe_experts", "fig4c_moe_experts.csv".into(),
+         sensitivity::moe_experts_sweep(&model, &tb, &blended)),
+    ];
+    for (sweep_name, file, points) in sweeps {
+        let mut csv = Csv::new(&["x", "label", "acc_mean", "acc_min",
+                                 "acc_max", "latency_ms", "memory_gb"]);
+        t.section(sweep_name);
+        for p in &points {
+            csv.row(&[
+                fnum(p.x, 1),
+                p.label.clone(),
+                fnum(p.acc_mean, 3),
+                fnum(p.acc_min, 3),
+                fnum(p.acc_max, 3),
+                fnum(p.latency_ms, 2),
+                fnum(p.memory_gb, 2),
+            ]);
+            t.row(&[
+                sweep_name.to_string(),
+                p.label.clone(),
+                fnum(p.acc_mean, 2),
+                format!("{:.2}..{:.2}", p.acc_min, p.acc_max),
+                fnum(p.latency_ms, 1),
+                fnum(p.memory_gb, 1),
+            ]);
+        }
+        csvs.push((file, csv));
+    }
+    Figure { summary: t.render(), csvs }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure_3_has_all_major_families() {
+        let f = figure_3(&Budget { quick: true }, 5);
+        for fam in ["INT4-quant", "INT8/FP8-quant", "MoE", "PEFT"] {
+            assert!(f.summary.contains(fam), "missing {fam}");
+        }
+        assert_eq!(f.csvs.len(), 1);
+        assert!(f.csvs[0].1.n_rows() == 600);
+    }
+
+    #[test]
+    fn figure_4_exports_three_sweeps() {
+        let f = figure_4(&Budget { quick: true }, 5);
+        assert_eq!(f.csvs.len(), 3);
+        assert!(f.summary.contains("lora_rank"));
+        assert!(f.summary.contains("quant_bits"));
+        assert!(f.summary.contains("moe_experts"));
+    }
+
+    #[test]
+    fn figure_csvs_write_to_disk() {
+        let f = figure_4(&Budget { quick: true }, 5);
+        let dir = std::env::temp_dir().join("ae_llm_fig_test");
+        let written = f.write_csvs(&dir).unwrap();
+        assert_eq!(written.len(), 3);
+        for w in &written {
+            assert!(std::path::Path::new(w).exists());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

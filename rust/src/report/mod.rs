@@ -1,0 +1,186 @@
+//! S12: report generation — every table and figure of the paper's
+//! evaluation section, regenerated from the implemented system.
+//!
+//! Each `table_N` / `figure_N` function *runs the actual experiments*
+//! (baseline selectors, Algorithm 1, sensitivity sweeps) against the
+//! testbed oracle and renders the same rows/series the paper reports.
+//! Figures additionally export raw CSV series under `reports/`.
+
+pub mod figures;
+pub mod tables;
+
+use crate::config::Config;
+use crate::coordinator::{self, AeLlmParams, Scenario};
+use crate::metrics::{efficiency_score, Preferences, Reference};
+use crate::oracle::Objectives;
+use crate::search::baselines::{self, Baseline};
+use crate::util::Rng;
+
+/// Everything Table 2/4/6 need about one (model, method) cell.
+#[derive(Clone, Debug)]
+pub struct MethodResult {
+    pub method: &'static str,
+    pub config: Config,
+    pub objectives: Objectives,
+    pub efficiency_score: f64,
+}
+
+/// The five comparison methods, in paper row order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Baseline(Baseline),
+    AeLlm,
+}
+
+impl Method {
+    pub fn paper_order() -> Vec<Method> {
+        vec![
+            Method::Baseline(Baseline::Default),
+            Method::Baseline(Baseline::BestSingleStage),
+            Method::Baseline(Baseline::ManualSelection),
+            Method::Baseline(Baseline::EfficientLlmRec),
+            Method::AeLlm,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Baseline(b) => b.name(),
+            Method::AeLlm => "AdaptiveEfficientLLM",
+        }
+    }
+}
+
+/// Experiment size knob: `quick` shrinks search budgets so the full
+/// table suite stays interactive; full uses the paper's Table 5
+/// settings.
+#[derive(Clone, Copy, Debug)]
+pub struct Budget {
+    pub quick: bool,
+}
+
+impl Budget {
+    pub fn ae_params(&self) -> AeLlmParams {
+        if self.quick {
+            AeLlmParams::small()
+        } else {
+            AeLlmParams::default()
+        }
+    }
+
+    pub fn random_budget(&self) -> usize {
+        if self.quick { 150 } else { 600 }
+    }
+}
+
+/// Run one method on a scenario and evaluate its chosen configuration
+/// on the *noise-free* testbed (reports use ground truth; the search
+/// itself only ever saw noisy measurements).
+pub fn run_method(method: Method, scenario: &Scenario, budget: &Budget,
+                  seed: u64) -> MethodResult {
+    let mut rng = Rng::new(seed);
+    let m = &scenario.model;
+    let t = &scenario.task;
+    let tb = &scenario.testbed;
+    let truth = crate::oracle::Testbed::noiseless(tb.platform.clone());
+    let reference = Reference {
+        default: truth.true_objectives(&Config::default_baseline(), m, t),
+    };
+
+    let config = match method {
+        Method::AeLlm => {
+            coordinator::optimize(scenario, &budget.ae_params(), &mut rng)
+                .chosen
+        }
+        Method::Baseline(b) => {
+            let b = match b {
+                Baseline::RandomSearch { .. } => Baseline::RandomSearch {
+                    budget: budget.random_budget(),
+                },
+                other => other,
+            };
+            let mut noise_rng = rng.split();
+            baselines::select(
+                b,
+                m,
+                t,
+                &tb.platform,
+                &reference,
+                &scenario.prefs,
+                |c| tb.measure(c, m, t, &mut noise_rng),
+                |c| tb.feasible(c, m, t),
+                &mut Rng::new(seed ^ 0x5eed),
+            )
+        }
+    };
+
+    let objectives = truth.true_objectives(&config, m, t);
+    MethodResult {
+        method: method.name(),
+        config,
+        objectives,
+        efficiency_score: efficiency_score(&objectives, &reference),
+    }
+}
+
+/// Preferences presets by CLI name.
+pub fn prefs_by_name(name: &str) -> Option<Preferences> {
+    Some(match name {
+        "balanced" => Preferences::default(),
+        "latency" => Preferences::latency_critical(),
+        "memory" => Preferences::memory_constrained(),
+        "accuracy" => Preferences::accuracy_critical(),
+        "green" => Preferences::green_ai(),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_order_matches_paper() {
+        let names: Vec<_> =
+            Method::paper_order().iter().map(|m| m.name()).collect();
+        assert_eq!(names, vec![
+            "Default", "Best Single-Stage", "Manual Selection",
+            "EfficientLLM Rec.", "AdaptiveEfficientLLM",
+        ]);
+    }
+
+    #[test]
+    fn default_method_scores_one() {
+        let s = Scenario::for_model("LLaMA-2-7B").unwrap();
+        let r = run_method(Method::Baseline(Baseline::Default), &s,
+                           &Budget { quick: true }, 1);
+        assert!((r.efficiency_score - 1.0).abs() < 1e-9);
+        assert_eq!(r.config, Config::default_baseline());
+    }
+
+    #[test]
+    fn ae_llm_beats_every_baseline_on_7b() {
+        // the paper's headline ordering, on one model as a smoke check
+        let s = Scenario::for_model("LLaMA-2-7B").unwrap();
+        let b = Budget { quick: true };
+        let scores: Vec<(String, f64)> = Method::paper_order()
+            .into_iter()
+            .map(|m| {
+                let r = run_method(m, &s, &b, 7);
+                (r.method.to_string(), r.efficiency_score)
+            })
+            .collect();
+        let ae = scores.last().unwrap().1;
+        for (name, sc) in &scores[..scores.len() - 1] {
+            assert!(ae > *sc - 0.12, "AE-LLM {ae} vs {name} {sc}");
+        }
+        assert!(ae > 1.4, "AE-LLM score {ae}");
+    }
+
+    #[test]
+    fn prefs_lookup() {
+        assert!(prefs_by_name("balanced").is_some());
+        assert!(prefs_by_name("green").is_some());
+        assert!(prefs_by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,204 @@
+//! PJRT execution engine: loads AOT-lowered HLO text artifacts, compiles
+//! them on the CPU PJRT client and executes them from the rust hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::
+//! from_text_file` → `XlaComputation::from_proto` → `client.compile` →
+//! `execute`.  Python is never involved at this point.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use super::manifest::{Manifest, Variant};
+
+/// A compiled, executable variant.
+pub struct Loaded {
+    pub variant: Variant,
+    exe: xla::PjRtLoadedExecutable,
+    /// wall-clock spent compiling (reported in perf logs)
+    pub compile_ms: f64,
+}
+
+/// The engine owns the PJRT client and all compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    loaded: BTreeMap<String, Loaded>,
+    pub manifest: Manifest,
+}
+
+/// Result of one forward execution.
+pub struct Forward {
+    /// logits, flattened (batch * seq * vocab)
+    pub logits: Vec<f32>,
+    pub wall_ms: f64,
+}
+
+impl Engine {
+    /// Create the client and parse the manifest (no compilation yet).
+    pub fn new(artifacts_dir: &Path) -> anyhow::Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, loaded: BTreeMap::new(), manifest })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one variant (idempotent).
+    pub fn load(&mut self, name: &str) -> anyhow::Result<&Loaded> {
+        if !self.loaded.contains_key(name) {
+            let variant = self
+                .manifest
+                .get(name)
+                .ok_or_else(|| anyhow::anyhow!("unknown variant {name:?}"))?
+                .clone();
+            let t0 = Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                variant.path.to_str().unwrap(),
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            let compile_ms = t0.elapsed().as_secs_f64() * 1e3;
+            self.loaded.insert(
+                name.to_string(),
+                Loaded { variant, exe, compile_ms },
+            );
+        }
+        Ok(&self.loaded[name])
+    }
+
+    /// Compile every measurement variant in the manifest.
+    pub fn load_all(&mut self) -> anyhow::Result<Vec<String>> {
+        let names: Vec<String> =
+            self.manifest.variants.keys().cloned().collect();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(names)
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.loaded.contains_key(name)
+    }
+
+    pub fn loaded_names(&self) -> Vec<&str> {
+        self.loaded.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Run one forward pass: token ids (batch*seq, row-major) → logits.
+    pub fn forward(&self, name: &str, tokens: &[i32]) -> anyhow::Result<Forward> {
+        let loaded = self
+            .loaded
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("variant {name:?} not loaded"))?;
+        let (b, s) = (loaded.variant.batch as usize,
+                      loaded.variant.seq as usize);
+        anyhow::ensure!(
+            tokens.len() == b * s,
+            "token buffer {} != batch*seq {}",
+            tokens.len(),
+            b * s
+        );
+        let vocab = loaded.variant.config.vocab as i32;
+        anyhow::ensure!(
+            tokens.iter().all(|&t| t >= 0 && t < vocab),
+            "token id out of range [0,{vocab})"
+        );
+        let input = xla::Literal::vec1(tokens)
+            .reshape(&[b as i64, s as i64])?;
+        let t0 = Instant::now();
+        let result = loaded.exe.execute::<xla::Literal>(&[input])?[0][0]
+            .to_literal_sync()?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        // aot.py lowers with return_tuple=True -> 1-tuple of logits.
+        let logits = result.to_tuple1()?.to_vec::<f32>()?;
+        anyhow::ensure!(
+            logits.len() == b * s * loaded.variant.config.vocab as usize,
+            "unexpected logits size {}",
+            logits.len()
+        );
+        Ok(Forward { logits, wall_ms })
+    }
+
+    /// Deterministic token batch for a variant (measurement workload).
+    pub fn make_tokens(&self, name: &str, seed: u64) -> anyhow::Result<Vec<i32>> {
+        let v = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("unknown variant {name:?}"))?;
+        let mut rng = crate::util::Rng::new(seed);
+        let n = (v.batch * v.seq) as usize;
+        Ok((0..n)
+            .map(|_| rng.below(v.config.vocab as usize) as i32)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::manifest::artifacts_dir;
+    use super::*;
+
+    fn engine_or_skip() -> Option<Engine> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        Some(Engine::new(&dir).unwrap())
+    }
+
+    #[test]
+    fn loads_and_runs_gqa_fp16() {
+        let Some(mut e) = engine_or_skip() else { return };
+        e.load("gqa_fp16").unwrap();
+        let tokens = e.make_tokens("gqa_fp16", 0).unwrap();
+        let out = e.forward("gqa_fp16", &tokens).unwrap();
+        assert_eq!(out.logits.len(), 4 * 64 * 256);
+        assert!(out.logits.iter().all(|x| x.is_finite()));
+        assert!(out.wall_ms > 0.0);
+    }
+
+    #[test]
+    fn forward_is_deterministic() {
+        let Some(mut e) = engine_or_skip() else { return };
+        e.load("mqa_int8").unwrap();
+        let tokens = e.make_tokens("mqa_int8", 1).unwrap();
+        let a = e.forward("mqa_int8", &tokens).unwrap().logits;
+        let b = e.forward("mqa_int8", &tokens).unwrap().logits;
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn quantized_variant_close_to_baseline() {
+        let Some(mut e) = engine_or_skip() else { return };
+        e.load("gqa_fp16").unwrap();
+        e.load("gqa_int8").unwrap();
+        let tokens = e.make_tokens("gqa_fp16", 2).unwrap();
+        let base = e.forward("gqa_fp16", &tokens).unwrap().logits;
+        let q = e.forward("gqa_int8", &tokens).unwrap().logits;
+        let mae: f32 = base
+            .iter()
+            .zip(&q)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f32>()
+            / base.len() as f32;
+        let scale: f32 =
+            base.iter().map(|x| x.abs()).sum::<f32>() / base.len() as f32;
+        // quantized but same weights: close, not identical
+        assert!(mae > 0.0);
+        assert!(mae / scale < 0.2, "relative MAE {}", mae / scale);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let Some(mut e) = engine_or_skip() else { return };
+        e.load("gqa_fp16").unwrap();
+        assert!(e.forward("gqa_fp16", &[0i32; 3]).is_err()); // wrong size
+        let mut tokens = e.make_tokens("gqa_fp16", 3).unwrap();
+        tokens[0] = 9999; // out of vocab
+        assert!(e.forward("gqa_fp16", &tokens).is_err());
+        assert!(e.forward("not_a_variant", &[]).is_err());
+    }
+}

@@ -1,0 +1,197 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime.  `make artifacts` writes `artifacts/manifest.json`
+//! describing every AOT-lowered transformer variant; this module parses
+//! it (with the in-house JSON parser — serde is unavailable offline).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Mirror of `python/compile/model.py::ModelConfig`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct VariantConfig {
+    pub attention: String,
+    pub quant: String,
+    pub d_model: u64,
+    pub n_layers: u64,
+    pub n_heads: u64,
+    pub vocab: u64,
+    pub moe_experts: u64,
+    pub moe_top_k: u64,
+    pub lora_rank: u64,
+    pub mla_latent: u64,
+}
+
+/// One AOT artifact.
+#[derive(Clone, Debug)]
+pub struct Variant {
+    pub name: String,
+    pub path: PathBuf,
+    /// fp16 sibling used as the numeric-fidelity reference.
+    pub fidelity_baseline: String,
+    pub batch: u64,
+    pub seq: u64,
+    pub config: VariantConfig,
+    pub param_count: u64,
+    pub weight_bytes: u64,
+    pub flops_per_token: u64,
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub weight_seed: u64,
+    pub variants: BTreeMap<String, Variant>,
+}
+
+impl Manifest {
+    /// Load from `<artifacts_dir>/manifest.json`.
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!(
+                "cannot read {path:?}: {e} (run `make artifacts` first)"
+            )
+        })?;
+        Self::parse(&text, artifacts_dir)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str, artifacts_dir: &Path) -> anyhow::Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("bad manifest JSON: {e}"))?;
+        let weight_seed = j
+            .req_u64("weight_seed")
+            .map_err(|e| anyhow::anyhow!(e))?;
+        let mut variants = BTreeMap::new();
+        for v in j
+            .get("variants")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("manifest missing variants[]"))?
+        {
+            let e = |m: String| anyhow::anyhow!(m);
+            let cfg = v
+                .get("config")
+                .ok_or_else(|| anyhow::anyhow!("variant missing config"))?;
+            let variant = Variant {
+                name: v.req_str("name").map_err(e)?,
+                path: artifacts_dir.join(v.req_str("file").map_err(e)?),
+                fidelity_baseline: v.req_str("fidelity_baseline").map_err(e)?,
+                batch: v.req_u64("batch").map_err(e)?,
+                seq: v.req_u64("seq").map_err(e)?,
+                config: VariantConfig {
+                    attention: cfg.req_str("attention").map_err(e)?,
+                    quant: cfg.req_str("quant").map_err(e)?,
+                    d_model: cfg.req_u64("d_model").map_err(e)?,
+                    n_layers: cfg.req_u64("n_layers").map_err(e)?,
+                    n_heads: cfg.req_u64("n_heads").map_err(e)?,
+                    vocab: cfg.req_u64("vocab").map_err(e)?,
+                    moe_experts: cfg.req_u64("moe_experts").map_err(e)?,
+                    moe_top_k: cfg.req_u64("moe_top_k").map_err(e)?,
+                    lora_rank: cfg.req_u64("lora_rank").map_err(e)?,
+                    mla_latent: cfg.req_u64("mla_latent").map_err(e)?,
+                },
+                param_count: v.req_u64("param_count").map_err(e)?,
+                weight_bytes: v.req_u64("weight_bytes").map_err(e)?,
+                flops_per_token: v.req_u64("flops_per_token").map_err(e)?,
+            };
+            variants.insert(variant.name.clone(), variant);
+        }
+        if variants.is_empty() {
+            anyhow::bail!("manifest has no variants");
+        }
+        Ok(Manifest { weight_seed, variants })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Variant> {
+        self.variants.get(name)
+    }
+
+    /// Names of the non-"serve" measurement variants.
+    pub fn measurement_variants(&self) -> Vec<&Variant> {
+        self.variants
+            .values()
+            .filter(|v| !v.name.starts_with("serve_"))
+            .collect()
+    }
+}
+
+/// Default artifacts directory: `$AE_LLM_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("AE_LLM_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "weight_seed": 1234,
+        "variants": [
+            {"name": "gqa_fp16", "file": "gqa_fp16.hlo.txt",
+             "fidelity_baseline": "gqa_fp16", "batch": 4, "seq": 64,
+             "config": {"vocab": 256, "d_model": 128, "n_layers": 2,
+                        "n_heads": 8, "attention": "gqa", "gqa_groups": 4,
+                        "mla_latent": 32, "ffn_mult": 4, "moe_experts": 0,
+                        "moe_top_k": 2, "quant": "fp16", "lora_rank": 0,
+                        "lora_alpha": 32.0, "use_pallas": true},
+             "param_count": 1000, "weight_bytes": 2000,
+             "flops_per_token": 4000},
+            {"name": "serve_gqa_int8", "file": "serve_gqa_int8.hlo.txt",
+             "fidelity_baseline": "serve_gqa_fp16", "batch": 8, "seq": 128,
+             "config": {"vocab": 256, "d_model": 128, "n_layers": 2,
+                        "n_heads": 8, "attention": "gqa", "gqa_groups": 4,
+                        "mla_latent": 32, "ffn_mult": 4, "moe_experts": 0,
+                        "moe_top_k": 2, "quant": "int8", "lora_rank": 0,
+                        "lora_alpha": 32.0, "use_pallas": true},
+             "param_count": 1000, "weight_bytes": 1000,
+             "flops_per_token": 4000}
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.weight_seed, 1234);
+        assert_eq!(m.variants.len(), 2);
+        let v = m.get("gqa_fp16").unwrap();
+        assert_eq!(v.config.attention, "gqa");
+        assert_eq!(v.config.quant, "fp16");
+        assert_eq!(v.path, Path::new("/tmp/a/gqa_fp16.hlo.txt"));
+    }
+
+    #[test]
+    fn measurement_variants_exclude_serve() {
+        let m = Manifest::parse(SAMPLE, Path::new("/tmp/a")).unwrap();
+        let names: Vec<_> = m
+            .measurement_variants()
+            .iter()
+            .map(|v| v.name.as_str())
+            .collect();
+        assert_eq!(names, vec!["gqa_fp16"]);
+    }
+
+    #[test]
+    fn rejects_empty_and_garbage() {
+        assert!(Manifest::parse("{}", Path::new(".")).is_err());
+        assert!(Manifest::parse("not json", Path::new(".")).is_err());
+        assert!(Manifest::parse(
+            r#"{"weight_seed": 1, "variants": []}"#, Path::new(".")).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.variants.len() >= 12);
+        for v in m.variants.values() {
+            assert!(v.path.exists(), "{:?} missing", v.path);
+            assert!(m.get(&v.fidelity_baseline).is_some());
+        }
+    }
+}

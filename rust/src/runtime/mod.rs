@@ -1,0 +1,18 @@
+//! S10: PJRT runtime — the deployment half of the system.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (the python→rust
+//!   contract);
+//! * [`engine`] — PJRT CPU client: load HLO text, compile, execute;
+//! * [`measure`] — hardware-in-the-loop evaluator for Algorithm 1
+//!   (real wall-clock + numeric fidelity per artifact variant);
+//! * [`serve`] — fixed-batch request scheduler over a serve variant.
+
+pub mod engine;
+pub mod manifest;
+pub mod measure;
+pub mod serve;
+
+pub use engine::{Engine, Forward};
+pub use manifest::{artifacts_dir, Manifest, Variant};
+pub use measure::{measure_all, MeasuredEvaluator, MeasurementTable};
+pub use serve::{Request, ServeReport, Server};

@@ -1,0 +1,230 @@
+//! Batched serving loop: the deployment-side proof that a chosen
+//! configuration actually runs — requests are queued, grouped into
+//! fixed-size batches (the AOT "serve" variant's batch dimension) and
+//! executed on PJRT, reporting per-request latency and aggregate
+//! throughput.  Used by `examples/e2e_refinement.rs` after Algorithm 1
+//! picks a configuration.
+
+use std::time::Instant;
+
+use super::engine::Engine;
+use crate::util::stats;
+
+/// One inference request: a prompt of token ids (padded/truncated to
+/// the variant's sequence length).
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+}
+
+/// Per-request completion record.
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: u64,
+    /// argmax next-token prediction at the last position
+    pub next_token: i32,
+    /// time from submission to completion, ms
+    pub latency_ms: f64,
+    /// index of the batch this request rode in
+    pub batch_index: usize,
+}
+
+/// Aggregate serving statistics.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    pub completed: usize,
+    pub batches: usize,
+    pub p50_latency_ms: f64,
+    pub p95_latency_ms: f64,
+    pub mean_batch_exec_ms: f64,
+    pub throughput_rps: f64,
+    pub tokens_per_s: f64,
+}
+
+/// Fixed-batch scheduler over one serve variant.
+pub struct Server<'a> {
+    engine: &'a Engine,
+    variant: String,
+    batch: usize,
+    seq: usize,
+    vocab: usize,
+    queue: Vec<(Request, Instant)>,
+    completions: Vec<Completion>,
+    batch_exec_ms: Vec<f64>,
+    started: Option<Instant>,
+}
+
+impl<'a> Server<'a> {
+    /// `variant` must already be loaded in the engine.
+    pub fn new(engine: &'a Engine, variant: &str) -> anyhow::Result<Server<'a>> {
+        anyhow::ensure!(engine.is_loaded(variant),
+                        "variant {variant:?} not loaded");
+        let v = engine.manifest.get(variant).unwrap();
+        Ok(Server {
+            engine,
+            variant: variant.to_string(),
+            batch: v.batch as usize,
+            seq: v.seq as usize,
+            vocab: v.config.vocab as usize,
+            queue: Vec::new(),
+            completions: Vec::new(),
+            batch_exec_ms: Vec::new(),
+            started: None,
+        })
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Enqueue a request (pads/truncates to the sequence length and
+    /// clamps token ids into vocabulary range).
+    pub fn submit(&mut self, mut r: Request) {
+        self.started.get_or_insert_with(Instant::now);
+        r.tokens.resize(self.seq, 0);
+        for t in r.tokens.iter_mut() {
+            *t = (*t).rem_euclid(self.vocab as i32);
+        }
+        self.queue.push((r, Instant::now()));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Run batches until the queue is drained.  Short final batches are
+    /// padded with zero-prompts (the static-shape analogue of vLLM-style
+    /// bucket padding).
+    pub fn drain(&mut self) -> anyhow::Result<()> {
+        while !self.queue.is_empty() {
+            let take = self.queue.len().min(self.batch);
+            let group: Vec<(Request, Instant)> =
+                self.queue.drain(..take).collect();
+            let mut flat: Vec<i32> = Vec::with_capacity(self.batch * self.seq);
+            for (r, _) in &group {
+                flat.extend_from_slice(&r.tokens);
+            }
+            flat.resize(self.batch * self.seq, 0); // padding rows
+            let fwd = self.engine.forward(&self.variant, &flat)?;
+            self.batch_exec_ms.push(fwd.wall_ms);
+            let batch_index = self.batch_exec_ms.len() - 1;
+            for (row, (r, submitted)) in group.into_iter().enumerate() {
+                // argmax over the last position's logits for this row
+                let base = (row * self.seq + (self.seq - 1)) * self.vocab;
+                let slice = &fwd.logits[base..base + self.vocab];
+                let next_token = slice
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i as i32)
+                    .unwrap_or(0);
+                self.completions.push(Completion {
+                    id: r.id,
+                    next_token,
+                    latency_ms: submitted.elapsed().as_secs_f64() * 1e3,
+                    batch_index,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    pub fn completions(&self) -> &[Completion] {
+        &self.completions
+    }
+
+    pub fn report(&self) -> ServeReport {
+        let lats: Vec<f64> =
+            self.completions.iter().map(|c| c.latency_ms).collect();
+        let wall_s = self
+            .started
+            .map(|t| t.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+            .max(1e-9);
+        ServeReport {
+            completed: self.completions.len(),
+            batches: self.batch_exec_ms.len(),
+            p50_latency_ms: stats::quantile(&lats, 0.5),
+            p95_latency_ms: stats::quantile(&lats, 0.95),
+            mean_batch_exec_ms: stats::mean(&self.batch_exec_ms),
+            throughput_rps: self.completions.len() as f64 / wall_s,
+            tokens_per_s: (self.completions.len() * self.seq) as f64 / wall_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::manifest::artifacts_dir;
+    use super::*;
+
+    fn engine_or_skip() -> Option<Engine> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let mut e = Engine::new(&dir).unwrap();
+        e.load("serve_gqa_int8").unwrap();
+        Some(e)
+    }
+
+    #[test]
+    fn serves_batched_requests() {
+        let Some(e) = engine_or_skip() else { return };
+        let mut s = Server::new(&e, "serve_gqa_int8").unwrap();
+        assert_eq!(s.batch_size(), 8);
+        for i in 0..20 {
+            s.submit(Request {
+                id: i,
+                tokens: vec![(i as i32) % 256; 100],
+            });
+        }
+        s.drain().unwrap();
+        let r = s.report();
+        assert_eq!(r.completed, 20);
+        assert_eq!(r.batches, 3); // 8 + 8 + 4(padded)
+        assert!(r.p50_latency_ms > 0.0);
+        assert!(r.p95_latency_ms >= r.p50_latency_ms);
+        assert!(r.throughput_rps > 0.0);
+        // every id accounted for exactly once
+        let mut ids: Vec<u64> =
+            s.completions().iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn handles_ragged_prompts_and_bad_tokens() {
+        let Some(e) = engine_or_skip() else { return };
+        let mut s = Server::new(&e, "serve_gqa_int8").unwrap();
+        s.submit(Request { id: 0, tokens: vec![] }); // empty
+        s.submit(Request { id: 1, tokens: vec![5; 4000] }); // too long
+        s.submit(Request { id: 2, tokens: vec![-7, 999, 3] }); // out of range
+        s.drain().unwrap();
+        assert_eq!(s.report().completed, 3);
+    }
+
+    #[test]
+    fn rejects_unloaded_variant() {
+        let Some(e) = engine_or_skip() else { return };
+        assert!(Server::new(&e, "mha_fp16").is_err()); // not loaded
+    }
+
+    #[test]
+    fn deterministic_next_tokens() {
+        let Some(e) = engine_or_skip() else { return };
+        let run = || {
+            let mut s = Server::new(&e, "serve_gqa_int8").unwrap();
+            for i in 0..8 {
+                s.submit(Request { id: i, tokens: vec![i as i32 * 3; 64] });
+            }
+            s.drain().unwrap();
+            s.completions()
+                .iter()
+                .map(|c| (c.id, c.next_token))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(), run());
+    }
+}

@@ -1,0 +1,206 @@
+//! Pareto archive: the non-dominated set maintained across generations
+//! and refinement iterations (§3.3.2 "maintaining a Pareto archive of
+//! non-dominated solutions").
+
+use crate::config::Config;
+use crate::oracle::Objectives;
+use crate::search::dominance;
+
+/// One archived solution.
+#[derive(Clone, Debug)]
+pub struct Entry {
+    pub config: Config,
+    pub objectives: Objectives,
+}
+
+/// Bounded non-dominated archive.
+#[derive(Clone, Debug, Default)]
+pub struct ParetoArchive {
+    entries: Vec<Entry>,
+    capacity: usize,
+}
+
+impl ParetoArchive {
+    pub fn new(capacity: usize) -> Self {
+        ParetoArchive { entries: Vec::new(), capacity }
+    }
+
+    /// Insert; returns true if the candidate made it into the archive.
+    /// Dominated incumbents are evicted; duplicates (same config) are
+    /// replaced by fresher objective values.
+    pub fn insert(&mut self, config: Config, objectives: Objectives) -> bool {
+        // Replace stale duplicate if present.
+        if let Some(pos) =
+            self.entries.iter().position(|e| e.config == config)
+        {
+            self.entries[pos].objectives = objectives;
+            self.prune_dominated();
+            return self.entries.iter().any(|e| e.config == config);
+        }
+        // Reject if dominated by anything in the archive.
+        if self
+            .entries
+            .iter()
+            .any(|e| e.objectives.dominates(&objectives))
+        {
+            return false;
+        }
+        // Evict whatever the candidate dominates.
+        self.entries
+            .retain(|e| !objectives.dominates(&e.objectives));
+        self.entries.push(Entry { config, objectives });
+        if self.entries.len() > self.capacity {
+            self.truncate_by_crowding();
+        }
+        true
+    }
+
+    fn prune_dominated(&mut self) {
+        let objs: Vec<_> =
+            self.entries.iter().map(|e| e.objectives.as_min_vec()).collect();
+        let keep: std::collections::BTreeSet<usize> =
+            dominance::pareto_front(&objs).into_iter().collect();
+        let mut i = 0;
+        self.entries.retain(|_| {
+            let k = keep.contains(&i);
+            i += 1;
+            k
+        });
+    }
+
+    /// Drop the most crowded members until within capacity.
+    fn truncate_by_crowding(&mut self) {
+        while self.entries.len() > self.capacity {
+            let objs: Vec<_> = self
+                .entries
+                .iter()
+                .map(|e| e.objectives.as_min_vec())
+                .collect();
+            let front: Vec<usize> = (0..objs.len()).collect();
+            let dist = dominance::crowding_distance(&objs, &front);
+            let (victim, _) = dist
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            self.entries.remove(victim);
+        }
+    }
+
+    pub fn entries(&self) -> &[Entry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Best entry under a scalar utility (for final selection).
+    pub fn best_by<F: Fn(&Entry) -> f64>(&self, utility: F) -> Option<&Entry> {
+        self.entries
+            .iter()
+            .max_by(|a, b| utility(a).partial_cmp(&utility(b)).unwrap())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn obj(acc: f64, lat: f64) -> Objectives {
+        Objectives { accuracy: acc, latency_ms: lat, memory_gb: 1.0,
+                     energy_j: 1.0 }
+    }
+
+    fn cfg(seed: u64) -> Config {
+        let mut rng = crate::util::Rng::new(seed);
+        crate::config::enumerate::sample(&mut rng)
+    }
+
+    #[test]
+    fn insert_keeps_nondominated() {
+        let mut a = ParetoArchive::new(10);
+        assert!(a.insert(cfg(1), obj(70.0, 10.0)));
+        assert!(a.insert(cfg(2), obj(75.0, 20.0))); // trade-off: kept
+        assert_eq!(a.len(), 2);
+    }
+
+    #[test]
+    fn dominated_candidate_rejected() {
+        let mut a = ParetoArchive::new(10);
+        a.insert(cfg(1), obj(70.0, 10.0));
+        assert!(!a.insert(cfg(2), obj(69.0, 11.0)));
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn dominating_candidate_evicts() {
+        let mut a = ParetoArchive::new(10);
+        a.insert(cfg(1), obj(70.0, 10.0));
+        a.insert(cfg(2), obj(75.0, 20.0));
+        assert!(a.insert(cfg(3), obj(76.0, 9.0))); // dominates both
+        assert_eq!(a.len(), 1);
+    }
+
+    #[test]
+    fn duplicate_config_updates_objectives() {
+        let mut a = ParetoArchive::new(10);
+        let c = cfg(1);
+        a.insert(c, obj(70.0, 10.0));
+        a.insert(c, obj(71.0, 10.0));
+        assert_eq!(a.len(), 1);
+        assert_eq!(a.entries()[0].objectives.accuracy, 71.0);
+    }
+
+    #[test]
+    fn capacity_respected_via_crowding() {
+        let mut a = ParetoArchive::new(5);
+        for i in 0..20 {
+            // all mutually non-dominated (line with slope -1)
+            a.insert(cfg(i), obj(50.0 + i as f64, 10.0 + i as f64));
+        }
+        assert_eq!(a.len(), 5);
+        // extremes survive crowding truncation
+        let accs: Vec<f64> =
+            a.entries().iter().map(|e| e.objectives.accuracy).collect();
+        assert!(accs.iter().any(|&x| x == 50.0));
+        assert!(accs.iter().any(|&x| x == 69.0));
+    }
+
+    #[test]
+    fn archive_is_always_mutually_nondominated() {
+        let mut rng = crate::util::Rng::new(5);
+        let mut a = ParetoArchive::new(30);
+        for i in 0..300 {
+            let acc = 50.0 + 40.0 * rng.f64();
+            let lat = 5.0 + 50.0 * rng.f64();
+            a.insert(cfg(i), Objectives {
+                accuracy: acc,
+                latency_ms: lat,
+                memory_gb: 1.0 + 10.0 * rng.f64(),
+                energy_j: 0.1 + rng.f64(),
+            });
+        }
+        for x in a.entries() {
+            for y in a.entries() {
+                assert!(!x.objectives.dominates(&y.objectives)
+                    || x.config == y.config);
+            }
+        }
+    }
+
+    #[test]
+    fn best_by_utility() {
+        let mut a = ParetoArchive::new(10);
+        a.insert(cfg(1), obj(70.0, 10.0));
+        a.insert(cfg(2), obj(80.0, 30.0));
+        let fastest = a.best_by(|e| -e.objectives.latency_ms).unwrap();
+        assert_eq!(fastest.objectives.latency_ms, 10.0);
+        let most_accurate = a.best_by(|e| e.objectives.accuracy).unwrap();
+        assert_eq!(most_accurate.objectives.accuracy, 80.0);
+    }
+}

@@ -1,0 +1,223 @@
+//! Pareto dominance machinery: fast non-dominated sorting and crowding
+//! distance (Deb et al. 2002), the core of the modified NSGA-II.
+
+/// Objective vectors are in *minimization* convention ([f64; 4] from
+/// `Objectives::as_min_vec`).
+pub type MinVec = [f64; 4];
+
+/// True iff `a` dominates `b` (<= everywhere, < somewhere).
+pub fn dominates(a: &MinVec, b: &MinVec) -> bool {
+    let mut strict = false;
+    for i in 0..a.len() {
+        if a[i] > b[i] {
+            return false;
+        }
+        if a[i] < b[i] {
+            strict = true;
+        }
+    }
+    strict
+}
+
+/// Fast non-dominated sort: returns fronts as index lists, best first.
+/// O(M·N²) as in the paper's complexity analysis.
+pub fn non_dominated_sort(objs: &[MinVec]) -> Vec<Vec<usize>> {
+    let n = objs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
+    let mut dom_count = vec![0usize; n]; // how many dominate i
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&objs[i], &objs[j]) {
+                dominated_by[i].push(j);
+                dom_count[j] += 1;
+            } else if dominates(&objs[j], &objs[i]) {
+                dominated_by[j].push(i);
+                dom_count[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> =
+        (0..n).filter(|&i| dom_count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                dom_count[j] -= 1;
+                if dom_count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::replace(&mut current, next));
+    }
+    fronts
+}
+
+/// Crowding distance of each member within one front (diversity
+/// preservation §3.3.2).  Boundary solutions get +inf.
+pub fn crowding_distance(objs: &[MinVec], front: &[usize]) -> Vec<f64> {
+    let n = front.len();
+    let mut dist = vec![0.0f64; n];
+    if n <= 2 {
+        return vec![f64::INFINITY; n];
+    }
+    let m = objs[0].len();
+    let mut order: Vec<usize> = (0..n).collect();
+    for obj in 0..m {
+        order.sort_by(|&a, &b| {
+            objs[front[a]][obj]
+                .partial_cmp(&objs[front[b]][obj])
+                .unwrap()
+        });
+        let lo = objs[front[order[0]]][obj];
+        let hi = objs[front[order[n - 1]]][obj];
+        dist[order[0]] = f64::INFINITY;
+        dist[order[n - 1]] = f64::INFINITY;
+        let span = hi - lo;
+        if span <= 0.0 {
+            continue;
+        }
+        for k in 1..n - 1 {
+            let prev = objs[front[order[k - 1]]][obj];
+            let next = objs[front[order[k + 1]]][obj];
+            dist[order[k]] += (next - prev) / span;
+        }
+    }
+    dist
+}
+
+/// Extract the non-dominated subset of a set of objective vectors
+/// (indices into `objs`).
+pub fn pareto_front(objs: &[MinVec]) -> Vec<usize> {
+    non_dominated_sort(objs).into_iter().next().unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dominates_basics() {
+        let a = [1.0, 1.0, 1.0, 1.0];
+        let b = [2.0, 1.0, 1.0, 1.0];
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        assert!(!dominates(&a, &a)); // equality is not domination
+    }
+
+    #[test]
+    fn incomparable_points() {
+        let a = [1.0, 2.0, 0.0, 0.0];
+        let b = [2.0, 1.0, 0.0, 0.0];
+        assert!(!dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+    }
+
+    #[test]
+    fn sort_splits_into_correct_fronts() {
+        // (0) and (1) trade off; (2) dominated by (0); (3) dominated by all
+        let objs = vec![
+            [1.0, 2.0, 0.0, 0.0],
+            [2.0, 1.0, 0.0, 0.0],
+            [2.0, 3.0, 0.0, 0.0],
+            [3.0, 4.0, 0.0, 0.0],
+        ];
+        let fronts = non_dominated_sort(&objs);
+        assert_eq!(fronts.len(), 3);
+        let f0: std::collections::BTreeSet<_> =
+            fronts[0].iter().collect();
+        assert_eq!(f0, [0usize, 1].iter().collect());
+        assert_eq!(fronts[1], vec![2]);
+        assert_eq!(fronts[2], vec![3]);
+    }
+
+    #[test]
+    fn sort_handles_empty_and_single() {
+        assert!(non_dominated_sort(&[]).is_empty());
+        let one = non_dominated_sort(&[[1.0, 1.0, 1.0, 1.0]]);
+        assert_eq!(one, vec![vec![0]]);
+    }
+
+    #[test]
+    fn fronts_partition_population() {
+        let mut rng = crate::util::Rng::new(3);
+        let objs: Vec<MinVec> = (0..100)
+            .map(|_| [rng.f64(), rng.f64(), rng.f64(), rng.f64()])
+            .collect();
+        let fronts = non_dominated_sort(&objs);
+        let total: usize = fronts.iter().map(|f| f.len()).sum();
+        assert_eq!(total, 100);
+        // no member of front k is dominated by any member of front k
+        for front in &fronts {
+            for &i in front {
+                for &j in front {
+                    assert!(!dominates(&objs[i], &objs[j]) || i == j
+                            || !front.contains(&i));
+                }
+            }
+        }
+        // every member of front 1 dominated by someone in front 0
+        if fronts.len() > 1 {
+            for &j in &fronts[1] {
+                assert!(fronts[0].iter().any(|&i| dominates(&objs[i],
+                                                            &objs[j])));
+            }
+        }
+    }
+
+    #[test]
+    fn crowding_boundaries_infinite() {
+        let objs = vec![
+            [0.0, 3.0, 0.0, 0.0],
+            [1.0, 2.0, 0.0, 0.0],
+            [2.0, 1.0, 0.0, 0.0],
+            [3.0, 0.0, 0.0, 0.0],
+        ];
+        let front: Vec<usize> = (0..4).collect();
+        let d = crowding_distance(&objs, &front);
+        assert!(d[0].is_infinite() && d[3].is_infinite());
+        assert!(d[1].is_finite() && d[2].is_finite());
+        assert!(d[1] > 0.0);
+    }
+
+    #[test]
+    fn crowding_prefers_isolated_points() {
+        // three interior points: the middle one is crowded
+        let objs = vec![
+            [0.0, 10.0, 0.0, 0.0],
+            [4.9, 5.1, 0.0, 0.0],
+            [5.0, 5.0, 0.0, 0.0],
+            [5.1, 4.9, 0.0, 0.0],
+            [10.0, 0.0, 0.0, 0.0],
+        ];
+        let front: Vec<usize> = (0..5).collect();
+        let d = crowding_distance(&objs, &front);
+        assert!(d[1] > d[2] || d[3] > d[2]);
+    }
+
+    #[test]
+    fn crowding_small_fronts_infinite() {
+        let objs = vec![[0.0; 4], [1.0; 4]];
+        let d = crowding_distance(&objs, &[0, 1]);
+        assert!(d.iter().all(|x| x.is_infinite()));
+    }
+
+    #[test]
+    fn pareto_front_of_random_cloud_is_mutually_nondominated() {
+        let mut rng = crate::util::Rng::new(4);
+        let objs: Vec<MinVec> = (0..200)
+            .map(|_| [rng.f64(), rng.f64(), rng.f64(), rng.f64()])
+            .collect();
+        let front = pareto_front(&objs);
+        assert!(!front.is_empty());
+        for &i in &front {
+            for &j in &front {
+                assert!(!dominates(&objs[i], &objs[j]) || i == j);
+            }
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! S7/S8: multi-objective search — the modified NSGA-II (§3.3.2), its
+//! dominance/crowding machinery, genetic operators, the cross-iteration
+//! Pareto archive, and the comparison baselines of §4.1.
+
+pub mod archive;
+pub mod baselines;
+pub mod dominance;
+pub mod hypervolume;
+pub mod nsga2;
+pub mod operators;
+
+pub use archive::{Entry, ParetoArchive};
+pub use baselines::Baseline;
+pub use nsga2::{Nsga2Params, SearchResult, Toggles};

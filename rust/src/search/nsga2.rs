@@ -1,0 +1,360 @@
+//! Modified NSGA-II (paper §3.3.2).
+//!
+//! Differences from vanilla NSGA-II, per the paper:
+//! * **constraint-aware initialization** (Eq. 6) — the initial
+//!   population is filtered through the *predicted* memory/power
+//!   feasibility check before any expensive evaluation;
+//! * **hierarchical crossover** (Eq. 7) — per-stage recombination;
+//! * **stage-specific mutation rates** (Eq. 8);
+//! * **diversity preservation** via crowding distance;
+//! * a **Pareto archive** across generations.
+//!
+//! The algorithm is generic over the objective function so it runs
+//! identically against surrogate predictions (phase 2) and against the
+//! testbed directly (ablation "- Predictive Models").
+
+use crate::config::{enumerate, Config};
+use crate::oracle::Objectives;
+use crate::search::archive::ParetoArchive;
+use crate::search::dominance::{self, MinVec};
+use crate::search::operators;
+use crate::util::Rng;
+
+/// Search hyper-parameters (defaults = paper Table 5).
+#[derive(Clone, Copy, Debug)]
+pub struct Nsga2Params {
+    pub population: usize,
+    pub generations: usize,
+    pub crossover_rate: f64,
+    pub tournament_size: usize,
+    pub archive_capacity: usize,
+    /// Max rejection-sampling attempts per feasible-initialization slot
+    /// (Eq. 6); falls back to unconstrained samples after that.
+    pub init_attempts: usize,
+}
+
+impl Default for Nsga2Params {
+    fn default() -> Self {
+        Nsga2Params {
+            population: 100,
+            generations: 50,
+            crossover_rate: 0.9,
+            tournament_size: 3,
+            archive_capacity: 64,
+            init_attempts: 50,
+        }
+    }
+}
+
+impl Nsga2Params {
+    /// Reduced setting for unit tests / smoke runs.
+    pub fn small() -> Self {
+        Nsga2Params { population: 32, generations: 12, ..Default::default() }
+    }
+}
+
+/// Ablation toggles (Table 3 "Search Algorithm Components").
+#[derive(Clone, Copy, Debug)]
+pub struct Toggles {
+    /// Eq. 6 feasibility filtering of the initial population.
+    pub constraint_init: bool,
+    /// Eq. 7 hierarchical crossover; off = no crossover (mutation only).
+    pub hierarchical_crossover: bool,
+}
+
+impl Default for Toggles {
+    fn default() -> Self {
+        Toggles { constraint_init: true, hierarchical_crossover: true }
+    }
+}
+
+/// Result of one NSGA-II run.
+pub struct SearchResult {
+    pub archive: ParetoArchive,
+    pub evaluations: usize,
+    pub generations_run: usize,
+}
+
+/// Run the modified NSGA-II.
+///
+/// * `evaluate` — objective oracle (surrogate predictions in the real
+///   pipeline); called once per new individual.
+/// * `feasible` — predicted Definition-3 feasibility (Eq. 6) used for
+///   initialization and as a death penalty during evolution.
+pub fn run<E, F>(
+    params: &Nsga2Params,
+    toggles: &Toggles,
+    mut evaluate: E,
+    feasible: F,
+    rng: &mut Rng,
+) -> SearchResult
+where
+    E: FnMut(&Config) -> Objectives,
+    F: Fn(&Config) -> bool,
+{
+    let n = params.population;
+    let mut evaluations = 0usize;
+
+    // ---- constraint-aware initialization (Eq. 6) -----------------------
+    let mut pop: Vec<Config> = Vec::with_capacity(n);
+    while pop.len() < n {
+        let mut candidate = enumerate::sample(rng);
+        if toggles.constraint_init {
+            let mut tries = 0;
+            while !feasible(&candidate) && tries < params.init_attempts {
+                candidate = enumerate::sample(rng);
+                tries += 1;
+            }
+        }
+        pop.push(candidate);
+    }
+
+    let mut objs: Vec<Objectives> = pop
+        .iter()
+        .map(|c| {
+            evaluations += 1;
+            evaluate(c)
+        })
+        .collect();
+
+    let mut archive = ParetoArchive::new(params.archive_capacity);
+    for (c, o) in pop.iter().zip(&objs) {
+        if feasible(c) {
+            archive.insert(*c, *o);
+        }
+    }
+
+    for _gen in 0..params.generations {
+        // Rank + crowding of the current population (feasibility as a
+        // death penalty: infeasible points get pushed behind all fronts).
+        let min_vecs: Vec<MinVec> = pop
+            .iter()
+            .zip(&objs)
+            .map(|(c, o)| penalized(c, o, &feasible))
+            .collect();
+        let fronts = dominance::non_dominated_sort(&min_vecs);
+        let mut rank = vec![0usize; n];
+        let mut crowding = vec![0.0f64; n];
+        for (r, front) in fronts.iter().enumerate() {
+            let d = dominance::crowding_distance(&min_vecs, front);
+            for (k, &i) in front.iter().enumerate() {
+                rank[i] = r;
+                crowding[i] = d[k];
+            }
+        }
+
+        // ---- variation -------------------------------------------------
+        let mut offspring: Vec<Config> = Vec::with_capacity(n);
+        while offspring.len() < n {
+            let p1 = operators::tournament(rng, n, &rank, &crowding,
+                                           params.tournament_size);
+            let child = if toggles.hierarchical_crossover
+                && rng.chance(params.crossover_rate)
+            {
+                let p2 = operators::tournament(rng, n, &rank, &crowding,
+                                               params.tournament_size);
+                operators::crossover(&pop[p1], &pop[p2], rng)
+            } else {
+                pop[p1]
+            };
+            offspring.push(operators::mutate(&child, rng));
+        }
+        let off_objs: Vec<Objectives> = offspring
+            .iter()
+            .map(|c| {
+                evaluations += 1;
+                evaluate(c)
+            })
+            .collect();
+        for (c, o) in offspring.iter().zip(&off_objs) {
+            if feasible(c) {
+                archive.insert(*c, *o);
+            }
+        }
+
+        // ---- environmental selection (mu + lambda) ----------------------
+        let mut union_pop = pop;
+        union_pop.extend(offspring);
+        let mut union_objs = objs;
+        union_objs.extend(off_objs);
+        let union_vecs: Vec<MinVec> = union_pop
+            .iter()
+            .zip(&union_objs)
+            .map(|(c, o)| penalized(c, o, &feasible))
+            .collect();
+        let fronts = dominance::non_dominated_sort(&union_vecs);
+
+        let mut next_pop = Vec::with_capacity(n);
+        let mut next_objs = Vec::with_capacity(n);
+        'outer: for front in &fronts {
+            if next_pop.len() + front.len() <= n {
+                for &i in front {
+                    next_pop.push(union_pop[i]);
+                    next_objs.push(union_objs[i]);
+                }
+            } else {
+                // partial fill by descending crowding distance
+                let d = dominance::crowding_distance(&union_vecs, front);
+                let mut order: Vec<usize> = (0..front.len()).collect();
+                order.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap());
+                for &k in &order {
+                    if next_pop.len() >= n {
+                        break 'outer;
+                    }
+                    next_pop.push(union_pop[front[k]]);
+                    next_objs.push(union_objs[front[k]]);
+                }
+            }
+            if next_pop.len() >= n {
+                break;
+            }
+        }
+        pop = next_pop;
+        objs = next_objs;
+    }
+
+    SearchResult { archive, evaluations, generations_run: params.generations }
+}
+
+/// Death-penalty transform: infeasible points are shifted behind every
+/// feasible point in all objectives.
+fn penalized<F: Fn(&Config) -> bool>(c: &Config, o: &Objectives,
+                                     feasible: &F) -> MinVec {
+    let mut v = o.as_min_vec();
+    if !feasible(c) {
+        for x in v.iter_mut() {
+            *x += 1e9;
+        }
+    }
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware;
+    use crate::models::by_name;
+    use crate::oracle::Testbed;
+    use crate::tasks::blended_task;
+
+    fn harness() -> (Testbed, crate::models::ModelSpec,
+                     crate::tasks::TaskSpec) {
+        (Testbed::noiseless(hardware::a100()),
+         by_name("LLaMA-2-7B").unwrap(), blended_task())
+    }
+
+    #[test]
+    fn finds_nondominated_front_on_oracle() {
+        let (tb, m, t) = harness();
+        let mut rng = Rng::new(1);
+        let res = run(
+            &Nsga2Params::small(),
+            &Toggles::default(),
+            |c| tb.true_objectives(c, &m, &t),
+            |c| tb.feasible(c, &m, &t),
+            &mut rng,
+        );
+        assert!(res.archive.len() >= 5, "archive={}", res.archive.len());
+        assert_eq!(res.evaluations,
+                   32 * 13 /* init + 12 gens of offspring */);
+    }
+
+    #[test]
+    fn search_beats_random_sampling_on_utility() {
+        let (tb, m, t) = harness();
+        let util = |o: &Objectives| {
+            o.accuracy - 0.2 * o.latency_ms - 0.2 * o.memory_gb
+                - 5.0 * o.energy_j
+        };
+        let mut rng = Rng::new(2);
+        let res = run(
+            &Nsga2Params::small(),
+            &Toggles::default(),
+            |c| tb.true_objectives(c, &m, &t),
+            |c| tb.feasible(c, &m, &t),
+            &mut rng,
+        );
+        let best_search = res
+            .archive
+            .entries()
+            .iter()
+            .map(|e| util(&e.objectives))
+            .fold(f64::NEG_INFINITY, f64::max);
+        // random baseline with the same evaluation budget
+        let mut rng2 = Rng::new(2);
+        let best_random = (0..res.evaluations)
+            .map(|_| {
+                let c = enumerate::sample(&mut rng2);
+                util(&tb.true_objectives(&c, &m, &t))
+            })
+            .fold(f64::NEG_INFINITY, f64::max);
+        assert!(best_search >= best_random - 0.3,
+                "search={best_search} random={best_random}");
+    }
+
+    #[test]
+    fn archive_members_are_feasible() {
+        let (tb, m, t) = harness();
+        // tight memory bound: only quantized configs fit
+        let feasible = |c: &Config| {
+            tb.true_objectives(c, &m, &t).memory_gb <= 8.0
+        };
+        let mut rng = Rng::new(3);
+        let res = run(
+            &Nsga2Params::small(),
+            &Toggles::default(),
+            |c| tb.true_objectives(c, &m, &t),
+            feasible,
+            &mut rng,
+        );
+        for e in res.archive.entries() {
+            assert!(e.objectives.memory_gb <= 8.0,
+                    "infeasible archived: {}", e.objectives.memory_gb);
+        }
+        assert!(!res.archive.is_empty());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (tb, m, t) = harness();
+        let go = |seed| {
+            let mut rng = Rng::new(seed);
+            let res = run(
+                &Nsga2Params::small(),
+                &Toggles::default(),
+                |c| tb.true_objectives(c, &m, &t),
+                |_| true,
+                &mut rng,
+            );
+            res.archive
+                .entries()
+                .iter()
+                .map(|e| e.config)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(go(7), go(7));
+        assert_ne!(go(7), go(8));
+    }
+
+    #[test]
+    fn front_contains_both_accuracy_and_speed_ends() {
+        let (tb, m, t) = harness();
+        let mut rng = Rng::new(5);
+        let res = run(
+            &Nsga2Params::small(),
+            &Toggles::default(),
+            |c| tb.true_objectives(c, &m, &t),
+            |_| true,
+            &mut rng,
+        );
+        let accs: Vec<f64> = res.archive.entries().iter()
+            .map(|e| e.objectives.accuracy).collect();
+        let lats: Vec<f64> = res.archive.entries().iter()
+            .map(|e| e.objectives.latency_ms).collect();
+        let (acc_lo, acc_hi) = crate::util::stats::min_max(&accs);
+        let (lat_lo, lat_hi) = crate::util::stats::min_max(&lats);
+        // spread along the trade-off surface
+        assert!(acc_hi - acc_lo > 0.5, "acc spread {acc_lo}..{acc_hi}");
+        assert!(lat_hi / lat_lo > 1.3, "lat spread {lat_lo}..{lat_hi}");
+    }
+}

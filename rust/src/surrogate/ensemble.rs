@@ -1,0 +1,310 @@
+//! Surrogate ensembles with predictive uncertainty (paper §3.4:
+//! "uncertainty is measured using the variance of predictions from an
+//! ensemble of surrogate models").
+//!
+//! [`Ensemble`] bags several differently-seeded GBTs per objective;
+//! [`SurrogateSet`] bundles the four objective predictors the search
+//! uses (accuracy, latency, memory, energy) with incremental re-training
+//! for the refinement loop.
+
+use super::gbt::{Gbt, GbtParams};
+use crate::config::encode;
+use crate::config::Config;
+use crate::models::ModelSpec;
+use crate::oracle::Objectives;
+use crate::tasks::TaskSpec;
+use crate::util::{stats, Rng};
+
+/// Number of ensemble members.
+pub const ENSEMBLE_SIZE: usize = 4;
+
+/// Bagged GBT ensemble for one objective.
+#[derive(Clone, Debug)]
+pub struct Ensemble {
+    members: Vec<Gbt>,
+}
+
+impl Ensemble {
+    pub fn fit(rows: &[Vec<f64>], targets: &[f64], params: &GbtParams,
+               rng: &mut Rng) -> Ensemble {
+        let members = (0..ENSEMBLE_SIZE)
+            .map(|_| {
+                let mut child = rng.split();
+                Gbt::fit(rows, targets, params, &mut child)
+            })
+            .collect();
+        Ensemble { members }
+    }
+
+    /// Mean prediction.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        self.members.iter().map(|m| m.predict(x)).sum::<f64>()
+            / self.members.len() as f64
+    }
+
+    /// (mean, std) across ensemble members — std is the §3.4 uncertainty.
+    pub fn predict_with_uncertainty(&self, x: &[f64]) -> (f64, f64) {
+        let preds: Vec<f64> =
+            self.members.iter().map(|m| m.predict(x)).collect();
+        (stats::mean(&preds), stats::std_dev(&preds))
+    }
+
+    pub fn r2(&self, rows: &[Vec<f64>], targets: &[f64]) -> f64 {
+        let preds: Vec<f64> = rows.iter().map(|r| self.predict(r)).collect();
+        stats::r_squared(targets, &preds)
+    }
+}
+
+/// A labelled training example for the surrogates.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub features: Vec<f64>,
+    pub objectives: Objectives,
+}
+
+/// The four-objective surrogate bundle (Eq. 5's {f_o}).
+pub struct SurrogateSet {
+    pub accuracy: Ensemble,
+    pub latency: Ensemble,
+    pub memory: Ensemble,
+    pub energy: Ensemble,
+    /// Training set (kept so refinement can append + refit).
+    samples: Vec<Sample>,
+    params: GbtParams,
+}
+
+/// Predicted objectives with per-objective uncertainties.
+#[derive(Clone, Copy, Debug)]
+pub struct Prediction {
+    pub objectives: Objectives,
+    /// std-devs in the same order (accuracy, latency, memory, energy)
+    pub uncertainty: [f64; 4],
+}
+
+impl Prediction {
+    /// Scalar uncertainty score: relative std summed over objectives.
+    pub fn total_relative_uncertainty(&self) -> f64 {
+        let o = &self.objectives;
+        let rel = |s: f64, v: f64| if v.abs() > 1e-9 { s / v.abs() } else { s };
+        rel(self.uncertainty[0], o.accuracy)
+            + rel(self.uncertainty[1], o.latency_ms)
+            + rel(self.uncertainty[2], o.memory_gb)
+            + rel(self.uncertainty[3], o.energy_j)
+    }
+}
+
+impl SurrogateSet {
+    /// Fit from labelled samples.
+    pub fn fit(samples: Vec<Sample>, params: GbtParams,
+               rng: &mut Rng) -> SurrogateSet {
+        assert!(!samples.is_empty());
+        let rows: Vec<Vec<f64>> =
+            samples.iter().map(|s| s.features.clone()).collect();
+        // Latency/energy are trained in log space: they span orders of
+        // magnitude across models and the multiplicative noise becomes
+        // additive there.
+        let acc: Vec<f64> =
+            samples.iter().map(|s| s.objectives.accuracy).collect();
+        let lat: Vec<f64> = samples
+            .iter()
+            .map(|s| s.objectives.latency_ms.max(1e-6).ln())
+            .collect();
+        let mem: Vec<f64> = samples
+            .iter()
+            .map(|s| s.objectives.memory_gb.max(1e-6).ln())
+            .collect();
+        let en: Vec<f64> = samples
+            .iter()
+            .map(|s| s.objectives.energy_j.max(1e-9).ln())
+            .collect();
+        SurrogateSet {
+            accuracy: Ensemble::fit(&rows, &acc, &params, rng),
+            latency: Ensemble::fit(&rows, &lat, &params, rng),
+            memory: Ensemble::fit(&rows, &mem, &params, rng),
+            energy: Ensemble::fit(&rows, &en, &params, rng),
+            samples,
+            params,
+        }
+    }
+
+    /// Predict objectives + uncertainty for an encoded feature vector.
+    pub fn predict_features(&self, x: &[f64]) -> Prediction {
+        let (a, sa) = self.accuracy.predict_with_uncertainty(x);
+        let (l, sl) = self.latency.predict_with_uncertainty(x);
+        let (m, sm) = self.memory.predict_with_uncertainty(x);
+        let (e, se) = self.energy.predict_with_uncertainty(x);
+        let (l, sl) = (l.exp(), l.exp() * sl); // delta method back-transform
+        let (m, sm) = (m.exp(), m.exp() * sm);
+        let (e, se) = (e.exp(), e.exp() * se);
+        Prediction {
+            objectives: Objectives {
+                accuracy: a,
+                latency_ms: l,
+                memory_gb: m,
+                energy_j: e,
+            },
+            uncertainty: [sa, sl, sm, se],
+        }
+    }
+
+    /// Predict for a configuration in a (model, task) context.
+    pub fn predict(&self, c: &Config, m: &ModelSpec,
+                   t: &TaskSpec) -> Prediction {
+        self.predict_features(&encode::encode(c, m, t))
+    }
+
+    /// Refinement-loop update (Algorithm 1 line 6): append freshly
+    /// measured samples and refit.
+    pub fn update(&mut self, new_samples: Vec<Sample>, rng: &mut Rng) {
+        self.samples.extend(new_samples);
+        let refit = SurrogateSet::fit(
+            std::mem::take(&mut self.samples),
+            self.params,
+            rng,
+        );
+        *self = refit;
+    }
+
+    pub fn n_samples(&self) -> usize {
+        self.samples.len()
+    }
+
+    /// Held-out R² per objective on a labelled set (order: acc, lat(log),
+    /// mem(log), energy(log)).
+    pub fn r2_report(&self, test: &[Sample]) -> [f64; 4] {
+        let rows: Vec<Vec<f64>> =
+            test.iter().map(|s| s.features.clone()).collect();
+        let acc: Vec<f64> =
+            test.iter().map(|s| s.objectives.accuracy).collect();
+        let lat: Vec<f64> = test
+            .iter()
+            .map(|s| s.objectives.latency_ms.max(1e-6).ln())
+            .collect();
+        let mem: Vec<f64> = test
+            .iter()
+            .map(|s| s.objectives.memory_gb.max(1e-6).ln())
+            .collect();
+        let en: Vec<f64> = test
+            .iter()
+            .map(|s| s.objectives.energy_j.max(1e-9).ln())
+            .collect();
+        [
+            self.accuracy.r2(&rows, &acc),
+            self.latency.r2(&rows, &lat),
+            self.memory.r2(&rows, &mem),
+            self.energy.r2(&rows, &en),
+        ]
+    }
+}
+
+/// Collect a labelled sample set by measuring `n` random configurations
+/// on the testbed (the paper's "500 randomly sampled configurations").
+pub fn collect_samples(
+    testbed: &crate::oracle::Testbed,
+    m: &ModelSpec,
+    t: &TaskSpec,
+    n: usize,
+    rng: &mut Rng,
+) -> Vec<Sample> {
+    let configs = crate::config::enumerate::sample_distinct(rng, n);
+    configs
+        .into_iter()
+        .map(|c| Sample {
+            features: encode::encode(&c, m, t),
+            objectives: testbed.measure(&c, m, t, rng),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware;
+    use crate::models::by_name;
+    use crate::oracle::Testbed;
+    use crate::tasks::blended_task;
+
+    fn train_set(n: usize, seed: u64) -> Vec<Sample> {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = blended_task();
+        let tb = Testbed::new(hardware::a100());
+        let mut rng = Rng::new(seed);
+        collect_samples(&tb, &m, &t, n, &mut rng)
+    }
+
+    #[test]
+    fn surrogates_reach_paper_r2_on_heldout() {
+        let train = train_set(400, 1);
+        let test = train_set(120, 2);
+        let mut rng = Rng::new(3);
+        let s = SurrogateSet::fit(train, GbtParams::fast(), &mut rng);
+        let r2 = s.r2_report(&test);
+        // Paper §3.5: "R^2 > 0.85 on held-out configurations for all
+        // objectives".
+        for (i, v) in r2.iter().enumerate() {
+            assert!(*v > 0.85, "objective {i} r2={v} (all={r2:?})");
+        }
+    }
+
+    #[test]
+    fn predictions_close_to_oracle_truth() {
+        let train = train_set(400, 4);
+        let mut rng = Rng::new(5);
+        let s = SurrogateSet::fit(train, GbtParams::fast(), &mut rng);
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = blended_task();
+        let tb = Testbed::noiseless(hardware::a100());
+        let mut err_lat = 0.0;
+        let n = 50;
+        let mut rng2 = Rng::new(6);
+        for _ in 0..n {
+            let c = crate::config::enumerate::sample(&mut rng2);
+            let truth = tb.true_objectives(&c, &m, &t);
+            let pred = s.predict(&c, &m, &t).objectives;
+            err_lat += ((pred.latency_ms - truth.latency_ms)
+                / truth.latency_ms)
+                .abs();
+        }
+        let mape = err_lat / n as f64;
+        assert!(mape < 0.15, "latency MAPE={mape}");
+    }
+
+    #[test]
+    fn uncertainty_positive_and_finite() {
+        let train = train_set(150, 7);
+        let mut rng = Rng::new(8);
+        let s = SurrogateSet::fit(train, GbtParams::fast(), &mut rng);
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = blended_task();
+        let mut rng2 = Rng::new(9);
+        for _ in 0..20 {
+            let c = crate::config::enumerate::sample(&mut rng2);
+            let p = s.predict(&c, &m, &t);
+            assert!(p.uncertainty.iter().all(|u| u.is_finite() && *u >= 0.0));
+            assert!(p.total_relative_uncertainty().is_finite());
+        }
+    }
+
+    #[test]
+    fn update_appends_and_refits() {
+        let train = train_set(100, 10);
+        let mut rng = Rng::new(11);
+        let mut s = SurrogateSet::fit(train, GbtParams::fast(), &mut rng);
+        assert_eq!(s.n_samples(), 100);
+        s.update(train_set(50, 12), &mut rng);
+        assert_eq!(s.n_samples(), 150);
+    }
+
+    #[test]
+    fn more_data_does_not_hurt_much() {
+        let test = train_set(100, 13);
+        let mut rng = Rng::new(14);
+        let small = SurrogateSet::fit(train_set(60, 15), GbtParams::fast(),
+                                      &mut rng);
+        let big = SurrogateSet::fit(train_set(400, 16), GbtParams::fast(),
+                                    &mut rng);
+        let r2s = small.r2_report(&test)[1];
+        let r2b = big.r2_report(&test)[1];
+        assert!(r2b > r2s - 0.02, "small={r2s} big={r2b}");
+    }
+}

@@ -1,0 +1,16 @@
+//! S6: surrogate performance models (paper §3.3.1).
+//!
+//! Gradient-boosted regression trees predict each objective from the
+//! (configuration, model, task) encoding without touching the testbed;
+//! bagged ensembles expose the prediction variance the refinement loop
+//! uses to pick which configurations to actually measure (§3.4).
+
+pub mod ensemble;
+pub mod gbt;
+pub mod transfer;
+pub mod tree;
+
+pub use ensemble::{collect_samples, Ensemble, Prediction, Sample,
+                   SurrogateSet, ENSEMBLE_SIZE};
+pub use gbt::{Gbt, GbtParams};
+pub use tree::{Tree, TreeParams};

@@ -1,0 +1,305 @@
+//! Regression trees: the base learner of the gradient-boosted ensemble.
+//!
+//! CART-style binary trees with variance-reduction splits over candidate
+//! thresholds.  Candidate thresholds come from feature quantiles
+//! (histogram-style), which both bounds the split search cost and
+//! handles the one-hot/ordinal mix of the configuration encoding well.
+
+use crate::util::Rng;
+
+/// A fitted regression tree (flattened node array).
+#[derive(Clone, Debug)]
+pub struct Tree {
+    nodes: Vec<Node>,
+}
+
+#[derive(Clone, Debug)]
+enum Node {
+    Leaf {
+        value: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        /// children indices into `nodes`
+        left: usize,
+        right: usize,
+    },
+}
+
+/// Tree-growing hyperparameters.
+#[derive(Clone, Copy, Debug)]
+pub struct TreeParams {
+    pub max_depth: usize,
+    pub min_samples_leaf: usize,
+    /// Fraction of features considered per split (colsample).
+    pub colsample: f64,
+    /// Number of candidate thresholds per feature.
+    pub n_bins: usize,
+}
+
+impl Default for TreeParams {
+    fn default() -> Self {
+        TreeParams {
+            max_depth: 8,
+            min_samples_leaf: 3,
+            colsample: 0.8,
+            n_bins: 16,
+        }
+    }
+}
+
+impl Tree {
+    /// Fit to (rows, targets) where `rows[i]` is a feature vector.
+    /// `indices` selects the subsample of rows used (bagging).
+    pub fn fit(
+        rows: &[Vec<f64>],
+        targets: &[f64],
+        indices: &[usize],
+        params: &TreeParams,
+        rng: &mut Rng,
+    ) -> Tree {
+        assert_eq!(rows.len(), targets.len());
+        assert!(!indices.is_empty(), "empty training subsample");
+        let mut tree = Tree { nodes: Vec::new() };
+        tree.grow(rows, targets, indices.to_vec(), 0, params, rng);
+        tree
+    }
+
+    fn grow(
+        &mut self,
+        rows: &[Vec<f64>],
+        targets: &[f64],
+        indices: Vec<usize>,
+        depth: usize,
+        params: &TreeParams,
+        rng: &mut Rng,
+    ) -> usize {
+        let mean: f64 =
+            indices.iter().map(|&i| targets[i]).sum::<f64>() / indices.len() as f64;
+
+        if depth >= params.max_depth
+            || indices.len() < 2 * params.min_samples_leaf
+        {
+            self.nodes.push(Node::Leaf { value: mean });
+            return self.nodes.len() - 1;
+        }
+
+        match best_split(rows, targets, &indices, params, rng) {
+            None => {
+                self.nodes.push(Node::Leaf { value: mean });
+                self.nodes.len() - 1
+            }
+            Some((feature, threshold)) => {
+                let (li, ri): (Vec<usize>, Vec<usize>) = indices
+                    .iter()
+                    .partition(|&&i| rows[i][feature] <= threshold);
+                if li.len() < params.min_samples_leaf
+                    || ri.len() < params.min_samples_leaf
+                {
+                    self.nodes.push(Node::Leaf { value: mean });
+                    return self.nodes.len() - 1;
+                }
+                // reserve our slot, then grow children
+                let my = self.nodes.len();
+                self.nodes.push(Node::Leaf { value: mean }); // placeholder
+                let left = self.grow(rows, targets, li, depth + 1, params, rng);
+                let right = self.grow(rows, targets, ri, depth + 1, params, rng);
+                self.nodes[my] = Node::Split { feature, threshold, left, right };
+                my
+            }
+        }
+    }
+
+    /// Predict a single feature vector.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let mut idx = 0;
+        loop {
+            match &self.nodes[idx] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right } => {
+                    idx = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn depth(&self) -> usize {
+        fn rec(nodes: &[Node], idx: usize) -> usize {
+            match &nodes[idx] {
+                Node::Leaf { .. } => 0,
+                Node::Split { left, right, .. } => {
+                    1 + rec(nodes, *left).max(rec(nodes, *right))
+                }
+            }
+        }
+        rec(&self.nodes, 0)
+    }
+}
+
+/// Find the (feature, threshold) with the best variance reduction.
+fn best_split(
+    rows: &[Vec<f64>],
+    targets: &[f64],
+    indices: &[usize],
+    params: &TreeParams,
+    rng: &mut Rng,
+) -> Option<(usize, f64)> {
+    let n_features = rows[0].len();
+    let n_consider =
+        ((n_features as f64 * params.colsample).ceil() as usize).clamp(1, n_features);
+    let features = rng.sample_indices(n_features, n_consider);
+
+    let total_sum: f64 = indices.iter().map(|&i| targets[i]).sum();
+    let total_sq: f64 = indices.iter().map(|&i| targets[i] * targets[i]).sum();
+    let n = indices.len() as f64;
+    let parent_score = total_sq - total_sum * total_sum / n;
+
+    let mut best: Option<(usize, f64, f64)> = None; // (feat, thr, score)
+
+    let mut vals: Vec<(f64, f64)> = Vec::with_capacity(indices.len());
+    for &feature in &features {
+        vals.clear();
+        vals.extend(indices.iter().map(|&i| (rows[i][feature], targets[i])));
+        vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        if vals[0].0 == vals[vals.len() - 1].0 {
+            continue; // constant feature
+        }
+
+        // Candidate thresholds at quantile positions (histogram split).
+        let step = (vals.len() / (params.n_bins + 1)).max(1);
+        let mut left_sum = 0.0;
+        let mut left_sq = 0.0;
+        let mut left_n = 0.0;
+        let mut next_check = step;
+        for (pos, &(v, t)) in vals.iter().enumerate() {
+            left_sum += t;
+            left_sq += t * t;
+            left_n += 1.0;
+            if pos + 1 >= vals.len() {
+                break;
+            }
+            if pos + 1 >= next_check {
+                next_check += step;
+                let nv = vals[pos + 1].0;
+                if nv == v {
+                    continue; // can't split between equal values
+                }
+                let right_n = n - left_n;
+                if left_n < params.min_samples_leaf as f64
+                    || right_n < params.min_samples_leaf as f64
+                {
+                    continue;
+                }
+                let right_sum = total_sum - left_sum;
+                let right_sq = total_sq - left_sq;
+                let score = (left_sq - left_sum * left_sum / left_n)
+                    + (right_sq - right_sum * right_sum / right_n);
+                if score < best.map_or(parent_score - 1e-12, |b| b.2) {
+                    best = Some((feature, (v + nv) / 2.0, score));
+                }
+            }
+        }
+    }
+    best.map(|(f, t, _)| (f, t))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn xor_data() -> (Vec<Vec<f64>>, Vec<f64>) {
+        // y = xor(x0 > .5, x1 > .5) — needs depth 2, not linear.
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        let mut rng = Rng::new(1);
+        for _ in 0..400 {
+            let a = rng.f64();
+            let b = rng.f64();
+            rows.push(vec![a, b]);
+            ys.push(if (a > 0.5) ^ (b > 0.5) { 1.0 } else { 0.0 });
+        }
+        (rows, ys)
+    }
+
+    #[test]
+    fn fits_constant_target() {
+        let rows: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let ys = vec![3.5; 20];
+        let idx: Vec<usize> = (0..20).collect();
+        let t = Tree::fit(&rows, &ys, &idx, &TreeParams::default(),
+                          &mut Rng::new(0));
+        assert_eq!(t.predict(&[7.0]), 3.5);
+    }
+
+    #[test]
+    fn fits_step_function() {
+        let rows: Vec<Vec<f64>> = (0..100).map(|i| vec![i as f64]).collect();
+        let ys: Vec<f64> =
+            (0..100).map(|i| if i < 50 { -1.0 } else { 1.0 }).collect();
+        let idx: Vec<usize> = (0..100).collect();
+        let t = Tree::fit(&rows, &ys, &idx, &TreeParams::default(),
+                          &mut Rng::new(0));
+        assert_eq!(t.predict(&[10.0]), -1.0);
+        assert_eq!(t.predict(&[90.0]), 1.0);
+    }
+
+    #[test]
+    fn learns_xor_interaction() {
+        let (rows, ys) = xor_data();
+        let idx: Vec<usize> = (0..rows.len()).collect();
+        let params = TreeParams { colsample: 1.0, ..Default::default() };
+        let t = Tree::fit(&rows, &ys, &idx, &params, &mut Rng::new(0));
+        let preds: Vec<f64> = rows.iter().map(|r| t.predict(r)).collect();
+        let r2 = crate::util::stats::r_squared(&ys, &preds);
+        assert!(r2 > 0.9, "r2={r2}");
+    }
+
+    #[test]
+    fn respects_max_depth() {
+        let (rows, ys) = xor_data();
+        let idx: Vec<usize> = (0..rows.len()).collect();
+        let params = TreeParams { max_depth: 3, ..Default::default() };
+        let t = Tree::fit(&rows, &ys, &idx, &params, &mut Rng::new(0));
+        assert!(t.depth() <= 3, "depth={}", t.depth());
+    }
+
+    #[test]
+    fn depth_zero_gives_single_leaf() {
+        let (rows, ys) = xor_data();
+        let idx: Vec<usize> = (0..rows.len()).collect();
+        let params = TreeParams { max_depth: 0, ..Default::default() };
+        let t = Tree::fit(&rows, &ys, &idx, &params, &mut Rng::new(0));
+        assert_eq!(t.n_nodes(), 1);
+        let mean = crate::util::stats::mean(&ys);
+        assert!((t.predict(&[0.3, 0.4]) - mean).abs() < 1e-12);
+    }
+
+    #[test]
+    fn subsample_only_uses_given_indices() {
+        let rows: Vec<Vec<f64>> = (0..10).map(|i| vec![i as f64]).collect();
+        let mut ys = vec![0.0; 10];
+        ys[9] = 1000.0; // excluded outlier
+        let idx: Vec<usize> = (0..9).collect();
+        let t = Tree::fit(&rows, &ys, &idx, &TreeParams::default(),
+                          &mut Rng::new(0));
+        assert_eq!(t.predict(&[9.0]), 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (rows, ys) = xor_data();
+        let idx: Vec<usize> = (0..rows.len()).collect();
+        let t1 = Tree::fit(&rows, &ys, &idx, &TreeParams::default(),
+                           &mut Rng::new(5));
+        let t2 = Tree::fit(&rows, &ys, &idx, &TreeParams::default(),
+                           &mut Rng::new(5));
+        for r in rows.iter().take(50) {
+            assert_eq!(t1.predict(r), t2.predict(r));
+        }
+    }
+}

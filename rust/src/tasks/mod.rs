@@ -1,0 +1,203 @@
+//! S3: task suite — the 10 LLM tasks and 3 VLM benchmarks of §4.1,
+//! as `psi(T)` descriptors consumed by the surrogates and the oracle.
+//!
+//! Each task carries the *sensitivity profile* the paper's analysis
+//! establishes (§5.1, §5.3): how much low-bit quantization hurts it, how
+//! much expert routing helps it, how reasoning-heavy it is, and its
+//! characteristic sequence length.  These drive the task-dependent
+//! optimal-configuration patterns that make adaptive selection win.
+
+/// Task category (paper groups the 10 tasks into four families).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Category {
+    Understanding = 0,
+    Generation = 1,
+    LongContext = 2,
+    MultiTurn = 3,
+    Vision = 4,
+}
+
+impl Category {
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Understanding => "Language Understanding",
+            Category::Generation => "Generation",
+            Category::LongContext => "Long-Context",
+            Category::MultiTurn => "Multi-Turn",
+            Category::Vision => "Vision-Language",
+        }
+    }
+}
+
+/// Descriptor of one evaluation task.
+#[derive(Clone, Debug)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub category: Category,
+    /// Typical total sequence length (prompt + completion).
+    pub seq_len: u32,
+    /// How much aggressive quantization degrades this task, [0, 1].
+    /// GSM8K-style numerical reasoning sits near the top (§5.3).
+    pub quant_sensitivity: f64,
+    /// How much the task benefits from expert routing, [0, 1].
+    /// Code generation sits near the top (§5.3).
+    pub moe_affinity: f64,
+    /// Weight of multi-step reasoning in the task score, [0, 1].
+    pub reasoning_weight: f64,
+    pub multimodal: bool,
+    /// Default-configuration score on the canonical 7B model — the
+    /// anchor the oracle scales per model (Table 6's Default row).
+    pub base_score_7b: f64,
+    /// Score units, for reports ("%", "CIDEr", "score/10").
+    pub unit: &'static str,
+}
+
+/// The 10 LLM tasks (paper §4.1, Table 6 column order).
+pub fn suite() -> Vec<TaskSpec> {
+    use Category::*;
+    vec![
+        t("MMLU", Understanding, 512, 0.35, 0.30, 0.55, 46.8, "%"),
+        t("HellaSwag", Understanding, 256, 0.25, 0.20, 0.30, 78.2, "%"),
+        t("ARC-Easy", Understanding, 256, 0.25, 0.20, 0.35, 72.5, "%"),
+        t("GSM8K", Generation, 768, 0.90, 0.55, 0.95, 14.5, "%"),
+        t("HumanEval", Generation, 1024, 0.75, 0.85, 0.85, 12.8, "%"),
+        t("AlpacaEval", Generation, 1024, 0.40, 0.45, 0.50, 85.2, "%"),
+        t("LongBench", LongContext, 8192, 0.50, 0.35, 0.60, 32.5, "%"),
+        t("Needle", LongContext, 16384, 0.45, 0.25, 0.40, 88.5, "%"),
+        t("MT-Bench", MultiTurn, 2048, 0.55, 0.50, 0.70, 6.2, "/10"),
+        t("Vicuna", MultiTurn, 1536, 0.40, 0.40, 0.50, 78.5, "%"),
+    ]
+}
+
+/// The 3 VLM benchmarks (Table 4).
+pub fn vlm_suite() -> Vec<TaskSpec> {
+    use Category::*;
+    vec![
+        TaskSpec { multimodal: true, ..t("VQAv2", Vision, 640, 0.45, 0.35,
+                                         0.45, 78.5, "%") },
+        TaskSpec { multimodal: true, ..t("COCO-Caption", Vision, 512, 0.40,
+                                         0.30, 0.35, 128.5, "CIDEr") },
+        TaskSpec { multimodal: true, ..t("TextVQA", Vision, 768, 0.60, 0.40,
+                                         0.55, 58.5, "%") },
+    ]
+}
+
+/// Look up any task by name.
+pub fn by_name(name: &str) -> Option<TaskSpec> {
+    suite().into_iter()
+        .chain(vlm_suite())
+        .find(|t| t.name == name)
+}
+
+/// A representative blend used when optimizing for "general deployment"
+/// rather than a single task (Table 2 aggregates over the suite).
+pub fn blended_task() -> TaskSpec {
+    let s = suite();
+    let n = s.len() as f64;
+    TaskSpec {
+        name: "Blended",
+        category: Category::Understanding,
+        seq_len: (s.iter().map(|t| t.seq_len as f64).sum::<f64>() / n) as u32,
+        quant_sensitivity: s.iter().map(|t| t.quant_sensitivity).sum::<f64>() / n,
+        moe_affinity: s.iter().map(|t| t.moe_affinity).sum::<f64>() / n,
+        reasoning_weight: s.iter().map(|t| t.reasoning_weight).sum::<f64>() / n,
+        multimodal: false,
+        base_score_7b: 68.5, // Table 2 LLaMA-2-7B Default accuracy
+        unit: "%",
+    }
+}
+
+fn t(name: &'static str, category: Category, seq_len: u32,
+     quant_sensitivity: f64, moe_affinity: f64, reasoning_weight: f64,
+     base_score_7b: f64, unit: &'static str) -> TaskSpec {
+    TaskSpec {
+        name,
+        category,
+        seq_len,
+        quant_sensitivity,
+        moe_affinity,
+        reasoning_weight,
+        multimodal: false,
+        base_score_7b,
+        unit,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ten_tasks_four_categories() {
+        let s = suite();
+        assert_eq!(s.len(), 10);
+        let cats: std::collections::BTreeSet<_> =
+            s.iter().map(|t| t.category).collect();
+        assert_eq!(cats.len(), 4);
+    }
+
+    #[test]
+    fn names_unique_across_suites() {
+        let all: Vec<_> = suite().into_iter().chain(vlm_suite()).collect();
+        let set: std::collections::BTreeSet<_> =
+            all.iter().map(|t| t.name).collect();
+        assert_eq!(set.len(), all.len());
+    }
+
+    #[test]
+    fn gsm8k_most_quant_sensitive() {
+        // §5.3: numerical reasoning most sensitive to quantization
+        let s = suite();
+        let gsm = s.iter().find(|t| t.name == "GSM8K").unwrap();
+        assert!(s.iter().all(|t| t.quant_sensitivity <= gsm.quant_sensitivity));
+    }
+
+    #[test]
+    fn humaneval_highest_moe_affinity() {
+        // §5.3: code generation benefits most from expert routing
+        let s = suite();
+        let he = s.iter().find(|t| t.name == "HumanEval").unwrap();
+        assert!(s.iter().all(|t| t.moe_affinity <= he.moe_affinity));
+    }
+
+    #[test]
+    fn long_context_tasks_have_long_sequences() {
+        for t in suite() {
+            if t.category == Category::LongContext {
+                assert!(t.seq_len >= 4096);
+            } else {
+                assert!(t.seq_len <= 2048);
+            }
+        }
+    }
+
+    #[test]
+    fn sensitivities_in_unit_interval() {
+        for t in suite().into_iter().chain(vlm_suite()) {
+            assert!((0.0..=1.0).contains(&t.quant_sensitivity));
+            assert!((0.0..=1.0).contains(&t.moe_affinity));
+            assert!((0.0..=1.0).contains(&t.reasoning_weight));
+        }
+    }
+
+    #[test]
+    fn vlm_suite_is_multimodal() {
+        assert_eq!(vlm_suite().len(), 3);
+        assert!(vlm_suite().iter().all(|t| t.multimodal));
+        assert!(suite().iter().all(|t| !t.multimodal));
+    }
+
+    #[test]
+    fn blended_task_is_average() {
+        let b = blended_task();
+        assert!(b.quant_sensitivity > 0.2 && b.quant_sensitivity < 0.8);
+        assert_eq!(b.base_score_7b, 68.5);
+    }
+
+    #[test]
+    fn by_name_finds_both_suites() {
+        assert!(by_name("GSM8K").is_some());
+        assert!(by_name("VQAv2").is_some());
+        assert!(by_name("nope").is_none());
+    }
+}

@@ -1,0 +1,83 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` runs each `benches/*.rs` binary with `harness = false`;
+//! those binaries use [`time_it`] / [`time_once`] for their measurements
+//! so output format and methodology are uniform.
+
+use std::time::Instant;
+
+/// Timing summary of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ms: f64,
+    pub median_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl Timing {
+    pub fn print(&self) {
+        println!(
+            "  {:<44} {:>10.3} ms/iter  (median {:.3}, min {:.3}, max \
+             {:.3}, n={})",
+            self.name, self.mean_ms, self.median_ms, self.min_ms,
+            self.max_ms, self.iters
+        );
+    }
+}
+
+/// Run `f` `iters` times after `warmup` discarded runs; report stats.
+pub fn time_it<F: FnMut()>(name: &str, warmup: usize, iters: usize,
+                           mut f: F) -> Timing {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let t = Timing {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_ms: super::stats::mean(&samples),
+        median_ms: super::stats::median(&samples),
+        min_ms: super::stats::min_max(&samples).0,
+        max_ms: super::stats::min_max(&samples).1,
+    };
+    t.print();
+    t
+}
+
+/// Time a single (expensive) run.
+pub fn time_once<T, F: FnOnce() -> T>(name: &str, f: F) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    let ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!("  {name:<44} {ms:>10.1} ms (single run)");
+    (out, ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_it_counts_iters() {
+        let mut n = 0;
+        let t = time_it("noop", 2, 5, || n += 1);
+        assert_eq!(n, 7);
+        assert_eq!(t.iters, 5);
+        assert!(t.min_ms <= t.median_ms && t.median_ms <= t.max_ms);
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, ms) = time_once("compute", || 6 * 7);
+        assert_eq!(v, 42);
+        assert!(ms >= 0.0);
+    }
+}

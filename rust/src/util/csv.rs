@@ -1,0 +1,110 @@
+//! CSV emission for figure data series.
+//!
+//! Every reproduced figure writes its raw series to
+//! `reports/figN_*.csv` so the plots can be regenerated with any
+//! external tool; this is the tiny writer behind that.
+
+use std::fmt::Write as _;
+use std::io;
+use std::path::Path;
+
+/// A CSV document under construction.
+#[derive(Debug, Default)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Csv {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "ragged CSV row");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Convenience: anything Display-able.
+    pub fn push_row(&mut self, cells: &[&dyn std::fmt::Display]) {
+        let v: Vec<String> = cells.iter().map(|c| c.to_string()).collect();
+        self.row(&v);
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", join_escaped(&self.header));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", join_escaped(row));
+        }
+        out
+    }
+
+    pub fn write_to(&self, path: &Path) -> io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
+fn join_escaped(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| escape(c))
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+fn escape(cell: &str) -> String {
+    if cell.contains(',') || cell.contains('"') || cell.contains('\n') {
+        format!("\"{}\"", cell.replace('"', "\"\""))
+    } else {
+        cell.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_header_and_rows() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.push_row(&[&1, &2.5]);
+        let s = c.render();
+        assert_eq!(s, "a,b\n1,2.5\n");
+    }
+
+    #[test]
+    fn escapes_commas_and_quotes() {
+        let mut c = Csv::new(&["x"]);
+        c.row(&["va,l\"ue".to_string()]);
+        assert_eq!(c.render(), "x\n\"va,l\"\"ue\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "ragged")]
+    fn rejects_ragged() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".to_string()]);
+    }
+
+    #[test]
+    fn writes_file() {
+        let dir = std::env::temp_dir().join("ae_llm_csv_test");
+        let path = dir.join("t.csv");
+        let mut c = Csv::new(&["a"]);
+        c.push_row(&[&42]);
+        c.write_to(&path).unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "a\n42\n");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,17 @@
+//! Utility substrate: deterministic RNG, statistics, table/CSV/JSON
+//! emission, and a mini property-testing harness.
+//!
+//! Exists because the offline build image vendors only the `xla` crate
+//! closure — `rand`, `serde`, `proptest` and `criterion` are all
+//! unavailable, so the pieces of them this project needs are implemented
+//! (and tested) here.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;

@@ -1,0 +1,192 @@
+//! ASCII table rendering for the paper-style reports.
+//!
+//! The report module prints every reproduced table in the same row/column
+//! structure the paper uses; this is the tiny layout engine behind that.
+
+/// Column alignment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple ASCII table builder.
+#[derive(Debug, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+    separators: Vec<usize>, // row indices after which a rule is drawn
+    title: Option<String>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: headers
+                .iter()
+                .enumerate()
+                .map(|(i, _)| if i == 0 { Align::Left } else { Align::Right })
+                .collect(),
+            rows: Vec::new(),
+            separators: Vec::new(),
+            title: None,
+        }
+    }
+
+    pub fn with_title(mut self, title: &str) -> Self {
+        self.title = Some(title.to_string());
+        self
+    }
+
+    pub fn align(mut self, col: usize, a: Align) -> Self {
+        if col < self.aligns.len() {
+            self.aligns[col] = a;
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.headers.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.headers.len()
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    /// Insert a horizontal rule after the last added row (section break).
+    pub fn rule(&mut self) {
+        self.separators.push(self.rows.len());
+    }
+
+    /// A full-width section label row.
+    pub fn section(&mut self, label: &str) {
+        self.rule();
+        let mut cells = vec![format!("— {label} —")];
+        cells.extend(std::iter::repeat_with(String::new)
+            .take(self.headers.len() - 1));
+        self.rows.push(cells);
+        self.rule();
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let total: usize = widths.iter().sum::<usize>() + 3 * (ncol - 1) + 4;
+        let mut out = String::new();
+        if let Some(t) = &self.title {
+            out.push_str(&format!("{t}\n"));
+        }
+        let rule: String = format!("+{}+\n", "-".repeat(total - 2));
+        out.push_str(&rule);
+        out.push_str(&self.fmt_row(&self.headers, &widths));
+        out.push_str(&rule);
+        for (i, row) in self.rows.iter().enumerate() {
+            if self.separators.contains(&i) {
+                out.push_str(&rule);
+            }
+            out.push_str(&self.fmt_row(row, &widths));
+        }
+        out.push_str(&rule);
+        out
+    }
+
+    fn fmt_row(&self, cells: &[String], widths: &[usize]) -> String {
+        let mut line = String::from("| ");
+        for (i, cell) in cells.iter().enumerate() {
+            let pad = widths[i].saturating_sub(cell.chars().count());
+            match self.aligns[i] {
+                Align::Left => {
+                    line.push_str(cell);
+                    line.push_str(&" ".repeat(pad));
+                }
+                Align::Right => {
+                    line.push_str(&" ".repeat(pad));
+                    line.push_str(cell);
+                }
+            }
+            line.push_str(if i + 1 == cells.len() { " |\n" } else { " | " });
+        }
+        line
+    }
+}
+
+/// Format a float with `d` decimals.
+pub fn fnum(x: f64, d: usize) -> String {
+    format!("{x:.d$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_headers_and_rows() {
+        let mut t = Table::new(&["name", "value"]);
+        t.row_strs(&["alpha", "1.0"]);
+        t.row_strs(&["beta", "2.5"]);
+        let s = t.render();
+        assert!(s.contains("name"));
+        assert!(s.contains("alpha"));
+        assert!(s.contains("2.5"));
+        assert_eq!(s.lines().filter(|l| l.starts_with('|')).count(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn column_widths_accommodate_long_cells() {
+        let mut t = Table::new(&["x"]);
+        t.row_strs(&["a-very-long-cell-value"]);
+        let s = t.render();
+        for line in s.lines().filter(|l| l.starts_with('|')) {
+            assert!(line.len() >= "a-very-long-cell-value".len());
+        }
+    }
+
+    #[test]
+    fn sections_add_rules() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row_strs(&["1", "2"]);
+        t.section("part two");
+        t.row_strs(&["3", "4"]);
+        let s = t.render();
+        assert!(s.contains("part two"));
+        assert!(s.lines().filter(|l| l.starts_with('+')).count() >= 4);
+    }
+
+    #[test]
+    fn fnum_formats() {
+        assert_eq!(fnum(1.23456, 2), "1.23");
+        assert_eq!(fnum(2.0, 1), "2.0");
+    }
+
+    #[test]
+    fn title_rendered() {
+        let t = Table::new(&["a"]).with_title("Table 9: test");
+        assert!(t.render().starts_with("Table 9: test\n"));
+    }
+}

@@ -1,0 +1,46 @@
+//! Integration test: the complete hardware-in-the-loop pipeline —
+//! Algorithm 1 driven by real PJRT measurements, then deployment.
+//! Mirrors examples/e2e_refinement.rs at a reduced budget.
+
+use ae_llm::config::Config;
+use ae_llm::coordinator::{optimize_with, AeLlmParams, Scenario};
+use ae_llm::runtime::{self, MeasuredEvaluator};
+use ae_llm::util::Rng;
+
+#[test]
+fn hardware_in_the_loop_algorithm1() {
+    let dir = runtime::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let mut engine = runtime::Engine::new(&dir).unwrap();
+    engine.load_all().unwrap();
+    let table = runtime::measure_all(&mut engine, 1, 3).unwrap();
+
+    let scenario = Scenario::for_model("LLaMA-2-7B").unwrap();
+    let evaluator = MeasuredEvaluator::new(table, scenario.testbed.clone());
+    let mut params = AeLlmParams::small();
+    params.initial_sample = 150;
+    let mut rng = Rng::new(42);
+    let out = optimize_with(
+        &scenario,
+        &params,
+        &mut |c: &Config, _r: &mut Rng| {
+            evaluator.objectives(c, &scenario.model, &scenario.task)
+        },
+        &mut rng,
+    );
+    // the search consumed real measurements
+    assert!(evaluator.calls.get() >= 150);
+    assert_eq!(out.testbed_evals, evaluator.calls.get());
+    // and produced a beneficial, deployable configuration
+    assert!(out.chosen_efficiency_score > 1.0,
+            "es={}", out.chosen_efficiency_score);
+    assert!(out.reference.default.accuracy - out.chosen_objectives.accuracy
+            < 2.5);
+    // the chosen config maps onto an artifact we can actually serve
+    let variant = runtime::MeasurementTable::variant_for(&out.chosen);
+    assert!(engine.manifest.get(&variant).is_some(),
+            "chosen config has no artifact: {variant}");
+}

@@ -1,0 +1,198 @@
+//! Integration tests: the full search stack (oracle → surrogates →
+//! NSGA-II → Algorithm 1) behaving as the paper claims.
+
+use ae_llm::config::{enumerate, validity, Config, Precision};
+use ae_llm::coordinator::{optimize, AeLlmParams, Scenario};
+use ae_llm::hardware;
+use ae_llm::metrics::{efficiency_score, Preferences, Reference};
+use ae_llm::oracle::Testbed;
+use ae_llm::report::{run_method, Budget, Method};
+use ae_llm::search::Baseline;
+use ae_llm::util::prop::{forall, Config as PropConfig};
+use ae_llm::util::Rng;
+
+/// Paper §4.2 headline: AE-LLM beats all baselines on efficiency score
+/// while staying within the accuracy band — across scales.
+#[test]
+fn ae_llm_wins_across_scales() {
+    let budget = Budget { quick: true };
+    for model in ["Phi-2", "LLaMA-2-7B", "Qwen-72B"] {
+        let scenario = Scenario::for_model(model).unwrap();
+        let mut scores = std::collections::BTreeMap::new();
+        for method in Method::paper_order() {
+            let r = run_method(method, &scenario, &budget, 11);
+            scores.insert(r.method, (r.efficiency_score,
+                                     r.objectives.accuracy));
+        }
+        let (ae, ae_acc) = scores["AdaptiveEfficientLLM"];
+        let (def, def_acc) = scores["Default"];
+        assert!((def - 1.0).abs() < 1e-9);
+        for (name, (score, _)) in &scores {
+            if *name != "AdaptiveEfficientLLM" {
+                assert!(ae > score - 0.15,
+                        "{model}: AE {ae:.2} vs {name} {score:.2}");
+            }
+        }
+        assert!(ae > 1.35, "{model}: AE score only {ae:.2}");
+        // §4.2: accuracy within ~1.2% of default
+        assert!(def_acc - ae_acc < 2.0,
+                "{model}: accuracy drop {:.2}", def_acc - ae_acc);
+    }
+}
+
+/// §4.2: single-stage optimization captures only part of the gains —
+/// cross-stage interactions matter.
+#[test]
+fn joint_beats_single_stage() {
+    let scenario = Scenario::for_model("LLaMA-2-7B").unwrap();
+    let budget = Budget { quick: true };
+    let single = run_method(Method::Baseline(Baseline::BestSingleStage),
+                            &scenario, &budget, 3);
+    let joint = run_method(Method::AeLlm, &scenario, &budget, 3);
+    assert!(joint.efficiency_score > single.efficiency_score,
+            "joint {:.2} <= single {:.2}", joint.efficiency_score,
+            single.efficiency_score);
+}
+
+/// §5.1 task-dependent patterns: quant-sensitive tasks get gentler
+/// quantization than insensitive ones.
+#[test]
+fn task_adaptive_quantization() {
+    let budget = Budget { quick: true };
+    let bits_for = |task: &str| -> f64 {
+        // average over seeds: chosen precision bits
+        let mut bits = Vec::new();
+        for seed in 0..3 {
+            let scenario = Scenario::for_model("LLaMA-2-7B")
+                .unwrap()
+                .with_task(task)
+                .unwrap();
+            let mut rng = Rng::new(seed);
+            let out = optimize(&scenario, &budget.ae_params(), &mut rng);
+            bits.push(out.chosen.inf.precision.bits() as f64);
+        }
+        ae_llm::util::stats::mean(&bits)
+    };
+    let gsm = bits_for("GSM8K"); // quant sensitivity 0.9
+    let hella = bits_for("HellaSwag"); // 0.25
+    assert!(gsm >= hella,
+            "GSM8K got fewer bits ({gsm}) than HellaSwag ({hella})");
+}
+
+/// §5.1 hardware-dependent patterns: memory-constrained platforms get
+/// aggressive quantization.
+#[test]
+fn hardware_adaptive_quantization() {
+    let budget = Budget { quick: true };
+    // 70B on RTX-4090 (24 GB): must quantize to fit at all.
+    let scenario = Scenario::for_model("LLaMA-2-70B")
+        .unwrap()
+        .with_platform(hardware::rtx4090())
+        .with_prefs(Preferences::memory_constrained());
+    let mut rng = Rng::new(5);
+    let out = optimize(&scenario, &budget.ae_params(), &mut rng);
+    // 70B fp16 = 138 GB; even int4 (~35GB) misses 24 GB. The search must
+    // not return anything infeasible-but-archived: chosen is just the
+    // best feasible... in this extreme case only the default fallback
+    // remains; accept either an error-free run with low memory or the
+    // default fallback.
+    assert!(validity::is_valid(&out.chosen));
+
+    // 7B on RTX-4090 with memory prefs: low-bit weights chosen.
+    let scenario = Scenario::for_model("LLaMA-2-7B")
+        .unwrap()
+        .with_platform(hardware::rtx4090())
+        .with_prefs(Preferences::memory_constrained());
+    let mut rng = Rng::new(6);
+    let out = optimize(&scenario, &budget.ae_params(), &mut rng);
+    assert!(out.chosen.inf.precision.bits() <= 8,
+            "expected low-bit weights, got {:?}", out.chosen.inf.precision);
+}
+
+/// The Pareto archive returned by Algorithm 1 is mutually non-dominated
+/// and spans a real trade-off range.
+#[test]
+fn pareto_front_properties() {
+    let scenario = Scenario::for_model("Mistral-7B").unwrap();
+    let mut rng = Rng::new(8);
+    let out = optimize(&scenario, &AeLlmParams::small(), &mut rng);
+    let entries = out.pareto.entries();
+    assert!(entries.len() >= 3);
+    for a in entries {
+        for b in entries {
+            assert!(!a.objectives.dominates(&b.objectives)
+                    || a.config == b.config);
+        }
+        assert!(validity::is_valid(&a.config));
+    }
+}
+
+/// Efficiency-score sanity across the whole zoo: the default config
+/// always scores 1.0 and random configs never dominate it by 10x.
+#[test]
+fn efficiency_score_bounded_over_zoo() {
+    let mut rng = Rng::new(9);
+    for m in ae_llm::models::zoo() {
+        let tb = Testbed::noiseless(hardware::tier_for_scale(m.scale));
+        let t = ae_llm::tasks::blended_task();
+        let reference = Reference {
+            default: tb.true_objectives(&Config::default_baseline(), &m, &t),
+        };
+        assert!((efficiency_score(&reference.default, &reference) - 1.0)
+            .abs() < 1e-9);
+        for _ in 0..50 {
+            let c = enumerate::sample(&mut rng);
+            let es = efficiency_score(&tb.true_objectives(&c, &m, &t),
+                                      &reference);
+            assert!((0.0..10.0).contains(&es), "{}: es={es}", m.name);
+        }
+    }
+}
+
+/// Property: the surrogate-guided search never returns a structurally
+/// invalid or platform-infeasible configuration, for any seed.
+#[test]
+fn chosen_configs_always_valid_property() {
+    forall(
+        PropConfig::default().cases(5),
+        |rng| rng.next_u64(),
+        |&seed| {
+            let scenario = Scenario::for_model("LLaMA-2-7B").unwrap();
+            let mut rng = Rng::new(seed);
+            let mut p = AeLlmParams::small();
+            p.initial_sample = 60; // keep the property fast
+            let out = optimize(&scenario, &p, &mut rng);
+            if !validity::is_valid(&out.chosen) {
+                return Err(format!("invalid chosen {}", out.chosen));
+            }
+            if out.chosen_objectives.memory_gb
+                > scenario.testbed.platform.mem_capacity_gb
+            {
+                return Err(format!(
+                    "infeasible chosen: {} GB",
+                    out.chosen_objectives.memory_gb
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Green-AI preferences steer towards low-energy configurations.
+#[test]
+fn preference_steering() {
+    let budget = Budget { quick: true };
+    let run_with = |prefs: Preferences, seed: u64| {
+        let scenario = Scenario::for_model("LLaMA-2-7B")
+            .unwrap()
+            .with_prefs(prefs);
+        let mut rng = Rng::new(seed);
+        optimize(&scenario, &budget.ae_params(), &mut rng)
+    };
+    let green = run_with(Preferences::green_ai(), 1);
+    let accuracy = run_with(Preferences::accuracy_critical(), 1);
+    assert!(green.chosen_objectives.energy_j
+            <= accuracy.chosen_objectives.energy_j + 1e-9);
+    assert!(accuracy.chosen_objectives.accuracy
+            >= green.chosen_objectives.accuracy - 0.3);
+}
