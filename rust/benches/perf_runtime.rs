@@ -1,43 +1,149 @@
-//! Microbenchmarks of the PJRT runtime hot path: artifact compile time,
-//! per-forward latency per variant family, and batched serving
-//! throughput.  These are the real-hardware numbers behind the
-//! measured-evaluator path (EXPERIMENTS.md §Perf L1/L2 notes).
+//! Microbenchmarks of the runtime/serving hot path.
+//!
+//! Two tiers:
+//! * **Always available** — the thread-pool fan-out itself and the
+//!   oracle measurement batch (the "hardware" evaluation stand-in),
+//!   sequential vs parallel.  This is what CI tracks on every PR.
+//! * **Artifacts present** — PJRT compile time, per-forward latency per
+//!   variant family, and batched serving throughput (sequential vs
+//!   concurrent batch execution).  Requires `make artifacts`.
+//!
+//! Emits `BENCH_runtime.json` (to `$AE_LLM_BENCH_OUT` or the current
+//! directory); `AE_LLM_BENCH_QUICK=1` / `--quick` shrinks workloads.
 
+use std::collections::BTreeMap;
+
+use ae_llm::config::{enumerate, Config};
+use ae_llm::oracle::Testbed;
 use ae_llm::runtime::{self, Request, Server};
-use ae_llm::util::bench::{time_it, time_once};
+use ae_llm::util::bench::{self, time_it, time_once};
+use ae_llm::util::json::Json;
+use ae_llm::util::pool::{self, Parallelism};
 use ae_llm::util::Rng;
 
 fn main() {
+    let quick = bench::quick();
+    println!("== perf_runtime: pool + PJRT hot path{} ==",
+             if quick { " (quick)" } else { "" });
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+
+    pool_section(&mut report, quick);
+    oracle_section(&mut report, quick);
+
     let dir = runtime::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("artifacts not built; run `make artifacts` first");
-        return;
+    if dir.join("manifest.json").exists() {
+        pjrt_section(&mut report);
+    } else {
+        println!("artifacts not built; skipping PJRT sections \
+                  (run `make artifacts` for the full bench)");
+        report.insert("pjrt".into(), Json::Str("skipped: no artifacts".into()));
     }
-    println!("== perf_runtime: PJRT hot path ==");
-    let mut engine = runtime::Engine::new(&dir).unwrap();
+
+    report.insert("bench".into(), Json::Str("perf_runtime".into()));
+    report.insert("quick".into(), Json::Bool(quick));
+    let out = std::env::var("AE_LLM_BENCH_OUT").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&out).join("BENCH_runtime.json");
+    match std::fs::write(&path, Json::Obj(report).dump()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
+/// Raw pool overhead + scaling on a synthetic CPU-bound workload.
+fn pool_section(report: &mut BTreeMap<String, Json>, quick: bool) {
+    let items: Vec<u64> = (0..if quick { 64 } else { 256 }).collect();
+    let work = |&x: &u64| -> f64 {
+        // ~50-100us of arithmetic per item
+        let mut acc = x as f64;
+        for k in 1..4000u64 {
+            acc += ((x + k) as f64).sqrt().sin();
+        }
+        acc
+    };
+    let go = |par: Parallelism| {
+        std::hint::black_box(pool::parallel_map(par, &items, work));
+    };
+    let seq = time_it("pool: synthetic batch (sequential)", 2, 20, || {
+        go(Parallelism::Sequential)
+    });
+    let par4 = time_it("pool: synthetic batch (4 threads)", 2, 20, || {
+        go(Parallelism::Threads(4))
+    });
+    let speedup = seq.mean_ms / par4.mean_ms.max(1e-9);
+    println!("  pool speedup at 4 threads: {speedup:.2}x [host cores: {}]",
+             std::thread::available_parallelism()
+                 .map(|n| n.get()).unwrap_or(1));
+    report.insert("pool sequential (ms)".into(), Json::Num(seq.mean_ms));
+    report.insert("pool parallel x4 (ms)".into(), Json::Num(par4.mean_ms));
+    report.insert("pool speedup x4".into(), Json::Num(speedup));
+}
+
+/// Oracle measurement fan-out: the Algorithm 1 line-5 batch.
+fn oracle_section(report: &mut BTreeMap<String, Json>, quick: bool) {
+    let m = ae_llm::models::by_name("LLaMA-2-7B").unwrap();
+    let t = ae_llm::tasks::blended_task();
+    let tb = Testbed::new(ae_llm::hardware::a100());
+    let mut rng = Rng::new(1);
+    let cs: Vec<Config> = (0..if quick { 200 } else { 1000 })
+        .map(|_| enumerate::sample(&mut rng))
+        .collect();
+    let go = |par: Parallelism| {
+        let mut r = Rng::new(2);
+        std::hint::black_box(tb.measure_batch(&cs, &m, &t, &mut r, par));
+    };
+    let seq = time_it("oracle measure_batch (sequential)", 2, 10, || {
+        go(Parallelism::Sequential)
+    });
+    let par4 = time_it("oracle measure_batch (4 threads)", 2, 10, || {
+        go(Parallelism::Threads(4))
+    });
+    report.insert("measure_batch sequential (ms)".into(),
+                  Json::Num(seq.mean_ms));
+    report.insert("measure_batch parallel x4 (ms)".into(),
+                  Json::Num(par4.mean_ms));
+    report.insert("measure_batch speedup x4".into(),
+                  Json::Num(seq.mean_ms / par4.mean_ms.max(1e-9)));
+}
+
+/// PJRT sections (only with built artifacts + a real xla backend).
+fn pjrt_section(report: &mut BTreeMap<String, Json>) {
+    let dir = runtime::artifacts_dir();
+    let mut engine = match runtime::Engine::new(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            println!("PJRT unavailable: {e}");
+            report.insert("pjrt".into(),
+                          Json::Str(format!("skipped: {e}")));
+            return;
+        }
+    };
 
     // -- compile times -----------------------------------------------------
     for name in ["gqa_fp16", "gqa_int8", "gqa_int4", "mla_int8",
                  "gqa_fp16_moe4"] {
-        let (_, _ms) = time_once(&format!("compile {name}"), || {
+        let (_, ms) = time_once(&format!("compile {name}"), || {
             engine.load(name).unwrap();
         });
+        report.insert(format!("compile {name} (ms)"), Json::Num(ms));
     }
 
     // -- forward latency per family -----------------------------------------
     for name in ["gqa_fp16", "gqa_int8", "gqa_int4", "mla_int8",
                  "gqa_fp16_moe4"] {
         let tokens = engine.make_tokens(name, 7).unwrap();
-        time_it(&format!("forward {name} (b=4, s=64)"), 2, 10, || {
+        let tm = time_it(&format!("forward {name} (b=4, s=64)"), 2, 10, || {
             std::hint::black_box(engine.forward(name, &tokens).unwrap());
         });
+        report.insert(format!("forward {name} (ms)"), Json::Num(tm.mean_ms));
     }
 
-    // -- serving throughput ---------------------------------------------------
+    // -- serving throughput: sequential vs concurrent batches ---------------
     engine.load("serve_gqa_int8").unwrap();
-    let mut rng = Rng::new(1);
-    let (report, _) = time_once("serve 64 requests (batch=8)", || {
-        let mut server = Server::new(&engine, "serve_gqa_int8").unwrap();
+    let serve = |par: Parallelism| {
+        let mut rng = Rng::new(1);
+        let mut server = Server::new(&engine, "serve_gqa_int8")
+            .unwrap()
+            .with_parallelism(par);
         for id in 0..64u64 {
             let tokens: Vec<i32> =
                 (0..100).map(|_| rng.below(256) as i32).collect();
@@ -45,10 +151,23 @@ fn main() {
         }
         server.drain().unwrap();
         server.report()
+    };
+    let (rep_seq, seq_ms) = time_once("serve 64 requests (sequential)", || {
+        serve(Parallelism::Sequential)
     });
+    let (rep_par, par_ms) = time_once("serve 64 requests (4 threads)", || {
+        serve(Parallelism::Threads(4))
+    });
+    let speedup = seq_ms / par_ms.max(1e-9);
     println!(
-        "  serving: p50 {:.1} ms | p95 {:.1} ms | {:.1} req/s | {:.0} tok/s",
-        report.p50_latency_ms, report.p95_latency_ms,
-        report.throughput_rps, report.tokens_per_s
+        "  serving: seq {:.1} req/s | par {:.1} req/s | {speedup:.2}x \
+         batch-level speedup\n  p50 {:.1} ms | p95 {:.1} ms (parallel)",
+        rep_seq.throughput_rps, rep_par.throughput_rps,
+        rep_par.p50_latency_ms, rep_par.p95_latency_ms
     );
+    report.insert("serve sequential rps".into(),
+                  Json::Num(rep_seq.throughput_rps));
+    report.insert("serve parallel x4 rps".into(),
+                  Json::Num(rep_par.throughput_rps));
+    report.insert("serve speedup x4".into(), Json::Num(speedup));
 }

@@ -1,19 +1,38 @@
 //! Microbenchmarks of the Layer-3 search hot paths (the §Perf targets
 //! of EXPERIMENTS.md): surrogate prediction, GBT training, NSGA-II
-//! machinery, oracle evaluation and the full Algorithm-1 run.
+//! machinery, oracle evaluation, the sequential-vs-parallel speedup of
+//! the thread-pool fan-out, and the full Algorithm-1 run.
+//!
+//! Emits `BENCH_search.json` (to `$AE_LLM_BENCH_OUT` or the current
+//! directory) so CI can track the perf trajectory as an artifact.
+//! `AE_LLM_BENCH_QUICK=1` / `--quick` switches to the reduced smoke
+//! workload.
+
+use std::collections::BTreeMap;
 
 use ae_llm::config::{encode, enumerate, Config};
 use ae_llm::coordinator::{optimize, AeLlmParams, Scenario};
 use ae_llm::models;
 use ae_llm::oracle::Testbed;
 use ae_llm::search::dominance;
+use ae_llm::search::nsga2::{self, Nsga2Params, Toggles};
 use ae_llm::surrogate::{collect_samples, GbtParams, SurrogateSet};
 use ae_llm::tasks;
-use ae_llm::util::bench::{time_it, time_once};
+use ae_llm::util::bench::{self, time_it, time_once};
+use ae_llm::util::json::Json;
+use ae_llm::util::pool::Parallelism;
 use ae_llm::util::Rng;
 
 fn main() {
-    println!("== perf_search: L3 hot paths ==");
+    let quick = bench::quick();
+    println!("== perf_search: L3 hot paths{} ==",
+             if quick { " (quick)" } else { "" });
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    let mut record = |report: &mut BTreeMap<String, Json>,
+                      t: &ae_llm::util::bench::Timing| {
+        report.insert(t.name.clone(), Json::Num(t.mean_ms));
+    };
+
     let m = models::by_name("LLaMA-2-7B").unwrap();
     let t = tasks::blended_task();
     let tb = Testbed::new(ae_llm::hardware::a100());
@@ -23,51 +42,128 @@ fn main() {
     let configs: Vec<Config> =
         (0..512).map(|_| enumerate::sample(&mut rng)).collect();
     let mut i = 0;
-    time_it("oracle true_objectives (per config)", 100, 2000, || {
+    let tm = time_it("oracle true_objectives (per config)", 100, 2000, || {
         let c = &configs[i % configs.len()];
         std::hint::black_box(tb.true_objectives(c, &m, &t));
         i += 1;
     });
+    record(&mut report, &tm);
 
     // -- encoding ---------------------------------------------------------
     let mut i = 0;
-    time_it("feature encode (per config)", 100, 5000, || {
+    let tm = time_it("feature encode (per config)", 100, 5000, || {
         let c = &configs[i % configs.len()];
         std::hint::black_box(encode::encode(c, &m, &t));
         i += 1;
     });
+    record(&mut report, &tm);
 
     // -- surrogate fit + predict -------------------------------------------
     let samples = collect_samples(&tb, &m, &t, 300, &mut rng);
-    let (sur, _) = time_once("surrogate fit (300 samples, fast params)", || {
-        SurrogateSet::fit(samples.clone(), GbtParams::fast(), &mut Rng::new(2))
-    });
+    let fit_params = |par| GbtParams { parallelism: par, ..GbtParams::fast() };
+    let (_, fit_seq_ms) =
+        time_once("surrogate fit (300 samples, sequential)", || {
+            SurrogateSet::fit(samples.clone(),
+                              fit_params(Parallelism::Sequential),
+                              &mut Rng::new(2))
+        });
+    let (sur, fit_par_ms) =
+        time_once("surrogate fit (300 samples, all cores)", || {
+            SurrogateSet::fit(samples.clone(), fit_params(Parallelism::Auto),
+                              &mut Rng::new(2))
+        });
+    report.insert("surrogate fit sequential (ms)".into(),
+                  Json::Num(fit_seq_ms));
+    report.insert("surrogate fit parallel (ms)".into(),
+                  Json::Num(fit_par_ms));
     let mut i = 0;
-    time_it("surrogate predict (per config)", 200, 5000, || {
+    let tm = time_it("surrogate predict (per config)", 200, 5000, || {
         let c = &configs[i % configs.len()];
         std::hint::black_box(sur.predict(c, &m, &t));
         i += 1;
     });
+    record(&mut report, &tm);
 
     // -- dominance machinery ------------------------------------------------
     let mut rng2 = Rng::new(3);
     let objs: Vec<[f64; 4]> = (0..200)
         .map(|_| [rng2.f64(), rng2.f64(), rng2.f64(), rng2.f64()])
         .collect();
-    time_it("non-dominated sort (N=200, M=4)", 20, 200, || {
+    let tm = time_it("non-dominated sort (N=200, M=4)", 20, 200, || {
         std::hint::black_box(dominance::non_dominated_sort(&objs));
     });
+    record(&mut report, &tm);
     let front: Vec<usize> = (0..200).collect();
-    time_it("crowding distance (N=200)", 20, 500, || {
+    let tm = time_it("crowding distance (N=200)", 20, 500, || {
         std::hint::black_box(dominance::crowding_distance(&objs, &front));
     });
+    record(&mut report, &tm);
+
+    // -- sequential vs parallel NSGA-II -------------------------------------
+    // Surrogate-evaluated NSGA-II, the phase-2 hot path.  Evolutionary
+    // operators keep the RNG on the calling thread, so the front must be
+    // bit-identical at every parallelism level while evaluation fans out.
+    let nsga_run = |par: Parallelism| {
+        let params = Nsga2Params {
+            population: 96,
+            generations: if quick { 5 } else { 20 },
+            parallelism: par,
+            ..Nsga2Params::default()
+        };
+        let evaluate = |c: &Config| sur.predict(c, &m, &t).objectives;
+        let mut rng = Rng::new(9);
+        nsga2::run_par(&params, &Toggles::default(), &evaluate, |_| true,
+                       &mut rng)
+    };
+    let (res_seq, seq_ms) =
+        time_once("NSGA-II, surrogate evals (sequential)", || {
+            nsga_run(Parallelism::Sequential)
+        });
+    let (res_par, par_ms) =
+        time_once("NSGA-II, surrogate evals (4 threads)", || {
+            nsga_run(Parallelism::Threads(4))
+        });
+    let front_of = |r: &nsga2::SearchResult| -> Vec<Config> {
+        r.archive.entries().iter().map(|e| e.config).collect()
+    };
+    let identical = front_of(&res_seq) == front_of(&res_par);
+    assert!(identical,
+            "parallel NSGA-II must reproduce the sequential Pareto front");
+    let speedup = seq_ms / par_ms.max(1e-9);
+    println!(
+        "  NSGA-II speedup at Parallelism=4: {speedup:.2}x \
+         ({seq_ms:.0} ms -> {par_ms:.0} ms), front identical: {identical} \
+         [host cores: {}]",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    );
+    report.insert("nsga2 sequential (ms)".into(), Json::Num(seq_ms));
+    report.insert("nsga2 parallel x4 (ms)".into(), Json::Num(par_ms));
+    report.insert("nsga2 speedup x4".into(), Json::Num(speedup));
+    report.insert("nsga2 front identical".into(), Json::Bool(identical));
 
     // -- full runs -----------------------------------------------------------
     let scenario = Scenario::for_model("LLaMA-2-7B").unwrap();
-    time_once("Algorithm 1 (small params)", || {
+    let (_, small_ms) = time_once("Algorithm 1 (small params)", || {
         optimize(&scenario, &AeLlmParams::small(), &mut Rng::new(4))
     });
-    time_once("Algorithm 1 (paper params)", || {
-        optimize(&scenario, &AeLlmParams::default(), &mut Rng::new(5))
-    });
+    report.insert("algorithm1 small (ms)".into(), Json::Num(small_ms));
+    if !quick {
+        let (_, paper_ms) = time_once("Algorithm 1 (paper params)", || {
+            optimize(&scenario, &AeLlmParams::default(), &mut Rng::new(5))
+        });
+        report.insert("algorithm1 paper (ms)".into(), Json::Num(paper_ms));
+    }
+
+    write_report(report, quick);
+}
+
+fn write_report(mut report: BTreeMap<String, Json>, quick: bool) {
+    report.insert("bench".into(), Json::Str("perf_search".into()));
+    report.insert("quick".into(), Json::Bool(quick));
+    let dir = std::env::var("AE_LLM_BENCH_OUT").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&dir).join("BENCH_search.json");
+    match std::fs::write(&path, Json::Obj(report).dump()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
 }

@@ -25,6 +25,7 @@ use crate::oracle::Objectives;
 use crate::search::archive::ParetoArchive;
 use crate::search::nsga2::{self, Nsga2Params, Toggles};
 use crate::surrogate::{GbtParams, Sample, SurrogateSet};
+use crate::util::pool::{self, Parallelism};
 use crate::util::Rng;
 
 use super::scenario::{Scenario, SpaceMask};
@@ -48,6 +49,14 @@ pub struct AeLlmParams {
     pub use_surrogates: bool,
     /// Restriction of the configuration space (Table 3 ablations).
     pub mask: SpaceMask,
+    /// Worker count for every fan-out the coordinator drives: the
+    /// initial-sample measurement batch, surrogate (re)fits, NSGA-II
+    /// population evaluation, candidate-uncertainty scoring, and the
+    /// per-iteration measurement batches.  Overrides the `parallelism`
+    /// fields of `nsga`/`gbt` for runs started through [`optimize`] /
+    /// [`optimize_with`].  Defaults to all available cores; results are
+    /// identical at every level (see `util::pool`).
+    pub parallelism: Parallelism,
 }
 
 impl Default for AeLlmParams {
@@ -61,6 +70,7 @@ impl Default for AeLlmParams {
             toggles: Toggles::default(),
             use_surrogates: true,
             mask: SpaceMask::default(),
+            parallelism: Parallelism::Auto,
         }
     }
 }
@@ -96,14 +106,16 @@ pub struct Outcome {
     pub surrogate_evals: usize,
 }
 
-/// Run Algorithm 1 on a scenario against its testbed oracle.
+/// Run Algorithm 1 on a scenario against its testbed oracle.  Testbed
+/// measurement batches fan out over `params.parallelism` workers.
 pub fn optimize(scenario: &Scenario, params: &AeLlmParams,
                 rng: &mut Rng) -> Outcome {
     let mut measure_count = 0usize;
     let s = scenario.clone();
-    let mut measure = |c: &Config, rng: &mut Rng| {
-        measure_count += 1;
-        s.testbed.measure(c, &s.model, &s.task, rng)
+    let par = params.parallelism;
+    let mut measure = |cs: &[Config], rng: &mut Rng| {
+        measure_count += cs.len();
+        s.testbed.measure_batch(cs, &s.model, &s.task, rng, par)
     };
     let out = optimize_with(scenario, params, &mut measure, rng);
     debug_assert_eq!(out.testbed_evals, measure_count);
@@ -112,6 +124,12 @@ pub fn optimize(scenario: &Scenario, params: &AeLlmParams,
 
 /// Run Algorithm 1 with an arbitrary "actual hardware" evaluator —
 /// this is the entry point the PJRT-backed end-to-end driver uses.
+///
+/// `measure` receives a whole batch of configurations (Algorithm 1
+/// line 5 is a fan-out point) and must return exactly one `Objectives`
+/// per input, in input order.  Sequential evaluators just map over the
+/// slice; parallel ones are free to fan out as long as they keep the
+/// order.
 pub fn optimize_with<F>(
     scenario: &Scenario,
     params: &AeLlmParams,
@@ -119,7 +137,7 @@ pub fn optimize_with<F>(
     rng: &mut Rng,
 ) -> Outcome
 where
-    F: FnMut(&Config, &mut Rng) -> Objectives,
+    F: FnMut(&[Config], &mut Rng) -> Vec<Objectives>,
 {
     let m = &scenario.model;
     let t = &scenario.task;
@@ -140,22 +158,31 @@ where
         tb.power_w(c, m, t) <= tb.platform.power_budget_w
     };
 
+    // The coordinator-level knob governs every nested fan-out.
+    let par = params.parallelism;
+    let gbt_params = GbtParams { parallelism: par, ..params.gbt };
+    let nsga_params = Nsga2Params { parallelism: par, ..params.nsga };
+
     // ---- line 1: initial sample + surrogate training --------------------
     let mut surrogates: Option<SurrogateSet> = if params.use_surrogates {
-        let configs =
-            crate::config::enumerate::sample_distinct(rng, params.initial_sample);
+        let configs: Vec<Config> =
+            crate::config::enumerate::sample_distinct(rng, params.initial_sample)
+                .into_iter()
+                .map(|c| mask.clamp(c))
+                .collect();
+        testbed_evals += configs.len();
+        let objectives = measure(&configs, rng);
+        assert_eq!(objectives.len(), configs.len(),
+                   "measure() must return one Objectives per config");
         let samples: Vec<Sample> = configs
-            .into_iter()
-            .map(|c| {
-                let c = mask.clamp(c);
-                testbed_evals += 1;
-                Sample {
-                    features: encode::encode(&c, m, t),
-                    objectives: measure(&c, rng),
-                }
+            .iter()
+            .zip(objectives)
+            .map(|(c, o)| Sample {
+                features: encode::encode(c, m, t),
+                objectives: o,
             })
             .collect();
-        Some(SurrogateSet::fit(samples, params.gbt, rng))
+        Some(SurrogateSet::fit(samples, gbt_params, rng))
     } else {
         None
     };
@@ -181,27 +208,28 @@ where
                     // §Perf: populations revisit configurations heavily
                     // (tournament winners, crossover clones), so predict
                     // through a memo table — ~3x fewer GBT traversals,
-                    // see EXPERIMENTS.md §Perf.
-                    let cache: std::cell::RefCell<
+                    // see EXPERIMENTS.md §Perf.  The table is a Mutex'd
+                    // map so the prediction fan-out can share it; the
+                    // cached value is a pure function of the config, so
+                    // racing fills are benign and results stay
+                    // deterministic at any parallelism level.
+                    let cache: std::sync::Mutex<
                         std::collections::BTreeMap<Config, Objectives>,
                     > = Default::default();
-                    let mut eval_count = 0usize;
                     let cached_predict = |c: &Config| -> Objectives {
                         let c = mask_ref.clamp(*c);
-                        if let Some(o) = cache.borrow().get(&c) {
+                        if let Some(o) = cache.lock().unwrap().get(&c) {
                             return *o;
                         }
                         let o = sur.predict(&c, m, t).objectives;
-                        cache.borrow_mut().insert(c, o);
+                        cache.lock().unwrap().insert(c, o);
                         o
                     };
-                    let res = nsga2::run(
-                        &params.nsga,
+                    let evaluate = |c: &Config| cached_predict(c);
+                    let res = nsga2::run_par(
+                        &nsga_params,
                         &params.toggles,
-                        |c| {
-                            eval_count += 1;
-                            cached_predict(c)
-                        },
+                        &evaluate,
                         |c| {
                             let mem = cached_predict(c).memory_gb;
                             mem <= tb.platform.mem_capacity_gb
@@ -209,16 +237,20 @@ where
                         },
                         rng,
                     );
-                    surrogate_evals += eval_count;
+                    surrogate_evals += res.evaluations;
                     res.archive
                 }
                 None => {
                     // Ablation: NSGA-II evaluates the testbed directly
                     // with a tightly capped budget (random-search tier).
+                    // The evaluator threads the measurement RNG, so this
+                    // path stays on the sequential `run` entry point.
                     let budget_params = Nsga2Params {
                         population: params.nsga.population.min(24),
                         generations: params.nsga.generations.min(8),
-                        ..params.nsga
+                        // nsga_params so the coordinator-level
+                        // parallelism override reaches archive batching
+                        ..nsga_params
                     };
                     // separate measurement noise stream: `rng` drives the
                     // evolutionary operators inside nsga2::run
@@ -228,7 +260,7 @@ where
                         &params.toggles,
                         |c| {
                             testbed_evals += 1;
-                            measure(&mask_ref.clamp(*c), &mut noise_rng)
+                            measure(&[mask_ref.clamp(*c)], &mut noise_rng)[0]
                         },
                         |c| {
                             let c = mask_ref.clamp(*c);
@@ -253,19 +285,29 @@ where
         candidates.sort();
         candidates.dedup();
         if let Some(sur) = &surrogates {
-            candidates.sort_by(|a, b| {
-                let ua = sur.predict(a, m, t).total_relative_uncertainty();
-                let ub = sur.predict(b, m, t).total_relative_uncertainty();
-                ub.partial_cmp(&ua).unwrap()
+            // Uncertainty scoring fans out; the sort itself runs on
+            // precomputed keys so its comparisons stay O(1) and the
+            // ordering is deterministic.
+            let uncertainty: Vec<f64> = pool::parallel_map(
+                par,
+                &candidates,
+                |c| sur.predict(c, m, t).total_relative_uncertainty(),
+            );
+            let mut order: Vec<usize> = (0..candidates.len()).collect();
+            order.sort_by(|&a, &b| {
+                uncertainty[b].partial_cmp(&uncertainty[a]).unwrap()
             });
+            candidates = order.into_iter().map(|i| candidates[i]).collect();
         }
         candidates.truncate(params.evals_per_iter.max(1));
 
         // ---- lines 5+6: measure on hardware, update surrogates ----------
+        testbed_evals += candidates.len();
+        let objectives = measure(&candidates, rng);
+        assert_eq!(objectives.len(), candidates.len(),
+                   "measure() must return one Objectives per config");
         let mut fresh: Vec<Sample> = Vec::new();
-        for c in candidates {
-            testbed_evals += 1;
-            let o = measure(&c, rng);
+        for (c, o) in candidates.into_iter().zip(objectives) {
             measured_configs.insert(c);
             if tb.platform.feasible(o.memory_gb, tb.power_w(&c, m, t)) {
                 measured.insert(c, o);
@@ -285,7 +327,7 @@ where
     // Always include the default as a fallback so `chosen` exists.
     {
         testbed_evals += 1;
-        let o = measure(&mask.clamp(default_cfg), rng);
+        let o = measure(&[mask.clamp(default_cfg)], rng)[0];
         measured.insert(mask.clamp(default_cfg), o);
     }
 
@@ -417,5 +459,26 @@ mod tests {
         let o2 = optimize(&s, &AeLlmParams::small(), &mut r2);
         assert_eq!(o1.chosen, o2.chosen);
         assert_eq!(o1.testbed_evals, o2.testbed_evals);
+    }
+
+    #[test]
+    fn outcome_invariant_under_parallelism() {
+        let s = scenario();
+        let go = |par: Parallelism| {
+            let p = AeLlmParams { parallelism: par, ..AeLlmParams::small() };
+            let mut rng = Rng::new(13);
+            let out = optimize(&s, &p, &mut rng);
+            let mut front: Vec<_> = out
+                .pareto
+                .entries()
+                .iter()
+                .map(|e| (e.config, format!("{:?}", e.objectives)))
+                .collect();
+            front.sort();
+            (out.chosen, out.testbed_evals, out.surrogate_evals, front)
+        };
+        let seq = go(Parallelism::Sequential);
+        let par4 = go(Parallelism::Threads(4));
+        assert_eq!(seq, par4, "coordinator must be parallelism-invariant");
     }
 }

@@ -246,8 +246,14 @@ fn cmd_e2e(opts: &Opts, seed: u64) -> anyhow::Result<()> {
     let out = optimize_with(
         &scenario,
         &params,
-        &mut |c: &Config, _rng: &mut Rng| {
-            evaluator.objectives(c, &scenario.model, &scenario.task)
+        // Batch evaluator: the measured evaluator keeps a sequential
+        // call counter (Cell), so it maps the batch on one thread.
+        &mut |cs: &[Config], _rng: &mut Rng| {
+            cs.iter()
+                .map(|c| {
+                    evaluator.objectives(c, &scenario.model, &scenario.task)
+                })
+                .collect()
         },
         &mut rng,
     );

@@ -16,6 +16,7 @@ use crate::config::Config;
 use crate::hardware::{self, Platform};
 use crate::models::ModelSpec;
 use crate::tasks::TaskSpec;
+use crate::util::pool::{self, Parallelism};
 use crate::util::Rng;
 
 /// The four performance objectives of Definition 2.
@@ -156,6 +157,34 @@ impl Testbed {
         }
     }
 
+    /// Ground-truth objectives for a whole batch, fanned across the
+    /// thread pool; results are in submission order and identical to
+    /// calling [`true_objectives`](Self::true_objectives) per config.
+    pub fn true_objectives_batch(&self, cs: &[Config], m: &ModelSpec,
+                                 t: &TaskSpec,
+                                 par: Parallelism) -> Vec<Objectives> {
+        pool::parallel_map(par, cs, |c| self.true_objectives(c, m, t))
+    }
+
+    /// Noisy measurements for a whole batch — the parallel form of the
+    /// expensive Algorithm 1 line-5 call.
+    ///
+    /// Determinism contract: one child RNG is split off `rng`
+    /// *sequentially per config* before the fan-out, so the same seed
+    /// yields the same measurements at every parallelism level (the
+    /// draws differ from what a single shared stream would produce, but
+    /// they follow the same noise distribution).
+    pub fn measure_batch(&self, cs: &[Config], m: &ModelSpec, t: &TaskSpec,
+                         rng: &mut Rng,
+                         par: Parallelism) -> Vec<Objectives> {
+        let jobs: Vec<(Config, Rng)> =
+            cs.iter().map(|c| (*c, rng.split())).collect();
+        pool::parallel_map(par, &jobs, |(c, seed)| {
+            let mut noise = seed.clone();
+            self.measure(c, m, t, &mut noise)
+        })
+    }
+
     /// Sustained power draw (for the Definition 3 power constraint).
     pub fn power_w(&self, c: &Config, m: &ModelSpec, t: &TaskSpec) -> f64 {
         cost::power_w(c, m, t, &self.platform)
@@ -244,6 +273,30 @@ mod tests {
         let c = Config::default_baseline();
         assert_eq!(tb.measure(&c, &m, &t, &mut rng),
                    tb.true_objectives(&c, &m, &t));
+    }
+
+    #[test]
+    fn batch_eval_matches_scalar_and_is_parallelism_invariant() {
+        let (tb, m, t) = setup();
+        let mut rng = Rng::new(21);
+        let cs: Vec<Config> =
+            (0..64).map(|_| enumerate::sample(&mut rng)).collect();
+        let batch = tb.true_objectives_batch(
+            &cs, &m, &t, crate::util::Parallelism::Threads(4));
+        for (c, o) in cs.iter().zip(&batch) {
+            assert_eq!(*o, tb.true_objectives(c, &m, &t));
+        }
+        // noisy batch: same seed + any parallelism -> same measurements
+        let tb_noisy = Testbed::new(hardware::a100());
+        let go = |par| {
+            let mut r = Rng::new(5);
+            tb_noisy.measure_batch(&cs, &m, &t, &mut r, par)
+        };
+        let a = go(crate::util::Parallelism::Sequential);
+        let b = go(crate::util::Parallelism::Threads(4));
+        let c = go(crate::util::Parallelism::Threads(8));
+        assert_eq!(a, b);
+        assert_eq!(b, c);
     }
 
     #[test]

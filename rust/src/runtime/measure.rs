@@ -21,6 +21,7 @@ use crate::config::{Attention, Config, Precision};
 use crate::models::ModelSpec;
 use crate::oracle::{Objectives, Testbed};
 use crate::tasks::TaskSpec;
+use crate::util::pool::{self, Parallelism};
 use crate::util::stats;
 
 use super::engine::Engine;
@@ -46,30 +47,60 @@ pub struct MeasurementTable {
 
 /// Execute every measurement variant `repeats` times (after `warmup`
 /// discarded runs) and record wall-clock + fidelity.
+///
+/// Sequential wrapper around [`measure_all_with`]: variants run one at
+/// a time so the wall-clock numbers are contention-free.  Use the
+/// parallel form when you are measuring throughput (or only care about
+/// fidelity), not single-stream latency.
 pub fn measure_all(engine: &mut Engine, warmup: usize, repeats: usize)
                    -> anyhow::Result<MeasurementTable> {
+    measure_all_with(engine, warmup, repeats, Parallelism::Sequential)
+}
+
+/// [`measure_all`] with the per-variant measurement loops fanned across
+/// `par` workers.
+///
+/// Compilation stays sequential (`Engine::load` needs `&mut`), then the
+/// forward loops — which only need `&Engine` — run concurrently, one
+/// variant per worker, and the table is assembled in variant order.
+/// Concurrent variants contend for cores, so per-forward wall-clock is
+/// an *upper bound* under this mode; the CV column records the spread.
+pub fn measure_all_with(engine: &mut Engine, warmup: usize, repeats: usize,
+                        par: Parallelism)
+                        -> anyhow::Result<MeasurementTable> {
     let names: Vec<String> = engine
         .manifest
         .measurement_variants()
         .iter()
         .map(|v| v.name.clone())
         .collect();
-    // Cache baseline logits per family.
-    let mut logits_cache: BTreeMap<String, Vec<f32>> = BTreeMap::new();
-    let mut rows = BTreeMap::new();
     for name in &names {
         engine.load(name)?;
-        let tokens = engine.make_tokens(name, 42)?;
-        for _ in 0..warmup {
-            engine.forward(name, &tokens)?;
-        }
-        let mut walls = Vec::with_capacity(repeats);
-        let mut last_logits = Vec::new();
-        for _ in 0..repeats.max(1) {
-            let f = engine.forward(name, &tokens)?;
-            walls.push(f.wall_ms);
-            last_logits = f.logits;
-        }
+    }
+
+    // Measurement loops: read-only on the engine, one variant per job.
+    let engine_ref: &Engine = engine;
+    let measured: Vec<anyhow::Result<(Vec<f64>, Vec<f32>)>> =
+        pool::parallel_map(par, &names, |name| {
+            let tokens = engine_ref.make_tokens(name, 42)?;
+            for _ in 0..warmup {
+                engine_ref.forward(name, &tokens)?;
+            }
+            let mut walls = Vec::with_capacity(repeats);
+            let mut last_logits = Vec::new();
+            for _ in 0..repeats.max(1) {
+                let f = engine_ref.forward(name, &tokens)?;
+                walls.push(f.wall_ms);
+                last_logits = f.logits;
+            }
+            Ok((walls, last_logits))
+        });
+
+    // Ordered reduce into the table (+ logits cache for fidelity).
+    let mut logits_cache: BTreeMap<String, Vec<f32>> = BTreeMap::new();
+    let mut rows = BTreeMap::new();
+    for (name, result) in names.iter().zip(measured) {
+        let (walls, last_logits) = result?;
         logits_cache.insert(name.clone(), last_logits);
         let v = engine.manifest.get(name).unwrap();
         rows.insert(
@@ -84,28 +115,33 @@ pub fn measure_all(engine: &mut Engine, warmup: usize, repeats: usize)
             },
         );
     }
-    // Fidelity vs baselines (baselines measured above too).
+
+    // Fidelity vs baselines (baselines measured above too).  Pure
+    // reductions over cached logits — fan out, merge in name order.
     let names_in_table: Vec<String> = rows.keys().cloned().collect();
-    for name in names_in_table {
-        let baseline = rows[&name].baseline.clone();
-        if baseline == name {
-            continue;
+    let fidelity: Vec<Option<f64>> =
+        pool::parallel_map(par, &names_in_table, |name| {
+            let baseline = &rows[name].baseline;
+            if baseline == name {
+                return None;
+            }
+            let (a, b) =
+                (logits_cache.get(name)?, logits_cache.get(baseline)?);
+            let mae: f64 = a
+                .iter()
+                .zip(b)
+                .map(|(x, y)| (x - y).abs() as f64)
+                .sum::<f64>()
+                / a.len() as f64;
+            let scale: f64 =
+                b.iter().map(|x| x.abs() as f64).sum::<f64>()
+                    / b.len() as f64;
+            Some(if scale > 0.0 { mae / scale } else { mae })
+        });
+    for (name, fid) in names_in_table.iter().zip(fidelity) {
+        if let Some(fid) = fid {
+            rows.get_mut(name).unwrap().fidelity_err = fid;
         }
-        let (Some(a), Some(b)) =
-            (logits_cache.get(&name), logits_cache.get(&baseline))
-        else {
-            continue;
-        };
-        let mae: f64 = a
-            .iter()
-            .zip(b)
-            .map(|(x, y)| (x - y).abs() as f64)
-            .sum::<f64>()
-            / a.len() as f64;
-        let scale: f64 =
-            b.iter().map(|x| x.abs() as f64).sum::<f64>() / b.len() as f64;
-        rows.get_mut(&name).unwrap().fidelity_err =
-            if scale > 0.0 { mae / scale } else { mae };
     }
     Ok(MeasurementTable { rows })
 }

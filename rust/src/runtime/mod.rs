@@ -14,5 +14,6 @@ pub mod serve;
 
 pub use engine::{Engine, Forward};
 pub use manifest::{artifacts_dir, Manifest, Variant};
-pub use measure::{measure_all, MeasuredEvaluator, MeasurementTable};
+pub use measure::{measure_all, measure_all_with, MeasuredEvaluator,
+                  MeasurementTable};
 pub use serve::{Request, ServeReport, Server};

@@ -8,6 +8,7 @@
 use std::time::Instant;
 
 use super::engine::Engine;
+use crate::util::pool::{self, Parallelism};
 use crate::util::stats;
 
 /// One inference request: a prompt of token ids (padded/truncated to
@@ -53,6 +54,12 @@ pub struct Server<'a> {
     completions: Vec<Completion>,
     batch_exec_ms: Vec<f64>,
     started: Option<Instant>,
+    /// Worker count for executing independent batches concurrently in
+    /// [`drain`](Self::drain).  PJRT executables are thread-safe for
+    /// concurrent `execute` calls, so full batches of *different*
+    /// requests can run side by side.  Batch indices and the completion
+    /// log always follow submission order regardless of this setting.
+    parallelism: Parallelism,
 }
 
 impl<'a> Server<'a> {
@@ -71,7 +78,15 @@ impl<'a> Server<'a> {
             completions: Vec::new(),
             batch_exec_ms: Vec::new(),
             started: None,
+            parallelism: Parallelism::Auto,
         })
+    }
+
+    /// Override the batch-execution parallelism (e.g. `Sequential` for
+    /// clean single-stream latency measurements).
+    pub fn with_parallelism(mut self, par: Parallelism) -> Self {
+        self.parallelism = par;
+        self
     }
 
     pub fn batch_size(&self) -> usize {
@@ -96,17 +111,64 @@ impl<'a> Server<'a> {
     /// Run batches until the queue is drained.  Short final batches are
     /// padded with zero-prompts (the static-shape analogue of vLLM-style
     /// bucket padding).
+    ///
+    /// Independent batches execute concurrently on up to
+    /// `self.parallelism` workers; completions are merged back in
+    /// submission order (the pool's ordered reduce), so batch indices,
+    /// completion order and next-token results are identical at every
+    /// parallelism level.
     pub fn drain(&mut self) -> anyhow::Result<()> {
+        // Group the queue into fixed-size batches, in submission order.
+        let mut groups: Vec<Vec<(Request, Instant)>> = Vec::new();
         while !self.queue.is_empty() {
             let take = self.queue.len().min(self.batch);
-            let group: Vec<(Request, Instant)> =
-                self.queue.drain(..take).collect();
-            let mut flat: Vec<i32> = Vec::with_capacity(self.batch * self.seq);
-            for (r, _) in &group {
-                flat.extend_from_slice(&r.tokens);
-            }
-            flat.resize(self.batch * self.seq, 0); // padding rows
-            let fwd = self.engine.forward(&self.variant, &flat)?;
+            groups.push(self.queue.drain(..take).collect());
+        }
+        // Flatten each group into its padded token buffer.
+        let flats: Vec<Vec<i32>> = groups
+            .iter()
+            .map(|group| {
+                let mut flat: Vec<i32> =
+                    Vec::with_capacity(self.batch * self.seq);
+                for (r, _) in group {
+                    flat.extend_from_slice(&r.tokens);
+                }
+                flat.resize(self.batch * self.seq, 0); // padding rows
+                flat
+            })
+            .collect();
+        // Execute independent batches concurrently.
+        let engine = self.engine;
+        let variant = self.variant.clone();
+        let results: Vec<anyhow::Result<(super::engine::Forward, Instant)>> =
+            pool::parallel_map(self.parallelism, &flats, |flat| {
+                let fwd = engine.forward(&variant, flat)?;
+                Ok((fwd, Instant::now()))
+            });
+        // Ordered reduce: record batches and completions in submission
+        // order whatever order the workers finished in.  On the first
+        // failed batch, every not-yet-recorded request — the failed
+        // batch *included* — goes back on the queue, so no request is
+        // ever silently lost and a retry of drain() can pick them up.
+        // (This is stricter than the old incremental loop, which
+        // dropped the in-flight group on error.)  Callers retrying
+        // drain() in a loop must treat a repeated error as persistent
+        // rather than spinning on the same failing batch.
+        let mut groups_iter = groups.into_iter();
+        for result in results {
+            let group = groups_iter.next().expect("one group per result");
+            let (fwd, done) = match result {
+                Ok(ok) => ok,
+                Err(e) => {
+                    let mut requeue: Vec<(Request, Instant)> = group;
+                    for g in groups_iter.by_ref() {
+                        requeue.extend(g);
+                    }
+                    requeue.append(&mut self.queue);
+                    self.queue = requeue;
+                    return Err(e);
+                }
+            };
             self.batch_exec_ms.push(fwd.wall_ms);
             let batch_index = self.batch_exec_ms.len() - 1;
             for (row, (r, submitted)) in group.into_iter().enumerate() {
@@ -122,7 +184,9 @@ impl<'a> Server<'a> {
                 self.completions.push(Completion {
                     id: r.id,
                     next_token,
-                    latency_ms: submitted.elapsed().as_secs_f64() * 1e3,
+                    latency_ms: done
+                        .duration_since(submitted)
+                        .as_secs_f64() * 1e3,
                     batch_index,
                 });
             }
@@ -226,5 +290,25 @@ mod tests {
                 .collect::<Vec<_>>()
         };
         assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn parallel_drain_matches_sequential() {
+        let Some(e) = engine_or_skip() else { return };
+        let run = |par: crate::util::Parallelism| {
+            let mut s = Server::new(&e, "serve_gqa_int8")
+                .unwrap()
+                .with_parallelism(par);
+            for i in 0..40 {
+                s.submit(Request { id: i, tokens: vec![(i as i32) * 5; 80] });
+            }
+            s.drain().unwrap();
+            s.completions()
+                .iter()
+                .map(|c| (c.id, c.next_token, c.batch_index))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(crate::util::Parallelism::Sequential),
+                   run(crate::util::Parallelism::Threads(4)));
     }
 }

@@ -5,6 +5,7 @@
 use crate::config::Config;
 use crate::oracle::Objectives;
 use crate::search::dominance;
+use crate::util::pool::{self, Parallelism};
 
 /// One archived solution.
 #[derive(Clone, Debug)]
@@ -53,6 +54,68 @@ impl ParetoArchive {
             self.truncate_by_crowding();
         }
         true
+    }
+
+    /// Insert a whole evaluated batch; returns how many made it in.
+    ///
+    /// Exactly equivalent to calling [`insert`](Self::insert) per item in
+    /// submission order — the batch form exists so the dominance checks
+    /// against the archive snapshot can fan out across the thread pool.
+    ///
+    /// The parallel pre-filter drops candidates dominated by the
+    /// pre-batch archive.  That is provably what the sequential loop
+    /// does too, but only under three conditions, all checked below;
+    /// when any fails, the plain sequential loop runs instead, so the
+    /// result is identical at every `Parallelism` level in all cases.
+    ///
+    /// 1. **No config collisions** — no batch config equals an archived
+    ///    config or another batch config.  A colliding item takes
+    ///    `insert`'s objective-refresh path, which can *weaken* an
+    ///    incumbent mid-batch so that a later candidate it used to
+    ///    dominate becomes acceptable; the snapshot check cannot see
+    ///    that.
+    /// 2. **No crowding truncation possible**
+    ///    (`entries + batch <= capacity`) — truncation evicts
+    ///    incumbents without a dominator taking their place.
+    /// 3. Under 1–2, an incumbent only ever leaves the archive evicted
+    ///    by a point that dominates it; dominance is transitive, so a
+    ///    candidate dominated by the snapshot is still dominated by
+    ///    something at its own turn.
+    pub fn insert_batch(&mut self, items: &[(Config, Objectives)],
+                        par: Parallelism) -> usize {
+        // Below this size the pre-filter costs more than it saves.
+        const MIN_PARALLEL_BATCH: usize = 32;
+        // Cheap guards first; the collision scan allocates and is only
+        // worth computing once the batch could actually take the
+        // parallel path.
+        let has_collision = || {
+            let archived: std::collections::BTreeSet<&Config> =
+                self.entries.iter().map(|e| &e.config).collect();
+            let mut seen = std::collections::BTreeSet::new();
+            items
+                .iter()
+                .any(|(c, _)| archived.contains(c) || !seen.insert(c))
+        };
+        if items.len() < MIN_PARALLEL_BATCH
+            || !par.is_parallel()
+            || self.entries.len() + items.len() > self.capacity
+            || has_collision()
+        {
+            return items
+                .iter()
+                .filter(|(c, o)| self.insert(*c, *o))
+                .count();
+        }
+        let snapshot: Vec<Objectives> =
+            self.entries.iter().map(|e| e.objectives).collect();
+        let keep: Vec<bool> = pool::parallel_map(par, items, |(_, o)| {
+            !snapshot.iter().any(|e| e.dominates(o))
+        });
+        items
+            .iter()
+            .zip(&keep)
+            .filter(|((c, o), &k)| k && self.insert(*c, *o))
+            .count()
     }
 
     fn prune_dominated(&mut self) {
@@ -189,6 +252,50 @@ mod tests {
             for y in a.entries() {
                 assert!(!x.objectives.dominates(&y.objectives)
                     || x.config == y.config);
+            }
+        }
+    }
+
+    #[test]
+    fn insert_batch_is_exactly_sequential_insertion() {
+        // Three regimes: (roomy capacity, distinct configs) exercises
+        // the parallel pre-filter; (roomy, duplicated configs) the
+        // collision-safe sequential fallback; tight capacity the
+        // truncation-safe fallback.
+        for (capacity, dup) in [(2048usize, false), (2048, true), (12, true)] {
+            let mut rng = crate::util::Rng::new(9);
+            let mut seq = ParetoArchive::new(capacity);
+            let mut bat = ParetoArchive::new(capacity);
+            for round in 0..4u64 {
+                let mut items = Vec::new();
+                for i in 0..120u64 {
+                    // distinct config per item across all rounds, or
+                    // heavy duplication, depending on the regime
+                    let c = if dup {
+                        cfg(round * 7 + i % 40)
+                    } else {
+                        cfg(1000 * round + i)
+                    };
+                    items.push((c, Objectives {
+                        accuracy: 50.0 + 40.0 * rng.f64(),
+                        latency_ms: 5.0 + 50.0 * rng.f64(),
+                        memory_gb: 1.0 + 10.0 * rng.f64(),
+                        energy_j: 0.1 + rng.f64(),
+                    }));
+                }
+                for (c, o) in &items {
+                    seq.insert(*c, *o);
+                }
+                bat.insert_batch(&items, Parallelism::Threads(4));
+                let key = |a: &ParetoArchive| -> Vec<(Config, String)> {
+                    a.entries()
+                        .iter()
+                        .map(|e| (e.config, format!("{:?}", e.objectives)))
+                        .collect()
+                };
+                assert_eq!(key(&seq), key(&bat),
+                           "diverged at capacity {capacity} dup {dup} \
+                            round {round}");
             }
         }
     }

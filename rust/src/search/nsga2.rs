@@ -18,6 +18,7 @@ use crate::oracle::Objectives;
 use crate::search::archive::ParetoArchive;
 use crate::search::dominance::{self, MinVec};
 use crate::search::operators;
+use crate::util::pool::{self, Parallelism};
 use crate::util::Rng;
 
 /// Search hyper-parameters (defaults = paper Table 5).
@@ -31,6 +32,12 @@ pub struct Nsga2Params {
     /// Max rejection-sampling attempts per feasible-initialization slot
     /// (Eq. 6); falls back to unconstrained samples after that.
     pub init_attempts: usize,
+    /// Worker count for population evaluation fan-out (honored by
+    /// [`run_par`]; [`run`] takes a `FnMut` evaluator and is inherently
+    /// sequential).  Evolutionary operators always run on the calling
+    /// thread with the caller's RNG, so the search trajectory — and the
+    /// Pareto front — is bit-identical at every parallelism level.
+    pub parallelism: Parallelism,
 }
 
 impl Default for Nsga2Params {
@@ -42,6 +49,7 @@ impl Default for Nsga2Params {
             tournament_size: 3,
             archive_capacity: 64,
             init_attempts: 50,
+            parallelism: Parallelism::Auto,
         }
     }
 }
@@ -75,21 +83,100 @@ pub struct SearchResult {
     pub generations_run: usize,
 }
 
+/// How a population batch gets its objective values.
+///
+/// The search core is written against this trait so the same loop body
+/// serves both the sequential `FnMut` path ([`run`], used by the
+/// direct-measurement ablation whose evaluator threads an RNG) and the
+/// thread-pool path ([`run_par`], used wherever the evaluator is a pure
+/// `Fn + Sync` such as surrogate prediction).
+pub trait PopulationEval {
+    fn evaluate(&mut self, configs: &[Config]) -> Vec<Objectives>;
+}
+
+/// Sequential adapter: any `FnMut(&Config) -> Objectives`.
+pub struct SequentialEval<E>(pub E);
+
+impl<E: FnMut(&Config) -> Objectives> PopulationEval for SequentialEval<E> {
+    fn evaluate(&mut self, configs: &[Config]) -> Vec<Objectives> {
+        configs.iter().map(&mut self.0).collect()
+    }
+}
+
+/// Thread-pool adapter: fans a batch across workers and merges results
+/// in submission order (see [`crate::util::pool`]).
+pub struct ParallelEval<'f, E> {
+    pub f: &'f E,
+    pub par: Parallelism,
+}
+
+impl<E: Fn(&Config) -> Objectives + Sync> PopulationEval
+    for ParallelEval<'_, E>
+{
+    fn evaluate(&mut self, configs: &[Config]) -> Vec<Objectives> {
+        pool::parallel_map(self.par, configs, self.f)
+    }
+}
+
 /// Run the modified NSGA-II.
 ///
 /// * `evaluate` — objective oracle (surrogate predictions in the real
 ///   pipeline); called once per new individual.
 /// * `feasible` — predicted Definition-3 feasibility (Eq. 6) used for
 ///   initialization and as a death penalty during evolution.
+///
+/// This entry point accepts a stateful `FnMut` evaluator and therefore
+/// evaluates on the calling thread; use [`run_par`] to fan evaluation
+/// across cores.  Both produce identical results for a pure evaluator.
 pub fn run<E, F>(
     params: &Nsga2Params,
     toggles: &Toggles,
-    mut evaluate: E,
+    evaluate: E,
     feasible: F,
     rng: &mut Rng,
 ) -> SearchResult
 where
     E: FnMut(&Config) -> Objectives,
+    F: Fn(&Config) -> bool,
+{
+    run_core(params, toggles, &mut SequentialEval(evaluate), &feasible, rng)
+}
+
+/// Run the modified NSGA-II with population evaluation fanned out over
+/// `params.parallelism` workers.
+///
+/// The evaluator must be a pure function of the configuration; the
+/// ordered reduce in the pool then guarantees a bit-identical search
+/// trajectory (and Pareto front) at every parallelism level.
+pub fn run_par<E, F>(
+    params: &Nsga2Params,
+    toggles: &Toggles,
+    evaluate: &E,
+    feasible: F,
+    rng: &mut Rng,
+) -> SearchResult
+where
+    E: Fn(&Config) -> Objectives + Sync,
+    F: Fn(&Config) -> bool,
+{
+    run_core(
+        params,
+        toggles,
+        &mut ParallelEval { f: evaluate, par: params.parallelism },
+        &feasible,
+        rng,
+    )
+}
+
+fn run_core<B, F>(
+    params: &Nsga2Params,
+    toggles: &Toggles,
+    eval: &mut B,
+    feasible: &F,
+    rng: &mut Rng,
+) -> SearchResult
+where
+    B: PopulationEval,
     F: Fn(&Config) -> bool,
 {
     let n = params.population;
@@ -109,20 +196,11 @@ where
         pop.push(candidate);
     }
 
-    let mut objs: Vec<Objectives> = pop
-        .iter()
-        .map(|c| {
-            evaluations += 1;
-            evaluate(c)
-        })
-        .collect();
+    let mut objs: Vec<Objectives> = eval.evaluate(&pop);
+    evaluations += pop.len();
 
     let mut archive = ParetoArchive::new(params.archive_capacity);
-    for (c, o) in pop.iter().zip(&objs) {
-        if feasible(c) {
-            archive.insert(*c, *o);
-        }
-    }
+    insert_feasible(&mut archive, &pop, &objs, feasible, params.parallelism);
 
     for _gen in 0..params.generations {
         // Rank + crowding of the current population (feasibility as a
@@ -130,7 +208,7 @@ where
         let min_vecs: Vec<MinVec> = pop
             .iter()
             .zip(&objs)
-            .map(|(c, o)| penalized(c, o, &feasible))
+            .map(|(c, o)| penalized(c, o, feasible))
             .collect();
         let fronts = dominance::non_dominated_sort(&min_vecs);
         let mut rank = vec![0usize; n];
@@ -143,34 +221,14 @@ where
             }
         }
 
-        // ---- variation -------------------------------------------------
-        let mut offspring: Vec<Config> = Vec::with_capacity(n);
-        while offspring.len() < n {
-            let p1 = operators::tournament(rng, n, &rank, &crowding,
-                                           params.tournament_size);
-            let child = if toggles.hierarchical_crossover
-                && rng.chance(params.crossover_rate)
-            {
-                let p2 = operators::tournament(rng, n, &rank, &crowding,
-                                               params.tournament_size);
-                operators::crossover(&pop[p1], &pop[p2], rng)
-            } else {
-                pop[p1]
-            };
-            offspring.push(operators::mutate(&child, rng));
-        }
-        let off_objs: Vec<Objectives> = offspring
-            .iter()
-            .map(|c| {
-                evaluations += 1;
-                evaluate(c)
-            })
-            .collect();
-        for (c, o) in offspring.iter().zip(&off_objs) {
-            if feasible(c) {
-                archive.insert(*c, *o);
-            }
-        }
+        // ---- variation (sequential: owns the RNG stream) ----------------
+        let offspring = operators::make_offspring(
+            &pop, &rank, &crowding, params, toggles, rng,
+        );
+        let off_objs: Vec<Objectives> = eval.evaluate(&offspring);
+        evaluations += offspring.len();
+        insert_feasible(&mut archive, &offspring, &off_objs, feasible,
+                        params.parallelism);
 
         // ---- environmental selection (mu + lambda) ----------------------
         let mut union_pop = pop;
@@ -180,7 +238,7 @@ where
         let union_vecs: Vec<MinVec> = union_pop
             .iter()
             .zip(&union_objs)
-            .map(|(c, o)| penalized(c, o, &feasible))
+            .map(|(c, o)| penalized(c, o, feasible))
             .collect();
         let fronts = dominance::non_dominated_sort(&union_vecs);
 
@@ -214,6 +272,25 @@ where
     }
 
     SearchResult { archive, evaluations, generations_run: params.generations }
+}
+
+/// Feasibility-filter a freshly evaluated batch and push it into the
+/// archive in submission order (exact batched insertion — see
+/// [`ParetoArchive::insert_batch`]).
+fn insert_feasible<F: Fn(&Config) -> bool>(
+    archive: &mut ParetoArchive,
+    configs: &[Config],
+    objs: &[Objectives],
+    feasible: &F,
+    par: Parallelism,
+) {
+    let batch: Vec<(Config, Objectives)> = configs
+        .iter()
+        .zip(objs)
+        .filter(|(c, _)| feasible(c))
+        .map(|(c, o)| (*c, *o))
+        .collect();
+    archive.insert_batch(&batch, par);
 }
 
 /// Death-penalty transform: infeasible points are shifted behind every
@@ -334,6 +411,39 @@ mod tests {
         };
         assert_eq!(go(7), go(7));
         assert_ne!(go(7), go(8));
+    }
+
+    #[test]
+    fn run_par_matches_sequential_run_exactly() {
+        let (tb, m, t) = harness();
+        let fronts = |par: crate::util::Parallelism| {
+            let params = Nsga2Params { parallelism: par,
+                                       ..Nsga2Params::small() };
+            let evaluate = |c: &Config| tb.true_objectives(c, &m, &t);
+            let mut rng = Rng::new(11);
+            let res = run_par(&params, &Toggles::default(), &evaluate,
+                              |c| tb.feasible(c, &m, &t), &mut rng);
+            res.archive
+                .entries()
+                .iter()
+                .map(|e| (e.config, e.objectives))
+                .collect::<Vec<_>>()
+        };
+        let seq = fronts(crate::util::Parallelism::Sequential);
+        let par = fronts(crate::util::Parallelism::Threads(4));
+        assert_eq!(seq, par, "parallel front must be bit-identical");
+        // and the FnMut entry point agrees with both
+        let mut rng = Rng::new(11);
+        let res = run(
+            &Nsga2Params::small(),
+            &Toggles::default(),
+            |c| tb.true_objectives(c, &m, &t),
+            |c| tb.feasible(c, &m, &t),
+            &mut rng,
+        );
+        let direct: Vec<_> = res.archive.entries().iter()
+            .map(|e| (e.config, e.objectives)).collect();
+        assert_eq!(seq, direct);
     }
 
     #[test]

@@ -186,6 +186,41 @@ fn repair_single(mut c: Config, rng: &mut Rng) -> Config {
     }
 }
 
+/// Produce one generation of offspring: tournament selection,
+/// hierarchical crossover (Eq. 7) and stage-specific mutation (Eq. 8).
+///
+/// This is deliberately sequential — it owns the evolutionary RNG
+/// stream, which is the determinism anchor of the whole search.  The
+/// expensive part of a generation is *scoring* the returned batch, and
+/// that is what `nsga2` fans out over the thread pool; keeping variation
+/// on one thread with one RNG is what makes the Pareto front
+/// bit-identical at every `Parallelism` level.
+pub fn make_offspring(
+    pop: &[Config],
+    rank: &[usize],
+    crowding: &[f64],
+    params: &crate::search::nsga2::Nsga2Params,
+    toggles: &crate::search::nsga2::Toggles,
+    rng: &mut Rng,
+) -> Vec<Config> {
+    let n = pop.len();
+    let mut offspring: Vec<Config> = Vec::with_capacity(n);
+    while offspring.len() < n {
+        let p1 = tournament(rng, n, rank, crowding, params.tournament_size);
+        let child = if toggles.hierarchical_crossover
+            && rng.chance(params.crossover_rate)
+        {
+            let p2 = tournament(rng, n, rank, crowding,
+                                params.tournament_size);
+            crossover(&pop[p1], &pop[p2], rng)
+        } else {
+            pop[p1]
+        };
+        offspring.push(mutate(&child, rng));
+    }
+    offspring
+}
+
 /// Binary tournament selection by (rank, crowding) — smaller rank wins,
 /// ties broken by larger crowding distance (Deb 2002).
 pub fn tournament(

@@ -13,6 +13,7 @@ use crate::config::Config;
 use crate::models::ModelSpec;
 use crate::oracle::Objectives;
 use crate::tasks::TaskSpec;
+use crate::util::pool::{self, Parallelism};
 use crate::util::{stats, Rng};
 
 /// Number of ensemble members.
@@ -24,16 +25,33 @@ pub struct Ensemble {
     members: Vec<Gbt>,
 }
 
+/// Fit one GBT per `(target index, pre-split RNG)` job, fanned across
+/// `params.parallelism` workers.  This is the single implementation of
+/// the determinism-critical fan-out both [`Ensemble::fit`] and
+/// [`SurrogateSet::fit`] use: callers split the job RNGs off the master
+/// stream *sequentially before* calling, so the fitted models are
+/// bit-identical to a sequential fit at any parallelism level.  Workers
+/// fit whole models, so nested within-fit parallelism is disabled to
+/// keep the pool from oversubscribing.
+fn fit_jobs(rows: &[Vec<f64>], targets: &[&[f64]], jobs: &[(usize, Rng)],
+            params: &GbtParams) -> Vec<Gbt> {
+    let inner = GbtParams {
+        parallelism: Parallelism::Sequential,
+        ..*params
+    };
+    pool::parallel_map(params.parallelism, jobs, |(target, seed)| {
+        let mut child = seed.clone();
+        Gbt::fit(rows, targets[*target], &inner, &mut child)
+    })
+}
+
 impl Ensemble {
+    /// Fit the bagged members in parallel (see [`fit_jobs`]).
     pub fn fit(rows: &[Vec<f64>], targets: &[f64], params: &GbtParams,
                rng: &mut Rng) -> Ensemble {
-        let members = (0..ENSEMBLE_SIZE)
-            .map(|_| {
-                let mut child = rng.split();
-                Gbt::fit(rows, targets, params, &mut child)
-            })
-            .collect();
-        Ensemble { members }
+        let jobs: Vec<(usize, Rng)> =
+            (0..ENSEMBLE_SIZE).map(|_| (0, rng.split())).collect();
+        Ensemble { members: fit_jobs(rows, &[targets], &jobs, params) }
     }
 
     /// Mean prediction.
@@ -117,11 +135,30 @@ impl SurrogateSet {
             .iter()
             .map(|s| s.objectives.energy_j.max(1e-9).ln())
             .collect();
+
+        // All 4 objectives × ENSEMBLE_SIZE members fit as one flat job
+        // batch on the pool (via the shared `fit_jobs` fan-out).  The
+        // per-member RNG streams are split off sequentially in exactly
+        // the order the old objective-by-objective code consumed them,
+        // so the fitted set is bit-identical to a sequential fit.
+        let targets: [&[f64]; 4] = [&acc, &lat, &mem, &en];
+        let mut jobs: Vec<(usize, Rng)> =
+            Vec::with_capacity(targets.len() * ENSEMBLE_SIZE);
+        for obj in 0..targets.len() {
+            for _ in 0..ENSEMBLE_SIZE {
+                jobs.push((obj, rng.split()));
+            }
+        }
+        let fitted = fit_jobs(&rows, &targets, &jobs, &params);
+        let mut members = fitted.into_iter();
+        let mut next_ensemble = || Ensemble {
+            members: members.by_ref().take(ENSEMBLE_SIZE).collect(),
+        };
         SurrogateSet {
-            accuracy: Ensemble::fit(&rows, &acc, &params, rng),
-            latency: Ensemble::fit(&rows, &lat, &params, rng),
-            memory: Ensemble::fit(&rows, &mem, &params, rng),
-            energy: Ensemble::fit(&rows, &en, &params, rng),
+            accuracy: next_ensemble(),
+            latency: next_ensemble(),
+            memory: next_ensemble(),
+            energy: next_ensemble(),
             samples,
             params,
         }
@@ -282,6 +319,27 @@ mod tests {
             let p = s.predict(&c, &m, &t);
             assert!(p.uncertainty.iter().all(|u| u.is_finite() && *u >= 0.0));
             assert!(p.total_relative_uncertainty().is_finite());
+        }
+    }
+
+    #[test]
+    fn parallel_fit_bit_identical_to_sequential() {
+        let train = train_set(150, 20);
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = blended_task();
+        let fit_with = |par: Parallelism| {
+            let params = GbtParams { parallelism: par, ..GbtParams::fast() };
+            SurrogateSet::fit(train.clone(), params, &mut Rng::new(21))
+        };
+        let seq = fit_with(Parallelism::Sequential);
+        let par = fit_with(Parallelism::Threads(4));
+        let mut rng = Rng::new(22);
+        for _ in 0..25 {
+            let c = crate::config::enumerate::sample(&mut rng);
+            let a = seq.predict(&c, &m, &t);
+            let b = par.predict(&c, &m, &t);
+            assert_eq!(a.objectives, b.objectives);
+            assert_eq!(a.uncertainty, b.uncertainty);
         }
     }
 

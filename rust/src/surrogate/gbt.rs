@@ -9,6 +9,7 @@
 //! real benchmark surfaces).
 
 use super::tree::{Tree, TreeParams};
+use crate::util::pool::{self, Parallelism};
 use crate::util::stats;
 use crate::util::Rng;
 
@@ -22,6 +23,13 @@ pub struct GbtParams {
     /// Early-stop when the training RMSE improves less than this
     /// (relative) over 10 rounds; 0 disables.
     pub early_stop_tol: f64,
+    /// Worker count for the fit/predict fan-outs.  Boosting rounds are
+    /// inherently sequential; parallelism applies across ensemble
+    /// members (see `surrogate::ensemble`), across large prediction
+    /// batches, and to the per-round residual refresh on big training
+    /// sets.  Every parallel section is element-wise, so results are
+    /// bit-identical at any level.
+    pub parallelism: Parallelism,
 }
 
 impl Default for GbtParams {
@@ -32,6 +40,7 @@ impl Default for GbtParams {
             subsample: 0.8,
             tree: TreeParams::default(),
             early_stop_tol: 1e-5,
+            parallelism: Parallelism::Auto,
         }
     }
 }
@@ -73,9 +82,21 @@ impl Gbt {
             let k = ((n as f64 * params.subsample).round() as usize).clamp(1, n);
             let indices = rng.sample_indices(n, k);
             let tree = Tree::fit(rows, &residuals, &indices, &params.tree, rng);
-            for (i, row) in rows.iter().enumerate() {
-                residuals[i] -= params.learning_rate * tree.predict(row);
-            }
+            // Residual refresh is element-wise, so it can fan out over
+            // row chunks without changing a single bit of the result.
+            // Only worth it on big training sets; the chunk floor keeps
+            // small fits on the calling thread.
+            pool::parallel_chunks_mut(
+                params.parallelism,
+                &mut residuals,
+                4096,
+                |offset, chunk| {
+                    for (j, r) in chunk.iter_mut().enumerate() {
+                        *r -= params.learning_rate
+                            * tree.predict(&rows[offset + j]);
+                    }
+                },
+            );
             trees.push(tree);
 
             if params.early_stop_tol > 0.0 {
@@ -106,6 +127,13 @@ impl Gbt {
     /// Predict a batch.
     pub fn predict_batch(&self, rows: &[Vec<f64>]) -> Vec<f64> {
         rows.iter().map(|r| self.predict(r)).collect()
+    }
+
+    /// Predict a batch with the fan-out of the thread pool; results are
+    /// in row order, identical to [`predict_batch`](Self::predict_batch).
+    pub fn predict_batch_par(&self, rows: &[Vec<f64>],
+                             par: Parallelism) -> Vec<f64> {
+        pool::parallel_map(par, rows, |r| self.predict(r))
     }
 
     /// R² on a labelled set.
@@ -207,5 +235,30 @@ mod tests {
     #[should_panic(expected = "empty training set")]
     fn rejects_empty_training() {
         let _ = Gbt::fit(&[], &[], &GbtParams::fast(), &mut Rng::new(0));
+    }
+
+    #[test]
+    fn parallel_fit_and_predict_bit_identical_to_sequential() {
+        // The chunk floor is 4096 rows per worker, so 2+ workers (the
+        // actual parallel path) need >= 8192 rows to engage.
+        let (rows, ys) = synth(9000, 7);
+        let fit_with = |par: crate::util::Parallelism| {
+            let params = GbtParams {
+                n_estimators: 8,
+                parallelism: par,
+                ..GbtParams::fast()
+            };
+            Gbt::fit(&rows, &ys, &params, &mut Rng::new(3))
+        };
+        let seq = fit_with(crate::util::Parallelism::Sequential);
+        let par = fit_with(crate::util::Parallelism::Threads(4));
+        for r in rows.iter().take(50) {
+            assert_eq!(seq.predict(r), par.predict(r));
+        }
+        assert_eq!(
+            seq.predict_batch(&rows[..200]),
+            par.predict_batch_par(&rows[..200],
+                                  crate::util::Parallelism::Threads(4))
+        );
     }
 }

@@ -3,8 +3,44 @@
 //! `cargo bench` runs each `benches/*.rs` binary with `harness = false`;
 //! those binaries use [`time_it`] / [`time_once`] for their measurements
 //! so output format and methodology are uniform.
+//!
+//! The same binaries serve CI smoke runs and full local measurements:
+//! * `AE_LLM_BENCH_QUICK=1` (or a `--quick` argument) divides iteration
+//!   counts by 10 and caps warmup — CI uses this;
+//! * `AE_LLM_BENCH_ITERS=N` hard-caps the per-case iteration count.
+//!
+//! Both apply inside [`time_it`], so individual benches don't need any
+//! plumbing; [`quick`] is public for benches that want to also shrink
+//! their workload shape (fewer generations, smaller populations).
 
 use std::time::Instant;
+
+/// True when the process runs in reduced-iteration smoke mode
+/// (`AE_LLM_BENCH_QUICK=1` / `true` / `yes`, or a `--quick` argument).
+pub fn quick() -> bool {
+    let env_on = std::env::var("AE_LLM_BENCH_QUICK")
+        .map(|v| matches!(v.as_str(), "1" | "true" | "yes"))
+        .unwrap_or(false);
+    env_on || std::env::args().any(|a| a == "--quick")
+}
+
+/// Optional hard cap on per-case iterations (`AE_LLM_BENCH_ITERS`).
+pub fn iters_override() -> Option<usize> {
+    std::env::var("AE_LLM_BENCH_ITERS").ok()?.parse().ok()
+}
+
+/// Apply the smoke-mode scaling and the iteration cap to a requested
+/// iteration count (never returns 0).
+pub fn scaled(iters: usize) -> usize {
+    let mut n = iters;
+    if quick() {
+        n /= 10;
+    }
+    if let Some(cap) = iters_override() {
+        n = n.min(cap);
+    }
+    n.max(1)
+}
 
 /// Timing summary of one benchmark case.
 #[derive(Clone, Debug)]
@@ -29,8 +65,12 @@ impl Timing {
 }
 
 /// Run `f` `iters` times after `warmup` discarded runs; report stats.
+/// Counts pass through [`scaled`], so smoke mode shrinks every case
+/// uniformly.
 pub fn time_it<F: FnMut()>(name: &str, warmup: usize, iters: usize,
                            mut f: F) -> Timing {
+    let iters = scaled(iters);
+    let warmup = if quick() { warmup.min(2) } else { warmup };
     for _ in 0..warmup {
         f();
     }
@@ -79,5 +119,17 @@ mod tests {
         let (v, ms) = time_once("compute", || 6 * 7);
         assert_eq!(v, 42);
         assert!(ms >= 0.0);
+    }
+
+    #[test]
+    fn scaled_never_zero() {
+        // Without the env overrides set, scaled() is identity except
+        // for the >=1 clamp.
+        if std::env::var("AE_LLM_BENCH_QUICK").is_err()
+            && std::env::var("AE_LLM_BENCH_ITERS").is_err()
+        {
+            assert_eq!(scaled(50), 50);
+        }
+        assert!(scaled(0) >= 1);
     }
 }

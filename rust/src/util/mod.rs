@@ -1,5 +1,6 @@
 //! Utility substrate: deterministic RNG, statistics, table/CSV/JSON
-//! emission, and a mini property-testing harness.
+//! emission, a mini property-testing harness, and the scoped thread
+//! pool ([`pool`]) every parallel hot path fans out through.
 //!
 //! Exists because the offline build image vendors only the `xla` crate
 //! closure — `rand`, `serde`, `proptest` and `criterion` are all
@@ -9,9 +10,11 @@
 pub mod bench;
 pub mod csv;
 pub mod json;
+pub mod pool;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
+pub use pool::Parallelism;
 pub use rng::Rng;

@@ -1,0 +1,307 @@
+//! Scoped thread-pool over `std::thread` + `mpsc` with a deterministic
+//! ordered reduce.
+//!
+//! The build image vendors no external crates, so this provides the
+//! `rayon` subset the project needs: fan a slice of work items across
+//! worker threads and merge the results **in submission order**, so a
+//! seeded run is bit-identical whatever the thread count.  Three
+//! guarantees every caller relies on:
+//!
+//! 1. **Ordered reduce** — `parallel_map(par, items, f)[i] == f(&items[i])`
+//!    regardless of which worker computed which item or in what order
+//!    they finished.  Reductions over the output therefore fold in
+//!    submission order (see [`parallel_map_reduce`]).
+//! 2. **Determinism contract** — `f` must be a pure function of its
+//!    item (callers that need randomness pre-split one RNG per item
+//!    *sequentially* before fanning out, e.g.
+//!    `oracle::Testbed::measure_batch`).  Under that contract the result
+//!    is identical for every [`Parallelism`] level, including
+//!    `Sequential`.
+//! 3. **Panic propagation** — a panic in any worker resurfaces on the
+//!    calling thread (via `std::thread::scope`), it is never swallowed.
+//!
+//! Work is distributed by an atomic cursor (work stealing at item
+//! granularity), so an expensive straggler item does not serialize the
+//! batch the way fixed pre-chunking would.
+
+use std::num::NonZeroUsize;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc;
+
+/// Degree of parallelism for a parallel section.
+///
+/// `Auto` (the default everywhere a knob is exposed) resolves to the
+/// number of available cores at the call site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parallelism {
+    /// Run on the calling thread; spawns nothing.
+    Sequential,
+    /// One worker per available core (`std::thread::available_parallelism`).
+    Auto,
+    /// Exactly `n` workers (clamped to at least 1).
+    Threads(usize),
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism::Auto
+    }
+}
+
+impl Parallelism {
+    /// Number of worker threads this level resolves to on this host.
+    pub fn threads(self) -> usize {
+        match self {
+            Parallelism::Sequential => 1,
+            Parallelism::Threads(n) => n.max(1),
+            Parallelism::Auto => std::thread::available_parallelism()
+                .map(NonZeroUsize::get)
+                .unwrap_or(1),
+        }
+    }
+
+    /// True when this level would actually fan out.
+    pub fn is_parallel(self) -> bool {
+        self.threads() > 1
+    }
+}
+
+/// Map `f` over `items` on up to `par.threads()` workers; results are
+/// returned in submission order (`out[i] == f(&items[i])`).
+///
+/// Falls back to a plain sequential map when one worker (or one item)
+/// would be used, so the sequential path has zero threading overhead.
+pub fn parallel_map<T, U, F>(par: Parallelism, items: &[T], f: F) -> Vec<U>
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+{
+    let workers = par.threads().min(items.len());
+    if workers <= 1 {
+        return items.iter().map(f).collect();
+    }
+
+    let cursor = AtomicUsize::new(0);
+    let mut slots: Vec<Option<U>> = Vec::with_capacity(items.len());
+    slots.resize_with(items.len(), || None);
+    let (tx, rx) = mpsc::channel::<(usize, U)>();
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let tx = tx.clone();
+            let cursor = &cursor;
+            let f = &f;
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let out = f(&items[i]);
+                if tx.send((i, out)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(tx);
+        // Ordered reduce: completion order is arbitrary, slot order is
+        // submission order.  If a worker panics its sender drops without
+        // filling every slot; the scope re-raises the panic on join, so
+        // the expect() below is unreachable in that case.
+        for (i, out) in rx {
+            slots[i] = Some(out);
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|s| s.expect("pool: worker exited without result"))
+        .collect()
+}
+
+/// [`parallel_map`] followed by a sequential fold **in submission
+/// order** — the deterministic ordered-reduce primitive.
+pub fn parallel_map_reduce<T, U, A, F, R>(
+    par: Parallelism,
+    items: &[T],
+    f: F,
+    init: A,
+    mut reduce: R,
+) -> A
+where
+    T: Sync,
+    U: Send,
+    F: Fn(&T) -> U + Sync,
+    R: FnMut(A, U) -> A,
+{
+    parallel_map(par, items, f)
+        .into_iter()
+        .fold(init, |acc, u| reduce(acc, u))
+}
+
+/// Apply `f` to disjoint chunks of `data` in parallel.  `f` receives the
+/// chunk's offset into `data` plus the mutable chunk; chunks are at
+/// least `min_chunk` long, so small inputs stay on the calling thread.
+///
+/// Element-wise updates through this helper are deterministic: every
+/// element is written by exactly one worker and no accumulation crosses
+/// a chunk boundary.
+pub fn parallel_chunks_mut<T, F>(
+    par: Parallelism,
+    data: &mut [T],
+    min_chunk: usize,
+    f: F,
+) where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let workers = par.threads().min(data.len() / min_chunk.max(1)).max(1);
+    if workers <= 1 {
+        f(0, data);
+        return;
+    }
+    let chunk = data.len().div_ceil(workers);
+    std::thread::scope(|scope| {
+        for (k, piece) in data.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            scope.spawn(move || f(k * chunk, piece));
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn map_preserves_submission_order() {
+        let items: Vec<usize> = (0..257).collect();
+        for par in [
+            Parallelism::Sequential,
+            Parallelism::Threads(4),
+            Parallelism::Threads(8),
+            Parallelism::Auto,
+        ] {
+            let out = parallel_map(par, &items, |&x| x * 3);
+            assert_eq!(out, items.iter().map(|x| x * 3).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn parallel_equals_sequential_with_uneven_work() {
+        // Straggler items must not perturb result order.
+        let items: Vec<u64> = (0..64).collect();
+        let f = |&x: &u64| {
+            if x % 13 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            x * x
+        };
+        assert_eq!(
+            parallel_map(Parallelism::Threads(7), &items, f),
+            parallel_map(Parallelism::Sequential, &items, f)
+        );
+    }
+
+    #[test]
+    fn every_item_computed_exactly_once() {
+        let counter = AtomicUsize::new(0);
+        let items: Vec<usize> = (0..100).collect();
+        let out = parallel_map(Parallelism::Threads(4), &items, |&x| {
+            counter.fetch_add(1, Ordering::Relaxed);
+            x
+        });
+        assert_eq!(out.len(), 100);
+        assert_eq!(counter.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(parallel_map(Parallelism::Threads(8), &empty, |&x| x)
+            .is_empty());
+        assert_eq!(
+            parallel_map(Parallelism::Threads(8), &[41u32], |&x| x + 1),
+            vec![42]
+        );
+    }
+
+    #[test]
+    fn worker_panic_propagates_to_caller() {
+        let items: Vec<usize> = (0..32).collect();
+        let res = std::panic::catch_unwind(|| {
+            parallel_map(Parallelism::Threads(4), &items, |&x| {
+                if x == 17 {
+                    panic!("boom at {x}");
+                }
+                x
+            })
+        });
+        assert!(res.is_err(), "worker panic must reach the caller");
+    }
+
+    #[test]
+    fn panic_propagates_from_sequential_path_too() {
+        let items = [1usize];
+        let res = std::panic::catch_unwind(|| {
+            parallel_map(Parallelism::Sequential, &items, |_| -> usize {
+                panic!("boom")
+            })
+        });
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn reduce_folds_in_submission_order() {
+        let items: Vec<usize> = (0..50).collect();
+        let concat = parallel_map_reduce(
+            Parallelism::Threads(6),
+            &items,
+            |&x| x.to_string(),
+            String::new(),
+            |mut acc, s| {
+                acc.push_str(&s);
+                acc.push(',');
+                acc
+            },
+        );
+        let expected: String =
+            items.iter().map(|x| format!("{x},")).collect();
+        assert_eq!(concat, expected);
+    }
+
+    #[test]
+    fn chunks_mut_touches_every_element_once() {
+        let mut data: Vec<usize> = (0..1000).collect();
+        parallel_chunks_mut(Parallelism::Threads(4), &mut data, 8,
+                            |offset, chunk| {
+            for (k, v) in chunk.iter_mut().enumerate() {
+                assert_eq!(*v, offset + k, "offset bookkeeping");
+                *v += 1;
+            }
+        });
+        assert_eq!(data, (1..1001).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chunks_mut_small_input_stays_sequential() {
+        let mut data = vec![0u8; 4];
+        parallel_chunks_mut(Parallelism::Threads(8), &mut data, 64,
+                            |offset, chunk| {
+            assert_eq!(offset, 0);
+            assert_eq!(chunk.len(), 4);
+            chunk.fill(7);
+        });
+        assert_eq!(data, vec![7; 4]);
+    }
+
+    #[test]
+    fn threads_resolution() {
+        assert_eq!(Parallelism::Sequential.threads(), 1);
+        assert_eq!(Parallelism::Threads(0).threads(), 1);
+        assert_eq!(Parallelism::Threads(5).threads(), 5);
+        assert!(Parallelism::Auto.threads() >= 1);
+        assert!(!Parallelism::Sequential.is_parallel());
+    }
+}

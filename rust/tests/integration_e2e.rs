@@ -26,8 +26,12 @@ fn hardware_in_the_loop_algorithm1() {
     let out = optimize_with(
         &scenario,
         &params,
-        &mut |c: &Config, _r: &mut Rng| {
-            evaluator.objectives(c, &scenario.model, &scenario.task)
+        &mut |cs: &[Config], _r: &mut Rng| {
+            cs.iter()
+                .map(|c| {
+                    evaluator.objectives(c, &scenario.model, &scenario.task)
+                })
+                .collect()
         },
         &mut rng,
     );

@@ -1,0 +1,95 @@
+//! Integration tests of the parallel-evaluation subsystem's determinism
+//! contract: a seeded run must produce a bit-identical Pareto front at
+//! every `Parallelism` level, because evolutionary operators own the
+//! RNG on the calling thread and evaluation fans out through the
+//! pool's ordered reduce.
+
+use ae_llm::config::Config;
+use ae_llm::coordinator::{optimize, AeLlmParams, Scenario};
+use ae_llm::oracle::{Objectives, Testbed};
+use ae_llm::search::nsga2::{self, Nsga2Params, Toggles};
+use ae_llm::util::pool::Parallelism;
+use ae_llm::util::prop::{forall, Config as PropConfig};
+use ae_llm::util::Rng;
+
+/// Property: for random seeds, NSGA-II returns the *same archive, in
+/// the same order*, at Parallelism = 1, 4 and 8.
+#[test]
+fn nsga2_front_identical_at_parallelism_1_4_8() {
+    let tb = Testbed::noiseless(ae_llm::hardware::a100());
+    let m = ae_llm::models::by_name("LLaMA-2-7B").unwrap();
+    let t = ae_llm::tasks::blended_task();
+
+    let front = |seed: u64, threads: usize| -> Vec<(Config, Objectives)> {
+        let params = Nsga2Params {
+            population: 24,
+            generations: 6,
+            parallelism: Parallelism::Threads(threads),
+            ..Nsga2Params::default()
+        };
+        let evaluate = |c: &Config| tb.true_objectives(c, &m, &t);
+        let mut rng = Rng::new(seed);
+        let res = nsga2::run_par(
+            &params,
+            &Toggles::default(),
+            &evaluate,
+            |c| tb.feasible(c, &m, &t),
+            &mut rng,
+        );
+        res.archive
+            .entries()
+            .iter()
+            .map(|e| (e.config, e.objectives))
+            .collect()
+    };
+
+    forall(
+        PropConfig::default().cases(5),
+        |rng| rng.next_u64(),
+        |&seed| {
+            let f1 = front(seed, 1);
+            let f4 = front(seed, 4);
+            let f8 = front(seed, 8);
+            if f1 != f4 {
+                return Err(format!(
+                    "seed {seed}: front differs between 1 and 4 threads \
+                     ({} vs {} entries)",
+                    f1.len(),
+                    f4.len()
+                ));
+            }
+            if f4 != f8 {
+                return Err(format!(
+                    "seed {seed}: front differs between 4 and 8 threads"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The full coordinator (surrogates + refinement + measurement batches)
+/// is parallelism-invariant end to end.
+#[test]
+fn algorithm1_chosen_config_invariant_under_parallelism() {
+    let scenario = Scenario::for_model("LLaMA-2-7B").unwrap();
+    let go = |par: Parallelism| {
+        let params = AeLlmParams {
+            initial_sample: 80,
+            refine_iters: 1,
+            evals_per_iter: 6,
+            nsga: Nsga2Params { population: 24, generations: 5,
+                                ..Nsga2Params::default() },
+            parallelism: par,
+            ..AeLlmParams::small()
+        };
+        let mut rng = Rng::new(7);
+        let out = optimize(&scenario, &params, &mut rng);
+        (out.chosen, out.testbed_evals, out.surrogate_evals)
+    };
+    let seq = go(Parallelism::Sequential);
+    let par4 = go(Parallelism::Threads(4));
+    let par8 = go(Parallelism::Threads(8));
+    assert_eq!(seq, par4);
+    assert_eq!(par4, par8);
+}

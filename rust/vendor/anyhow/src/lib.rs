@@ -1,0 +1,137 @@
+//! Offline shim of the `anyhow` crate.
+//!
+//! The build image has no crates.io access, so this vendors the small
+//! subset of the real `anyhow` API that `ae_llm` uses: the type-erased
+//! [`Error`], the [`Result`] alias, the blanket `From<E: std::error::Error>`
+//! conversion that makes `?` work, and the `anyhow!` / `bail!` / `ensure!`
+//! macros.  Semantics match the real crate for this subset; error chains
+//! are flattened into the message at conversion time.
+
+use std::fmt;
+
+/// Type-erased error: a message plus (optionally) the flattened source
+/// chain of the error it was converted from.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build from anything printable (the real crate's `Error::msg`).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// NOTE: like the real `anyhow::Error`, this deliberately does NOT
+// implement `std::error::Error` — that is what makes the blanket
+// conversion below coherent.
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Flatten the source chain into one message.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Build an [`Error`] from a format string or any `Display` value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!(concat!(
+                "condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/path")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let x = 3;
+        let e = anyhow!("got {x} and {}", 4);
+        assert_eq!(e.to_string(), "got 3 and 4");
+        let owned: Error = anyhow!(String::from("owned"));
+        assert_eq!(owned.to_string(), "owned");
+    }
+
+    fn bails(flag: bool) -> Result<u32> {
+        ensure!(!flag, "flag was {flag}");
+        bail!("always fails")
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        assert_eq!(bails(true).unwrap_err().to_string(), "flag was true");
+        assert_eq!(bails(false).unwrap_err().to_string(), "always fails");
+    }
+
+    #[test]
+    fn error_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<Error>();
+    }
+}
