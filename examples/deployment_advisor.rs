@@ -13,11 +13,10 @@
 //! cargo run --release --offline --example deployment_advisor
 //! ```
 
-use ae_llm::coordinator::{optimize, AeLlmParams, Scenario};
+use ae_llm::coordinator::{AeLlm, AeLlmParams, Scenario};
 use ae_llm::hardware;
 use ae_llm::metrics::Preferences;
 use ae_llm::report::tables::scenario_card;
-use ae_llm::util::Rng;
 
 fn main() {
     let scenarios = [
@@ -51,8 +50,10 @@ fn main() {
     ];
 
     for (i, (title, scenario)) in scenarios.into_iter().enumerate() {
-        let mut rng = Rng::new(100 + i as u64);
-        let out = optimize(&scenario, &AeLlmParams::small(), &mut rng);
+        let out = AeLlm::from_scenario(scenario.clone())
+            .params(AeLlmParams::small())
+            .seed(100 + i as u64)
+            .run_testbed_outcome();
         println!("{}", scenario_card(title, &scenario, &out));
 
         // The advisor's sanity contract: feasible on the target platform

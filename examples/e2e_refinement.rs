@@ -18,8 +18,10 @@
 //!
 //! The run is recorded in EXPERIMENTS.md §End-to-end.
 
-use ae_llm::config::{Config, Precision};
-use ae_llm::coordinator::{optimize_with, AeLlmParams, Scenario};
+use ae_llm::config::Precision;
+use ae_llm::coordinator::{AeLlm, AeLlmParams, FnObserver, IterationEvent,
+                          Scenario};
+use ae_llm::evaluator::{CachingEvaluator, RecordingEvaluator};
 use ae_llm::runtime::{self, MeasuredEvaluator, Request, Server};
 use ae_llm::util::Rng;
 
@@ -51,35 +53,48 @@ fn main() -> anyhow::Result<()> {
     // ---- 3. Algorithm 1 against real measurements ---------------------------
     println!("[3/4] Algorithm 1 with PJRT-measured evaluation");
     let scenario = Scenario::for_model("LLaMA-2-7B").unwrap();
-    let evaluator = MeasuredEvaluator::new(table, scenario.testbed.clone());
+    // Decorated evaluator stack: record every measurement (replayable
+    // trace) over a memo table (the measured backend is deterministic,
+    // so caching repeat configs is lossless) over the PJRT-measured
+    // backend, which fans each batch across the thread pool.
+    let mut evaluator = RecordingEvaluator::new(CachingEvaluator::new(
+        MeasuredEvaluator::new(table, scenario.testbed.clone()),
+    ));
     let mut params = AeLlmParams::small();
     params.initial_sample = 150;
-    let mut rng = Rng::new(42);
-    let out = optimize_with(
-        &scenario,
-        &params,
-        &mut |cs: &[Config], _r: &mut Rng| {
-            cs.iter()
-                .map(|c| {
-                    evaluator.objectives(c, &scenario.model, &scenario.task)
-                })
-                .collect()
-        },
-        &mut rng,
-    );
+    let report = AeLlm::from_scenario(scenario.clone())
+        .params(params)
+        .seed(42)
+        .run_observed(
+            &mut evaluator,
+            &mut FnObserver(|e: &IterationEvent| {
+                println!(
+                    "      refinement {}/{}: front {}, hv {:.2}, {} evals",
+                    e.iteration, e.total_iterations, e.front_size,
+                    e.hypervolume, e.testbed_evals
+                );
+            }),
+        );
+    let out = &report.outcome;
     println!(
         "      chosen {} | efficiency score {:.2} | accuracy {:.1} vs \
-         default {:.1}\n      {} measured evaluations, {} surrogate \
-         predictions",
+         default {:.1}\n      {} evaluations ({} unique PJRT-backed \
+         measurements, {} cache hits), {} surrogate predictions, trace \
+         of {} steps",
         out.chosen.signature(),
         out.chosen_efficiency_score,
         out.chosen_objectives.accuracy,
         out.reference.default.accuracy,
         out.testbed_evals,
-        out.surrogate_evals
+        evaluator.inner().misses(),
+        evaluator.inner().hits(),
+        out.surrogate_evals,
+        evaluator.trace().len(),
     );
     assert!(out.chosen_efficiency_score > 1.0,
             "E2E search failed to beat the default configuration");
+    assert_eq!(evaluator.trace().len(), out.testbed_evals,
+               "the trace must record every evaluation");
 
     // ---- 4. deploy + serve ---------------------------------------------------
     let serve_variant = match out.chosen.inf.precision {

@@ -1,19 +1,26 @@
 //! Quickstart: optimize the efficiency configuration of one model for
-//! one deployment scenario and print the Pareto front.
+//! one deployment scenario with the builder-style session API and
+//! print the Pareto front, streaming per-iteration progress through a
+//! `RunObserver`.
 //!
 //! ```bash
 //! cargo run --release --offline --example quickstart
 //! ```
 
-use ae_llm::coordinator::{optimize, AeLlmParams, Scenario};
+use ae_llm::coordinator::{AeLlm, AeLlmError, AeLlmParams, FnObserver,
+                          IterationEvent};
 use ae_llm::metrics::utility;
-use ae_llm::util::Rng;
 
-fn main() {
-    // 1. Describe the deployment: model, task mix, hardware, preferences.
-    //    `for_model` picks the paper's hardware tier for the model scale
-    //    (Mistral-7B -> A100-80GB) and the blended task mix.
-    let scenario = Scenario::for_model("Mistral-7B").expect("model in zoo");
+fn main() -> Result<(), AeLlmError> {
+    // 1. Describe the deployment: model, task mix, hardware,
+    //    preferences.  `for_model` picks the paper's hardware tier for
+    //    the model scale (Mistral-7B -> A100-80GB) and the blended task
+    //    mix; `.task(..)` / `.platform(..)` / `.prefs(..)` override by
+    //    name, with typed errors for unknown names.
+    let session = AeLlm::for_model("Mistral-7B")?
+        .params(AeLlmParams::small())
+        .seed(7);
+    let scenario = session.scenario();
     println!(
         "optimizing {} on {} for task {:?}",
         scenario.model.name, scenario.testbed.platform.name,
@@ -21,9 +28,20 @@ fn main() {
     );
 
     // 2. Run AE-LLM (Algorithm 1): surrogate-guided NSGA-II with
-    //    hardware-in-the-loop refinement against the testbed.
-    let mut rng = Rng::new(7);
-    let out = optimize(&scenario, &AeLlmParams::small(), &mut rng);
+    //    hardware-in-the-loop refinement against the scenario's
+    //    testbed.  The observer streams one event per refinement
+    //    iteration instead of leaving us staring at a silent run.
+    let report = session.run_testbed_observed(&mut FnObserver(
+        |e: &IterationEvent| {
+            println!(
+                "  refinement {}/{}: front {}, hypervolume {:.2}, \
+                 {} testbed evals",
+                e.iteration, e.total_iterations, e.front_size,
+                e.hypervolume, e.testbed_evals
+            );
+        },
+    ));
+    let out = &report.outcome;
 
     // 3. Inspect the Pareto front: each entry is a measured trade-off.
     println!("\nPareto front ({} configurations):", out.pareto.len());
@@ -46,7 +64,7 @@ fn main() {
     println!(
         "\nchosen: {}\n  utility {:.3} | efficiency score {:.2}x \
          | accuracy {:.1} (default {:.1})\n  search cost: {} testbed \
-         evaluations, {} surrogate predictions",
+         evaluations, {} surrogate predictions ({:.1}s wall)",
         out.chosen.signature(),
         utility(&out.chosen_objectives, &out.reference, &scenario.prefs),
         out.chosen_efficiency_score,
@@ -54,5 +72,7 @@ fn main() {
         out.reference.default.accuracy,
         out.testbed_evals,
         out.surrogate_evals,
+        report.wall_ms / 1e3,
     );
+    Ok(())
 }

@@ -6,9 +6,8 @@
 //! cargo run --release --offline --example vlm_search
 //! ```
 
-use ae_llm::coordinator::{optimize, AeLlmParams, Scenario};
+use ae_llm::coordinator::{AeLlm, AeLlmParams};
 use ae_llm::tasks;
-use ae_llm::util::Rng;
 
 fn main() {
     let mut vlm_scores = Vec::new();
@@ -19,12 +18,13 @@ fn main() {
             if model == "InternVL-Chat" && task.name != "VQAv2" {
                 continue;
             }
-            let scenario = Scenario::for_model(model)
+            let out = AeLlm::for_model(model)
                 .unwrap()
-                .with_task(task.name)
-                .unwrap();
-            let mut rng = Rng::new(11);
-            let out = optimize(&scenario, &AeLlmParams::small(), &mut rng);
+                .task(task.name)
+                .unwrap()
+                .params(AeLlmParams::small())
+                .seed(11)
+                .run_testbed_outcome();
             println!(
                 "{model:<14} {:<13} -> {}\n{:>28} acc {:.1} (default \
                  {:.1}) | {:.1} ms | {:.1} GB | eff {:.2}x",

@@ -11,7 +11,7 @@
 use std::collections::BTreeMap;
 
 use ae_llm::config::{encode, enumerate, Config};
-use ae_llm::coordinator::{optimize, AeLlmParams, Scenario};
+use ae_llm::coordinator::{AeLlm, AeLlmParams, Scenario};
 use ae_llm::models;
 use ae_llm::oracle::Testbed;
 use ae_llm::search::dominance;
@@ -143,13 +143,21 @@ fn main() {
 
     // -- full runs -----------------------------------------------------------
     let scenario = Scenario::for_model("LLaMA-2-7B").unwrap();
+    // Lean trait-path runs (no observer, no per-iteration hypervolume)
+    // so the timings stay comparable with the pre-trait baseline.
+    let run_algo1 = |params: &AeLlmParams, seed: u64| {
+        AeLlm::from_scenario(scenario.clone())
+            .params(*params)
+            .seed(seed)
+            .run_testbed_outcome()
+    };
     let (_, small_ms) = time_once("Algorithm 1 (small params)", || {
-        optimize(&scenario, &AeLlmParams::small(), &mut Rng::new(4))
+        run_algo1(&AeLlmParams::small(), 4)
     });
     report.insert("algorithm1 small (ms)".into(), Json::Num(small_ms));
     if !quick {
         let (_, paper_ms) = time_once("Algorithm 1 (paper params)", || {
-            optimize(&scenario, &AeLlmParams::default(), &mut Rng::new(5))
+            run_algo1(&AeLlmParams::default(), 5)
         });
         report.insert("algorithm1 paper (ms)".into(), Json::Num(paper_ms));
     }

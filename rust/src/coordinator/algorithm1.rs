@@ -14,20 +14,27 @@
 //!  8: return Pareto-optimal configurations P*
 //! ```
 //!
-//! "Actual hardware" is the [`crate::oracle::Testbed`] (simulated fleet)
-//! by default; the end-to-end example swaps in the PJRT-measured
-//! evaluator (`runtime::measured`) to close the loop on real artifact
-//! executions.
+//! "Actual hardware" is any [`Evaluator`] backend (DESIGN.md §9):
+//! [`crate::oracle::Testbed`] (simulated fleet) by default, the
+//! PJRT-measured [`crate::runtime::MeasuredEvaluator`] for the
+//! end-to-end path, or a decorated stack of either.  The primary entry
+//! point is [`optimize_with_observer`]; the [`super::AeLlm`] builder
+//! wraps it with a friendlier surface, and the legacy [`optimize`] /
+//! [`optimize_with`] closures remain as deprecated shims.
 
 use crate::config::{encode, Config};
+use crate::evaluator::{EvalContext, Evaluator, FnEvaluator};
 use crate::metrics::{efficiency_score, utility, Reference};
 use crate::oracle::Objectives;
 use crate::search::archive::ParetoArchive;
+use crate::search::dominance::MinVec;
+use crate::search::hypervolume;
 use crate::search::nsga2::{self, Nsga2Params, Toggles};
 use crate::surrogate::{GbtParams, Sample, SurrogateSet};
 use crate::util::pool::{self, Parallelism};
 use crate::util::Rng;
 
+use super::observer::{IterationEvent, NullObserver, RunObserver};
 use super::scenario::{Scenario, SpaceMask};
 
 /// AE-LLM hyper-parameters (defaults mirror §3.5 / Table 5, scaled to
@@ -53,9 +60,9 @@ pub struct AeLlmParams {
     /// initial-sample measurement batch, surrogate (re)fits, NSGA-II
     /// population evaluation, candidate-uncertainty scoring, and the
     /// per-iteration measurement batches.  Overrides the `parallelism`
-    /// fields of `nsga`/`gbt` for runs started through [`optimize`] /
-    /// [`optimize_with`].  Defaults to all available cores; results are
-    /// identical at every level (see `util::pool`).
+    /// fields of `nsga`/`gbt`, and reaches the evaluator through
+    /// [`EvalContext::parallelism`].  Defaults to all available cores;
+    /// results are identical at every level (see `util::pool`).
     pub parallelism: Parallelism,
 }
 
@@ -89,6 +96,7 @@ impl AeLlmParams {
 }
 
 /// Result of one AE-LLM optimization run.
+#[derive(Clone)]
 pub struct Outcome {
     /// P*: Pareto front with *measured* objectives.
     pub pareto: ParetoArchive,
@@ -106,30 +114,62 @@ pub struct Outcome {
     pub surrogate_evals: usize,
 }
 
+/// Reference-point factor for the observer's normalized hypervolume:
+/// each minimized objective's reference coordinate is this multiple of
+/// the Default configuration's value.
+pub const HV_REF_FACTOR: f64 = 4.0;
+
+/// Normalized hypervolume of a measured archive: objectives are
+/// divided by the Default reference, accuracy enters negated (min
+/// convention, reference coordinate 0), and the minimized dimensions
+/// use a [`HV_REF_FACTOR`]× default reference point.  Entries worse
+/// than the reference box contribute nothing.
+pub fn pareto_hypervolume(archive: &ParetoArchive,
+                          reference: &Reference) -> f64 {
+    let d = reference.default;
+    let denom = |v: f64| if v.abs() < 1e-12 { 1.0 } else { v };
+    let pts: Vec<MinVec> = archive
+        .entries()
+        .iter()
+        .map(|e| {
+            let o = e.objectives;
+            [
+                -o.accuracy / denom(d.accuracy),
+                o.latency_ms / denom(d.latency_ms),
+                o.memory_gb / denom(d.memory_gb),
+                o.energy_j / denom(d.energy_j),
+            ]
+        })
+        .collect();
+    let r: MinVec = [0.0, HV_REF_FACTOR, HV_REF_FACTOR, HV_REF_FACTOR];
+    hypervolume::hypervolume(&pts, &r)
+}
+
 /// Run Algorithm 1 on a scenario against its testbed oracle.  Testbed
 /// measurement batches fan out over `params.parallelism` workers.
+#[deprecated(
+    note = "use an `Evaluator` with `optimize_with_observer`, or the \
+            `AeLlm` builder; this shim clones the scenario's testbed"
+)]
 pub fn optimize(scenario: &Scenario, params: &AeLlmParams,
                 rng: &mut Rng) -> Outcome {
-    let mut measure_count = 0usize;
-    let s = scenario.clone();
-    let par = params.parallelism;
-    let mut measure = |cs: &[Config], rng: &mut Rng| {
-        measure_count += cs.len();
-        s.testbed.measure_batch(cs, &s.model, &s.task, rng, par)
-    };
-    let out = optimize_with(scenario, params, &mut measure, rng);
-    debug_assert_eq!(out.testbed_evals, measure_count);
+    let mut evaluator = scenario.testbed.clone();
+    let out = optimize_with_observer(scenario, params, &mut evaluator,
+                                     &mut NullObserver, rng);
+    debug_assert_eq!(out.testbed_evals, Evaluator::evals(&evaluator));
     out
 }
 
-/// Run Algorithm 1 with an arbitrary "actual hardware" evaluator —
-/// this is the entry point the PJRT-backed end-to-end driver uses.
+/// Run Algorithm 1 with an arbitrary "actual hardware" closure — the
+/// pre-`Evaluator` calling convention, kept for compatibility.
 ///
 /// `measure` receives a whole batch of configurations (Algorithm 1
 /// line 5 is a fan-out point) and must return exactly one `Objectives`
-/// per input, in input order.  Sequential evaluators just map over the
-/// slice; parallel ones are free to fan out as long as they keep the
-/// order.
+/// per input, in input order.
+#[deprecated(
+    note = "implement `Evaluator` (or wrap the closure in \
+            `FnEvaluator`) and call `optimize_with_observer`"
+)]
 pub fn optimize_with<F>(
     scenario: &Scenario,
     params: &AeLlmParams,
@@ -139,6 +179,28 @@ pub fn optimize_with<F>(
 where
     F: FnMut(&[Config], &mut Rng) -> Vec<Objectives>,
 {
+    let mut evaluator =
+        FnEvaluator::new(|cs: &[Config], rng: &mut Rng| measure(cs, rng));
+    optimize_with_observer(scenario, params, &mut evaluator,
+                           &mut NullObserver, rng)
+}
+
+/// Run Algorithm 1 against any [`Evaluator`] backend, streaming one
+/// [`IterationEvent`] per refinement iteration to `observer`.
+///
+/// This is the primary entry point; [`super::AeLlm`] wraps it with a
+/// builder-style surface and a serializable report.  Observer calls
+/// are computed without touching `rng`, so an observed run is
+/// bit-identical to an unobserved one, and the evaluator's RNG
+/// discipline (see `crate::evaluator`) keeps the whole run identical
+/// at every `params.parallelism` level.
+pub fn optimize_with_observer(
+    scenario: &Scenario,
+    params: &AeLlmParams,
+    evaluator: &mut dyn Evaluator,
+    observer: &mut dyn RunObserver,
+    rng: &mut Rng,
+) -> Outcome {
     let m = &scenario.model;
     let t = &scenario.task;
     let tb = &scenario.testbed;
@@ -158,8 +220,10 @@ where
         tb.power_w(c, m, t) <= tb.platform.power_budget_w
     };
 
-    // The coordinator-level knob governs every nested fan-out.
+    // The coordinator-level knob governs every nested fan-out,
+    // including the evaluator's own batch fan-out (via the context).
     let par = params.parallelism;
+    let ctx = EvalContext::new(m, t, par);
     let gbt_params = GbtParams { parallelism: par, ..params.gbt };
     let nsga_params = Nsga2Params { parallelism: par, ..params.nsga };
 
@@ -171,9 +235,9 @@ where
                 .map(|c| mask.clamp(c))
                 .collect();
         testbed_evals += configs.len();
-        let objectives = measure(&configs, rng);
+        let objectives = evaluator.measure_batch(&configs, &ctx, rng);
         assert_eq!(objectives.len(), configs.len(),
-                   "measure() must return one Objectives per config");
+                   "evaluator must return one Objectives per config");
         let samples: Vec<Sample> = configs
             .iter()
             .zip(objectives)
@@ -199,7 +263,7 @@ where
         1
     };
 
-    for _iteration in 0..iters {
+    for iteration in 0..iters {
         // ---- line 3: NSGA-II against the current surrogates -------------
         let surrogate_archive = {
             let mask_ref = &mask;
@@ -241,7 +305,7 @@ where
                     res.archive
                 }
                 None => {
-                    // Ablation: NSGA-II evaluates the testbed directly
+                    // Ablation: NSGA-II evaluates the backend directly
                     // with a tightly capped budget (random-search tier).
                     // The evaluator threads the measurement RNG, so this
                     // path stays on the sequential `run` entry point.
@@ -260,7 +324,9 @@ where
                         &params.toggles,
                         |c| {
                             testbed_evals += 1;
-                            measure(&[mask_ref.clamp(*c)], &mut noise_rng)[0]
+                            evaluator.measure_batch(
+                                &[mask_ref.clamp(*c)], &ctx, &mut noise_rng,
+                            )[0]
                         },
                         |c| {
                             let c = mask_ref.clamp(*c);
@@ -303,9 +369,9 @@ where
 
         // ---- lines 5+6: measure on hardware, update surrogates ----------
         testbed_evals += candidates.len();
-        let objectives = measure(&candidates, rng);
+        let objectives = evaluator.measure_batch(&candidates, &ctx, rng);
         assert_eq!(objectives.len(), candidates.len(),
-                   "measure() must return one Objectives per config");
+                   "evaluator must return one Objectives per config");
         let mut fresh: Vec<Sample> = Vec::new();
         for (c, o) in candidates.into_iter().zip(objectives) {
             measured_configs.insert(c);
@@ -322,12 +388,26 @@ where
                 sur.update(fresh, rng);
             }
         }
+
+        // ---- observer hook: pure snapshot, no RNG consumption -----------
+        // Gated so unobserved runs skip the hypervolume computation.
+        if observer.enabled() {
+            observer.on_iteration(&IterationEvent {
+                iteration: iteration + 1,
+                total_iterations: iters,
+                front_size: measured.len(),
+                hypervolume: pareto_hypervolume(&measured, &reference),
+                testbed_evals,
+                surrogate_evals,
+            });
+        }
     }
 
     // Always include the default as a fallback so `chosen` exists.
     {
         testbed_evals += 1;
-        let o = measure(&[mask.clamp(default_cfg)], rng)[0];
+        let o = evaluator.measure_batch(&[mask.clamp(default_cfg)], &ctx,
+                                        rng)[0];
         measured.insert(mask.clamp(default_cfg), o);
     }
 
@@ -356,6 +436,7 @@ where
 
 #[cfg(test)]
 mod tests {
+    use super::super::observer::CollectingObserver;
     use super::*;
     use crate::config::Precision;
 
@@ -363,11 +444,19 @@ mod tests {
         Scenario::for_model("LLaMA-2-7B").unwrap()
     }
 
+    /// Trait-path run against the scenario's testbed (what the
+    /// deprecated `optimize` shim wraps).
+    fn opt(s: &Scenario, params: &AeLlmParams, rng: &mut Rng) -> Outcome {
+        let mut evaluator = s.testbed.clone();
+        optimize_with_observer(s, params, &mut evaluator, &mut NullObserver,
+                               rng)
+    }
+
     #[test]
     fn optimizer_beats_default_utility() {
         let s = scenario();
         let mut rng = Rng::new(1);
-        let out = optimize(&s, &AeLlmParams::small(), &mut rng);
+        let out = opt(&s, &AeLlmParams::small(), &mut rng);
         let u_def = utility(&out.reference.default, &out.reference, &s.prefs);
         assert!(out.chosen_utility > u_def,
                 "chosen={} default={u_def}", out.chosen_utility);
@@ -380,7 +469,7 @@ mod tests {
         // §4.2: "within 1.2% of the default configuration"
         let s = scenario();
         let mut rng = Rng::new(2);
-        let out = optimize(&s, &AeLlmParams::small(), &mut rng);
+        let out = opt(&s, &AeLlmParams::small(), &mut rng);
         let drop = out.reference.default.accuracy
             - out.chosen_objectives.accuracy;
         assert!(drop < 2.0, "accuracy drop {drop}");
@@ -390,11 +479,11 @@ mod tests {
     fn surrogate_mode_uses_fewer_testbed_evals_than_direct() {
         let s = scenario();
         let mut rng = Rng::new(3);
-        let with = optimize(&s, &AeLlmParams::small(), &mut rng);
+        let with = opt(&s, &AeLlmParams::small(), &mut rng);
         let mut p_direct = AeLlmParams::small();
         p_direct.use_surrogates = false;
         let mut rng2 = Rng::new(3);
-        let without = optimize(&s, &p_direct, &mut rng2);
+        let without = opt(&s, &p_direct, &mut rng2);
         // surrogate path: bounded by n0 + R*k + 1; direct path: a full
         // (small) NSGA-II of testbed calls
         assert!(with.surrogate_evals > 0);
@@ -414,7 +503,7 @@ mod tests {
             p.refine_iters = r.max(1);
             p.evals_per_iter = if r == 0 { 1 } else { 10 };
             let mut rng = Rng::new(seed);
-            optimize(&s, &p, &mut rng).chosen_efficiency_score
+            opt(&s, &p, &mut rng).chosen_efficiency_score
         };
         // average over seeds to damp search stochasticity
         let mean = |r: usize| -> f64 {
@@ -434,7 +523,7 @@ mod tests {
         let mut p = AeLlmParams::small();
         p.mask = SpaceMask::without_quant();
         let mut rng = Rng::new(5);
-        let out = optimize(&s, &p, &mut rng);
+        let out = opt(&s, &p, &mut rng);
         assert_eq!(out.chosen.inf.precision, Precision::Fp16);
         for e in out.pareto.entries() {
             assert_eq!(e.config.inf.precision, Precision::Fp16);
@@ -445,7 +534,7 @@ mod tests {
     fn chosen_is_feasible_on_platform() {
         let s = scenario();
         let mut rng = Rng::new(6);
-        let out = optimize(&s, &AeLlmParams::small(), &mut rng);
+        let out = opt(&s, &AeLlmParams::small(), &mut rng);
         assert!(out.chosen_objectives.memory_gb
                 <= s.testbed.platform.mem_capacity_gb);
     }
@@ -455,8 +544,8 @@ mod tests {
         let s = scenario();
         let mut r1 = Rng::new(7);
         let mut r2 = Rng::new(7);
-        let o1 = optimize(&s, &AeLlmParams::small(), &mut r1);
-        let o2 = optimize(&s, &AeLlmParams::small(), &mut r2);
+        let o1 = opt(&s, &AeLlmParams::small(), &mut r1);
+        let o2 = opt(&s, &AeLlmParams::small(), &mut r2);
         assert_eq!(o1.chosen, o2.chosen);
         assert_eq!(o1.testbed_evals, o2.testbed_evals);
     }
@@ -467,7 +556,7 @@ mod tests {
         let go = |par: Parallelism| {
             let p = AeLlmParams { parallelism: par, ..AeLlmParams::small() };
             let mut rng = Rng::new(13);
-            let out = optimize(&s, &p, &mut rng);
+            let out = opt(&s, &p, &mut rng);
             let mut front: Vec<_> = out
                 .pareto
                 .entries()
@@ -480,5 +569,78 @@ mod tests {
         let seq = go(Parallelism::Sequential);
         let par4 = go(Parallelism::Threads(4));
         assert_eq!(seq, par4, "coordinator must be parallelism-invariant");
+    }
+
+    #[test]
+    fn observer_streams_one_event_per_refinement_iteration() {
+        let s = scenario();
+        let params = AeLlmParams::small();
+        let mut evaluator = s.testbed.clone();
+        let mut obs = CollectingObserver::default();
+        let mut rng = Rng::new(17);
+        let out = optimize_with_observer(&s, &params, &mut evaluator,
+                                         &mut obs, &mut rng);
+        assert_eq!(obs.events.len(), params.refine_iters);
+        for (i, e) in obs.events.iter().enumerate() {
+            assert_eq!(e.iteration, i + 1);
+            assert_eq!(e.total_iterations, params.refine_iters);
+            assert!(e.front_size >= 1);
+            assert!(e.hypervolume.is_finite() && e.hypervolume >= 0.0,
+                    "hv={}", e.hypervolume);
+        }
+        // Cumulative counters are monotone and bounded by the outcome
+        // (the final Default measurement lands after the last event).
+        for w in obs.events.windows(2) {
+            assert!(w[1].testbed_evals >= w[0].testbed_evals);
+            assert!(w[1].surrogate_evals >= w[0].surrogate_evals);
+        }
+        let last = obs.events.last().unwrap();
+        assert_eq!(last.testbed_evals + 1, out.testbed_evals);
+        assert_eq!(last.surrogate_evals, out.surrogate_evals);
+    }
+
+    #[test]
+    fn observed_run_is_bit_identical_to_unobserved() {
+        let s = scenario();
+        let params = AeLlmParams::small();
+        let run = |observe: bool| {
+            let mut evaluator = s.testbed.clone();
+            let mut rng = Rng::new(23);
+            let out = if observe {
+                let mut obs = CollectingObserver::default();
+                optimize_with_observer(&s, &params, &mut evaluator,
+                                       &mut obs, &mut rng)
+            } else {
+                optimize_with_observer(&s, &params, &mut evaluator,
+                                       &mut NullObserver, &mut rng)
+            };
+            (out.chosen, format!("{:?}", out.chosen_objectives),
+             out.testbed_evals, out.surrogate_evals)
+        };
+        assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn hypervolume_grows_with_a_dominating_entry() {
+        let s = scenario().noiseless();
+        let reference = Reference {
+            default: s.testbed.true_objectives(
+                &Config::default_baseline(), &s.model, &s.task),
+        };
+        let mut archive = ParetoArchive::new(16);
+        archive.insert(Config::default_baseline(), reference.default);
+        let hv0 = pareto_hypervolume(&archive, &reference);
+        // A strictly better point must enlarge the dominated volume.
+        let better = Objectives {
+            accuracy: reference.default.accuracy + 1.0,
+            latency_ms: reference.default.latency_ms * 0.5,
+            memory_gb: reference.default.memory_gb * 0.5,
+            energy_j: reference.default.energy_j * 0.5,
+        };
+        let mut c = Config::default_baseline();
+        c.inf.precision = Precision::Int8;
+        archive.insert(c, better);
+        let hv1 = pareto_hypervolume(&archive, &reference);
+        assert!(hv1 > hv0, "hv {hv0} -> {hv1}");
     }
 }

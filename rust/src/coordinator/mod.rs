@@ -1,10 +1,21 @@
 //! S9: the AE-LLM coordinator — Algorithm 1 (surrogate-guided NSGA-II
-//! with hardware-in-the-loop refinement), deployment scenarios, space
-//! masks for ablations, and the Fig. 4 sensitivity sweeps.
+//! with hardware-in-the-loop refinement) expressed against the
+//! [`crate::evaluator::Evaluator`] backend trait, the builder-style
+//! [`AeLlm`] session facade with typed errors and observer hooks,
+//! deployment scenarios, space masks for ablations, and the Fig. 4
+//! sensitivity sweeps.
 
 pub mod algorithm1;
+pub mod observer;
 pub mod scenario;
 pub mod sensitivity;
+pub mod session;
 
-pub use algorithm1::{optimize, optimize_with, AeLlmParams, Outcome};
+#[allow(deprecated)]
+pub use algorithm1::{optimize, optimize_with};
+pub use algorithm1::{optimize_with_observer, pareto_hypervolume,
+                     AeLlmParams, Outcome};
+pub use observer::{CollectingObserver, FnObserver, IterationEvent,
+                   NullObserver, RunObserver};
 pub use scenario::{Scenario, SpaceMask};
+pub use session::{AeLlm, AeLlmError, RunReport};

@@ -1,0 +1,120 @@
+//! Observer hooks for Algorithm 1 runs: per-refinement-iteration
+//! progress events the CLI, benches and serving dashboards can stream
+//! instead of waiting on a flat [`super::Outcome`].
+//!
+//! Observers are *passive*: they receive read-only snapshots after
+//! each refinement iteration and must not (and cannot) perturb the
+//! search — the events are computed from the measured archive without
+//! touching the run's RNG, so an observed run is bit-identical to an
+//! unobserved one.
+
+/// Snapshot emitted after each refinement iteration (Algorithm 1
+/// lines 3–6 completed once).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct IterationEvent {
+    /// 1-based refinement iteration index.
+    pub iteration: usize,
+    /// Total refinement iterations this run will perform.
+    pub total_iterations: usize,
+    /// Size of the measured Pareto archive after this iteration.
+    pub front_size: usize,
+    /// Normalized hypervolume of the measured front (each objective
+    /// divided by the Default configuration's value; reference point
+    /// [`super::algorithm1::HV_REF_FACTOR`]× the default in every
+    /// minimized dimension).  Monitoring signal, not a paper metric.
+    pub hypervolume: f64,
+    /// Cumulative expensive (testbed / hardware) evaluations so far.
+    pub testbed_evals: usize,
+    /// Cumulative cheap surrogate predictions so far.
+    pub surrogate_evals: usize,
+}
+
+/// Hook delivered per refinement iteration.  All methods have no-op
+/// defaults, so implementors override only what they need.
+pub trait RunObserver {
+    fn on_iteration(&mut self, _event: &IterationEvent) {}
+
+    /// Whether this observer consumes events at all.  When `false`
+    /// (only [`NullObserver`] in-tree), the coordinator skips building
+    /// the snapshot entirely — unobserved runs don't pay the exact 4-D
+    /// hypervolume computation per iteration.
+    fn enabled(&self) -> bool {
+        true
+    }
+}
+
+/// The do-nothing observer (the default for unobserved runs).
+pub struct NullObserver;
+
+impl RunObserver for NullObserver {
+    fn enabled(&self) -> bool {
+        false
+    }
+}
+
+/// Collects every event; useful in tests and for post-run reporting.
+#[derive(Debug, Default)]
+pub struct CollectingObserver {
+    pub events: Vec<IterationEvent>,
+}
+
+impl RunObserver for CollectingObserver {
+    fn on_iteration(&mut self, event: &IterationEvent) {
+        self.events.push(*event);
+    }
+}
+
+/// Adapts a closure to [`RunObserver`] — the one-liner the CLI uses to
+/// stream progress lines.
+pub struct FnObserver<F: FnMut(&IterationEvent)>(pub F);
+
+impl<F: FnMut(&IterationEvent)> RunObserver for FnObserver<F> {
+    fn on_iteration(&mut self, event: &IterationEvent) {
+        (self.0)(event)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn event(i: usize) -> IterationEvent {
+        IterationEvent {
+            iteration: i,
+            total_iterations: 3,
+            front_size: 4 + i,
+            hypervolume: i as f64,
+            testbed_evals: 100 * i,
+            surrogate_evals: 1000 * i,
+        }
+    }
+
+    #[test]
+    fn collecting_observer_accumulates_in_order() {
+        let mut obs = CollectingObserver::default();
+        for i in 1..=3 {
+            obs.on_iteration(&event(i));
+        }
+        assert_eq!(obs.events.len(), 3);
+        assert_eq!(obs.events[0].iteration, 1);
+        assert_eq!(obs.events[2].front_size, 7);
+    }
+
+    #[test]
+    fn fn_observer_forwards() {
+        let mut seen = Vec::new();
+        {
+            let mut obs = FnObserver(|e: &IterationEvent| {
+                seen.push(e.iteration);
+            });
+            obs.on_iteration(&event(1));
+            obs.on_iteration(&event(2));
+        }
+        assert_eq!(seen, vec![1, 2]);
+    }
+
+    #[test]
+    fn null_observer_is_a_no_op() {
+        NullObserver.on_iteration(&event(1));
+    }
+}

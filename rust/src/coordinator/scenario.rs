@@ -9,6 +9,8 @@ use crate::models::{self, ModelSpec};
 use crate::oracle::Testbed;
 use crate::tasks::{self, TaskSpec};
 
+use super::session::AeLlmError;
+
 /// One deployment scenario.
 #[derive(Clone, Debug)]
 pub struct Scenario {
@@ -21,9 +23,10 @@ pub struct Scenario {
 impl Scenario {
     /// Paper-default scenario for a model: its scale-tier platform and
     /// the blended task mix (what Table 2 aggregates).
-    pub fn for_model(name: &str) -> Option<Scenario> {
-        let model = models::by_name(name)?;
-        Some(Scenario {
+    pub fn for_model(name: &str) -> Result<Scenario, AeLlmError> {
+        let model = models::by_name(name)
+            .ok_or_else(|| AeLlmError::UnknownModel(name.to_string()))?;
+        Ok(Scenario {
             testbed: Testbed::for_model(&model),
             model,
             task: tasks::blended_task(),
@@ -31,9 +34,11 @@ impl Scenario {
         })
     }
 
-    pub fn with_task(mut self, task_name: &str) -> Option<Scenario> {
-        self.task = tasks::by_name(task_name)?;
-        Some(self)
+    pub fn with_task(mut self, task_name: &str)
+                     -> Result<Scenario, AeLlmError> {
+        self.task = tasks::by_name(task_name)
+            .ok_or_else(|| AeLlmError::UnknownTask(task_name.to_string()))?;
+        Ok(self)
     }
 
     pub fn with_platform(mut self, platform: Platform) -> Scenario {
@@ -142,7 +147,12 @@ mod tests {
         assert_eq!(s.testbed.platform.name, "A100-80GB");
         let s = s.with_task("GSM8K").unwrap();
         assert_eq!(s.task.name, "GSM8K");
-        assert!(Scenario::for_model("GPT-5").is_none());
+        assert!(matches!(Scenario::for_model("GPT-5"),
+                         Err(AeLlmError::UnknownModel(_))));
+        assert!(matches!(
+            Scenario::for_model("Phi-2").unwrap().with_task("nope"),
+            Err(AeLlmError::UnknownTask(_))
+        ));
     }
 
     #[test]

@@ -1,0 +1,424 @@
+//! The builder-style session facade: name-addressed scenario
+//! construction with typed errors, seeded runs over any [`Evaluator`],
+//! and a serializable [`RunReport`].
+//!
+//! ```no_run
+//! use ae_llm::coordinator::AeLlm;
+//! use ae_llm::metrics::Preferences;
+//!
+//! # fn main() -> Result<(), ae_llm::coordinator::AeLlmError> {
+//! let report = AeLlm::for_model("LLaMA-2-7B")?
+//!     .task("GSM8K")?
+//!     .platform("A100-80GB")?
+//!     .prefs(Preferences::latency_critical())
+//!     .seed(7)
+//!     .run_testbed();
+//! println!("chosen {}", report.outcome.chosen.signature());
+//! # Ok(())
+//! # }
+//! ```
+
+use std::fmt;
+
+use crate::evaluator::Evaluator;
+use crate::hardware;
+use crate::metrics::Preferences;
+use crate::models;
+use crate::tasks;
+use crate::util::json::Json;
+use crate::util::Rng;
+
+use super::algorithm1::{optimize_with_observer, AeLlmParams, Outcome};
+use super::observer::{IterationEvent, NullObserver, RunObserver};
+use super::scenario::Scenario;
+
+// ---------------------------------------------------------------------------
+// Typed errors
+// ---------------------------------------------------------------------------
+
+/// Typed lookup errors for scenario construction — replaces the old
+/// `Option` returns, so callers (and the CLI) can tell *which* name
+/// failed and what the valid choices are.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum AeLlmError {
+    UnknownModel(String),
+    UnknownTask(String),
+    UnknownPlatform(String),
+    UnknownPrefs(String),
+}
+
+fn join_names<I: IntoIterator<Item = &'static str>>(names: I) -> String {
+    names.into_iter().collect::<Vec<_>>().join(", ")
+}
+
+impl fmt::Display for AeLlmError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AeLlmError::UnknownModel(name) => write!(
+                f,
+                "unknown model {name:?} (known: {})",
+                join_names(
+                    models::zoo()
+                        .iter()
+                        .chain(models::vlm_zoo().iter())
+                        .map(|m| m.name)
+                        .collect::<Vec<_>>(),
+                )
+            ),
+            AeLlmError::UnknownTask(name) => write!(
+                f,
+                "unknown task {name:?} (known: {})",
+                join_names(
+                    tasks::suite()
+                        .iter()
+                        .chain(tasks::vlm_suite().iter())
+                        .map(|t| t.name)
+                        .collect::<Vec<_>>(),
+                )
+            ),
+            AeLlmError::UnknownPlatform(name) => write!(
+                f,
+                "unknown platform {name:?} (known: {})",
+                join_names(
+                    hardware::platforms().iter().map(|p| p.name)
+                        .collect::<Vec<_>>(),
+                )
+            ),
+            AeLlmError::UnknownPrefs(name) => write!(
+                f,
+                "unknown preferences {name:?} (known: balanced, latency, \
+                 memory, accuracy, green)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AeLlmError {}
+
+// ---------------------------------------------------------------------------
+// Builder
+// ---------------------------------------------------------------------------
+
+/// Builder-style session over one deployment scenario: configure by
+/// name, then [`run`](AeLlm::run) against any [`Evaluator`] backend.
+#[derive(Clone, Debug)]
+pub struct AeLlm {
+    scenario: Scenario,
+    params: AeLlmParams,
+    seed: u64,
+}
+
+impl AeLlm {
+    /// Start a session for a model (its paper hardware tier and the
+    /// blended task mix, as in [`Scenario::for_model`]).
+    pub fn for_model(name: &str) -> Result<AeLlm, AeLlmError> {
+        Ok(AeLlm::from_scenario(Scenario::for_model(name)?))
+    }
+
+    /// Start from an already-built scenario (platform objects,
+    /// custom testbeds, `noiseless()`, ...).
+    pub fn from_scenario(scenario: Scenario) -> AeLlm {
+        AeLlm { scenario, params: AeLlmParams::default(), seed: 42 }
+    }
+
+    pub fn task(mut self, name: &str) -> Result<AeLlm, AeLlmError> {
+        self.scenario = self.scenario.with_task(name)?;
+        Ok(self)
+    }
+
+    pub fn platform(mut self, name: &str) -> Result<AeLlm, AeLlmError> {
+        let platform = hardware::by_name(name)
+            .ok_or_else(|| AeLlmError::UnknownPlatform(name.to_string()))?;
+        self.scenario = self.scenario.with_platform(platform);
+        Ok(self)
+    }
+
+    pub fn prefs(mut self, prefs: Preferences) -> AeLlm {
+        self.scenario = self.scenario.with_prefs(prefs);
+        self
+    }
+
+    /// Preferences by CLI preset name (`balanced`, `latency`, `memory`,
+    /// `accuracy`, `green`).
+    pub fn prefs_named(self, name: &str) -> Result<AeLlm, AeLlmError> {
+        let prefs = crate::report::prefs_by_name(name)
+            .ok_or_else(|| AeLlmError::UnknownPrefs(name.to_string()))?;
+        Ok(self.prefs(prefs))
+    }
+
+    pub fn params(mut self, params: AeLlmParams) -> AeLlm {
+        self.params = params;
+        self
+    }
+
+    /// Shrink to the quick test/demo budget ([`AeLlmParams::small`]),
+    /// preserving any mask/toggle customization is the caller's job —
+    /// this replaces the whole parameter set.
+    pub fn quick(self) -> AeLlm {
+        self.params(AeLlmParams::small())
+    }
+
+    pub fn seed(mut self, seed: u64) -> AeLlm {
+        self.seed = seed;
+        self
+    }
+
+    pub fn scenario(&self) -> &Scenario {
+        &self.scenario
+    }
+
+    pub fn params_ref(&self) -> &AeLlmParams {
+        &self.params
+    }
+
+    /// Run Algorithm 1 against `evaluator`, unobserved.
+    pub fn run(&self, evaluator: &mut dyn Evaluator) -> RunReport {
+        self.run_observed(evaluator, &mut NullObserver)
+    }
+
+    /// Run Algorithm 1 against `evaluator`, streaming iteration events
+    /// to `observer` (the report also collects them).
+    pub fn run_observed(&self, evaluator: &mut dyn Evaluator,
+                        observer: &mut dyn RunObserver) -> RunReport {
+        let mut tee = Tee { events: Vec::new(), forward: observer };
+        let t0 = std::time::Instant::now();
+        let mut rng = Rng::new(self.seed);
+        // Delta, not the evaluator's lifetime total: a reused evaluator
+        // must still report only what *this* run consumed.
+        let evals_before = evaluator.evals();
+        let outcome = optimize_with_observer(&self.scenario, &self.params,
+                                             evaluator, &mut tee, &mut rng);
+        RunReport {
+            model: self.scenario.model.name.to_string(),
+            task: self.scenario.task.name.to_string(),
+            platform: self.scenario.testbed.platform.name.to_string(),
+            prefs: self.scenario.prefs,
+            seed: self.seed,
+            evaluator_evals: evaluator.evals() - evals_before,
+            iterations: tee.events,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+            outcome,
+        }
+    }
+
+    /// Run against a fresh clone of the scenario's own testbed — the
+    /// simulated-fleet default everyone starts with.
+    pub fn run_testbed(&self) -> RunReport {
+        let mut evaluator = self.scenario.testbed.clone();
+        self.run(&mut evaluator)
+    }
+
+    /// Lean testbed run: just the [`Outcome`], no report assembly and
+    /// no event collection — with a `NullObserver` the coordinator
+    /// skips the per-iteration snapshot (and its exact 4-D
+    /// hypervolume) entirely.  The one recipe report sweeps, tests and
+    /// benches share; bit-identical to the legacy
+    /// `optimize(scenario, params, &mut Rng::new(seed))` path
+    /// (tests/integration_api.rs).
+    pub fn run_testbed_outcome(&self) -> Outcome {
+        let mut evaluator = self.scenario.testbed.clone();
+        let mut rng = Rng::new(self.seed);
+        optimize_with_observer(&self.scenario, &self.params, &mut evaluator,
+                               &mut NullObserver, &mut rng)
+    }
+
+    /// [`run_testbed`](Self::run_testbed) with an observer.
+    pub fn run_testbed_observed(&self, observer: &mut dyn RunObserver)
+                                -> RunReport {
+        let mut evaluator = self.scenario.testbed.clone();
+        self.run_observed(&mut evaluator, observer)
+    }
+}
+
+/// Collects events for the report while forwarding to the caller's
+/// observer.
+struct Tee<'a> {
+    events: Vec<IterationEvent>,
+    forward: &'a mut dyn RunObserver,
+}
+
+impl RunObserver for Tee<'_> {
+    fn on_iteration(&mut self, event: &IterationEvent) {
+        self.events.push(*event);
+        self.forward.on_iteration(event);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RunReport
+// ---------------------------------------------------------------------------
+
+/// Everything one run produced: the scenario coordinates, the
+/// [`Outcome`], the observer's iteration stream, and wall-clock — in a
+/// shape that serializes to JSON (`ae-llm search --json`).
+#[derive(Clone)]
+pub struct RunReport {
+    pub model: String,
+    pub task: String,
+    pub platform: String,
+    pub prefs: Preferences,
+    pub seed: u64,
+    /// The evaluator's own request counter (differs from
+    /// `outcome.testbed_evals` only for decorators, e.g. a caching
+    /// wrapper whose inner backend measured less).
+    pub evaluator_evals: usize,
+    pub iterations: Vec<IterationEvent>,
+    pub wall_ms: f64,
+    pub outcome: Outcome,
+}
+
+fn objectives_json(o: &crate::oracle::Objectives) -> Json {
+    let mut m = std::collections::BTreeMap::new();
+    m.insert("accuracy".into(), Json::Num(o.accuracy));
+    m.insert("latency_ms".into(), Json::Num(o.latency_ms));
+    m.insert("memory_gb".into(), Json::Num(o.memory_gb));
+    m.insert("energy_j".into(), Json::Num(o.energy_j));
+    Json::Obj(m)
+}
+
+impl RunReport {
+    /// Serialize the full report (schema `ae-llm.run-report/v1`).
+    pub fn to_json(&self) -> Json {
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("schema".into(),
+                    Json::Str("ae-llm.run-report/v1".into()));
+        root.insert("model".into(), Json::Str(self.model.clone()));
+        root.insert("task".into(), Json::Str(self.task.clone()));
+        root.insert("platform".into(), Json::Str(self.platform.clone()));
+        // String, not Num: Json numbers are f64 and would corrupt
+        // seeds above 2^53, breaking replay-from-report.
+        root.insert("seed".into(), Json::Str(self.seed.to_string()));
+        root.insert("wall_ms".into(), Json::Num(self.wall_ms));
+
+        let mut prefs = std::collections::BTreeMap::new();
+        prefs.insert("w_acc".into(), Json::Num(self.prefs.w_acc));
+        prefs.insert("w_lat".into(), Json::Num(self.prefs.w_lat));
+        prefs.insert("w_mem".into(), Json::Num(self.prefs.w_mem));
+        prefs.insert("w_energy".into(), Json::Num(self.prefs.w_energy));
+        root.insert("prefs".into(), Json::Obj(prefs));
+
+        let out = &self.outcome;
+        let mut chosen = std::collections::BTreeMap::new();
+        chosen.insert("signature".into(),
+                      Json::Str(out.chosen.signature()));
+        chosen.insert("objectives".into(),
+                      objectives_json(&out.chosen_objectives));
+        chosen.insert("utility".into(), Json::Num(out.chosen_utility));
+        chosen.insert("efficiency_score".into(),
+                      Json::Num(out.chosen_efficiency_score));
+        root.insert("chosen".into(), Json::Obj(chosen));
+
+        root.insert("reference_default".into(),
+                    objectives_json(&out.reference.default));
+        root.insert("testbed_evals".into(),
+                    Json::Num(out.testbed_evals as f64));
+        root.insert("surrogate_evals".into(),
+                    Json::Num(out.surrogate_evals as f64));
+        root.insert("evaluator_evals".into(),
+                    Json::Num(self.evaluator_evals as f64));
+
+        let pareto: Vec<Json> = out
+            .pareto
+            .entries()
+            .iter()
+            .map(|e| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("signature".into(), Json::Str(e.config.signature()));
+                m.insert("objectives".into(),
+                         objectives_json(&e.objectives));
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("pareto".into(), Json::Arr(pareto));
+
+        let iterations: Vec<Json> = self
+            .iterations
+            .iter()
+            .map(|e| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("iteration".into(), Json::Num(e.iteration as f64));
+                m.insert("front_size".into(),
+                         Json::Num(e.front_size as f64));
+                m.insert("hypervolume".into(), Json::Num(e.hypervolume));
+                m.insert("testbed_evals".into(),
+                         Json::Num(e.testbed_evals as f64));
+                m.insert("surrogate_evals".into(),
+                         Json::Num(e.surrogate_evals as f64));
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("iterations".into(), Json::Arr(iterations));
+
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_reports_typed_errors() {
+        match AeLlm::for_model("GPT-5") {
+            Err(AeLlmError::UnknownModel(n)) => assert_eq!(n, "GPT-5"),
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+        let b = AeLlm::for_model("Phi-2").unwrap();
+        assert!(matches!(b.clone().task("nope"),
+                         Err(AeLlmError::UnknownTask(_))));
+        assert!(matches!(b.clone().platform("TPU-9000"),
+                         Err(AeLlmError::UnknownPlatform(_))));
+        assert!(matches!(b.prefs_named("speedy"),
+                         Err(AeLlmError::UnknownPrefs(_))));
+    }
+
+    #[test]
+    fn error_messages_name_the_culprit_and_choices() {
+        let e = AeLlmError::UnknownModel("GPT-5".into()).to_string();
+        assert!(e.contains("GPT-5") && e.contains("LLaMA-2-7B"), "{e}");
+        let e = AeLlmError::UnknownPrefs("speedy".into()).to_string();
+        assert!(e.contains("speedy") && e.contains("green"), "{e}");
+    }
+
+    #[test]
+    fn builder_configures_the_scenario() {
+        let b = AeLlm::for_model("Mistral-7B")
+            .unwrap()
+            .task("GSM8K")
+            .unwrap()
+            .platform("RTX-4090")
+            .unwrap()
+            .prefs(Preferences::memory_constrained())
+            .seed(9);
+        assert_eq!(b.scenario().model.name, "Mistral-7B");
+        assert_eq!(b.scenario().task.name, "GSM8K");
+        assert_eq!(b.scenario().testbed.platform.name, "RTX-4090");
+        assert_eq!(b.seed, 9);
+    }
+
+    #[test]
+    fn run_report_serializes_and_parses_back() {
+        let report = AeLlm::for_model("Phi-2")
+            .unwrap()
+            .quick()
+            .seed(3)
+            .run_testbed();
+        assert_eq!(report.iterations.len(),
+                   report.iterations.last().unwrap().total_iterations);
+        let text = report.to_json().dump();
+        let parsed = Json::parse(&text).expect("valid JSON");
+        assert_eq!(parsed.get("schema").and_then(|s| s.as_str()),
+                   Some("ae-llm.run-report/v1"));
+        assert_eq!(parsed.get("model").and_then(|s| s.as_str()),
+                   Some("Phi-2"));
+        assert_eq!(parsed.get("seed").and_then(|s| s.as_str()), Some("3"));
+        let chosen_sig = parsed
+            .get("chosen")
+            .and_then(|c| c.get("signature"))
+            .and_then(|s| s.as_str())
+            .unwrap();
+        assert_eq!(chosen_sig, report.outcome.chosen.signature());
+        assert!(parsed.get("iterations").and_then(|a| a.as_arr()).unwrap()
+            .len() >= 1);
+    }
+}

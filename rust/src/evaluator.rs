@@ -1,0 +1,527 @@
+//! S13: the first-class evaluation backend — the `Evaluator` trait and
+//! its decorators.
+//!
+//! The paper's premise is that AE-LLM adapts across deployment
+//! scenarios, which in practice means *the evaluation backend is the
+//! thing practitioners swap*: a simulated cost model while iterating, a
+//! real hardware harness for the final run, a cached trace in CI.
+//! Algorithm 1's line 5 ("evaluate selected configurations on actual
+//! hardware") is therefore expressed against this trait rather than an
+//! ad-hoc closure type.
+//!
+//! Implementations in-tree:
+//!
+//! * [`crate::oracle::Testbed`] — the simulated measurement fleet
+//!   (parallel batch fan-out, noise-aware, the default backend);
+//! * [`crate::runtime::MeasuredEvaluator`] — real PJRT artifact
+//!   executions (hardware in the loop);
+//! * [`FnEvaluator`] — adapts any `FnMut(&[Config], &mut Rng)` closure
+//!   (the legacy `optimize_with` calling convention);
+//! * [`CachingEvaluator`] — memoizes repeated configurations so an
+//!   expensive backend is never asked the same question twice;
+//! * [`RecordingEvaluator`] — captures a replayable [`Trace`] of every
+//!   measurement, for reports and deterministic re-runs.
+//!
+//! Determinism contract (DESIGN.md §8 and §9): an evaluator must
+//! return one `Objectives` per input configuration, in input order, and
+//! must consume `rng` identically at every [`Parallelism`] level.
+//! Backends that need per-item noise split one child RNG per config
+//! *sequentially* before fanning out (see `Testbed::measure_batch`).
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::config::Config;
+use crate::models::ModelSpec;
+use crate::oracle::Objectives;
+use crate::tasks::TaskSpec;
+use crate::util::pool::Parallelism;
+use crate::util::Rng;
+
+/// Everything an evaluator may need about the run it serves: the
+/// scenario's model and task, plus the coordinator's parallelism knob
+/// (backends that fan out must honor it so results stay reproducible).
+#[derive(Clone, Copy, Debug)]
+pub struct EvalContext<'a> {
+    pub model: &'a ModelSpec,
+    pub task: &'a TaskSpec,
+    pub parallelism: Parallelism,
+}
+
+impl<'a> EvalContext<'a> {
+    pub fn new(model: &'a ModelSpec, task: &'a TaskSpec,
+               parallelism: Parallelism) -> Self {
+        EvalContext { model, task, parallelism }
+    }
+}
+
+/// An evaluation backend for Algorithm 1 line 5 ("evaluate selected
+/// configurations on actual hardware").
+///
+/// Receives a whole batch because line 5 is a fan-out point: parallel
+/// backends spread the batch over workers, sequential ones just map.
+/// Must return exactly one [`Objectives`] per input, in input order.
+///
+/// ```
+/// use ae_llm::config::Config;
+/// use ae_llm::evaluator::{EvalContext, Evaluator};
+/// use ae_llm::oracle::Objectives;
+/// use ae_llm::util::Rng;
+///
+/// /// A toy backend: every configuration costs the same.
+/// struct Flat(usize);
+///
+/// impl Evaluator for Flat {
+///     fn measure_batch(&mut self, cs: &[Config], _ctx: &EvalContext,
+///                      _rng: &mut Rng) -> Vec<Objectives> {
+///         self.0 += cs.len();
+///         cs.iter()
+///             .map(|_| Objectives {
+///                 accuracy: 50.0,
+///                 latency_ms: 10.0,
+///                 memory_gb: 1.0,
+///                 energy_j: 0.1,
+///             })
+///             .collect()
+///     }
+///     fn evals(&self) -> usize {
+///         self.0
+///     }
+/// }
+///
+/// let mut ev = Flat(0);
+/// let mut rng = Rng::new(1);
+/// let model = ae_llm::models::by_name("LLaMA-2-7B").unwrap();
+/// let task = ae_llm::tasks::blended_task();
+/// let ctx =
+///     EvalContext::new(&model, &task, ae_llm::util::Parallelism::Sequential);
+/// let out = ev.measure_batch(&[Config::default_baseline()], &ctx, &mut rng);
+/// assert_eq!(out.len(), 1);
+/// assert_eq!(ev.evals(), 1);
+/// ```
+pub trait Evaluator {
+    /// Measure a batch of configurations; one result per input, in
+    /// input order.
+    fn measure_batch(&mut self, cs: &[Config], ctx: &EvalContext,
+                     rng: &mut Rng) -> Vec<Objectives>;
+
+    /// Total configurations this evaluator has been asked to measure
+    /// (the paper's "search cost" denominator).  Decorators count the
+    /// requests they serve, which may exceed the measurements their
+    /// inner backend performed (see [`CachingEvaluator::misses`]).
+    fn evals(&self) -> usize;
+
+    /// Convenience scalar form of [`measure_batch`](Self::measure_batch).
+    fn measure_one(&mut self, c: &Config, ctx: &EvalContext,
+                   rng: &mut Rng) -> Objectives {
+        self.measure_batch(std::slice::from_ref(c), ctx, rng)[0]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FnEvaluator: the legacy-closure adapter
+// ---------------------------------------------------------------------------
+
+/// Adapts the legacy `FnMut(&[Config], &mut Rng) -> Vec<Objectives>`
+/// calling convention to the trait, adding the built-in eval counting
+/// the closure form never had.  This is what keeps the deprecated
+/// `optimize_with` entry point a five-line shim.
+pub struct FnEvaluator<F> {
+    f: F,
+    evals: usize,
+}
+
+impl<F> FnEvaluator<F>
+where
+    F: FnMut(&[Config], &mut Rng) -> Vec<Objectives>,
+{
+    pub fn new(f: F) -> Self {
+        FnEvaluator { f, evals: 0 }
+    }
+}
+
+impl<F> Evaluator for FnEvaluator<F>
+where
+    F: FnMut(&[Config], &mut Rng) -> Vec<Objectives>,
+{
+    fn measure_batch(&mut self, cs: &[Config], _ctx: &EvalContext,
+                     rng: &mut Rng) -> Vec<Objectives> {
+        self.evals += cs.len();
+        let out = (self.f)(cs, rng);
+        assert_eq!(out.len(), cs.len(),
+                   "evaluator closure must return one Objectives per config");
+        out
+    }
+
+    fn evals(&self) -> usize {
+        self.evals
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CachingEvaluator: memoize repeat configurations
+// ---------------------------------------------------------------------------
+
+/// Decorator that memoizes measurements by configuration, so repeat
+/// requests (the coordinator re-measures the Default fallback, and
+/// refinement candidates can revisit initial-sample configs) never
+/// reach the expensive inner backend twice.
+///
+/// Caching changes the *noise draws* of a stochastic backend — a
+/// repeated config returns its first measurement instead of a fresh
+/// noisy one, and the inner backend consumes `rng` only for misses.
+/// Wrap deterministic backends (e.g. `MeasuredEvaluator`, a noiseless
+/// `Testbed`) when bit-for-bit reproducibility against the uncached
+/// path matters.
+pub struct CachingEvaluator<E> {
+    inner: E,
+    cache: BTreeMap<Config, Objectives>,
+    hits: usize,
+    misses: usize,
+}
+
+impl<E: Evaluator> CachingEvaluator<E> {
+    pub fn new(inner: E) -> Self {
+        CachingEvaluator {
+            inner,
+            cache: BTreeMap::new(),
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Requests served from the memo table.
+    pub fn hits(&self) -> usize {
+        self.hits
+    }
+
+    /// Requests that reached the inner backend.
+    pub fn misses(&self) -> usize {
+        self.misses
+    }
+
+    /// Distinct configurations measured so far.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+
+    pub fn into_inner(self) -> E {
+        self.inner
+    }
+}
+
+impl<E: Evaluator> Evaluator for CachingEvaluator<E> {
+    fn measure_batch(&mut self, cs: &[Config], ctx: &EvalContext,
+                     rng: &mut Rng) -> Vec<Objectives> {
+        // Partition the batch: first sighting of an uncached config is a
+        // miss; cached configs and intra-batch duplicates are hits.
+        let mut fresh: Vec<Config> = Vec::new();
+        for c in cs {
+            if self.cache.contains_key(c) || fresh.contains(c) {
+                self.hits += 1;
+            } else {
+                self.misses += 1;
+                fresh.push(*c);
+            }
+        }
+        if !fresh.is_empty() {
+            let measured = self.inner.measure_batch(&fresh, ctx, rng);
+            assert_eq!(measured.len(), fresh.len(),
+                       "inner evaluator must return one Objectives per config");
+            for (c, o) in fresh.iter().zip(measured) {
+                self.cache.insert(*c, o);
+            }
+        }
+        cs.iter().map(|c| self.cache[c]).collect()
+    }
+
+    /// Requests served (hits + misses); the inner backend's own
+    /// counter reports actual measurements.
+    fn evals(&self) -> usize {
+        self.hits + self.misses
+    }
+}
+
+// ---------------------------------------------------------------------------
+// RecordingEvaluator: capture a replayable trace
+// ---------------------------------------------------------------------------
+
+/// A recorded sequence of (configuration, measurement) pairs, in the
+/// order the run requested them.  Produced by [`RecordingEvaluator`];
+/// replayed by [`TracePlayer`].
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    steps: Vec<(Config, Objectives)>,
+}
+
+impl Trace {
+    pub fn len(&self) -> usize {
+        self.steps.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.steps.is_empty()
+    }
+
+    pub fn steps(&self) -> &[(Config, Objectives)] {
+        &self.steps
+    }
+
+    /// Build a replaying evaluator over this trace.  Measurements for a
+    /// config are replayed FIFO; once a config's recordings are
+    /// exhausted its last value sticks (so a replayed run may ask for
+    /// one more Default measurement than was recorded).
+    pub fn player(&self) -> TracePlayer {
+        let mut map: BTreeMap<Config, VecDeque<Objectives>> = BTreeMap::new();
+        for (c, o) in &self.steps {
+            map.entry(*c).or_default().push_back(*o);
+        }
+        TracePlayer { map, evals: 0, consume_rng_splits: false }
+    }
+}
+
+/// Decorator that records every measurement flowing through it.
+pub struct RecordingEvaluator<E> {
+    inner: E,
+    trace: Trace,
+}
+
+impl<E: Evaluator> RecordingEvaluator<E> {
+    pub fn new(inner: E) -> Self {
+        RecordingEvaluator { inner, trace: Trace::default() }
+    }
+
+    pub fn trace(&self) -> &Trace {
+        &self.trace
+    }
+
+    pub fn into_trace(self) -> Trace {
+        self.trace
+    }
+
+    pub fn inner(&self) -> &E {
+        &self.inner
+    }
+}
+
+impl<E: Evaluator> Evaluator for RecordingEvaluator<E> {
+    fn measure_batch(&mut self, cs: &[Config], ctx: &EvalContext,
+                     rng: &mut Rng) -> Vec<Objectives> {
+        let out = self.inner.measure_batch(cs, ctx, rng);
+        for (c, o) in cs.iter().zip(&out) {
+            self.trace.steps.push((*c, *o));
+        }
+        out
+    }
+
+    fn evals(&self) -> usize {
+        self.inner.evals()
+    }
+}
+
+/// Replays a [`Trace`] as an evaluation backend: same configurations
+/// in, recorded measurements out.  Panics on a configuration the trace
+/// never saw — replays only reproduce the run that produced them (same
+/// scenario, params and seed).
+pub struct TracePlayer {
+    map: BTreeMap<Config, VecDeque<Objectives>>,
+    evals: usize,
+    consume_rng_splits: bool,
+}
+
+impl TracePlayer {
+    /// Make the player consume one `rng.split()` per configuration,
+    /// mirroring `Testbed::measure_batch`'s RNG discipline.  Required
+    /// when replaying a trace recorded over the testbed so the rest of
+    /// the run sees the same RNG stream it saw while recording; leave
+    /// off for backends that ignore `rng` (e.g. `MeasuredEvaluator`).
+    pub fn consume_rng_splits(mut self, yes: bool) -> Self {
+        self.consume_rng_splits = yes;
+        self
+    }
+}
+
+impl Evaluator for TracePlayer {
+    fn measure_batch(&mut self, cs: &[Config], _ctx: &EvalContext,
+                     rng: &mut Rng) -> Vec<Objectives> {
+        cs.iter()
+            .map(|c| {
+                if self.consume_rng_splits {
+                    let _ = rng.split();
+                }
+                self.evals += 1;
+                let q = self.map.get_mut(c).unwrap_or_else(|| {
+                    panic!("trace replay: configuration {c} was never recorded")
+                });
+                if q.len() > 1 {
+                    q.pop_front().unwrap()
+                } else {
+                    *q.front().expect("trace replay: empty queue")
+                }
+            })
+            .collect()
+    }
+
+    fn evals(&self) -> usize {
+        self.evals
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::enumerate;
+    use crate::hardware;
+    use crate::models;
+    use crate::oracle::Testbed;
+    use crate::tasks;
+
+    fn ctx_parts() -> (ModelSpec, TaskSpec) {
+        (models::by_name("LLaMA-2-7B").unwrap(), tasks::blended_task())
+    }
+
+    #[test]
+    fn fn_evaluator_counts_and_forwards() {
+        let (m, t) = ctx_parts();
+        let tb = Testbed::noiseless(hardware::a100());
+        let (tb2, m2, t2) = (tb.clone(), m.clone(), t.clone());
+        let mut ev = FnEvaluator::new(move |cs: &[Config], rng: &mut Rng| {
+            tb2.measure_batch(cs, &m2, &t2, rng, Parallelism::Sequential)
+        });
+        let ctx = EvalContext::new(&m, &t, Parallelism::Sequential);
+        let mut rng = Rng::new(1);
+        let cs: Vec<Config> =
+            (0..5).map(|_| enumerate::sample(&mut rng)).collect();
+        let out = ev.measure_batch(&cs, &ctx, &mut rng);
+        assert_eq!(out.len(), 5);
+        assert_eq!(ev.evals(), 5);
+        let _ = ev.measure_one(&cs[0], &ctx, &mut rng);
+        assert_eq!(ev.evals(), 6);
+    }
+
+    #[test]
+    fn testbed_implements_evaluator_with_counting() {
+        let (m, t) = ctx_parts();
+        let mut ev = Testbed::noiseless(hardware::a100());
+        let ctx = EvalContext::new(&m, &t, Parallelism::Sequential);
+        let mut rng = Rng::new(2);
+        let cs: Vec<Config> =
+            (0..7).map(|_| enumerate::sample(&mut rng)).collect();
+        // UFCS: `Testbed` also has a 6-arg inherent `measure_batch`.
+        let out = Evaluator::measure_batch(&mut ev, &cs, &ctx, &mut rng);
+        assert_eq!(out.len(), 7);
+        assert_eq!(Evaluator::evals(&ev), 7);
+        // Noiseless: the trait path returns ground truth.
+        let truth = ev.true_objectives(&cs[0], &m, &t);
+        assert_eq!(out[0], truth);
+    }
+
+    #[test]
+    fn trait_batch_matches_inherent_batch_bitwise() {
+        // The trait path must be a pure delegation: same rng, same
+        // parallelism, same measurements as the inherent method.
+        let (m, t) = ctx_parts();
+        let noisy = Testbed::new(hardware::a100());
+        let mut rng = Rng::new(3);
+        let cs: Vec<Config> =
+            (0..16).map(|_| enumerate::sample(&mut rng)).collect();
+        let mut r1 = Rng::new(11);
+        let direct =
+            noisy.measure_batch(&cs, &m, &t, &mut r1, Parallelism::Threads(4));
+        let mut ev = noisy.clone();
+        let ctx = EvalContext::new(&m, &t, Parallelism::Threads(4));
+        let mut r2 = Rng::new(11);
+        let via_trait = Evaluator::measure_batch(&mut ev, &cs, &ctx, &mut r2);
+        assert_eq!(direct, via_trait);
+    }
+
+    #[test]
+    fn caching_hit_miss_accounting() {
+        let (m, t) = ctx_parts();
+        let mut ev = CachingEvaluator::new(Testbed::noiseless(hardware::a100()));
+        let ctx = EvalContext::new(&m, &t, Parallelism::Sequential);
+        let mut rng = Rng::new(4);
+        let a = enumerate::sample(&mut rng);
+        let b = enumerate::sample(&mut rng);
+        assert_ne!(a, b);
+        // First batch: a, b, a -> two misses, one intra-batch hit.
+        let out = ev.measure_batch(&[a, b, a], &ctx, &mut rng);
+        assert_eq!(out[0], out[2]);
+        assert_eq!((ev.hits(), ev.misses()), (1, 2));
+        // Second batch: both cached.
+        let _ = ev.measure_batch(&[b, a], &ctx, &mut rng);
+        assert_eq!((ev.hits(), ev.misses()), (3, 2));
+        assert_eq!(ev.cached(), 2);
+        assert_eq!(ev.evals(), 5);
+        // Inner backend only ever measured the two distinct configs.
+        assert_eq!(Evaluator::evals(ev.inner()), 2);
+    }
+
+    #[test]
+    fn caching_preserves_deterministic_values() {
+        let (m, t) = ctx_parts();
+        let tb = Testbed::noiseless(hardware::a100());
+        let ctx = EvalContext::new(&m, &t, Parallelism::Sequential);
+        let mut rng = Rng::new(5);
+        let cs: Vec<Config> =
+            (0..10).map(|_| enumerate::sample(&mut rng)).collect();
+        let mut plain = tb.clone();
+        let mut cached = CachingEvaluator::new(tb);
+        let a = Evaluator::measure_batch(&mut plain, &cs, &ctx,
+                                         &mut Rng::new(6));
+        let b = cached.measure_batch(&cs, &ctx, &mut Rng::new(6));
+        let c = cached.measure_batch(&cs, &ctx, &mut Rng::new(7));
+        assert_eq!(a, b);
+        assert_eq!(b, c, "repeat batch must replay the memoized values");
+    }
+
+    #[test]
+    fn recording_and_replay_round_trip() {
+        let (m, t) = ctx_parts();
+        let ctx = EvalContext::new(&m, &t, Parallelism::Sequential);
+        let mut rng = Rng::new(8);
+        let cs: Vec<Config> =
+            (0..6).map(|_| enumerate::sample(&mut rng)).collect();
+        let mut rec =
+            RecordingEvaluator::new(Testbed::noiseless(hardware::a100()));
+        let original = rec.measure_batch(&cs, &ctx, &mut rng);
+        assert_eq!(rec.trace().len(), 6);
+        let mut player = rec.into_trace().player();
+        let replayed = player.measure_batch(&cs, &ctx, &mut Rng::new(99));
+        assert_eq!(original, replayed);
+        assert_eq!(player.evals(), 6);
+    }
+
+    #[test]
+    fn replay_is_fifo_per_config() {
+        let (m, t) = ctx_parts();
+        let ctx = EvalContext::new(&m, &t, Parallelism::Sequential);
+        // Noisy testbed: the same config measured twice gives two
+        // different values; replay must hand them back in order, then
+        // stick on the last.
+        let c = Config::default_baseline();
+        let mut rec = RecordingEvaluator::new(Testbed::new(hardware::a100()));
+        let mut rng = Rng::new(9);
+        let o1 = rec.measure_one(&c, &ctx, &mut rng);
+        let o2 = rec.measure_one(&c, &ctx, &mut rng);
+        assert_ne!(o1, o2);
+        let mut player = rec.into_trace().player();
+        let mut r = Rng::new(1);
+        assert_eq!(player.measure_one(&c, &ctx, &mut r), o1);
+        assert_eq!(player.measure_one(&c, &ctx, &mut r), o2);
+        assert_eq!(player.measure_one(&c, &ctx, &mut r), o2, "last sticks");
+    }
+
+    #[test]
+    #[should_panic(expected = "never recorded")]
+    fn replay_panics_on_unseen_config() {
+        let (m, t) = ctx_parts();
+        let ctx = EvalContext::new(&m, &t, Parallelism::Sequential);
+        let mut player = Trace::default().player();
+        let _ = player.measure_one(&Config::default_baseline(), &ctx,
+                                   &mut Rng::new(1));
+    }
+}

@@ -21,6 +21,7 @@
 
 pub mod config;
 pub mod coordinator;
+pub mod evaluator;
 pub mod hardware;
 pub mod metrics;
 pub mod models;

@@ -2,25 +2,26 @@
 //!
 //! ```text
 //! ae-llm search  --model Mistral-7B [--task GSM8K] [--platform A100-80GB]
-//!                [--prefs latency] [--quick] [--seed N]
+//!                [--prefs latency] [--quick] [--seed N] [--json]
 //! ae-llm table   --id 2|3|4|5|6 [--quick] [--seed N]
-//! ae-llm figure  --id 1|2|3|4 [--quick] [--out reports/]
-//! ae-llm e2e     [--repeats N]       # hardware-in-the-loop Algorithm 1
-//! ae-llm serve   [--requests N]      # batched serving on PJRT
+//! ae-llm figure  --id 1|2|3|4 [--quick] [--seed N] [--out reports/]
+//! ae-llm e2e     [--repeats N] [--seed N]  # hardware-in-the-loop Algorithm 1
+//! ae-llm serve   [--requests N] [--variant V] [--seed N]
 //! ae-llm check   # artifacts sanity: load + execute every variant
 //! ae-llm space   # print the configuration-space inventory
 //! ```
 //!
 //! (The argument parser is hand-rolled: `clap` is not in the offline
-//! vendor set.)
+//! vendor set.  Unknown options are rejected per subcommand with a
+//! nearest-match suggestion.)
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
-use ae_llm::config::Config;
-use ae_llm::coordinator::{optimize, optimize_with, Scenario};
+use ae_llm::coordinator::{AeLlm, FnObserver, IterationEvent, Scenario};
+use ae_llm::evaluator::CachingEvaluator;
 use ae_llm::metrics::utility;
-use ae_llm::report::{self, figures, tables, Budget};
+use ae_llm::report::{figures, tables, Budget};
 use ae_llm::runtime;
 use ae_llm::util::Rng;
 
@@ -42,19 +43,35 @@ struct Opts {
 }
 
 impl Opts {
-    fn parse(args: &[String]) -> anyhow::Result<Opts> {
+    /// Parse options, rejecting any key not in `valued`/`flags` for
+    /// `cmd` (typo'd flags used to be silently ignored).  `valued`
+    /// options require a following value; `flags` are boolean and
+    /// never consume one (`--json report.json` is an error, not a
+    /// silently ignored value).
+    fn parse(cmd: &str, valued: &[&str], flags: &[&str], args: &[String])
+             -> anyhow::Result<Opts> {
         let mut map = BTreeMap::new();
         let mut i = 0;
         while i < args.len() {
             let a = &args[i];
-            anyhow::ensure!(a.starts_with("--"), "unexpected argument {a:?}");
+            anyhow::ensure!(
+                a.starts_with("--"),
+                "unexpected argument {a:?} (options look like --key [value])"
+            );
             let key = a.trim_start_matches("--").to_string();
-            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+            if flags.contains(&key.as_str()) {
+                map.insert(key, "true".to_string());
+                i += 1;
+            } else if valued.contains(&key.as_str()) {
+                anyhow::ensure!(
+                    i + 1 < args.len() && !args[i + 1].starts_with("--"),
+                    "--{key} expects a value"
+                );
                 map.insert(key, args[i + 1].clone());
                 i += 2;
             } else {
-                map.insert(key, "true".to_string());
-                i += 1;
+                anyhow::bail!("{}",
+                              unknown_option_msg(cmd, &key, valued, flags));
             }
         }
         Ok(Opts { map })
@@ -78,12 +95,70 @@ impl Opts {
     }
 }
 
+fn unknown_option_msg(cmd: &str, key: &str, valued: &[&str],
+                      flags: &[&str]) -> String {
+    let allowed: Vec<&str> =
+        valued.iter().chain(flags.iter()).copied().collect();
+    let mut msg = format!("unknown option --{key} for `{cmd}`");
+    if let Some(s) = closest(key, &allowed) {
+        msg.push_str(&format!(" (did you mean --{s}?)"));
+    }
+    if allowed.is_empty() {
+        msg.push_str("; this command takes no options");
+    } else {
+        let list: Vec<String> =
+            allowed.iter().map(|k| format!("--{k}")).collect();
+        msg.push_str(&format!("; allowed: {}", list.join(" ")));
+    }
+    msg
+}
+
+/// Nearest allowed key within edit distance 2, for typo suggestions.
+fn closest<'a>(key: &str, allowed: &[&'a str]) -> Option<&'a str> {
+    allowed
+        .iter()
+        .map(|a| (edit_distance(key, a), *a))
+        .filter(|(d, _)| *d <= 2)
+        .min_by_key(|(d, _)| *d)
+        .map(|(_, a)| a)
+}
+
+/// Plain Levenshtein distance (small inputs; O(|a|·|b|)).
+fn edit_distance(a: &str, b: &str) -> usize {
+    let a: Vec<char> = a.chars().collect();
+    let b: Vec<char> = b.chars().collect();
+    let mut prev: Vec<usize> = (0..=b.len()).collect();
+    for (i, ca) in a.iter().enumerate() {
+        let mut row = vec![i + 1];
+        for (j, cb) in b.iter().enumerate() {
+            let sub = prev[j] + usize::from(ca != cb);
+            row.push(sub.min(prev[j + 1] + 1).min(row[j] + 1));
+        }
+        prev = row;
+    }
+    prev[b.len()]
+}
+
 fn run(args: &[String]) -> anyhow::Result<()> {
     let Some(cmd) = args.first() else {
         print_help();
         return Ok(());
     };
-    let opts = Opts::parse(&args[1..])?;
+    let (valued, flags): (&[&str], &[&str]) = match cmd.as_str() {
+        "search" => (&["model", "task", "platform", "prefs", "seed"],
+                     &["quick", "json"]),
+        "table" => (&["id", "seed"], &["quick"]),
+        "figure" => (&["id", "seed", "out"], &["quick"]),
+        "e2e" => (&["repeats", "seed"], &[]),
+        "serve" => (&["requests", "variant", "seed"], &[]),
+        "check" | "space" => (&[], &[]),
+        "help" | "--help" | "-h" => {
+            print_help();
+            return Ok(());
+        }
+        other => anyhow::bail!("unknown command {other:?} (try `help`)"),
+    };
+    let opts = Opts::parse(cmd, valued, flags, &args[1..])?;
     let budget = Budget { quick: opts.flag("quick") };
     let seed = opts.u64_or("seed", 42)?;
 
@@ -95,34 +170,32 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "serve" => cmd_serve(&opts, seed),
         "check" => cmd_check(),
         "space" => cmd_space(),
-        "help" | "--help" | "-h" => {
-            print_help();
-            Ok(())
-        }
-        other => anyhow::bail!("unknown command {other:?} (try `help`)"),
+        _ => unreachable!("allowed-list match covers every command"),
     }
 }
 
 fn cmd_search(opts: &Opts, budget: &Budget, seed: u64) -> anyhow::Result<()> {
     let model = opts.get("model").unwrap_or("LLaMA-2-7B");
-    let mut scenario = Scenario::for_model(model)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {model:?}"))?;
+    let mut session = AeLlm::for_model(model)?;
     if let Some(task) = opts.get("task") {
-        scenario = scenario
-            .with_task(task)
-            .ok_or_else(|| anyhow::anyhow!("unknown task {task:?}"))?;
+        session = session.task(task)?;
     }
     if let Some(p) = opts.get("platform") {
-        let platform = ae_llm::hardware::by_name(p)
-            .ok_or_else(|| anyhow::anyhow!("unknown platform {p:?}"))?;
-        scenario = scenario.with_platform(platform);
+        session = session.platform(p)?;
     }
     if let Some(w) = opts.get("prefs") {
-        let prefs = report::prefs_by_name(w)
-            .ok_or_else(|| anyhow::anyhow!("unknown prefs {w:?}"))?;
-        scenario = scenario.with_prefs(prefs);
+        session = session.prefs_named(w)?;
+    }
+    let session = session.params(budget.ae_params()).seed(seed);
+
+    if opts.flag("json") {
+        // Machine-readable RunReport; nothing else on stdout.
+        let report = session.run_testbed();
+        println!("{}", report.to_json().dump());
+        return Ok(());
     }
 
+    let scenario = session.scenario();
     println!(
         "AE-LLM search: model={} task={} platform={} (|C| grid = {})",
         scenario.model.name,
@@ -130,12 +203,20 @@ fn cmd_search(opts: &Opts, budget: &Budget, seed: u64) -> anyhow::Result<()> {
         scenario.testbed.platform.name,
         ae_llm::config::enumerate::grid_size(),
     );
-    let mut rng = Rng::new(seed);
-    let t0 = std::time::Instant::now();
-    let out = optimize(&scenario, &budget.ae_params(), &mut rng);
+    let report = session.run_testbed_observed(&mut FnObserver(
+        |e: &IterationEvent| {
+            println!(
+                "  [refine {}/{}] front {} | hv {:.2} | {} testbed + {} \
+                 surrogate evals",
+                e.iteration, e.total_iterations, e.front_size,
+                e.hypervolume, e.testbed_evals, e.surrogate_evals
+            );
+        },
+    ));
+    let out = &report.outcome;
     println!(
         "search done in {:.2}s: {} testbed evals, {} surrogate evals\n",
-        t0.elapsed().as_secs_f64(),
+        report.wall_ms / 1e3,
         out.testbed_evals,
         out.surrogate_evals
     );
@@ -236,31 +317,36 @@ fn cmd_e2e(opts: &Opts, seed: u64) -> anyhow::Result<()> {
     println!("{}", mt.render());
 
     let scenario = Scenario::for_model("LLaMA-2-7B").unwrap();
-    let evaluator = runtime::MeasuredEvaluator::new(
-        table, scenario.testbed.clone());
+    // The measured evaluator is deterministic, so memoizing repeat
+    // configurations (revisited candidates, the Default fallback) is
+    // lossless and saves real hardware executions.
+    let mut evaluator = CachingEvaluator::new(runtime::MeasuredEvaluator::new(
+        table, scenario.testbed.clone()));
     println!("== Algorithm 1 with PJRT-measured evaluation ==");
     let mut params = ae_llm::coordinator::AeLlmParams::small();
     params.initial_sample = 160;
-    let mut rng = Rng::new(seed);
-    let t0 = std::time::Instant::now();
-    let out = optimize_with(
-        &scenario,
-        &params,
-        // Batch evaluator: the measured evaluator keeps a sequential
-        // call counter (Cell), so it maps the batch on one thread.
-        &mut |cs: &[Config], _rng: &mut Rng| {
-            cs.iter()
-                .map(|c| {
-                    evaluator.objectives(c, &scenario.model, &scenario.task)
-                })
-                .collect()
-        },
-        &mut rng,
-    );
+    let report = AeLlm::from_scenario(scenario.clone())
+        .params(params)
+        .seed(seed)
+        .run_observed(
+            &mut evaluator,
+            &mut FnObserver(|e: &IterationEvent| {
+                println!(
+                    "  [refine {}/{}] front {} | hv {:.2} | {} measured \
+                     evals",
+                    e.iteration, e.total_iterations, e.front_size,
+                    e.hypervolume, e.testbed_evals
+                );
+            }),
+        );
+    let out = &report.outcome;
     println!(
-        "done in {:.2}s: {} measured evals, chosen {}",
-        t0.elapsed().as_secs_f64(),
+        "done in {:.2}s: {} evals ({} unique measurements, {} cache hits), \
+         chosen {}",
+        report.wall_ms / 1e3,
         out.testbed_evals,
+        evaluator.misses(),
+        evaluator.hits(),
         out.chosen.signature()
     );
     println!(
@@ -347,7 +433,7 @@ fn cmd_space() -> anyhow::Result<()> {
              ae_llm::tasks::vlm_suite().len());
     println!("  platforms                 : {}",
              ae_llm::hardware::platforms().len());
-    let d = Config::default_baseline();
+    let d = ae_llm::config::Config::default_baseline();
     println!("  default baseline          : {}", d.signature());
     Ok(())
 }
@@ -358,12 +444,130 @@ fn print_help() {
          USAGE: ae-llm <command> [options]\n\n\
          COMMANDS:\n  \
          search  --model M [--task T] [--platform P] [--prefs W] [--quick]\n  \
+         \x20       [--seed N] [--json]   (--json emits the RunReport)\n  \
          table   --id 2|3|4|5|6 [--quick] [--seed N]\n  \
-         figure  --id 1|2|3|4 [--quick] [--out DIR]\n  \
-         e2e     [--repeats N]    hardware-in-the-loop Algorithm 1 + serving\n  \
-         serve   [--requests N] [--variant V]\n  \
+         figure  --id 1|2|3|4 [--quick] [--seed N] [--out DIR]\n  \
+         e2e     [--repeats N] [--seed N]   hardware-in-the-loop + serving\n  \
+         serve   [--requests N] [--variant V] [--seed N]\n  \
          check   load + execute every AOT artifact\n  \
          space   print the configuration-space inventory\n\n\
          prefs: balanced | latency | memory | accuracy | green"
     );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parse_key_values_and_flags() {
+        let o = Opts::parse(
+            "search",
+            &["model", "seed"],
+            &["quick"],
+            &args(&["--model", "Phi-2", "--quick", "--seed", "7"]),
+        )
+        .unwrap();
+        assert_eq!(o.get("model"), Some("Phi-2"));
+        assert!(o.flag("quick"));
+        assert_eq!(o.u64_or("seed", 42).unwrap(), 7);
+        assert_eq!(o.u64_or("missing", 42).unwrap(), 42);
+        assert!(!o.flag("json"));
+    }
+
+    #[test]
+    fn unknown_key_rejected_with_suggestion() {
+        let err = Opts::parse("search", &["model", "task"], &[],
+                              &args(&["--modle", "X"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown option --modle"), "{err}");
+        assert!(err.contains("did you mean --model?"), "{err}");
+        assert!(err.contains("--task"), "{err}");
+    }
+
+    #[test]
+    fn unknown_key_without_near_match_lists_allowed() {
+        let err = Opts::parse("table", &["id", "seed"], &["quick"],
+                              &args(&["--zzzzzz"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown option --zzzzzz for `table`"), "{err}");
+        assert!(!err.contains("did you mean"), "{err}");
+        assert!(err.contains("allowed: --id --seed --quick"), "{err}");
+    }
+
+    #[test]
+    fn optionless_command_rejects_options() {
+        let err = Opts::parse("space", &[], &[], &args(&["--verbose"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("takes no options"), "{err}");
+    }
+
+    #[test]
+    fn positional_arguments_rejected() {
+        let err = Opts::parse("search", &["model"], &[],
+                              &args(&["model", "X"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unexpected argument"), "{err}");
+    }
+
+    #[test]
+    fn flags_never_swallow_a_value() {
+        // `--json report.json`: the stray token is an error, not a
+        // silently ignored value that flips the flag off.
+        let err = Opts::parse("search", &["model"], &["json"],
+                              &args(&["--json", "report.json"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unexpected argument \"report.json\""), "{err}");
+    }
+
+    #[test]
+    fn valued_options_require_a_value() {
+        for tail in [vec!["--model"], vec!["--model", "--quick"]] {
+            let err = Opts::parse("search", &["model"], &["quick"],
+                                  &args(&tail))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("--model expects a value"), "{err}");
+        }
+    }
+
+    #[test]
+    fn numbers_validated() {
+        let o = Opts::parse("table", &["id"], &[], &args(&["--id", "two"]))
+            .unwrap();
+        assert!(o.u64_or("id", 2).is_err());
+    }
+
+    #[test]
+    fn edit_distance_sanity() {
+        assert_eq!(edit_distance("model", "model"), 0);
+        assert_eq!(edit_distance("modle", "model"), 2); // transposition
+        assert_eq!(edit_distance("sed", "seed"), 1);
+        assert_eq!(edit_distance("", "abc"), 3);
+        assert_eq!(closest("sed", &["seed", "model"]), Some("seed"));
+        assert_eq!(closest("zzzzzz", &["seed", "model"]), None);
+    }
+
+    #[test]
+    fn run_rejects_unknown_command_and_typod_flag() {
+        assert!(run(&args(&["flyme"])).is_err());
+        let err = run(&args(&["search", "--modle", "X"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--modle"), "{err}");
+        // `--seed` is accepted by search (and listed in its help).
+        let err = run(&args(&["search", "--seed", "abc"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--seed expects a number"), "{err}");
+    }
 }

@@ -13,6 +13,7 @@ pub mod accuracy;
 pub mod cost;
 
 use crate::config::Config;
+use crate::evaluator::{EvalContext, Evaluator};
 use crate::hardware::{self, Platform};
 use crate::models::ModelSpec;
 use crate::tasks::TaskSpec;
@@ -93,16 +94,19 @@ pub struct Testbed {
     pub noise_sigma: f64,
     /// Additive accuracy measurement noise (absolute points).
     pub acc_noise: f64,
+    /// Configurations measured through the [`Evaluator`] trait on this
+    /// instance (clones start from the cloned count).
+    evals: usize,
 }
 
 impl Testbed {
     pub fn new(platform: Platform) -> Self {
-        Testbed { platform, noise_sigma: 0.04, acc_noise: 0.15 }
+        Testbed { platform, noise_sigma: 0.04, acc_noise: 0.15, evals: 0 }
     }
 
     /// Noise-free testbed (for reports and unit tests).
     pub fn noiseless(platform: Platform) -> Self {
-        Testbed { platform, noise_sigma: 0.0, acc_noise: 0.0 }
+        Testbed { platform, noise_sigma: 0.0, acc_noise: 0.0, evals: 0 }
     }
 
     /// The testbed the paper pairs with this model's scale bucket.
@@ -194,6 +198,23 @@ impl Testbed {
     pub fn feasible(&self, c: &Config, m: &ModelSpec, t: &TaskSpec) -> bool {
         let o = self.true_objectives(c, m, t);
         self.platform.feasible(o.memory_gb, self.power_w(c, m, t))
+    }
+}
+
+/// The testbed as a first-class evaluation backend (DESIGN.md §9): the
+/// trait call is a pure delegation to the inherent
+/// [`measure_batch`](Testbed::measure_batch) — same RNG discipline,
+/// same parallel fan-out — plus the trait's built-in eval counting.
+impl Evaluator for Testbed {
+    fn measure_batch(&mut self, cs: &[Config], ctx: &EvalContext,
+                     rng: &mut Rng) -> Vec<Objectives> {
+        self.evals += cs.len();
+        Testbed::measure_batch(self, cs, ctx.model, ctx.task, rng,
+                               ctx.parallelism)
+    }
+
+    fn evals(&self) -> usize {
+        self.evals
     }
 }
 

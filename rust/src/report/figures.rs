@@ -5,7 +5,7 @@
 use std::path::Path;
 
 use crate::config::{enumerate, Attention, Config, MoE, Precision};
-use crate::coordinator::{optimize, sensitivity, Scenario};
+use crate::coordinator::{sensitivity, Scenario};
 use crate::hardware;
 use crate::metrics::Reference;
 use crate::models;
@@ -55,9 +55,11 @@ pub fn figure_1(budget: &Budget, seed: u64) -> Figure {
                 .with_task(task.name)
                 .unwrap()
                 .with_platform(platform.clone());
-            let mut rng = Rng::new(seed ^ (task.seq_len as u64)
-                ^ platform.name.len() as u64);
-            let out = optimize(&scenario, &budget.ae_params(), &mut rng);
+            let out = super::run_scenario(
+                &scenario,
+                &budget.ae_params(),
+                seed ^ (task.seq_len as u64) ^ platform.name.len() as u64,
+            );
             let c = out.chosen;
             csv.row(&[
                 task.name.to_string(),
@@ -104,8 +106,7 @@ pub fn figure_2(budget: &Budget, seed: u64) -> Figure {
         .with_title("Figure 2: Pareto fronts (accuracy vs latency)");
     for model in ["Phi-2", "LLaMA-2-7B", "Mistral-7B", "LLaMA-2-70B"] {
         let scenario = Scenario::for_model(model).unwrap();
-        let mut rng = Rng::new(seed);
-        let out = optimize(&scenario, &budget.ae_params(), &mut rng);
+        let out = super::run_scenario(&scenario, &budget.ae_params(), seed);
         let truth = Testbed::noiseless(scenario.testbed.platform.clone());
         let mut accs = Vec::new();
         let mut lats = Vec::new();

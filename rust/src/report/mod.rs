@@ -10,11 +10,23 @@ pub mod figures;
 pub mod tables;
 
 use crate::config::Config;
-use crate::coordinator::{self, AeLlmParams, Scenario};
+use crate::coordinator::{AeLlm, AeLlmParams, Outcome, Scenario};
 use crate::metrics::{efficiency_score, Preferences, Reference};
 use crate::oracle::Objectives;
 use crate::search::baselines::{self, Baseline};
 use crate::util::Rng;
+
+/// Seeded, unobserved run against the scenario's testbed — the lean
+/// entry for report sweeps that only need the [`Outcome`] (no event
+/// collection, no per-iteration hypervolume; see
+/// [`AeLlm::run_testbed_outcome`]).
+pub(crate) fn run_scenario(scenario: &Scenario, params: &AeLlmParams,
+                           seed: u64) -> Outcome {
+    AeLlm::from_scenario(scenario.clone())
+        .params(*params)
+        .seed(seed)
+        .run_testbed_outcome()
+}
 
 /// Everything Table 2/4/6 need about one (model, method) cell.
 #[derive(Clone, Debug)]
@@ -89,8 +101,7 @@ pub fn run_method(method: Method, scenario: &Scenario, budget: &Budget,
 
     let config = match method {
         Method::AeLlm => {
-            coordinator::optimize(scenario, &budget.ae_params(), &mut rng)
-                .chosen
+            run_scenario(scenario, &budget.ae_params(), seed).chosen
         }
         Method::Baseline(b) => {
             let b = match b {

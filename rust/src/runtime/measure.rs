@@ -16,13 +16,16 @@
 //!   quantization accuracy penalty.
 
 use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::config::{Attention, Config, Precision};
+use crate::evaluator::{EvalContext, Evaluator};
 use crate::models::ModelSpec;
 use crate::oracle::{Objectives, Testbed};
 use crate::tasks::TaskSpec;
 use crate::util::pool::{self, Parallelism};
 use crate::util::stats;
+use crate::util::Rng;
 
 use super::engine::Engine;
 
@@ -41,6 +44,7 @@ pub struct VariantMeasurement {
 }
 
 /// All measurements, keyed by variant name.
+#[derive(Clone, Debug)]
 pub struct MeasurementTable {
     pub rows: BTreeMap<String, VariantMeasurement>,
 }
@@ -198,13 +202,20 @@ impl MeasurementTable {
 pub struct MeasuredEvaluator {
     pub table: MeasurementTable,
     pub testbed: Testbed,
-    /// Measured evaluations performed (for the §Perf report).
-    pub calls: std::cell::Cell<usize>,
+    /// Measured evaluations performed (for the §Perf report).  Atomic —
+    /// not a `Cell` — so [`Evaluator::measure_batch`] can fan a batch
+    /// out across the thread pool while still counting every call.
+    calls: AtomicUsize,
 }
 
 impl MeasuredEvaluator {
     pub fn new(table: MeasurementTable, testbed: Testbed) -> Self {
-        MeasuredEvaluator { table, testbed, calls: std::cell::Cell::new(0) }
+        MeasuredEvaluator { table, testbed, calls: AtomicUsize::new(0) }
+    }
+
+    /// Measured evaluations performed so far.
+    pub fn calls(&self) -> usize {
+        self.calls.load(Ordering::Relaxed)
     }
 
     /// Objectives with the inference-stage effects replaced by real
@@ -215,7 +226,7 @@ impl MeasuredEvaluator {
     ///   the measured fidelity error scaled by task sensitivity.
     pub fn objectives(&self, c: &Config, m: &ModelSpec,
                       t: &TaskSpec) -> Objectives {
-        self.calls.set(self.calls.get() + 1);
+        self.calls.fetch_add(1, Ordering::Relaxed);
         let mut fp16_cfg = *c;
         fp16_cfg.inf.precision = Precision::Fp16;
         if fp16_cfg.ft.method == crate::config::FtMethod::QLoRA {
@@ -241,6 +252,27 @@ impl MeasuredEvaluator {
             energy_j: base.energy_j * lat_ratio
                 * (c.inf.precision.bits() as f64 / 16.0).powf(0.35),
         }
+    }
+}
+
+/// The hardware-in-the-loop backend for Algorithm 1 (DESIGN.md §9):
+/// [`objectives`](MeasuredEvaluator::objectives) is a pure function of
+/// the configuration (real measurements are taken once, up front, into
+/// the [`MeasurementTable`]), so the batch fans out across
+/// `ctx.parallelism` workers through the ordered-reduce pool and the
+/// result is identical at every parallelism level.  `rng` is untouched:
+/// the measured numbers carry their own hardware noise.
+impl Evaluator for MeasuredEvaluator {
+    fn measure_batch(&mut self, cs: &[Config], ctx: &EvalContext,
+                     _rng: &mut Rng) -> Vec<Objectives> {
+        let this: &MeasuredEvaluator = self;
+        pool::parallel_map(ctx.parallelism, cs, |c| {
+            this.objectives(c, ctx.model, ctx.task)
+        })
+    }
+
+    fn evals(&self) -> usize {
+        self.calls()
     }
 }
 
@@ -289,5 +321,28 @@ mod tests {
         let c = Config::default_baseline();
         assert_eq!(table.latency_ratio(&c), 1.0);
         assert_eq!(table.fidelity_err(&c), 0.0);
+    }
+
+    #[test]
+    fn evaluator_batch_is_parallelism_invariant_and_counts() {
+        // No artifacts needed: an empty table exercises the 1.0-ratio
+        // fallbacks while the oracle anchoring does the real work.
+        let m = crate::models::by_name("LLaMA-2-7B").unwrap();
+        let t = crate::tasks::blended_task();
+        let tb = Testbed::noiseless(crate::hardware::a100());
+        let mut rng = Rng::new(31);
+        let cs: Vec<Config> = (0..24)
+            .map(|_| crate::config::enumerate::sample(&mut rng))
+            .collect();
+        let go = |par: Parallelism| {
+            let table = MeasurementTable { rows: BTreeMap::new() };
+            let mut ev = MeasuredEvaluator::new(table, tb.clone());
+            let ctx = EvalContext::new(&m, &t, par);
+            let out = ev.measure_batch(&cs, &ctx, &mut Rng::new(1));
+            assert_eq!(ev.calls(), 24);
+            assert_eq!(Evaluator::evals(&ev), 24);
+            out
+        };
+        assert_eq!(go(Parallelism::Sequential), go(Parallelism::Threads(4)));
     }
 }

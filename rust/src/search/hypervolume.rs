@@ -172,12 +172,14 @@ mod tests {
 
     #[test]
     fn archive_hypervolume_positive_for_real_search() {
-        use crate::coordinator::{optimize, AeLlmParams, Scenario};
+        use crate::coordinator::{AeLlm, AeLlmParams, Scenario};
         let scenario = Scenario::for_model("Phi-2").unwrap();
-        let mut rng = crate::util::Rng::new(3);
         let mut p = AeLlmParams::small();
         p.initial_sample = 60;
-        let out = optimize(&scenario, &p, &mut rng);
+        let out = AeLlm::from_scenario(scenario)
+            .params(p)
+            .seed(3)
+            .run_testbed_outcome();
         let hv = archive_hypervolume(&out.pareto);
         assert!(hv > 0.0);
     }

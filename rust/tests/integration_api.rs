@@ -1,0 +1,148 @@
+//! API-equivalence conformance: the `Evaluator`-trait path must
+//! reproduce the legacy closure entry points *bit for bit* — same
+//! chosen configuration, same Pareto front (configs and measured
+//! objectives, in order), same testbed/surrogate eval counts — at
+//! every `Parallelism` level.  This is the contract that lets
+//! `optimize` / `optimize_with` survive as thin deprecated shims.
+
+use ae_llm::config::Config;
+use ae_llm::coordinator::{optimize_with_observer, AeLlm, AeLlmParams,
+                          CollectingObserver, NullObserver, Outcome,
+                          Scenario};
+use ae_llm::evaluator::{Evaluator, FnEvaluator};
+use ae_llm::oracle::Objectives;
+use ae_llm::util::pool::Parallelism;
+use ae_llm::util::Rng;
+
+const SEED: u64 = 7;
+
+fn scenario() -> Scenario {
+    Scenario::for_model("LLaMA-2-7B").unwrap()
+}
+
+fn params(par: Parallelism) -> AeLlmParams {
+    AeLlmParams { parallelism: par, ..AeLlmParams::small() }
+}
+
+/// Everything that must match, in a comparable shape.
+type Fingerprint = (Config, String, Vec<(Config, String)>, usize, usize);
+
+fn fingerprint(out: &Outcome) -> Fingerprint {
+    (
+        out.chosen,
+        format!("{:?}", out.chosen_objectives),
+        out.pareto
+            .entries()
+            .iter()
+            .map(|e| (e.config, format!("{:?}", e.objectives)))
+            .collect(),
+        out.testbed_evals,
+        out.surrogate_evals,
+    )
+}
+
+/// The legacy closure entry point, exactly as pre-trait callers used it.
+#[allow(deprecated)]
+fn legacy_optimize(s: &Scenario, p: &AeLlmParams) -> Outcome {
+    let mut rng = Rng::new(SEED);
+    ae_llm::coordinator::optimize(s, p, &mut rng)
+}
+
+/// The legacy `optimize_with` closure convention.
+#[allow(deprecated)]
+fn legacy_optimize_with(s: &Scenario, p: &AeLlmParams) -> Outcome {
+    let testbed = s.testbed.clone();
+    let (model, task, par) = (s.model.clone(), s.task.clone(), p.parallelism);
+    let mut measure = |cs: &[Config], rng: &mut Rng| -> Vec<Objectives> {
+        testbed.measure_batch(cs, &model, &task, rng, par)
+    };
+    let mut rng = Rng::new(SEED);
+    ae_llm::coordinator::optimize_with(s, p, &mut measure, &mut rng)
+}
+
+/// The trait path: the scenario's testbed used directly as an
+/// `Evaluator` through the primary entry point.
+fn trait_path(s: &Scenario, p: &AeLlmParams) -> (Outcome, usize) {
+    let mut evaluator = s.testbed.clone();
+    let mut rng = Rng::new(SEED);
+    let out = optimize_with_observer(s, p, &mut evaluator,
+                                     &mut NullObserver, &mut rng);
+    (out, Evaluator::evals(&evaluator))
+}
+
+#[test]
+fn trait_path_reproduces_legacy_optimize_bitwise() {
+    let s = scenario();
+    for par in [Parallelism::Sequential, Parallelism::Threads(4)] {
+        let p = params(par);
+        let legacy = fingerprint(&legacy_optimize(&s, &p));
+        let (out, evals) = trait_path(&s, &p);
+        assert_eq!(fingerprint(&out), legacy,
+                   "trait path diverged from optimize() at {par:?}");
+        assert_eq!(evals, out.testbed_evals,
+                   "evaluator's own counter disagrees at {par:?}");
+    }
+}
+
+#[test]
+fn trait_path_reproduces_legacy_optimize_with_bitwise() {
+    let s = scenario();
+    for par in [Parallelism::Sequential, Parallelism::Threads(4)] {
+        let p = params(par);
+        let legacy = fingerprint(&legacy_optimize_with(&s, &p));
+        let (out, _) = trait_path(&s, &p);
+        assert_eq!(fingerprint(&out), legacy,
+                   "trait path diverged from optimize_with() at {par:?}");
+    }
+}
+
+#[test]
+fn fn_evaluator_adapter_matches_closure_shim() {
+    // Wrapping the same closure in `FnEvaluator` and calling the
+    // primary entry point is the documented migration for
+    // `optimize_with` callers; it must change nothing.
+    let s = scenario();
+    let p = params(Parallelism::Sequential);
+    let legacy = fingerprint(&legacy_optimize_with(&s, &p));
+
+    let testbed = s.testbed.clone();
+    let (model, task, par) = (s.model.clone(), s.task.clone(), p.parallelism);
+    let mut evaluator = FnEvaluator::new(move |cs: &[Config], rng: &mut Rng| {
+        testbed.measure_batch(cs, &model, &task, rng, par)
+    });
+    let mut rng = Rng::new(SEED);
+    let out = optimize_with_observer(&s, &p, &mut evaluator,
+                                     &mut NullObserver, &mut rng);
+    assert_eq!(fingerprint(&out), legacy);
+    assert_eq!(evaluator.evals(), out.testbed_evals);
+}
+
+#[test]
+fn builder_run_matches_primary_entry_point() {
+    let s = scenario();
+    let p = params(Parallelism::Sequential);
+    let (direct, _) = trait_path(&s, &p);
+    let report = AeLlm::from_scenario(s)
+        .params(p)
+        .seed(SEED)
+        .run_testbed();
+    assert_eq!(fingerprint(&report.outcome), fingerprint(&direct));
+    assert_eq!(report.evaluator_evals, direct.testbed_evals);
+    assert_eq!(report.seed, SEED);
+}
+
+#[test]
+fn observed_conformance_run_is_bit_identical() {
+    // Attaching an observer must not perturb the search (the events
+    // are computed without touching the run's RNG).
+    let s = scenario();
+    let p = params(Parallelism::Threads(4));
+    let (unobserved, _) = trait_path(&s, &p);
+    let mut evaluator = s.testbed.clone();
+    let mut obs = CollectingObserver::default();
+    let mut rng = Rng::new(SEED);
+    let observed = optimize_with_observer(&s, &p, &mut evaluator,
+                                          &mut obs, &mut rng);
+    assert_eq!(fingerprint(&observed), fingerprint(&unobserved));
+    assert_eq!(obs.events.len(), p.refine_iters);
+}

@@ -5,7 +5,7 @@
 //! pool's ordered reduce.
 
 use ae_llm::config::Config;
-use ae_llm::coordinator::{optimize, AeLlmParams, Scenario};
+use ae_llm::coordinator::{AeLlm, AeLlmParams, Scenario};
 use ae_llm::oracle::{Objectives, Testbed};
 use ae_llm::search::nsga2::{self, Nsga2Params, Toggles};
 use ae_llm::util::pool::Parallelism;
@@ -83,8 +83,10 @@ fn algorithm1_chosen_config_invariant_under_parallelism() {
             parallelism: par,
             ..AeLlmParams::small()
         };
-        let mut rng = Rng::new(7);
-        let out = optimize(&scenario, &params, &mut rng);
+        let out = AeLlm::from_scenario(scenario.clone())
+            .params(params)
+            .seed(7)
+            .run_testbed_outcome();
         (out.chosen, out.testbed_evals, out.surrogate_evals)
     };
     let seq = go(Parallelism::Sequential);

@@ -141,7 +141,7 @@ fn measurement_table_end_to_end() {
     let o8 = eval.objectives(&c, &m, &t);
     assert!(o8.accuracy < o16.accuracy, "measured penalty missing");
     assert!(o8.memory_gb < o16.memory_gb);
-    assert_eq!(eval.calls.get(), 2);
+    assert_eq!(eval.calls(), 2);
 }
 
 #[test]

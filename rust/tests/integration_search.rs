@@ -2,7 +2,7 @@
 //! NSGA-II → Algorithm 1) behaving as the paper claims.
 
 use ae_llm::config::{enumerate, validity, Config, Precision};
-use ae_llm::coordinator::{optimize, AeLlmParams, Scenario};
+use ae_llm::coordinator::{AeLlm, AeLlmParams, Outcome, Scenario};
 use ae_llm::hardware;
 use ae_llm::metrics::{efficiency_score, Preferences, Reference};
 use ae_llm::oracle::Testbed;
@@ -10,6 +10,16 @@ use ae_llm::report::{run_method, Budget, Method};
 use ae_llm::search::Baseline;
 use ae_llm::util::prop::{forall, Config as PropConfig};
 use ae_llm::util::Rng;
+
+/// Seeded, unobserved Algorithm 1 run against the scenario's testbed
+/// (tests/integration_api.rs proves this reproduces the legacy
+/// `optimize` + `Rng::new(seed)` path bit for bit).
+fn run(scenario: &Scenario, params: &AeLlmParams, seed: u64) -> Outcome {
+    AeLlm::from_scenario(scenario.clone())
+        .params(*params)
+        .seed(seed)
+        .run_testbed_outcome()
+}
 
 /// Paper §4.2 headline: AE-LLM beats all baselines on efficiency score
 /// while staying within the accuracy band — across scales.
@@ -67,8 +77,7 @@ fn task_adaptive_quantization() {
                 .unwrap()
                 .with_task(task)
                 .unwrap();
-            let mut rng = Rng::new(seed);
-            let out = optimize(&scenario, &budget.ae_params(), &mut rng);
+            let out = run(&scenario, &budget.ae_params(), seed);
             bits.push(out.chosen.inf.precision.bits() as f64);
         }
         ae_llm::util::stats::mean(&bits)
@@ -89,8 +98,7 @@ fn hardware_adaptive_quantization() {
         .unwrap()
         .with_platform(hardware::rtx4090())
         .with_prefs(Preferences::memory_constrained());
-    let mut rng = Rng::new(5);
-    let out = optimize(&scenario, &budget.ae_params(), &mut rng);
+    let out = run(&scenario, &budget.ae_params(), 5);
     // 70B fp16 = 138 GB; even int4 (~35GB) misses 24 GB. The search must
     // not return anything infeasible-but-archived: chosen is just the
     // best feasible... in this extreme case only the default fallback
@@ -103,8 +111,7 @@ fn hardware_adaptive_quantization() {
         .unwrap()
         .with_platform(hardware::rtx4090())
         .with_prefs(Preferences::memory_constrained());
-    let mut rng = Rng::new(6);
-    let out = optimize(&scenario, &budget.ae_params(), &mut rng);
+    let out = run(&scenario, &budget.ae_params(), 6);
     assert!(out.chosen.inf.precision.bits() <= 8,
             "expected low-bit weights, got {:?}", out.chosen.inf.precision);
 }
@@ -114,8 +121,7 @@ fn hardware_adaptive_quantization() {
 #[test]
 fn pareto_front_properties() {
     let scenario = Scenario::for_model("Mistral-7B").unwrap();
-    let mut rng = Rng::new(8);
-    let out = optimize(&scenario, &AeLlmParams::small(), &mut rng);
+    let out = run(&scenario, &AeLlmParams::small(), 8);
     let entries = out.pareto.entries();
     assert!(entries.len() >= 3);
     for a in entries {
@@ -158,10 +164,9 @@ fn chosen_configs_always_valid_property() {
         |rng| rng.next_u64(),
         |&seed| {
             let scenario = Scenario::for_model("LLaMA-2-7B").unwrap();
-            let mut rng = Rng::new(seed);
             let mut p = AeLlmParams::small();
             p.initial_sample = 60; // keep the property fast
-            let out = optimize(&scenario, &p, &mut rng);
+            let out = run(&scenario, &p, seed);
             if !validity::is_valid(&out.chosen) {
                 return Err(format!("invalid chosen {}", out.chosen));
             }
@@ -186,8 +191,7 @@ fn preference_steering() {
         let scenario = Scenario::for_model("LLaMA-2-7B")
             .unwrap()
             .with_prefs(prefs);
-        let mut rng = Rng::new(seed);
-        optimize(&scenario, &budget.ae_params(), &mut rng)
+        run(&scenario, &budget.ae_params(), seed)
     };
     let green = run_with(Preferences::green_ai(), 1);
     let accuracy = run_with(Preferences::accuracy_critical(), 1);
