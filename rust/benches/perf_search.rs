@@ -16,6 +16,7 @@ use ae_llm::models;
 use ae_llm::oracle::Testbed;
 use ae_llm::search::dominance;
 use ae_llm::search::nsga2::{self, Nsga2Params, Toggles};
+use ae_llm::search::StrategyKind;
 use ae_llm::surrogate::{collect_samples, GbtParams, SurrogateSet};
 use ae_llm::tasks;
 use ae_llm::util::bench::{self, time_it, time_once};
@@ -160,6 +161,24 @@ fn main() {
             run_algo1(&AeLlmParams::default(), 5)
         });
         report.insert("algorithm1 paper (ms)".into(), Json::Num(paper_ms));
+    }
+
+    // -- search strategies ---------------------------------------------------
+    // Same coordinator, different proposal procedures (DESIGN.md §10):
+    // wall-clock and evaluation cost per strategy at the small budget.
+    for kind in StrategyKind::ALL {
+        let params = AeLlmParams { strategy: kind, ..AeLlmParams::small() };
+        let label = format!("Algorithm 1 [strategy={}]", kind.name());
+        let (out, ms) = time_once(&label, || run_algo1(&params, 6));
+        println!(
+            "    {}: {} testbed ({} strategy-internal) + {} surrogate evals",
+            kind.name(), out.testbed_evals, out.strategy_evals,
+            out.surrogate_evals
+        );
+        report.insert(format!("strategy {} (ms)", kind.name()),
+                      Json::Num(ms));
+        report.insert(format!("strategy {} testbed evals", kind.name()),
+                      Json::Num(out.testbed_evals as f64));
     }
 
     write_report(report, quick);

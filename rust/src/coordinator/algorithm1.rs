@@ -1,5 +1,6 @@
 //! Algorithm 1: Adaptive Efficiency Optimization — the AE-LLM
-//! coordinator tying together surrogates, NSGA-II and the testbed.
+//! coordinator tying together surrogates, the pluggable search
+//! strategy and the testbed.
 //!
 //! ```text
 //! Require: model M, task T, hardware H, preferences w
@@ -14,13 +15,22 @@
 //!  8: return Pareto-optimal configurations P*
 //! ```
 //!
-//! "Actual hardware" is any [`Evaluator`] backend (DESIGN.md §9):
+//! Since PR 3 the coordinator is pure orchestration: lines 3–4 (search
+//! the space, pick the candidates worth measuring) belong to a
+//! [`SearchStrategy`] (DESIGN.md §10) — NSGA-II is merely the default
+//! ([`crate::search::strategy::Nsga2Strategy`], selected by
+//! [`AeLlmParams::strategy`]) — while the coordinator keeps the
+//! surrogate warm-start, the line-5 measurement batches, the measured
+//! Pareto archive, surrogate updates and observer events.  "Actual
+//! hardware" is any [`Evaluator`] backend (DESIGN.md §9):
 //! [`crate::oracle::Testbed`] (simulated fleet) by default, the
 //! PJRT-measured [`crate::runtime::MeasuredEvaluator`] for the
 //! end-to-end path, or a decorated stack of either.  The primary entry
 //! point is [`optimize_with_observer`]; the [`super::AeLlm`] builder
 //! wraps it with a friendlier surface, and the legacy [`optimize`] /
 //! [`optimize_with`] closures remain as deprecated shims.
+
+use std::collections::BTreeSet;
 
 use crate::config::{encode, Config};
 use crate::evaluator::{EvalContext, Evaluator, FnEvaluator};
@@ -29,9 +39,10 @@ use crate::oracle::Objectives;
 use crate::search::archive::ParetoArchive;
 use crate::search::dominance::MinVec;
 use crate::search::hypervolume;
-use crate::search::nsga2::{self, Nsga2Params, Toggles};
+use crate::search::nsga2::{Nsga2Params, Toggles};
+use crate::search::strategy::{SearchStrategy, StrategyCx, StrategyKind};
 use crate::surrogate::{GbtParams, Sample, SurrogateSet};
-use crate::util::pool::{self, Parallelism};
+use crate::util::pool::Parallelism;
 use crate::util::Rng;
 
 use super::observer::{IterationEvent, NullObserver, RunObserver};
@@ -56,6 +67,11 @@ pub struct AeLlmParams {
     pub use_surrogates: bool,
     /// Restriction of the configuration space (Table 3 ablations).
     pub mask: SpaceMask,
+    /// Which search procedure proposes the candidates of lines 3–4
+    /// (DESIGN.md §10).  NSGA-II is the paper default; `random`,
+    /// `racing` and `local` trade surrogate guidance against
+    /// measurement cost differently.
+    pub strategy: StrategyKind,
     /// Worker count for every fan-out the coordinator drives: the
     /// initial-sample measurement batch, surrogate (re)fits, NSGA-II
     /// population evaluation, candidate-uncertainty scoring, and the
@@ -77,6 +93,7 @@ impl Default for AeLlmParams {
             toggles: Toggles::default(),
             use_surrogates: true,
             mask: SpaceMask::default(),
+            strategy: StrategyKind::Nsga2,
             parallelism: Parallelism::Auto,
         }
     }
@@ -108,10 +125,19 @@ pub struct Outcome {
     pub chosen_efficiency_score: f64,
     /// Default-config reference used for normalization.
     pub reference: Reference,
-    /// Total testbed measurements consumed (the paper's "search cost").
+    /// Total testbed measurements consumed (the paper's "search cost"):
+    /// warm-start + strategy mid-round evals + per-round measurement
+    /// batches + the Default fallback.
     pub testbed_evals: usize,
-    /// Surrogate-prediction calls during NSGA-II (cheap evaluations).
+    /// Surrogate-prediction calls during the strategy's search phase
+    /// (cheap evaluations).
     pub surrogate_evals: usize,
+    /// Name of the [`SearchStrategy`] that proposed the candidates.
+    pub strategy: &'static str,
+    /// Expensive evaluations the strategy performed itself mid-round
+    /// (racing rungs, direct-measurement NSGA-II); a subset of
+    /// `testbed_evals`.
+    pub strategy_evals: usize,
 }
 
 /// Reference-point factor for the observer's normalized hypervolume:
@@ -186,7 +212,9 @@ where
 }
 
 /// Run Algorithm 1 against any [`Evaluator`] backend, streaming one
-/// [`IterationEvent`] per refinement iteration to `observer`.
+/// [`IterationEvent`] per refinement iteration to `observer`.  The
+/// search procedure is the one `params.strategy` names; use
+/// [`optimize_with_strategy`] to inject a custom [`SearchStrategy`].
 ///
 /// This is the primary entry point; [`super::AeLlm`] wraps it with a
 /// builder-style surface and a serializable report.  Observer calls
@@ -201,12 +229,37 @@ pub fn optimize_with_observer(
     observer: &mut dyn RunObserver,
     rng: &mut Rng,
 ) -> Outcome {
+    let mut strategy = params.strategy.build();
+    optimize_with_strategy(scenario, params, strategy.as_mut(), evaluator,
+                           observer, rng)
+}
+
+/// Run Algorithm 1 with an explicit [`SearchStrategy`] instance (the
+/// generalized form of [`optimize_with_observer`], for strategies not
+/// reachable through [`StrategyKind`], e.g. baseline selectors or
+/// user-defined procedures).
+///
+/// The coordinator owns the orchestration — surrogate warm-start
+/// (line 1, skipped unless both `params.use_surrogates` and
+/// [`SearchStrategy::uses_surrogates`] agree), the per-round
+/// full-fidelity measurement batch (line 5), the measured Pareto
+/// archive, surrogate updates (line 6) and observer events — while
+/// `strategy.propose` covers lines 3–4.
+pub fn optimize_with_strategy(
+    scenario: &Scenario,
+    params: &AeLlmParams,
+    strategy: &mut dyn SearchStrategy,
+    evaluator: &mut dyn Evaluator,
+    observer: &mut dyn RunObserver,
+    rng: &mut Rng,
+) -> Outcome {
     let m = &scenario.model;
     let t = &scenario.task;
     let tb = &scenario.testbed;
     let mask = params.mask;
     let mut testbed_evals = 0usize;
     let mut surrogate_evals = 0usize;
+    let mut strategy_evals = 0usize;
 
     // Reference for Eq. 4 normalization: the Default configuration.
     let default_cfg = Config::default_baseline();
@@ -214,21 +267,15 @@ pub fn optimize_with_observer(
         default: tb.true_objectives(&default_cfg, m, t),
     };
 
-    // Predicted Definition-3 feasibility (Eq. 6): memory from the
-    // surrogate once trained; power from the deterministic cost model.
-    let power_ok = |c: &Config| {
-        tb.power_w(c, m, t) <= tb.platform.power_budget_w
-    };
-
     // The coordinator-level knob governs every nested fan-out,
     // including the evaluator's own batch fan-out (via the context).
     let par = params.parallelism;
     let ctx = EvalContext::new(m, t, par);
     let gbt_params = GbtParams { parallelism: par, ..params.gbt };
-    let nsga_params = Nsga2Params { parallelism: par, ..params.nsga };
 
     // ---- line 1: initial sample + surrogate training --------------------
-    let mut surrogates: Option<SurrogateSet> = if params.use_surrogates {
+    let warm_start = params.use_surrogates && strategy.uses_surrogates();
+    let mut surrogates: Option<SurrogateSet> = if warm_start {
         let configs: Vec<Config> =
             crate::config::enumerate::sample_distinct(rng, params.initial_sample)
                 .into_iter()
@@ -252,120 +299,31 @@ pub fn optimize_with_observer(
     };
 
     // Measured results accumulate here; P* is built from measurements,
-    // never from raw surrogate guesses.
+    // never from raw surrogate (or cheap-fidelity) guesses.
     let mut measured = ParetoArchive::new(params.nsga.archive_capacity);
-    let mut measured_configs: std::collections::BTreeSet<Config> =
-        Default::default();
+    let mut measured_configs: BTreeSet<Config> = Default::default();
 
-    let iters = if params.use_surrogates {
-        params.refine_iters.max(1)
-    } else {
-        1
-    };
+    let iters = strategy.rounds(params).max(1);
 
     for iteration in 0..iters {
-        // ---- line 3: NSGA-II against the current surrogates -------------
-        let surrogate_archive = {
-            let mask_ref = &mask;
-            match &surrogates {
-                Some(sur) => {
-                    // §Perf: populations revisit configurations heavily
-                    // (tournament winners, crossover clones), so predict
-                    // through a memo table — ~3x fewer GBT traversals,
-                    // see EXPERIMENTS.md §Perf.  The table is a Mutex'd
-                    // map so the prediction fan-out can share it; the
-                    // cached value is a pure function of the config, so
-                    // racing fills are benign and results stay
-                    // deterministic at any parallelism level.
-                    let cache: std::sync::Mutex<
-                        std::collections::BTreeMap<Config, Objectives>,
-                    > = Default::default();
-                    let cached_predict = |c: &Config| -> Objectives {
-                        let c = mask_ref.clamp(*c);
-                        if let Some(o) = cache.lock().unwrap().get(&c) {
-                            return *o;
-                        }
-                        let o = sur.predict(&c, m, t).objectives;
-                        cache.lock().unwrap().insert(c, o);
-                        o
-                    };
-                    let evaluate = |c: &Config| cached_predict(c);
-                    let res = nsga2::run_par(
-                        &nsga_params,
-                        &params.toggles,
-                        &evaluate,
-                        |c| {
-                            let mem = cached_predict(c).memory_gb;
-                            mem <= tb.platform.mem_capacity_gb
-                                && power_ok(&mask_ref.clamp(*c))
-                        },
-                        rng,
-                    );
-                    surrogate_evals += res.evaluations;
-                    res.archive
-                }
-                None => {
-                    // Ablation: NSGA-II evaluates the backend directly
-                    // with a tightly capped budget (random-search tier).
-                    // The evaluator threads the measurement RNG, so this
-                    // path stays on the sequential `run` entry point.
-                    let budget_params = Nsga2Params {
-                        population: params.nsga.population.min(24),
-                        generations: params.nsga.generations.min(8),
-                        // nsga_params so the coordinator-level
-                        // parallelism override reaches archive batching
-                        ..nsga_params
-                    };
-                    // separate measurement noise stream: `rng` drives the
-                    // evolutionary operators inside nsga2::run
-                    let mut noise_rng = rng.split();
-                    let res = nsga2::run(
-                        &budget_params,
-                        &params.toggles,
-                        |c| {
-                            testbed_evals += 1;
-                            evaluator.measure_batch(
-                                &[mask_ref.clamp(*c)], &ctx, &mut noise_rng,
-                            )[0]
-                        },
-                        |c| {
-                            let c = mask_ref.clamp(*c);
-                            tb.true_objectives(&c, m, t).memory_gb
-                                <= tb.platform.mem_capacity_gb
-                                && power_ok(&c)
-                        },
-                        rng,
-                    );
-                    res.archive
-                }
-            }
+        // ---- lines 3+4: the strategy proposes this round's candidates ---
+        let round = {
+            let cx = StrategyCx {
+                scenario,
+                params,
+                reference: &reference,
+                surrogates: surrogates.as_ref(),
+                measured: &measured,
+                seen: &measured_configs,
+                iteration,
+                rounds: iters,
+            };
+            strategy.propose(&cx, evaluator, rng)
         };
-
-        // ---- line 4: pick top-k uncertain candidates from P_r ------------
-        let mut candidates: Vec<Config> = surrogate_archive
-            .entries()
-            .iter()
-            .map(|e| mask.clamp(e.config))
-            .filter(|c| !measured_configs.contains(c))
-            .collect();
-        candidates.sort();
-        candidates.dedup();
-        if let Some(sur) = &surrogates {
-            // Uncertainty scoring fans out; the sort itself runs on
-            // precomputed keys so its comparisons stay O(1) and the
-            // ordering is deterministic.
-            let uncertainty: Vec<f64> = pool::parallel_map(
-                par,
-                &candidates,
-                |c| sur.predict(c, m, t).total_relative_uncertainty(),
-            );
-            let mut order: Vec<usize> = (0..candidates.len()).collect();
-            order.sort_by(|&a, &b| {
-                uncertainty[b].partial_cmp(&uncertainty[a]).unwrap()
-            });
-            candidates = order.into_iter().map(|i| candidates[i]).collect();
-        }
-        candidates.truncate(params.evals_per_iter.max(1));
+        surrogate_evals += round.surrogate_evals;
+        strategy_evals += round.strategy_evals;
+        testbed_evals += round.strategy_evals;
+        let candidates = round.proposals;
 
         // ---- lines 5+6: measure on hardware, update surrogates ----------
         testbed_evals += candidates.len();
@@ -431,6 +389,8 @@ pub fn optimize_with_observer(
         reference,
         testbed_evals,
         surrogate_evals,
+        strategy: strategy.name(),
+        strategy_evals,
     }
 }
 
@@ -462,6 +422,10 @@ mod tests {
                 "chosen={} default={u_def}", out.chosen_utility);
         assert!(out.chosen_efficiency_score > 1.3,
                 "es={}", out.chosen_efficiency_score);
+        assert_eq!(out.strategy, "nsga2");
+        assert_eq!(out.strategy_evals, 0,
+                   "surrogate-mode NSGA-II measures only through the \
+                    coordinator");
     }
 
     #[test]
@@ -493,6 +457,14 @@ mod tests {
                 "testbed evals {}", with.testbed_evals);
         assert!(without.testbed_evals > 24 * 8,
                 "direct evals {}", without.testbed_evals);
+        // direct mode's NSGA-II measurements are strategy-internal:
+        // total = strategy evals + (<= k proposals) + default fallback
+        assert!(without.strategy_evals > 24 * 8,
+                "strategy evals {}", without.strategy_evals);
+        let extra = without.testbed_evals - without.strategy_evals;
+        assert!((1..=8 + 1).contains(&extra),
+                "direct evals {} vs strategy evals {}",
+                without.testbed_evals, without.strategy_evals);
     }
 
     #[test]
@@ -527,6 +499,23 @@ mod tests {
         assert_eq!(out.chosen.inf.precision, Precision::Fp16);
         for e in out.pareto.entries() {
             assert_eq!(e.config.inf.precision, Precision::Fp16);
+        }
+    }
+
+    #[test]
+    fn mask_restricts_every_strategy() {
+        let s = scenario();
+        for kind in StrategyKind::ALL {
+            let mut p = AeLlmParams::small();
+            p.mask = SpaceMask::without_quant();
+            p.strategy = kind;
+            let mut rng = Rng::new(5);
+            let out = opt(&s, &p, &mut rng);
+            for e in out.pareto.entries() {
+                assert_eq!(e.config.inf.precision, Precision::Fp16,
+                           "{} leaked quantized config {}", kind.name(),
+                           e.config);
+            }
         }
     }
 

@@ -1,9 +1,17 @@
-//! S9: the AE-LLM coordinator — Algorithm 1 (surrogate-guided NSGA-II
-//! with hardware-in-the-loop refinement) expressed against the
-//! [`crate::evaluator::Evaluator`] backend trait, the builder-style
-//! [`AeLlm`] session facade with typed errors and observer hooks,
-//! deployment scenarios, space masks for ablations, and the Fig. 4
-//! sensitivity sweeps.
+//! S9: the AE-LLM coordinator — Algorithm 1 (surrogate warm-start +
+//! pluggable search strategy + hardware-in-the-loop refinement)
+//! expressed against the [`crate::evaluator::Evaluator`] backend trait
+//! and the [`crate::search::strategy::SearchStrategy`] proposal trait,
+//! the builder-style [`AeLlm`] session facade with typed errors and
+//! observer hooks, deployment scenarios, space masks for ablations,
+//! and the Fig. 4 sensitivity sweeps.
+//!
+//! The deprecated `optimize` / `optimize_with` shims are no longer
+//! re-exported here: they stay reachable (and bit-identity-tested) at
+//! their defining path, [`algorithm1::optimize`] /
+//! [`algorithm1::optimize_with`], while the supported surface is the
+//! trait/builder path ([`optimize_with_observer`],
+//! [`optimize_with_strategy`], [`AeLlm`]).
 
 pub mod algorithm1;
 pub mod observer;
@@ -11,10 +19,8 @@ pub mod scenario;
 pub mod sensitivity;
 pub mod session;
 
-#[allow(deprecated)]
-pub use algorithm1::{optimize, optimize_with};
-pub use algorithm1::{optimize_with_observer, pareto_hypervolume,
-                     AeLlmParams, Outcome};
+pub use algorithm1::{optimize_with_observer, optimize_with_strategy,
+                     pareto_hypervolume, AeLlmParams, Outcome};
 pub use observer::{CollectingObserver, FnObserver, IterationEvent,
                    NullObserver, RunObserver};
 pub use scenario::{Scenario, SpaceMask};

@@ -24,6 +24,7 @@ use crate::evaluator::Evaluator;
 use crate::hardware;
 use crate::metrics::Preferences;
 use crate::models;
+use crate::search::strategy::StrategyKind;
 use crate::tasks;
 use crate::util::json::Json;
 use crate::util::Rng;
@@ -45,6 +46,7 @@ pub enum AeLlmError {
     UnknownTask(String),
     UnknownPlatform(String),
     UnknownPrefs(String),
+    UnknownStrategy(String),
 }
 
 fn join_names<I: IntoIterator<Item = &'static str>>(names: I) -> String {
@@ -88,6 +90,12 @@ impl fmt::Display for AeLlmError {
                 f,
                 "unknown preferences {name:?} (known: balanced, latency, \
                  memory, accuracy, green)"
+            ),
+            AeLlmError::UnknownStrategy(name) => write!(
+                f,
+                "unknown strategy {name:?} (known: {})",
+                join_names(StrategyKind::ALL.iter().map(|k| k.name())
+                    .collect::<Vec<_>>()),
             ),
         }
     }
@@ -151,6 +159,20 @@ impl AeLlm {
         self
     }
 
+    /// Select the search procedure for Algorithm 1's proposal step
+    /// (DESIGN.md §10).  NSGA-II is the default.
+    pub fn strategy(mut self, kind: StrategyKind) -> AeLlm {
+        self.params.strategy = kind;
+        self
+    }
+
+    /// Strategy by CLI name (`nsga2`, `random`, `racing`, `local`).
+    pub fn strategy_named(self, name: &str) -> Result<AeLlm, AeLlmError> {
+        let kind = StrategyKind::by_name(name)
+            .ok_or_else(|| AeLlmError::UnknownStrategy(name.to_string()))?;
+        Ok(self.strategy(kind))
+    }
+
     /// Shrink to the quick test/demo budget ([`AeLlmParams::small`]),
     /// preserving any mask/toggle customization is the caller's job —
     /// this replaces the whole parameter set.
@@ -194,6 +216,7 @@ impl AeLlm {
             platform: self.scenario.testbed.platform.name.to_string(),
             prefs: self.scenario.prefs,
             seed: self.seed,
+            strategy: outcome.strategy.to_string(),
             evaluator_evals: evaluator.evals() - evals_before,
             iterations: tee.events,
             wall_ms: t0.elapsed().as_secs_f64() * 1e3,
@@ -258,6 +281,8 @@ pub struct RunReport {
     pub platform: String,
     pub prefs: Preferences,
     pub seed: u64,
+    /// Name of the search strategy that ran (`outcome.strategy`).
+    pub strategy: String,
     /// The evaluator's own request counter (differs from
     /// `outcome.testbed_evals` only for decorators, e.g. a caching
     /// wrapper whose inner backend measured less).
@@ -277,14 +302,18 @@ fn objectives_json(o: &crate::oracle::Objectives) -> Json {
 }
 
 impl RunReport {
-    /// Serialize the full report (schema `ae-llm.run-report/v1`).
+    /// Serialize the full report (schema `ae-llm.run-report/v2`; v2
+    /// adds the `strategy` name and the `strategy_evals` counter —
+    /// the strategy's own mid-round measurements, split out of
+    /// `testbed_evals`).
     pub fn to_json(&self) -> Json {
         let mut root = std::collections::BTreeMap::new();
         root.insert("schema".into(),
-                    Json::Str("ae-llm.run-report/v1".into()));
+                    Json::Str("ae-llm.run-report/v2".into()));
         root.insert("model".into(), Json::Str(self.model.clone()));
         root.insert("task".into(), Json::Str(self.task.clone()));
         root.insert("platform".into(), Json::Str(self.platform.clone()));
+        root.insert("strategy".into(), Json::Str(self.strategy.clone()));
         // String, not Num: Json numbers are f64 and would corrupt
         // seeds above 2^53, breaking replay-from-report.
         root.insert("seed".into(), Json::Str(self.seed.to_string()));
@@ -314,6 +343,8 @@ impl RunReport {
                     Json::Num(out.testbed_evals as f64));
         root.insert("surrogate_evals".into(),
                     Json::Num(out.surrogate_evals as f64));
+        root.insert("strategy_evals".into(),
+                    Json::Num(out.strategy_evals as f64));
         root.insert("evaluator_evals".into(),
                     Json::Num(self.evaluator_evals as f64));
 
@@ -368,6 +399,8 @@ mod tests {
                          Err(AeLlmError::UnknownTask(_))));
         assert!(matches!(b.clone().platform("TPU-9000"),
                          Err(AeLlmError::UnknownPlatform(_))));
+        assert!(matches!(b.clone().strategy_named("nsga3"),
+                         Err(AeLlmError::UnknownStrategy(_))));
         assert!(matches!(b.prefs_named("speedy"),
                          Err(AeLlmError::UnknownPrefs(_))));
     }
@@ -378,6 +411,8 @@ mod tests {
         assert!(e.contains("GPT-5") && e.contains("LLaMA-2-7B"), "{e}");
         let e = AeLlmError::UnknownPrefs("speedy".into()).to_string();
         assert!(e.contains("speedy") && e.contains("green"), "{e}");
+        let e = AeLlmError::UnknownStrategy("nsga3".into()).to_string();
+        assert!(e.contains("nsga3") && e.contains("racing"), "{e}");
     }
 
     #[test]
@@ -389,10 +424,13 @@ mod tests {
             .platform("RTX-4090")
             .unwrap()
             .prefs(Preferences::memory_constrained())
+            .strategy_named("racing")
+            .unwrap()
             .seed(9);
         assert_eq!(b.scenario().model.name, "Mistral-7B");
         assert_eq!(b.scenario().task.name, "GSM8K");
         assert_eq!(b.scenario().testbed.platform.name, "RTX-4090");
+        assert_eq!(b.params_ref().strategy, StrategyKind::Racing);
         assert_eq!(b.seed, 9);
     }
 
@@ -405,12 +443,16 @@ mod tests {
             .run_testbed();
         assert_eq!(report.iterations.len(),
                    report.iterations.last().unwrap().total_iterations);
+        assert_eq!(report.strategy, "nsga2");
         let text = report.to_json().dump();
         let parsed = Json::parse(&text).expect("valid JSON");
         assert_eq!(parsed.get("schema").and_then(|s| s.as_str()),
-                   Some("ae-llm.run-report/v1"));
+                   Some("ae-llm.run-report/v2"));
         assert_eq!(parsed.get("model").and_then(|s| s.as_str()),
                    Some("Phi-2"));
+        assert_eq!(parsed.get("strategy").and_then(|s| s.as_str()),
+                   Some("nsga2"));
+        assert!(parsed.get("strategy_evals").is_some());
         assert_eq!(parsed.get("seed").and_then(|s| s.as_str()), Some("3"));
         let chosen_sig = parsed
             .get("chosen")

@@ -2,8 +2,9 @@
 //!
 //! ```text
 //! ae-llm search  --model Mistral-7B [--task GSM8K] [--platform A100-80GB]
-//!                [--prefs latency] [--quick] [--seed N] [--json]
-//! ae-llm table   --id 2|3|4|5|6 [--quick] [--seed N]
+//!                [--prefs latency] [--strategy nsga2|random|racing|local]
+//!                [--quick] [--seed N] [--json]
+//! ae-llm table   --id 2|3|4|5|6|7 [--quick] [--seed N]  # 7 = strategies
 //! ae-llm figure  --id 1|2|3|4 [--quick] [--seed N] [--out reports/]
 //! ae-llm e2e     [--repeats N] [--seed N]  # hardware-in-the-loop Algorithm 1
 //! ae-llm serve   [--requests N] [--variant V] [--seed N]
@@ -145,7 +146,8 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         return Ok(());
     };
     let (valued, flags): (&[&str], &[&str]) = match cmd.as_str() {
-        "search" => (&["model", "task", "platform", "prefs", "seed"],
+        "search" => (&["model", "task", "platform", "prefs", "strategy",
+                       "seed"],
                      &["quick", "json"]),
         "table" => (&["id", "seed"], &["quick"]),
         "figure" => (&["id", "seed", "out"], &["quick"]),
@@ -186,7 +188,13 @@ fn cmd_search(opts: &Opts, budget: &Budget, seed: u64) -> anyhow::Result<()> {
     if let Some(w) = opts.get("prefs") {
         session = session.prefs_named(w)?;
     }
-    let session = session.params(budget.ae_params()).seed(seed);
+    session = session.params(budget.ae_params()).seed(seed);
+    if let Some(s) = opts.get("strategy") {
+        // After `params(...)` so the budget preset can't reset the
+        // strategy choice back to the default.
+        session = session.strategy_named(s)?;
+    }
+    let session = session;
 
     if opts.flag("json") {
         // Machine-readable RunReport; nothing else on stdout.
@@ -197,10 +205,12 @@ fn cmd_search(opts: &Opts, budget: &Budget, seed: u64) -> anyhow::Result<()> {
 
     let scenario = session.scenario();
     println!(
-        "AE-LLM search: model={} task={} platform={} (|C| grid = {})",
+        "AE-LLM search: model={} task={} platform={} strategy={} \
+         (|C| grid = {})",
         scenario.model.name,
         scenario.task.name,
         scenario.testbed.platform.name,
+        session.params_ref().strategy.name(),
         ae_llm::config::enumerate::grid_size(),
     );
     let report = session.run_testbed_observed(&mut FnObserver(
@@ -261,7 +271,10 @@ fn cmd_table(opts: &Opts, budget: &Budget, seed: u64) -> anyhow::Result<()> {
         4 => tables::table_4(budget, seed),
         5 => tables::table_5(),
         6 => tables::table_6(budget, seed),
-        other => anyhow::bail!("no table {other} (paper has 2-6)"),
+        7 => tables::table_strategies(budget, seed),
+        other => anyhow::bail!(
+            "no table {other} (paper has 2-6; 7 = strategy comparison)"
+        ),
     };
     println!("{}", table.render());
     println!("(regenerated in {:.1}s)", t0.elapsed().as_secs_f64());
@@ -443,15 +456,18 @@ fn print_help() {
         "AE-LLM: Adaptive Efficiency Optimization for LLMs\n\n\
          USAGE: ae-llm <command> [options]\n\n\
          COMMANDS:\n  \
-         search  --model M [--task T] [--platform P] [--prefs W] [--quick]\n  \
-         \x20       [--seed N] [--json]   (--json emits the RunReport)\n  \
-         table   --id 2|3|4|5|6 [--quick] [--seed N]\n  \
+         search  --model M [--task T] [--platform P] [--prefs W]\n  \
+         \x20       [--strategy S] [--quick] [--seed N] [--json]\n  \
+         \x20       (--json emits the RunReport)\n  \
+         table   --id 2|3|4|5|6|7 [--quick] [--seed N]\n  \
+         \x20       (7 = search-strategy comparison)\n  \
          figure  --id 1|2|3|4 [--quick] [--seed N] [--out DIR]\n  \
          e2e     [--repeats N] [--seed N]   hardware-in-the-loop + serving\n  \
          serve   [--requests N] [--variant V] [--seed N]\n  \
          check   load + execute every AOT artifact\n  \
          space   print the configuration-space inventory\n\n\
-         prefs: balanced | latency | memory | accuracy | green"
+         prefs: balanced | latency | memory | accuracy | green\n\
+         strategies: nsga2 | random | racing | local"
     );
 }
 
@@ -569,5 +585,19 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("--seed expects a number"), "{err}");
+    }
+
+    #[test]
+    fn unknown_strategy_value_rejected_with_choices() {
+        let err = run(&args(&["search", "--strategy", "nsga3"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("nsga3"), "{err}");
+        assert!(err.contains("racing"), "{err}");
+        // and the option key itself gets the did-you-mean machinery
+        let err = run(&args(&["search", "--stratgy", "racing"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean --strategy?"), "{err}");
     }
 }

@@ -11,9 +11,11 @@ pub mod tables;
 
 use crate::config::Config;
 use crate::coordinator::{AeLlm, AeLlmParams, Outcome, Scenario};
+use crate::evaluator::EvalContext;
 use crate::metrics::{efficiency_score, Preferences, Reference};
 use crate::oracle::Objectives;
 use crate::search::baselines::{self, Baseline};
+use crate::util::pool::Parallelism;
 use crate::util::Rng;
 
 /// Seeded, unobserved run against the scenario's testbed — the lean
@@ -90,7 +92,6 @@ impl Budget {
 /// itself only ever saw noisy measurements).
 pub fn run_method(method: Method, scenario: &Scenario, budget: &Budget,
                   seed: u64) -> MethodResult {
-    let mut rng = Rng::new(seed);
     let m = &scenario.model;
     let t = &scenario.task;
     let tb = &scenario.testbed;
@@ -110,7 +111,11 @@ pub fn run_method(method: Method, scenario: &Scenario, budget: &Budget,
                 },
                 other => other,
             };
-            let mut noise_rng = rng.split();
+            // Selector baselines measure through the `Evaluator` trait
+            // (one parallel batch, counted), same noise model as the
+            // AE-LLM runs; the table re-scores on noiseless truth below.
+            let mut evaluator = tb.clone();
+            let ctx = EvalContext::new(m, t, Parallelism::Auto);
             baselines::select(
                 b,
                 m,
@@ -118,8 +123,9 @@ pub fn run_method(method: Method, scenario: &Scenario, budget: &Budget,
                 &tb.platform,
                 &reference,
                 &scenario.prefs,
-                |c| tb.measure(c, m, t, &mut noise_rng),
-                |c| tb.feasible(c, m, t),
+                &mut evaluator,
+                &|c: &Config| tb.feasible(c, m, t),
+                &ctx,
                 &mut Rng::new(seed ^ 0x5eed),
             )
         }

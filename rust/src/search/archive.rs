@@ -56,7 +56,9 @@ impl ParetoArchive {
         true
     }
 
-    /// Insert a whole evaluated batch; returns how many made it in.
+    /// Insert a whole evaluated batch; returns the per-item acceptance
+    /// booleans, in submission order — exactly what calling
+    /// [`insert`](Self::insert) per item would have returned.
     ///
     /// Exactly equivalent to calling [`insert`](Self::insert) per item in
     /// submission order — the batch form exists so the dominance checks
@@ -82,7 +84,7 @@ impl ParetoArchive {
     ///    candidate dominated by the snapshot is still dominated by
     ///    something at its own turn.
     pub fn insert_batch(&mut self, items: &[(Config, Objectives)],
-                        par: Parallelism) -> usize {
+                        par: Parallelism) -> Vec<bool> {
         // Below this size the pre-filter costs more than it saves.
         const MIN_PARALLEL_BATCH: usize = 32;
         // Cheap guards first; the collision scan allocates and is only
@@ -103,19 +105,22 @@ impl ParetoArchive {
         {
             return items
                 .iter()
-                .filter(|(c, o)| self.insert(*c, *o))
-                .count();
+                .map(|(c, o)| self.insert(*c, *o))
+                .collect();
         }
         let snapshot: Vec<Objectives> =
             self.entries.iter().map(|e| e.objectives).collect();
         let keep: Vec<bool> = pool::parallel_map(par, items, |(_, o)| {
             !snapshot.iter().any(|e| e.dominates(o))
         });
+        // A pre-filtered candidate is dominated by the pre-batch
+        // snapshot, so the sequential loop would also have returned
+        // `false` for it (dominance is transitive; see conditions 1–3).
         items
             .iter()
             .zip(&keep)
-            .filter(|((c, o), &k)| k && self.insert(*c, *o))
-            .count()
+            .map(|((c, o), &k)| k && self.insert(*c, *o))
+            .collect()
     }
 
     fn prune_dominated(&mut self) {
@@ -283,10 +288,13 @@ mod tests {
                         energy_j: 0.1 + rng.f64(),
                     }));
                 }
-                for (c, o) in &items {
-                    seq.insert(*c, *o);
-                }
-                bat.insert_batch(&items, Parallelism::Threads(4));
+                let accepts_seq: Vec<bool> =
+                    items.iter().map(|(c, o)| seq.insert(*c, *o)).collect();
+                let accepts_bat = bat.insert_batch(&items,
+                                                   Parallelism::Threads(4));
+                assert_eq!(accepts_seq, accepts_bat,
+                           "acceptance booleans diverged at capacity \
+                            {capacity} dup {dup} round {round}");
                 let key = |a: &ParetoArchive| -> Vec<(Config, String)> {
                     a.entries()
                         .iter()

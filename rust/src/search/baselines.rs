@@ -9,11 +9,20 @@
 //!   aggregated across tasks (no task-specific adaptation);
 //! * **Random Search** — budgeted random sampling (Table 3 ablation
 //!   "- Predictive Models").
+//!
+//! All five run through the [`Evaluator`] backend trait — the selector
+//! baselines measure their candidates in one `measure_batch` call, so
+//! they inherit parallel fan-out, caching decorators and
+//! [`Evaluator::evals`] counting; the rule-based baselines never touch
+//! the backend at all (that is their handicap, and their eval count is
+//! provably zero).  The pre-PR-3 bespoke `FnMut(&Config) -> Objectives`
+//! closure convention is gone.
 
 use crate::config::{
     enumerate, validity, ArchConfig, Attention, Config, FtConfig, FtMethod,
     InfConfig, KvCache, MoE, Precision, QuantMethod,
 };
+use crate::evaluator::{EvalContext, Evaluator};
 use crate::hardware::Platform;
 use crate::metrics::{utility, Preferences, Reference};
 use crate::models::{ModelSpec, Scale};
@@ -46,34 +55,37 @@ impl Baseline {
 
 /// Select a configuration with the given baseline method.
 ///
-/// `evaluate` plays the role of running the configuration on the
-/// testbed; selector baselines use it with a limited budget, rule-based
-/// baselines don't evaluate at all (that is their handicap).
-pub fn select<E, F>(
+/// `evaluator` plays the role of running candidates on the testbed:
+/// selector baselines measure a limited candidate batch through it
+/// (their cost shows up in [`Evaluator::evals`]); rule-based baselines
+/// don't evaluate at all.  `rng` drives both candidate sampling and
+/// the backend's measurement noise.
+pub fn select<F>(
     baseline: Baseline,
     m: &ModelSpec,
     t: &TaskSpec,
     platform: &Platform,
     reference: &Reference,
     prefs: &Preferences,
-    mut evaluate: E,
-    feasible: F,
+    evaluator: &mut dyn Evaluator,
+    feasible: &F,
+    ctx: &EvalContext,
     rng: &mut Rng,
 ) -> Config
 where
-    E: FnMut(&Config) -> Objectives,
     F: Fn(&Config) -> bool,
 {
     match baseline {
         Baseline::Default => Config::default_baseline(),
         Baseline::BestSingleStage => {
-            best_single_stage(reference, prefs, &mut evaluate, &feasible)
+            best_single_stage(reference, prefs, evaluator, feasible, ctx,
+                              rng)
         }
         Baseline::ManualSelection => manual_selection(m, t, platform),
         Baseline::EfficientLlmRec => efficient_llm_rec(m),
         Baseline::RandomSearch { budget } => {
-            random_search(budget, reference, prefs, &mut evaluate,
-                          &feasible, rng)
+            random_search(budget, reference, prefs, evaluator, feasible,
+                          ctx, rng)
         }
     }
 }
@@ -119,29 +131,48 @@ pub fn single_stage_candidates() -> Vec<Config> {
     out
 }
 
-fn best_single_stage<E, F>(
+/// Pick the utility-argmax of one measured candidate batch (first
+/// candidate wins ties, matching the old sequential `>` comparison).
+fn best_of_batch(
+    candidates: &[Config],
+    evaluator: &mut dyn Evaluator,
     reference: &Reference,
     prefs: &Preferences,
-    evaluate: &mut E,
-    feasible: &F,
-) -> Config
-where
-    E: FnMut(&Config) -> Objectives,
-    F: Fn(&Config) -> bool,
-{
-    let mut best = Config::default_baseline();
-    let mut best_u = utility(&evaluate(&best), reference, prefs);
-    for c in single_stage_candidates() {
-        if !feasible(&c) {
-            continue;
-        }
-        let u = utility(&evaluate(&c), reference, prefs);
+    ctx: &EvalContext,
+    rng: &mut Rng,
+) -> Config {
+    debug_assert!(!candidates.is_empty());
+    let objectives = evaluator.measure_batch(candidates, ctx, rng);
+    let mut best = candidates[0];
+    let mut best_u = utility(&objectives[0], reference, prefs);
+    for (c, o) in candidates.iter().zip(&objectives).skip(1) {
+        let u = utility(o, reference, prefs);
         if u > best_u {
             best_u = u;
-            best = c;
+            best = *c;
         }
     }
     best
+}
+
+fn best_single_stage<F>(
+    reference: &Reference,
+    prefs: &Preferences,
+    evaluator: &mut dyn Evaluator,
+    feasible: &F,
+    ctx: &EvalContext,
+    rng: &mut Rng,
+) -> Config
+where
+    F: Fn(&Config) -> bool,
+{
+    // Default first so it wins ties, then every feasible single-stage
+    // variant — measured as one batch (parallel backends fan it out).
+    let mut candidates = vec![Config::default_baseline()];
+    candidates.extend(
+        single_stage_candidates().into_iter().filter(|c| feasible(c)),
+    );
+    best_of_batch(&candidates, evaluator, reference, prefs, ctx, rng)
 }
 
 /// Expert rule set: sensible, interaction-blind heuristics (paper §4.2
@@ -216,32 +247,28 @@ fn efficient_llm_rec(m: &ModelSpec) -> Config {
     c
 }
 
-fn random_search<E, F>(
+fn random_search<F>(
     budget: usize,
     reference: &Reference,
     prefs: &Preferences,
-    evaluate: &mut E,
+    evaluator: &mut dyn Evaluator,
     feasible: &F,
+    ctx: &EvalContext,
     rng: &mut Rng,
 ) -> Config
 where
-    E: FnMut(&Config) -> Objectives,
     F: Fn(&Config) -> bool,
 {
-    let mut best = Config::default_baseline();
-    let mut best_u = utility(&evaluate(&best), reference, prefs);
+    // Default first (tie-winner), then `budget` samples filtered to the
+    // feasible ones — measured as one batch.
+    let mut candidates = vec![Config::default_baseline()];
     for _ in 0..budget {
         let c = enumerate::sample(rng);
-        if !feasible(&c) {
-            continue;
-        }
-        let u = utility(&evaluate(&c), reference, prefs);
-        if u > best_u {
-            best_u = u;
-            best = c;
+        if feasible(&c) {
+            candidates.push(c);
         }
     }
-    best
+    best_of_batch(&candidates, evaluator, reference, prefs, ctx, rng)
 }
 
 #[cfg(test)]
@@ -251,6 +278,7 @@ mod tests {
     use crate::models::by_name;
     use crate::oracle::Testbed;
     use crate::tasks::{blended_task, by_name as task};
+    use crate::util::Parallelism;
 
     struct Env {
         tb: Testbed,
@@ -269,19 +297,27 @@ mod tests {
         Env { tb, m, t, reference }
     }
 
-    fn run_baseline(b: Baseline, e: &Env) -> Config {
+    fn run_baseline_counting(b: Baseline, e: &Env) -> (Config, usize) {
         let mut rng = Rng::new(1);
-        select(
+        let mut evaluator = e.tb.clone();
+        let ctx = EvalContext::new(&e.m, &e.t, Parallelism::Sequential);
+        let c = select(
             b,
             &e.m,
             &e.t,
             &e.tb.platform,
             &e.reference,
             &Preferences::default(),
-            |c| e.tb.true_objectives(c, &e.m, &e.t),
-            |c| e.tb.feasible(c, &e.m, &e.t),
+            &mut evaluator,
+            &|c: &Config| e.tb.feasible(c, &e.m, &e.t),
+            &ctx,
             &mut rng,
-        )
+        );
+        (c, Evaluator::evals(&evaluator))
+    }
+
+    fn run_baseline(b: Baseline, e: &Env) -> Config {
+        run_baseline_counting(b, e).0
     }
 
     #[test]
@@ -289,6 +325,29 @@ mod tests {
         let e = env("LLaMA-2-7B");
         assert_eq!(run_baseline(Baseline::Default, &e),
                    Config::default_baseline());
+    }
+
+    #[test]
+    fn rule_based_baselines_never_touch_the_evaluator() {
+        let e = env("LLaMA-2-7B");
+        for b in [Baseline::Default, Baseline::ManualSelection,
+                  Baseline::EfficientLlmRec] {
+            let (_, evals) = run_baseline_counting(b, &e);
+            assert_eq!(evals, 0, "{} measured {evals} configs", b.name());
+        }
+    }
+
+    #[test]
+    fn selector_baselines_report_eval_counts() {
+        let e = env("LLaMA-2-7B");
+        let (_, evals) = run_baseline_counting(Baseline::BestSingleStage, &e);
+        // default + every feasible single-stage candidate
+        assert!(evals > 50, "best-single-stage evals {evals}");
+        let (_, evals) =
+            run_baseline_counting(Baseline::RandomSearch { budget: 50 }, &e);
+        // default + the feasible subset of 50 samples
+        assert!(evals >= 1 && evals <= 51, "random-search evals {evals}");
+        assert!(evals > 10, "random-search evals suspiciously low: {evals}");
     }
 
     #[test]
@@ -314,6 +373,31 @@ mod tests {
         let u_def = utility(&e.reference.default, &e.reference,
                             &Preferences::default());
         assert!(u_best > u_def, "best={u_best} default={u_def}");
+    }
+
+    #[test]
+    fn selection_is_parallelism_invariant() {
+        // The batch goes through `measure_batch`, whose RNG discipline
+        // makes results identical at every parallelism level.
+        let e = env("LLaMA-2-7B");
+        let noisy = Testbed::new(hardware::a100());
+        let go = |par: Parallelism| {
+            let mut evaluator = noisy.clone();
+            let ctx = EvalContext::new(&e.m, &e.t, par);
+            select(
+                Baseline::BestSingleStage,
+                &e.m,
+                &e.t,
+                &e.tb.platform,
+                &e.reference,
+                &Preferences::default(),
+                &mut evaluator,
+                &|c: &Config| e.tb.feasible(c, &e.m, &e.t),
+                &ctx,
+                &mut Rng::new(11),
+            )
+        };
+        assert_eq!(go(Parallelism::Sequential), go(Parallelism::Threads(4)));
     }
 
     #[test]

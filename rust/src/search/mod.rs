@@ -1,6 +1,8 @@
-//! S7/S8: multi-objective search — the modified NSGA-II (§3.3.2), its
-//! dominance/crowding machinery, genetic operators, the cross-iteration
-//! Pareto archive, and the comparison baselines of §4.1.
+//! S7/S8/S14: multi-objective search — the modified NSGA-II (§3.3.2),
+//! its dominance/crowding machinery, genetic operators, the
+//! cross-iteration Pareto archive, the comparison baselines of §4.1,
+//! and the pluggable [`strategy::SearchStrategy`] layer that makes the
+//! search procedure itself a swappable axis (DESIGN.md §10).
 
 pub mod archive;
 pub mod baselines;
@@ -8,7 +10,11 @@ pub mod dominance;
 pub mod hypervolume;
 pub mod nsga2;
 pub mod operators;
+pub mod strategy;
 
 pub use archive::{Entry, ParetoArchive};
 pub use baselines::Baseline;
 pub use nsga2::{Nsga2Params, SearchResult, Toggles};
+pub use strategy::{BaselineStrategy, LocalSearchStrategy, Nsga2Strategy,
+                   RacingStrategy, RandomStrategy, SearchStrategy,
+                   StrategyCx, StrategyKind, StrategyOutcome};

@@ -1,0 +1,930 @@
+//! S14: the pluggable search-strategy layer.
+//!
+//! AE-LLM's core claim is that an *efficient search procedure* over the
+//! combinatorial technique space finds configurations static choices
+//! miss — yet until this layer existed, the search procedure itself was
+//! static: NSGA-II hardwired into the coordinator, and the Table-2
+//! baselines running through a bespoke closure convention that bypassed
+//! the [`Evaluator`] backend entirely.  [`SearchStrategy`] makes the
+//! procedure a first-class swappable axis, the same way PR 2 made the
+//! evaluation backend one.
+//!
+//! ## Trait shape: round-based ask/tell
+//!
+//! A strategy implements one method, [`SearchStrategy::propose`]: given
+//! the run's read-only state ([`StrategyCx`]) and the evaluation
+//! backend, return the candidates the coordinator should measure at
+//! full fidelity this refinement round ([`StrategyOutcome`]).  The
+//! coordinator keeps the rest of Algorithm 1 — surrogate warm-start,
+//! the line-5 measurement batch, the measured Pareto archive, surrogate
+//! updates, observer events — so every strategy inherits caching, eval
+//! counting, parallel `measure_batch` fan-out and observer streaming
+//! for free.  `propose` is the "ask" half; the coordinator's
+//! measure-and-update step is the "tell" (strategies read its outcome
+//! through `cx.measured` / `cx.seen` next round).
+//!
+//! Why rounds rather than per-candidate ask/tell: line 5 is a batch
+//! fan-out point (DESIGN.md §8), and the extracted NSGA-II must stay
+//! bit-identical to the pre-refactor coordinator — which consumed the
+//! run RNG in whole-round units (one evolutionary search, then one
+//! measurement batch).  A per-candidate protocol would force a
+//! different RNG interleaving and break the PR-1 determinism contract.
+//! See DESIGN.md §10 for the full rationale.
+//!
+//! ## In-tree strategies
+//!
+//! | [`StrategyKind`] | Procedure |
+//! |---|---|
+//! | `nsga2` | the paper's surrogate-guided NSGA-II (extracted from the coordinator; bit-identical) |
+//! | `random` | budgeted random sampling of unseen configurations |
+//! | `racing` | successive-halving over measurement fidelities (4k → 2k → k survivors) |
+//! | `local` | hill-climb over one-technique mutations ranked by surrogate predictions |
+//!
+//! The Table-2 baselines ride the same seam as [`BaselineStrategy`]:
+//! rule-based selectors are degenerate zero-eval strategies, selector
+//! baselines perform their measurements through the backend and are
+//! counted by [`Evaluator::evals`].
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+use crate::config::{
+    enumerate, validity, ArchConfig, Attention, Config, FtConfig, FtMethod,
+    InfConfig, KvCache, MoE, Precision, QuantMethod, ALPHA_MULTS, RANKS,
+};
+use crate::coordinator::algorithm1::AeLlmParams;
+use crate::coordinator::scenario::Scenario;
+use crate::evaluator::{EvalContext, Evaluator};
+use crate::metrics::{utility, Preferences, Reference};
+use crate::oracle::Objectives;
+use crate::search::archive::ParetoArchive;
+use crate::search::baselines::{self, Baseline};
+use crate::search::nsga2::{self, Nsga2Params};
+use crate::surrogate::SurrogateSet;
+use crate::util::pool;
+use crate::util::Rng;
+
+/// Read-only view of one Algorithm-1 run, handed to
+/// [`SearchStrategy::propose`] each refinement round.
+pub struct StrategyCx<'a> {
+    pub scenario: &'a Scenario,
+    pub params: &'a AeLlmParams,
+    /// Default-configuration reference used for utility normalization.
+    pub reference: &'a Reference,
+    /// Trained surrogates, when the run warm-started them (the
+    /// coordinator fits them only if `params.use_surrogates` *and*
+    /// [`SearchStrategy::uses_surrogates`] agree).
+    pub surrogates: Option<&'a SurrogateSet>,
+    /// Measured Pareto archive accumulated by previous rounds.
+    pub measured: &'a ParetoArchive,
+    /// Every configuration already measured at full fidelity;
+    /// strategies should not re-propose members.
+    pub seen: &'a BTreeSet<Config>,
+    /// 0-based refinement round index.
+    pub iteration: usize,
+    /// Total rounds this run will perform ([`SearchStrategy::rounds`]).
+    pub rounds: usize,
+}
+
+impl<'a> StrategyCx<'a> {
+    /// The evaluation context strategies must pass to any
+    /// [`Evaluator`] call they make themselves, so backend fan-out
+    /// honors the coordinator's parallelism knob.
+    pub fn eval_ctx(&self) -> EvalContext<'_> {
+        EvalContext::new(&self.scenario.model, &self.scenario.task,
+                         self.params.parallelism)
+    }
+}
+
+/// What one [`SearchStrategy::propose`] round returns.
+pub struct StrategyOutcome {
+    /// Candidates for the coordinator's full-fidelity measurement batch
+    /// (at most `params.evals_per_iter`, already deduplicated and not
+    /// in `cx.seen`).
+    pub proposals: Vec<Config>,
+    /// Cheap surrogate predictions consumed this round.
+    pub surrogate_evals: usize,
+    /// Expensive backend measurements the strategy performed itself
+    /// mid-round (racing rungs, direct-measurement NSGA-II); the
+    /// coordinator adds these to the run's testbed-eval total.
+    pub strategy_evals: usize,
+}
+
+/// A pluggable search procedure for Algorithm 1's proposal step
+/// (lines 3–4: search the space, pick the candidates worth measuring).
+///
+/// Contract (the PR-1 determinism rules apply): `propose` must consume
+/// `rng` identically at every `Parallelism` level, must only perform
+/// backend measurements through `evaluator` (reported in
+/// [`StrategyOutcome::strategy_evals`]), and must never return a
+/// configuration in `cx.seen`.
+pub trait SearchStrategy {
+    /// Stable lowercase identifier (CLI `--strategy` value, report
+    /// rows, `RunReport.strategy`).
+    fn name(&self) -> &'static str;
+
+    /// Whether the coordinator should warm-start and refit surrogates
+    /// for this strategy.  Strategies that never read
+    /// `cx.surrogates` return `false` so their runs skip the
+    /// initial-sample measurement cost entirely.
+    fn uses_surrogates(&self) -> bool {
+        true
+    }
+
+    /// Refinement rounds this strategy wants under `params`.
+    fn rounds(&self, params: &AeLlmParams) -> usize {
+        params.refine_iters.max(1)
+    }
+
+    /// Produce this round's measurement candidates.
+    fn propose(&mut self, cx: &StrategyCx, evaluator: &mut dyn Evaluator,
+               rng: &mut Rng) -> StrategyOutcome;
+}
+
+// ---------------------------------------------------------------------------
+// StrategyKind: name-addressed construction
+// ---------------------------------------------------------------------------
+
+/// The built-in strategies, by CLI name.  Lives on [`AeLlmParams`] so
+/// strategy selection threads through the builder, the CLI and the
+/// serialized `RunReport` without the params losing `Copy`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StrategyKind {
+    /// Surrogate-guided NSGA-II (the paper's Algorithm 1 default).
+    Nsga2,
+    /// Budgeted random sampling.
+    Random,
+    /// Successive-halving racing over measurement fidelities.
+    Racing,
+    /// Surrogate-guided local search over one-technique mutations.
+    Local,
+}
+
+impl StrategyKind {
+    pub const ALL: [StrategyKind; 4] = [
+        StrategyKind::Nsga2,
+        StrategyKind::Random,
+        StrategyKind::Racing,
+        StrategyKind::Local,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StrategyKind::Nsga2 => "nsga2",
+            StrategyKind::Random => "random",
+            StrategyKind::Racing => "racing",
+            StrategyKind::Local => "local",
+        }
+    }
+
+    /// Lookup by CLI name.
+    pub fn by_name(name: &str) -> Option<StrategyKind> {
+        StrategyKind::ALL.iter().copied().find(|k| k.name() == name)
+    }
+
+    /// Instantiate the strategy (all built-ins are stateless).
+    pub fn build(&self) -> Box<dyn SearchStrategy> {
+        match self {
+            StrategyKind::Nsga2 => Box::new(Nsga2Strategy),
+            StrategyKind::Random => Box::new(RandomStrategy),
+            StrategyKind::Racing => Box::new(RacingStrategy),
+            StrategyKind::Local => Box::new(LocalSearchStrategy),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NSGA-II: the extracted coordinator search (bit-identical)
+// ---------------------------------------------------------------------------
+
+/// The paper's modified NSGA-II, extracted verbatim from the
+/// pre-refactor coordinator loop: surrogate-predicted evolution when
+/// surrogates are available (uncertainty-ranked candidate selection),
+/// budget-capped direct measurement otherwise (the "- Predictive
+/// Models" ablation).  `tests/integration_api.rs` proves this path is
+/// bit-identical to the legacy `optimize`/`optimize_with` entry points
+/// at `Parallelism` 1 and 4.
+pub struct Nsga2Strategy;
+
+impl SearchStrategy for Nsga2Strategy {
+    fn name(&self) -> &'static str {
+        "nsga2"
+    }
+
+    fn rounds(&self, params: &AeLlmParams) -> usize {
+        // Direct-measurement mode runs one capped NSGA-II only (its
+        // evaluation budget is the search itself).
+        if params.use_surrogates {
+            params.refine_iters.max(1)
+        } else {
+            1
+        }
+    }
+
+    fn propose(&mut self, cx: &StrategyCx, evaluator: &mut dyn Evaluator,
+               rng: &mut Rng) -> StrategyOutcome {
+        let scenario = cx.scenario;
+        let params = cx.params;
+        let m = &scenario.model;
+        let t = &scenario.task;
+        let tb = &scenario.testbed;
+        let mask = params.mask;
+        let par = params.parallelism;
+        let nsga_params = Nsga2Params { parallelism: par, ..params.nsga };
+        let power_ok = |c: &Config| {
+            tb.power_w(c, m, t) <= tb.platform.power_budget_w
+        };
+        let mut surrogate_evals = 0usize;
+        let mut strategy_evals = 0usize;
+
+        // ---- line 3: NSGA-II against the current surrogates -------------
+        let surrogate_archive = {
+            let mask_ref = &mask;
+            match cx.surrogates {
+                Some(sur) => {
+                    // §Perf: populations revisit configurations heavily
+                    // (tournament winners, crossover clones), so predict
+                    // through a memo table — ~3x fewer GBT traversals,
+                    // see EXPERIMENTS.md §Perf.  The table is a Mutex'd
+                    // map so the prediction fan-out can share it; the
+                    // cached value is a pure function of the config, so
+                    // racing fills are benign and results stay
+                    // deterministic at any parallelism level.
+                    let cache: Mutex<BTreeMap<Config, Objectives>> =
+                        Default::default();
+                    let cached_predict = |c: &Config| -> Objectives {
+                        let c = mask_ref.clamp(*c);
+                        if let Some(o) = cache.lock().unwrap().get(&c) {
+                            return *o;
+                        }
+                        let o = sur.predict(&c, m, t).objectives;
+                        cache.lock().unwrap().insert(c, o);
+                        o
+                    };
+                    let evaluate = |c: &Config| cached_predict(c);
+                    let res = nsga2::run_par(
+                        &nsga_params,
+                        &params.toggles,
+                        &evaluate,
+                        |c| {
+                            let mem = cached_predict(c).memory_gb;
+                            mem <= tb.platform.mem_capacity_gb
+                                && power_ok(&mask_ref.clamp(*c))
+                        },
+                        rng,
+                    );
+                    surrogate_evals += res.evaluations;
+                    res.archive
+                }
+                None => {
+                    // Ablation: NSGA-II evaluates the backend directly
+                    // with a tightly capped budget (random-search tier).
+                    // The evaluator threads the measurement RNG, so this
+                    // path stays on the sequential `run` entry point.
+                    let budget_params = Nsga2Params {
+                        population: params.nsga.population.min(24),
+                        generations: params.nsga.generations.min(8),
+                        // nsga_params so the coordinator-level
+                        // parallelism override reaches archive batching
+                        ..nsga_params
+                    };
+                    // separate measurement noise stream: `rng` drives the
+                    // evolutionary operators inside nsga2::run
+                    let mut noise_rng = rng.split();
+                    let eval_ctx = cx.eval_ctx();
+                    let res = nsga2::run(
+                        &budget_params,
+                        &params.toggles,
+                        |c| {
+                            strategy_evals += 1;
+                            evaluator.measure_batch(
+                                &[mask_ref.clamp(*c)], &eval_ctx,
+                                &mut noise_rng,
+                            )[0]
+                        },
+                        |c| {
+                            let c = mask_ref.clamp(*c);
+                            tb.true_objectives(&c, m, t).memory_gb
+                                <= tb.platform.mem_capacity_gb
+                                && power_ok(&c)
+                        },
+                        rng,
+                    );
+                    res.archive
+                }
+            }
+        };
+
+        // ---- line 4: pick top-k uncertain candidates from P_r ------------
+        let mut candidates: Vec<Config> = surrogate_archive
+            .entries()
+            .iter()
+            .map(|e| mask.clamp(e.config))
+            .filter(|c| !cx.seen.contains(c))
+            .collect();
+        candidates.sort();
+        candidates.dedup();
+        if let Some(sur) = cx.surrogates {
+            // Uncertainty scoring fans out; the sort itself runs on
+            // precomputed keys so its comparisons stay O(1) and the
+            // ordering is deterministic.
+            let uncertainty: Vec<f64> = pool::parallel_map(
+                par,
+                &candidates,
+                |c| sur.predict(c, m, t).total_relative_uncertainty(),
+            );
+            let mut order: Vec<usize> = (0..candidates.len()).collect();
+            order.sort_by(|&a, &b| {
+                uncertainty[b].partial_cmp(&uncertainty[a]).unwrap()
+            });
+            candidates = order.into_iter().map(|i| candidates[i]).collect();
+        }
+        candidates.truncate(params.evals_per_iter.max(1));
+
+        StrategyOutcome {
+            proposals: candidates,
+            surrogate_evals,
+            strategy_evals,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Random: budgeted sampling
+// ---------------------------------------------------------------------------
+
+/// Budgeted random sampling: each round proposes exactly
+/// `evals_per_iter` distinct unseen configurations for measurement.
+/// Zero surrogate and zero mid-round evaluations — the cheapest
+/// possible proposal step, and the floor every informed strategy must
+/// beat.
+pub struct RandomStrategy;
+
+impl SearchStrategy for RandomStrategy {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn uses_surrogates(&self) -> bool {
+        false
+    }
+
+    fn propose(&mut self, cx: &StrategyCx, _evaluator: &mut dyn Evaluator,
+               rng: &mut Rng) -> StrategyOutcome {
+        let k = cx.params.evals_per_iter.max(1);
+        let mask = cx.params.mask;
+        StrategyOutcome {
+            proposals: sample_unseen(k, &mask, cx.seen, rng),
+            surrogate_evals: 0,
+            strategy_evals: 0,
+        }
+    }
+}
+
+/// Draw `n` distinct masked configurations not in `seen` (guarded
+/// against pathological exhaustion of small masked spaces).
+fn sample_unseen(n: usize, mask: &crate::coordinator::scenario::SpaceMask,
+                 seen: &BTreeSet<Config>, rng: &mut Rng) -> Vec<Config> {
+    let mut out: Vec<Config> = Vec::with_capacity(n);
+    let mut guard = 0usize;
+    while out.len() < n && guard < n * 400 {
+        let c = mask.clamp(enumerate::sample(rng));
+        if !seen.contains(&c) && !out.contains(&c) {
+            out.push(c);
+        }
+        guard += 1;
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Racing: successive halving over measurement fidelities
+// ---------------------------------------------------------------------------
+
+/// Entrants per racing round, as a multiple of `evals_per_iter`.
+pub const RACING_ENTRANT_FACTOR: usize = 4;
+
+/// Successive-halving racing (multi-fidelity search).
+///
+/// Fidelity model: the backend returns noisy single measurements, so
+/// fidelity = number of repeated measurements averaged per candidate —
+/// more samples, less noise (DESIGN.md §10).  Each round:
+///
+/// * **rung 0** — `4k` fresh entrants, one cheap sample each;
+/// * **rung 1** — the top `2k` by utility of the running mean get two
+///   more samples each;
+/// * **promotion** — the top `k` survivors are proposed to the
+///   coordinator, whose line-5 batch is the full-fidelity measurement
+///   that enters the Pareto archive (rung measurements never do).
+///
+/// Budget accounting reuses `AeLlmParams`: with `k = evals_per_iter`
+/// and `R = refine_iters`, a run consumes exactly `R·(8k + k) + 1`
+/// backend evaluations (8k mid-round rung samples + k promotions per
+/// round + the final Default fallback) — asserted by
+/// `tests/integration_strategy.rs`.
+pub struct RacingStrategy;
+
+impl SearchStrategy for RacingStrategy {
+    fn name(&self) -> &'static str {
+        "racing"
+    }
+
+    fn uses_surrogates(&self) -> bool {
+        false
+    }
+
+    fn propose(&mut self, cx: &StrategyCx, evaluator: &mut dyn Evaluator,
+               rng: &mut Rng) -> StrategyOutcome {
+        let params = cx.params;
+        let k = params.evals_per_iter.max(1);
+        let mask = params.mask;
+        let prefs = &cx.scenario.prefs;
+        let eval_ctx = cx.eval_ctx();
+        let mut strategy_evals = 0usize;
+
+        // Rung 0: one cheap sample for each fresh entrant.
+        let entrants =
+            sample_unseen(RACING_ENTRANT_FACTOR * k, &mask, cx.seen, rng);
+        let first = evaluator.measure_batch(&entrants, &eval_ctx, rng);
+        strategy_evals += entrants.len();
+        let state: Vec<(Config, Objectives, usize)> = entrants
+            .into_iter()
+            .zip(first)
+            .map(|(c, o)| (c, o, 1))
+            .collect();
+
+        // Rung 1: top half survive; two more samples each, scored on
+        // the running mean.
+        let survivors =
+            top_by_utility(state, 2 * k, cx.reference, prefs);
+        let cfgs: Vec<Config> =
+            survivors.iter().map(|(c, _, _)| *c).collect();
+        let s1 = evaluator.measure_batch(&cfgs, &eval_ctx, rng);
+        let s2 = evaluator.measure_batch(&cfgs, &eval_ctx, rng);
+        strategy_evals += 2 * cfgs.len();
+        let refined: Vec<(Config, Objectives, usize)> = survivors
+            .into_iter()
+            .zip(s1.iter().zip(&s2))
+            .map(|((c, mean, n), (a, b))| {
+                (c, blend_mean(&mean, n, &[a, b]), n + 2)
+            })
+            .collect();
+
+        // Promotion: the top k go to full-fidelity measurement.
+        let finalists = top_by_utility(refined, k, cx.reference, prefs);
+        StrategyOutcome {
+            proposals: finalists.into_iter().map(|(c, _, _)| c).collect(),
+            surrogate_evals: 0,
+            strategy_evals,
+        }
+    }
+}
+
+/// Keep the `n` highest-utility entries (ties broken by config order so
+/// the cut is deterministic at every parallelism level).
+fn top_by_utility(
+    state: Vec<(Config, Objectives, usize)>,
+    n: usize,
+    reference: &Reference,
+    prefs: &Preferences,
+) -> Vec<(Config, Objectives, usize)> {
+    let keys: Vec<f64> = state
+        .iter()
+        .map(|(_, o, _)| utility(o, reference, prefs))
+        .collect();
+    let mut order: Vec<usize> = (0..state.len()).collect();
+    order.sort_by(|&a, &b| {
+        keys[b]
+            .partial_cmp(&keys[a])
+            .unwrap()
+            .then_with(|| state[a].0.cmp(&state[b].0))
+    });
+    order.into_iter().take(n).map(|i| state[i]).collect()
+}
+
+/// Running mean of `mean` (over `n` samples) extended by `fresh`.
+fn blend_mean(mean: &Objectives, n: usize, fresh: &[&Objectives])
+              -> Objectives {
+    let total = (n + fresh.len()) as f64;
+    let comb = |get: fn(&Objectives) -> f64| {
+        (get(mean) * n as f64 + fresh.iter().map(|o| get(o)).sum::<f64>())
+            / total
+    };
+    Objectives {
+        accuracy: comb(|o| o.accuracy),
+        latency_ms: comb(|o| o.latency_ms),
+        memory_gb: comb(|o| o.memory_gb),
+        energy_j: comb(|o| o.energy_j),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Local: surrogate-guided hill-climb over one-technique mutations
+// ---------------------------------------------------------------------------
+
+/// Maximum hill-climb steps per refinement round.
+pub const LOCAL_SEARCH_STEPS: usize = 8;
+
+/// Surrogate-guided local search.
+///
+/// Each round climbs from the best *measured* configuration so far
+/// (round 1: the Default baseline): enumerate every one-technique
+/// mutation of the current point ([`neighbors`]), rank the feasible
+/// ones by surrogate-predicted utility, and move to the best neighbor
+/// while prediction keeps improving.  Only the top-`k` predicted
+/// configurations encountered along the climb are proposed for real
+/// measurement — the surrogate does the exploration, the backend only
+/// confirms.  Without surrogates (the "- Predictive Models" ablation)
+/// it degenerates to proposing random one-technique mutations of the
+/// start point.
+pub struct LocalSearchStrategy;
+
+impl SearchStrategy for LocalSearchStrategy {
+    fn name(&self) -> &'static str {
+        "local"
+    }
+
+    fn propose(&mut self, cx: &StrategyCx, _evaluator: &mut dyn Evaluator,
+               rng: &mut Rng) -> StrategyOutcome {
+        let params = cx.params;
+        let k = params.evals_per_iter.max(1);
+        let mask = params.mask;
+        let scenario = cx.scenario;
+        let m = &scenario.model;
+        let t = &scenario.task;
+        let tb = &scenario.testbed;
+        let prefs = &scenario.prefs;
+
+        // Climb from the best measured point so far; the Default
+        // configuration seeds round 1.
+        let start = mask.clamp(
+            cx.measured
+                .best_by(|e| utility(&e.objectives, cx.reference, prefs))
+                .map(|e| e.config)
+                .unwrap_or_else(Config::default_baseline),
+        );
+
+        let Some(sur) = cx.surrogates else {
+            // Degenerate fallback: random one-technique mutations.
+            let mut nbrs: Vec<Config> = neighbors(&start)
+                .into_iter()
+                .map(|c| mask.clamp(c))
+                .filter(|c| *c != start && !cx.seen.contains(c))
+                .collect();
+            nbrs.sort();
+            nbrs.dedup();
+            rng.shuffle(&mut nbrs);
+            nbrs.truncate(k);
+            return StrategyOutcome {
+                proposals: nbrs,
+                surrogate_evals: 0,
+                strategy_evals: 0,
+            };
+        };
+
+        let predict_util = |c: &Config| -> f64 {
+            utility(&sur.predict(c, m, t).objectives, cx.reference, prefs)
+        };
+        let mut surrogate_evals = 1usize;
+        let mut current = start;
+        let mut current_u = predict_util(&current);
+        let mut visited: BTreeSet<Config> = BTreeSet::new();
+        visited.insert(current);
+        // Predicted utility per scored config.  Doubles as a memo: a
+        // config adjacent to two climb-path points is predicted once,
+        // not once per step (same trick as Nsga2Strategy's table).
+        let mut scored: BTreeMap<Config, f64> = BTreeMap::new();
+        scored.insert(current, current_u);
+
+        for _step in 0..LOCAL_SEARCH_STEPS {
+            let mut nbrs: Vec<Config> = neighbors(&current)
+                .into_iter()
+                .map(|c| mask.clamp(c))
+                .filter(|c| *c != current && !visited.contains(c))
+                .collect();
+            nbrs.sort();
+            nbrs.dedup();
+            // Predicted Definition-3 power feasibility, as in the
+            // NSGA-II constraint-aware initialization.
+            nbrs.retain(|c| {
+                tb.power_w(c, m, t) <= tb.platform.power_budget_w
+            });
+            if nbrs.is_empty() {
+                break;
+            }
+            let fresh: Vec<Config> = nbrs
+                .iter()
+                .copied()
+                .filter(|c| !scored.contains_key(c))
+                .collect();
+            let fresh_utils: Vec<f64> = pool::parallel_map(
+                params.parallelism, &fresh, |c| predict_util(c),
+            );
+            surrogate_evals += fresh.len();
+            for (c, u) in fresh.iter().zip(&fresh_utils) {
+                scored.insert(*c, *u);
+            }
+            let (best_i, best_u) = nbrs
+                .iter()
+                .enumerate()
+                .map(|(i, c)| (i, scored[c]))
+                .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .expect("non-empty neighborhood");
+            if best_u <= current_u {
+                break; // local optimum under the surrogate
+            }
+            current = nbrs[best_i];
+            current_u = best_u;
+            visited.insert(current);
+        }
+
+        // Measure only the top-k predicted, unseen configurations
+        // encountered anywhere along the climb (the start point is the
+        // coordinator's business — it is either already measured or the
+        // Default fallback).
+        let mut ranked: Vec<(Config, f64)> = scored
+            .into_iter()
+            .filter(|(c, _)| *c != start && !cx.seen.contains(c))
+            .collect();
+        ranked.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap().then_with(|| a.0.cmp(&b.0))
+        });
+        ranked.truncate(k);
+        StrategyOutcome {
+            proposals: ranked.into_iter().map(|(c, _)| c).collect(),
+            surrogate_evals,
+            strategy_evals: 0,
+        }
+    }
+}
+
+/// Every valid configuration differing from `c` in exactly one
+/// technique axis (the "one-technique mutation" neighborhood of the
+/// local-search strategy; also a useful unit of ablation).
+pub fn neighbors(c: &Config) -> Vec<Config> {
+    let mut out = Vec::new();
+    for &attention in &Attention::ALL {
+        out.push(Config { arch: ArchConfig { attention, ..c.arch }, ..*c });
+    }
+    for &moe in &MoE::ALL {
+        out.push(Config { arch: ArchConfig { moe, ..c.arch }, ..*c });
+    }
+    for &method in &FtMethod::ALL {
+        let ft = if method.is_peft() {
+            FtConfig {
+                method,
+                rank: if c.ft.method.is_peft() { c.ft.rank } else { 32 },
+                alpha_mult: if c.ft.method.is_peft() {
+                    c.ft.alpha_mult
+                } else {
+                    2
+                },
+            }
+        } else {
+            FtConfig::full()
+        };
+        out.push(Config { ft, ..*c });
+    }
+    if c.ft.method.is_peft() {
+        for &rank in &RANKS {
+            out.push(Config { ft: FtConfig { rank, ..c.ft }, ..*c });
+        }
+        for &alpha_mult in &ALPHA_MULTS {
+            out.push(Config { ft: FtConfig { alpha_mult, ..c.ft }, ..*c });
+        }
+    }
+    for &precision in &Precision::ALL {
+        out.push(Config { inf: InfConfig { precision, ..c.inf }, ..*c });
+    }
+    for &quant_method in &QuantMethod::ALL {
+        out.push(Config {
+            inf: InfConfig { quant_method, ..c.inf },
+            ..*c
+        });
+    }
+    for &kv_cache in &KvCache::ALL {
+        out.push(Config { inf: InfConfig { kv_cache, ..c.inf }, ..*c });
+    }
+    out.retain(|x| x != c && validity::is_valid(x));
+    out.sort();
+    out.dedup();
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Baselines as degenerate strategies
+// ---------------------------------------------------------------------------
+
+/// A Table-2 baseline selector as a [`SearchStrategy`]: one round, one
+/// proposal.  Rule-based baselines (Default, Manual Selection,
+/// EfficientLLM Rec.) are zero-eval strategies — their handicap *is*
+/// never measuring.  Selector baselines (Best Single-Stage, Random
+/// Search) perform their budgeted measurements through the backend, so
+/// they inherit caching, parallel fan-out and [`Evaluator::evals`]
+/// counting like every other strategy.
+pub struct BaselineStrategy(pub Baseline);
+
+impl SearchStrategy for BaselineStrategy {
+    fn name(&self) -> &'static str {
+        self.0.name()
+    }
+
+    fn uses_surrogates(&self) -> bool {
+        false
+    }
+
+    fn rounds(&self, _params: &AeLlmParams) -> usize {
+        1
+    }
+
+    fn propose(&mut self, cx: &StrategyCx, evaluator: &mut dyn Evaluator,
+               rng: &mut Rng) -> StrategyOutcome {
+        let scenario = cx.scenario;
+        let tb = &scenario.testbed;
+        let m = &scenario.model;
+        let t = &scenario.task;
+        let eval_ctx = cx.eval_ctx();
+        let before = evaluator.evals();
+        let chosen = baselines::select(
+            self.0,
+            m,
+            t,
+            &tb.platform,
+            cx.reference,
+            &scenario.prefs,
+            evaluator,
+            &|c: &Config| tb.feasible(c, m, t),
+            &eval_ctx,
+            rng,
+        );
+        StrategyOutcome {
+            proposals: vec![cx.params.mask.clamp(chosen)],
+            surrogate_evals: 0,
+            strategy_evals: evaluator.evals() - before,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware;
+
+    #[test]
+    fn strategy_kind_round_trips_names() {
+        for kind in StrategyKind::ALL {
+            assert_eq!(StrategyKind::by_name(kind.name()), Some(kind));
+            assert_eq!(kind.build().name(), kind.name());
+        }
+        assert_eq!(StrategyKind::by_name("nsga3"), None);
+        assert_eq!(StrategyKind::by_name(""), None);
+    }
+
+    #[test]
+    fn neighbors_are_valid_single_axis_mutations() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            let c = enumerate::sample(&mut rng);
+            let nbrs = neighbors(&c);
+            assert!(nbrs.len() > 10, "only {} neighbors of {c}", nbrs.len());
+            for n in &nbrs {
+                assert!(validity::is_valid(n), "invalid neighbor {n}");
+                assert_ne!(*n, c);
+                // exactly one stage changed, and within it one axis
+                // moved (method switches may carry rank/alpha defaults,
+                // so we only assert the stage count here)
+                let stages = [n.arch != c.arch, n.ft != c.ft,
+                              n.inf != c.inf];
+                assert_eq!(stages.iter().filter(|&&x| x).count(), 1,
+                           "{n} differs from {c} in several stages");
+            }
+        }
+    }
+
+    #[test]
+    fn neighbors_of_default_include_known_moves() {
+        let d = Config::default_baseline();
+        let nbrs = neighbors(&d);
+        let mut gqa = d;
+        gqa.arch.attention = Attention::Gqa;
+        assert!(nbrs.contains(&gqa));
+        let mut int8 = d;
+        int8.inf.precision = Precision::Int8;
+        assert!(nbrs.contains(&int8));
+    }
+
+    #[test]
+    fn top_by_utility_is_deterministic_and_ranked() {
+        let reference = Reference {
+            default: Objectives {
+                accuracy: 70.0,
+                latency_ms: 50.0,
+                memory_gb: 10.0,
+                energy_j: 1.0,
+            },
+        };
+        let prefs = Preferences::default();
+        let mut rng = Rng::new(4);
+        let state: Vec<(Config, Objectives, usize)> = (0..20)
+            .map(|_| {
+                let c = enumerate::sample(&mut rng);
+                let o = Objectives {
+                    accuracy: 50.0 + 30.0 * rng.f64(),
+                    latency_ms: 20.0 + 60.0 * rng.f64(),
+                    memory_gb: 4.0 + 10.0 * rng.f64(),
+                    energy_j: 0.2 + rng.f64(),
+                };
+                (c, o, 1)
+            })
+            .collect();
+        let a = top_by_utility(state.clone(), 5, &reference, &prefs);
+        let b = top_by_utility(state.clone(), 5, &reference, &prefs);
+        assert_eq!(a.len(), 5);
+        assert_eq!(
+            a.iter().map(|(c, _, _)| *c).collect::<Vec<_>>(),
+            b.iter().map(|(c, _, _)| *c).collect::<Vec<_>>()
+        );
+        let us: Vec<f64> = a
+            .iter()
+            .map(|(_, o, _)| utility(o, &reference, &prefs))
+            .collect();
+        for w in us.windows(2) {
+            assert!(w[0] >= w[1], "not sorted: {us:?}");
+        }
+    }
+
+    #[test]
+    fn blend_mean_averages_componentwise() {
+        let a = Objectives { accuracy: 60.0, latency_ms: 30.0,
+                             memory_gb: 6.0, energy_j: 0.6 };
+        let b = Objectives { accuracy: 66.0, latency_ms: 36.0,
+                             memory_gb: 9.0, energy_j: 0.9 };
+        let c = Objectives { accuracy: 72.0, latency_ms: 42.0,
+                             memory_gb: 12.0, energy_j: 1.2 };
+        let m = blend_mean(&a, 1, &[&b, &c]);
+        assert!((m.accuracy - 66.0).abs() < 1e-12);
+        assert!((m.latency_ms - 36.0).abs() < 1e-12);
+        assert!((m.memory_gb - 9.0).abs() < 1e-12);
+        assert!((m.energy_j - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_unseen_respects_seen_and_distinctness() {
+        let mask = crate::coordinator::SpaceMask::default();
+        let mut rng = Rng::new(5);
+        let mut seen: BTreeSet<Config> = BTreeSet::new();
+        for _ in 0..30 {
+            seen.insert(enumerate::sample(&mut rng));
+        }
+        let got = sample_unseen(40, &mask, &seen, &mut rng);
+        assert_eq!(got.len(), 40);
+        let distinct: BTreeSet<_> = got.iter().collect();
+        assert_eq!(distinct.len(), 40);
+        for c in &got {
+            assert!(!seen.contains(c));
+            assert!(validity::is_valid(c));
+        }
+    }
+
+    #[test]
+    fn racing_rung_budget_shape() {
+        // The per-round arithmetic behind the exact-budget contract:
+        // 4k entrants + 2·(2k) rung-1 samples = 8k strategy evals.
+        let k = 8usize;
+        assert_eq!(RACING_ENTRANT_FACTOR * k + 2 * (2 * k), 8 * k);
+    }
+
+    #[test]
+    fn local_search_proposes_from_scratch_scenario() {
+        // Smoke the strategy directly against a real scenario context.
+        let scenario = Scenario::for_model("Phi-2").unwrap().noiseless();
+        let params = AeLlmParams::small();
+        let reference = Reference {
+            default: scenario.testbed.true_objectives(
+                &Config::default_baseline(), &scenario.model,
+                &scenario.task),
+        };
+        let measured = ParetoArchive::new(16);
+        let seen = BTreeSet::new();
+        let cx = StrategyCx {
+            scenario: &scenario,
+            params: &params,
+            reference: &reference,
+            surrogates: None,
+            measured: &measured,
+            seen: &seen,
+            iteration: 0,
+            rounds: 1,
+        };
+        let mut evaluator =
+            crate::oracle::Testbed::noiseless(hardware::a100());
+        let mut rng = Rng::new(7);
+        let out = LocalSearchStrategy.propose(&cx, &mut evaluator, &mut rng);
+        assert!(!out.proposals.is_empty());
+        assert!(out.proposals.len() <= params.evals_per_iter);
+        assert_eq!(out.strategy_evals, 0);
+        for c in &out.proposals {
+            assert!(validity::is_valid(c));
+        }
+    }
+}

@@ -1,9 +1,12 @@
-//! API-equivalence conformance: the `Evaluator`-trait path must
+//! API-equivalence conformance: the `Evaluator`-trait path — which
+//! since PR 3 routes NSGA-II through the `SearchStrategy` seam — must
 //! reproduce the legacy closure entry points *bit for bit* — same
 //! chosen configuration, same Pareto front (configs and measured
 //! objectives, in order), same testbed/surrogate eval counts — at
 //! every `Parallelism` level.  This is the contract that lets
-//! `optimize` / `optimize_with` survive as thin deprecated shims.
+//! `optimize` / `optimize_with` survive as thin deprecated shims (now
+//! reachable only at `coordinator::algorithm1::`, off the crate-root
+//! surface), and that proves the NSGA-II extraction changed nothing.
 
 use ae_llm::config::Config;
 use ae_llm::coordinator::{optimize_with_observer, AeLlm, AeLlmParams,
@@ -41,11 +44,13 @@ fn fingerprint(out: &Outcome) -> Fingerprint {
     )
 }
 
-/// The legacy closure entry point, exactly as pre-trait callers used it.
+/// The legacy closure entry point, exactly as pre-trait callers used it
+/// (kept reachable at its defining path for these bit-identity tests;
+/// the crate-root re-export is gone).
 #[allow(deprecated)]
 fn legacy_optimize(s: &Scenario, p: &AeLlmParams) -> Outcome {
     let mut rng = Rng::new(SEED);
-    ae_llm::coordinator::optimize(s, p, &mut rng)
+    ae_llm::coordinator::algorithm1::optimize(s, p, &mut rng)
 }
 
 /// The legacy `optimize_with` closure convention.
@@ -57,7 +62,8 @@ fn legacy_optimize_with(s: &Scenario, p: &AeLlmParams) -> Outcome {
         testbed.measure_batch(cs, &model, &task, rng, par)
     };
     let mut rng = Rng::new(SEED);
-    ae_llm::coordinator::optimize_with(s, p, &mut measure, &mut rng)
+    ae_llm::coordinator::algorithm1::optimize_with(s, p, &mut measure,
+                                                   &mut rng)
 }
 
 /// The trait path: the scenario's testbed used directly as an
@@ -129,6 +135,41 @@ fn builder_run_matches_primary_entry_point() {
     assert_eq!(fingerprint(&report.outcome), fingerprint(&direct));
     assert_eq!(report.evaluator_evals, direct.testbed_evals);
     assert_eq!(report.seed, SEED);
+    assert_eq!(report.strategy, "nsga2");
+}
+
+#[test]
+fn explicit_nsga2_strategy_matches_legacy_bitwise() {
+    // Selecting NSGA-II through the strategy seam — by kind on the
+    // builder, or as an injected `SearchStrategy` instance — must be
+    // the same bits as the pre-refactor coordinator at Parallelism
+    // 1 and 4.
+    use ae_llm::coordinator::optimize_with_strategy;
+    use ae_llm::search::{Nsga2Strategy, StrategyKind};
+
+    let s = scenario();
+    for par in [Parallelism::Sequential, Parallelism::Threads(4)] {
+        let p = params(par);
+        let legacy = fingerprint(&legacy_optimize(&s, &p));
+
+        let report = AeLlm::from_scenario(s.clone())
+            .params(p)
+            .strategy(StrategyKind::Nsga2)
+            .seed(SEED)
+            .run_testbed();
+        assert_eq!(fingerprint(&report.outcome), legacy,
+                   "builder .strategy(Nsga2) diverged at {par:?}");
+
+        let mut evaluator = s.testbed.clone();
+        let mut strategy = Nsga2Strategy;
+        let mut rng = Rng::new(SEED);
+        let out = optimize_with_strategy(
+            &s, &p, &mut strategy, &mut evaluator,
+            &mut NullObserver, &mut rng,
+        );
+        assert_eq!(fingerprint(&out), legacy,
+                   "injected Nsga2Strategy diverged at {par:?}");
+    }
 }
 
 #[test]

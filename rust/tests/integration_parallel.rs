@@ -4,10 +4,11 @@
 //! RNG on the calling thread and evaluation fans out through the
 //! pool's ordered reduce.
 
-use ae_llm::config::Config;
+use ae_llm::config::{enumerate, Config};
 use ae_llm::coordinator::{AeLlm, AeLlmParams, Scenario};
 use ae_llm::oracle::{Objectives, Testbed};
 use ae_llm::search::nsga2::{self, Nsga2Params, Toggles};
+use ae_llm::search::ParetoArchive;
 use ae_llm::util::pool::Parallelism;
 use ae_llm::util::prop::{forall, Config as PropConfig};
 use ae_llm::util::Rng;
@@ -62,6 +63,87 @@ fn nsga2_front_identical_at_parallelism_1_4_8() {
                 return Err(format!(
                     "seed {seed}: front differs between 4 and 8 threads"
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Property: `ParetoArchive::insert_batch` is *exactly* sequential
+/// per-item insertion — same surviving entries (configs and objective
+/// bits, in order) and the same per-item acceptance booleans — over
+/// randomized config/objective streams, at Parallelism 1, 4 and 8.
+/// Streams mix tight/roomy capacities and heavy config duplication so
+/// both the parallel pre-filter and its sequential fallbacks are hit.
+#[test]
+fn insert_batch_equals_sequential_insert_property() {
+    #[derive(Debug)]
+    struct Stream {
+        capacity: usize,
+        items: Vec<(Config, Objectives)>,
+    }
+
+    forall(
+        PropConfig::default().cases(12),
+        |rng| {
+            let capacity = *rng.pick(&[6usize, 24, 2048]);
+            let n = 40 + rng.below(120);
+            // Duplication regime: draw configs from a small pool so
+            // collisions (the objective-refresh path) are common.
+            let dup = rng.chance(0.5);
+            let pool: Vec<Config> =
+                (0..12).map(|_| enumerate::sample(rng)).collect();
+            let items: Vec<(Config, Objectives)> = (0..n)
+                .map(|_| {
+                    let c = if dup {
+                        *rng.pick(&pool)
+                    } else {
+                        enumerate::sample(rng)
+                    };
+                    let o = Objectives {
+                        accuracy: 40.0 + 50.0 * rng.f64(),
+                        latency_ms: 5.0 + 80.0 * rng.f64(),
+                        memory_gb: 1.0 + 12.0 * rng.f64(),
+                        energy_j: 0.05 + 2.0 * rng.f64(),
+                    };
+                    (c, o)
+                })
+                .collect();
+            Stream { capacity, items }
+        },
+        |stream| {
+            let key = |a: &ParetoArchive| -> Vec<(Config, String)> {
+                a.entries()
+                    .iter()
+                    .map(|e| (e.config, format!("{:?}", e.objectives)))
+                    .collect()
+            };
+            let mut seq = ParetoArchive::new(stream.capacity);
+            let accepts_seq: Vec<bool> = stream
+                .items
+                .iter()
+                .map(|(c, o)| seq.insert(*c, *o))
+                .collect();
+            for threads in [1usize, 4, 8] {
+                let mut bat = ParetoArchive::new(stream.capacity);
+                let accepts_bat = bat.insert_batch(
+                    &stream.items, Parallelism::Threads(threads));
+                if accepts_bat != accepts_seq {
+                    return Err(format!(
+                        "acceptance booleans diverged at {threads} \
+                         threads, capacity {}",
+                        stream.capacity
+                    ));
+                }
+                if key(&bat) != key(&seq) {
+                    return Err(format!(
+                        "surviving entries diverged at {threads} threads, \
+                         capacity {} ({} vs {} entries)",
+                        stream.capacity,
+                        bat.len(),
+                        seq.len()
+                    ));
+                }
             }
             Ok(())
         },

@@ -1,0 +1,232 @@
+//! Conformance tests for the pluggable search-strategy layer
+//! (DESIGN.md §10): every strategy is seed-reproducible, respects its
+//! evaluation budget exactly (asserted through the evaluator's own
+//! `Evaluator::evals` counter), runs end-to-end through the builder,
+//! and the Table-2 baselines ride the same seam.
+
+use ae_llm::config::{validity, Config};
+use ae_llm::coordinator::{optimize_with_observer, optimize_with_strategy,
+                          AeLlm, AeLlmParams, NullObserver, Outcome,
+                          Scenario};
+use ae_llm::evaluator::Evaluator;
+use ae_llm::search::{Baseline, BaselineStrategy, StrategyKind};
+use ae_llm::util::pool::Parallelism;
+use ae_llm::util::Rng;
+
+fn scenario() -> Scenario {
+    Scenario::for_model("LLaMA-2-7B").unwrap()
+}
+
+fn small(kind: StrategyKind) -> AeLlmParams {
+    AeLlmParams { strategy: kind, ..AeLlmParams::small() }
+}
+
+type Fingerprint = (Config, String, Vec<(Config, String)>, usize, usize);
+
+fn fingerprint(out: &Outcome) -> Fingerprint {
+    (
+        out.chosen,
+        format!("{:?}", out.chosen_objectives),
+        out.pareto
+            .entries()
+            .iter()
+            .map(|e| (e.config, format!("{:?}", e.objectives)))
+            .collect(),
+        out.testbed_evals,
+        out.surrogate_evals,
+    )
+}
+
+fn run(s: &Scenario, p: &AeLlmParams, seed: u64) -> (Outcome, usize) {
+    let mut evaluator = s.testbed.clone();
+    let mut rng = Rng::new(seed);
+    let out = optimize_with_observer(s, p, &mut evaluator,
+                                     &mut NullObserver, &mut rng);
+    (out, Evaluator::evals(&evaluator))
+}
+
+/// Same seed → bit-identical archive, chosen config and eval counts,
+/// for every built-in strategy; and the seed must actually reach the
+/// search (verified on the cheap, warm-start-free strategies, whose
+/// runs are pure functions of the seeded sampling/noise streams).
+#[test]
+fn every_strategy_is_seed_reproducible() {
+    let s = scenario();
+    for kind in StrategyKind::ALL {
+        let p = small(kind);
+        let (a, _) = run(&s, &p, 9);
+        let (b, _) = run(&s, &p, 9);
+        assert_eq!(fingerprint(&a), fingerprint(&b),
+                   "{} not seed-reproducible", kind.name());
+        assert_eq!(a.strategy, kind.name());
+    }
+    for kind in [StrategyKind::Random, StrategyKind::Racing] {
+        let p = small(kind);
+        let (a, _) = run(&s, &p, 9);
+        let (c, _) = run(&s, &p, 10);
+        assert_ne!(fingerprint(&a), fingerprint(&c),
+                   "{} ignores its seed", kind.name());
+    }
+}
+
+/// Strategies are parallelism-invariant end to end (the PR-1
+/// determinism contract survives the extraction for the new
+/// strategies too).
+#[test]
+fn every_strategy_is_parallelism_invariant() {
+    let s = scenario();
+    for kind in StrategyKind::ALL {
+        let go = |par: Parallelism| {
+            let p = AeLlmParams { parallelism: par, ..small(kind) };
+            let (out, _) = run(&s, &p, 31);
+            fingerprint(&out)
+        };
+        assert_eq!(go(Parallelism::Sequential), go(Parallelism::Threads(4)),
+                   "{} diverges under parallelism", kind.name());
+    }
+}
+
+/// Random search: `rounds × k` proposals + the Default fallback, no
+/// warm-start (the strategy declines surrogates), nothing mid-round.
+#[test]
+fn random_strategy_budget_is_exact() {
+    let s = scenario();
+    let p = small(StrategyKind::Random);
+    let (out, evaluator_evals) = run(&s, &p, 5);
+    let rounds = p.refine_iters.max(1);
+    let k = p.evals_per_iter;
+    let expected = rounds * k + 1;
+    assert_eq!(out.testbed_evals, expected);
+    assert_eq!(evaluator_evals, expected,
+               "evaluator counter disagrees with the outcome");
+    assert_eq!(out.strategy_evals, 0);
+    assert_eq!(out.surrogate_evals, 0, "random must not warm-start");
+}
+
+/// Successive-halving racing: per round, 4k rung-0 samples + 2·(2k)
+/// rung-1 samples mid-round, then k promotions measured by the
+/// coordinator — exactly `R·9k + 1` backend evaluations.
+#[test]
+fn racing_strategy_budget_is_exact() {
+    let s = scenario();
+    let p = small(StrategyKind::Racing);
+    let (out, evaluator_evals) = run(&s, &p, 5);
+    let rounds = p.refine_iters.max(1);
+    let k = p.evals_per_iter;
+    assert_eq!(out.strategy_evals, rounds * 8 * k,
+               "rung samples: 4k + 2*2k per round");
+    assert_eq!(out.testbed_evals, rounds * 9 * k + 1);
+    assert_eq!(evaluator_evals, out.testbed_evals);
+    assert_eq!(out.surrogate_evals, 0, "racing must not warm-start");
+}
+
+/// Surrogate-guided local search: warm-start + at most `rounds × k`
+/// confirmations + the fallback; all exploration is surrogate-side.
+#[test]
+fn local_strategy_budget_is_bounded_and_surrogate_driven() {
+    let s = scenario();
+    let p = small(StrategyKind::Local);
+    let (out, evaluator_evals) = run(&s, &p, 5);
+    let rounds = p.refine_iters.max(1);
+    let k = p.evals_per_iter;
+    assert_eq!(out.strategy_evals, 0,
+               "local search must only measure through the coordinator");
+    assert!(out.testbed_evals >= p.initial_sample + 1);
+    assert!(out.testbed_evals <= p.initial_sample + rounds * k + 1,
+            "local evals {} exceed bound", out.testbed_evals);
+    assert_eq!(evaluator_evals, out.testbed_evals);
+    assert!(out.surrogate_evals > 0,
+            "the climb must consult the surrogates");
+    assert!(validity::is_valid(&out.chosen));
+}
+
+/// The two new strategies must actually search: end to end via the
+/// builder they produce a non-trivial front, a feasible chosen config,
+/// and a v2 report carrying their name.
+#[test]
+fn racing_and_local_run_end_to_end_via_builder() {
+    for kind in [StrategyKind::Racing, StrategyKind::Local] {
+        let report = AeLlm::for_model("Phi-2")
+            .unwrap()
+            .quick()
+            .strategy(kind)
+            .seed(3)
+            .run_testbed();
+        assert_eq!(report.strategy, kind.name());
+        assert_eq!(report.outcome.strategy, kind.name());
+        assert!(report.outcome.pareto.len() >= 2,
+                "{}: front of {}", kind.name(),
+                report.outcome.pareto.len());
+        assert!(validity::is_valid(&report.outcome.chosen));
+        let text = report.to_json().dump();
+        assert!(text.contains("ae-llm.run-report/v2"), "{text}");
+        assert!(text.contains(&format!("\"strategy\": \"{}\"",
+                                       kind.name()))
+                    || text.contains(&format!("\"strategy\":\"{}\"",
+                                              kind.name())),
+                "strategy name missing from JSON");
+        // one iteration event per strategy round
+        assert_eq!(report.iterations.len(),
+                   report.iterations.last().unwrap().total_iterations);
+    }
+}
+
+/// Informed strategies should not lose to blind random sampling at
+/// equal-ish budgets (averaged over seeds to damp noise); this is the
+/// seam's reason to exist.
+#[test]
+fn informed_strategies_beat_or_match_random() {
+    let s = scenario().noiseless();
+    let mean_score = |kind: StrategyKind| -> f64 {
+        (0..3)
+            .map(|seed| run(&s, &small(kind), 40 + seed).0
+                .chosen_efficiency_score)
+            .sum::<f64>()
+            / 3.0
+    };
+    let random = mean_score(StrategyKind::Random);
+    for kind in [StrategyKind::Nsga2, StrategyKind::Racing,
+                 StrategyKind::Local] {
+        let score = mean_score(kind);
+        assert!(score >= random - 0.25,
+                "{} scored {score:.2} vs random {random:.2}", kind.name());
+    }
+}
+
+/// The Table-2 baselines ride the strategy seam: one round, one
+/// proposal; rule-based selectors never touch the backend mid-round,
+/// selector baselines report their measurements through
+/// `Evaluator::evals`.
+#[test]
+fn baselines_run_as_degenerate_strategies() {
+    let s = scenario();
+    let p = AeLlmParams::small();
+    for (baseline, zero_eval) in [
+        (Baseline::Default, true),
+        (Baseline::ManualSelection, true),
+        (Baseline::EfficientLlmRec, true),
+        (Baseline::BestSingleStage, false),
+        (Baseline::RandomSearch { budget: 50 }, false),
+    ] {
+        let mut strategy = BaselineStrategy(baseline);
+        let mut evaluator = s.testbed.clone();
+        let mut rng = Rng::new(7);
+        let out = optimize_with_strategy(&s, &p, &mut strategy,
+                                         &mut evaluator, &mut NullObserver,
+                                         &mut rng);
+        assert_eq!(out.strategy, baseline.name());
+        if zero_eval {
+            assert_eq!(out.strategy_evals, 0,
+                       "{} measured mid-round", baseline.name());
+            // one proposal + the Default fallback, nothing else
+            assert_eq!(out.testbed_evals, 2);
+        } else {
+            assert!(out.strategy_evals > 0,
+                    "{} reported no evals", baseline.name());
+            assert_eq!(out.testbed_evals, out.strategy_evals + 2);
+        }
+        assert_eq!(Evaluator::evals(&evaluator), out.testbed_evals);
+        assert!(validity::is_valid(&out.chosen));
+        assert_eq!(out.surrogate_evals, 0);
+    }
+}
