@@ -110,7 +110,7 @@ fn main() -> anyhow::Result<()> {
         let len = 16 + req_rng.below(100);
         let tokens: Vec<i32> =
             (0..len).map(|_| req_rng.below(256) as i32).collect();
-        server.submit(Request { id, tokens });
+        server.submit(Request::new(id, tokens));
     }
     server.drain()?;
     let r = server.report();

@@ -141,13 +141,17 @@ fn pjrt_section(report: &mut BTreeMap<String, Json>) {
     engine.load("serve_gqa_int8").unwrap();
     let serve = |par: Parallelism| {
         let mut rng = Rng::new(1);
+        // Lanes mirror the worker count so the lane-model completion
+        // accounting (latency/throughput in the report) reflects the
+        // concurrency, not just the wall time of the drain call.
         let mut server = Server::new(&engine, "serve_gqa_int8")
             .unwrap()
-            .with_parallelism(par);
+            .with_parallelism(par)
+            .with_lanes(par.threads());
         for id in 0..64u64 {
             let tokens: Vec<i32> =
                 (0..100).map(|_| rng.below(256) as i32).collect();
-            server.submit(Request { id, tokens });
+            server.submit(Request::new(id, tokens));
         }
         server.drain().unwrap();
         server.report()

@@ -1,0 +1,78 @@
+//! Microbenchmarks of the simulated serving subsystem — artifact-free,
+//! so CI tracks the full pipeline (workload generation → fleet routing
+//! → dynamic batching → virtual-time accounting) on every PR.
+//!
+//! Emits `BENCH_serve.json` (to `$AE_LLM_BENCH_OUT` or the current
+//! directory); `AE_LLM_BENCH_QUICK=1` / `--quick` shrinks workloads.
+
+use std::collections::BTreeMap;
+
+use ae_llm::coordinator::AeLlm;
+use ae_llm::runtime::workload::default_rate_rps;
+use ae_llm::runtime::{Workload, WorkloadKind};
+use ae_llm::util::bench::{self, time_it};
+use ae_llm::util::json::Json;
+use ae_llm::util::pool::Parallelism;
+
+fn main() {
+    let quick = bench::quick();
+    println!("== perf_serve: simulated fleet serving{} ==",
+             if quick { " (quick)" } else { "" });
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+
+    // One quick search gives the front every measurement deploys from.
+    let session = AeLlm::for_model("Phi-2").unwrap().quick().seed(7);
+    let outcome = session.run_testbed_outcome();
+    let deployment = session.deploy(&outcome).unwrap();
+    let rate = default_rate_rps(outcome.reference.default.latency_ms);
+    let n = if quick { 1000 } else { 5000 };
+
+    for kind in WorkloadKind::ALL {
+        let requests = Workload::new(kind, rate, n, 11).generate();
+        let mut last_rps = 0.0;
+        let tm = time_it(&format!("serve {n} `{}` requests", kind.name()),
+                         1, 10, || {
+            let rep = deployment.serve(&requests, kind.name(), 11,
+                                       Parallelism::Auto);
+            last_rps = rep.overall.throughput_rps;
+            std::hint::black_box(&rep);
+        });
+        // Simulation speed: how many virtual requests one wall second
+        // of simulation chews through.
+        let sim_rps = n as f64 / (tm.mean_ms / 1e3);
+        println!("    simulated {:.0} req/s wall | {:.1} req/s virtual \
+                  throughput", sim_rps, last_rps);
+        report.insert(format!("serve {} wall ms", kind.name()),
+                      Json::Num(tm.mean_ms));
+        report.insert(format!("serve {} sim req/s", kind.name()),
+                      Json::Num(sim_rps));
+        report.insert(format!("serve {} virtual rps", kind.name()),
+                      Json::Num(last_rps));
+    }
+
+    // Parallelism of batch execution (wall time only; results are
+    // identical by the determinism contract).
+    let requests = Workload::new(WorkloadKind::Steady, rate, n, 11)
+        .generate();
+    let seq = time_it("serve steady (sequential)", 1, 10, || {
+        std::hint::black_box(deployment.serve(
+            &requests, "steady", 11, Parallelism::Sequential));
+    });
+    let par = time_it("serve steady (4 threads)", 1, 10, || {
+        std::hint::black_box(deployment.serve(
+            &requests, "steady", 11, Parallelism::Threads(4)));
+    });
+    report.insert("serve sequential (ms)".into(), Json::Num(seq.mean_ms));
+    report.insert("serve parallel x4 (ms)".into(), Json::Num(par.mean_ms));
+    report.insert("serve speedup x4".into(),
+                  Json::Num(seq.mean_ms / par.mean_ms.max(1e-9)));
+
+    report.insert("bench".into(), Json::Str("perf_serve".into()));
+    report.insert("quick".into(), Json::Bool(quick));
+    let out = std::env::var("AE_LLM_BENCH_OUT").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&out).join("BENCH_serve.json");
+    match std::fs::write(&path, Json::Obj(report).dump()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -251,6 +251,47 @@ impl AeLlm {
         let mut evaluator = self.scenario.testbed.clone();
         self.run_observed(&mut evaluator, observer)
     }
+
+    // -- deployment (DESIGN.md §11) ------------------------------------
+
+    /// SLO policy scaled to this scenario's Default-configuration
+    /// latency (the Table 2 anchor), so deadlines are comparable
+    /// across model scales.
+    pub fn slo_policy(&self) -> crate::runtime::SloPolicy {
+        let truth = crate::oracle::Testbed::noiseless(
+            self.scenario.testbed.platform.clone());
+        let o = truth.true_objectives(
+            &crate::config::Config::default_baseline(),
+            &self.scenario.model, &self.scenario.task);
+        crate::runtime::SloPolicy::for_default_latency(o.latency_ms)
+    }
+
+    /// Build the adaptive serving fleet from a search outcome's Pareto
+    /// front: one simulated slot per SLO class, routed per request
+    /// (see [`crate::runtime::Deployment`]).
+    pub fn deploy(&self, outcome: &Outcome)
+                  -> anyhow::Result<crate::runtime::Deployment> {
+        self.deploy_with(outcome, &self.slo_policy())
+    }
+
+    /// [`deploy`](Self::deploy) under an explicit SLO policy.
+    pub fn deploy_with(&self, outcome: &Outcome,
+                       policy: &crate::runtime::SloPolicy)
+                       -> anyhow::Result<crate::runtime::Deployment> {
+        crate::runtime::Deployment::from_front(
+            &outcome.pareto, policy, &self.scenario.model,
+            &self.scenario.task, &self.scenario.testbed.platform)
+    }
+
+    /// Search, then deploy: the full loop the paper promises — a
+    /// scenario goes in, a served fleet comes out.
+    pub fn run_and_deploy(&self)
+                          -> anyhow::Result<(RunReport,
+                                             crate::runtime::Deployment)> {
+        let report = self.run_testbed();
+        let deployment = self.deploy(&report.outcome)?;
+        Ok((report, deployment))
+    }
 }
 
 /// Collects events for the report while forwarding to the caller's
@@ -432,6 +473,25 @@ mod tests {
         assert_eq!(b.scenario().testbed.platform.name, "RTX-4090");
         assert_eq!(b.params_ref().strategy, StrategyKind::Racing);
         assert_eq!(b.seed, 9);
+    }
+
+    #[test]
+    fn run_and_deploy_builds_a_fleet_from_the_front() {
+        let (report, deployment) = AeLlm::for_model("Phi-2")
+            .unwrap()
+            .quick()
+            .seed(4)
+            .run_and_deploy()
+            .unwrap();
+        assert!(!report.outcome.pareto.is_empty());
+        assert_eq!(deployment.slots().len(), 3);
+        assert!(deployment.distinct_configs() >= 1);
+        assert_eq!(deployment.routing(), "adaptive");
+        // deadlines scale with the scenario's default latency (Phi-2
+        // anchors at 18.3 ms)
+        let policy = AeLlm::for_model("Phi-2").unwrap().slo_policy();
+        assert!((policy.interactive_deadline_ms - 2.0 * 18.3).abs()
+                    < 1e-9);
     }
 
     #[test]

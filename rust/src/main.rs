@@ -4,10 +4,14 @@
 //! ae-llm search  --model Mistral-7B [--task GSM8K] [--platform A100-80GB]
 //!                [--prefs latency] [--strategy nsga2|random|racing|local]
 //!                [--quick] [--seed N] [--json]
-//! ae-llm table   --id 2|3|4|5|6|7 [--quick] [--seed N]  # 7 = strategies
+//! ae-llm table   --id 2|3|4|5|6|7|8 [--quick] [--seed N]
+//!                # 7 = strategies, 8 = adaptive vs static serving
 //! ae-llm figure  --id 1|2|3|4 [--quick] [--seed N] [--out reports/]
 //! ae-llm e2e     [--repeats N] [--seed N]  # hardware-in-the-loop Algorithm 1
-//! ae-llm serve   [--requests N] [--variant V] [--seed N]
+//! ae-llm serve   [--model M] [--scenario steady|diurnal|bursty|heavytail]
+//!                [--strategy S] [--requests N] [--quick] [--seed N]
+//!                [--json OUT.json]        # simulated fleet, artifact-free
+//! ae-llm serve   --variant V [--requests N] [--seed N]  # live PJRT path
 //! ae-llm check   # artifacts sanity: load + execute every variant
 //! ae-llm space   # print the configuration-space inventory
 //! ```
@@ -152,7 +156,9 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "table" => (&["id", "seed"], &["quick"]),
         "figure" => (&["id", "seed", "out"], &["quick"]),
         "e2e" => (&["repeats", "seed"], &[]),
-        "serve" => (&["requests", "variant", "seed"], &[]),
+        "serve" => (&["requests", "variant", "seed", "model", "scenario",
+                      "strategy", "json"],
+                    &["quick"]),
         "check" | "space" => (&[], &[]),
         "help" | "--help" | "-h" => {
             print_help();
@@ -272,8 +278,10 @@ fn cmd_table(opts: &Opts, budget: &Budget, seed: u64) -> anyhow::Result<()> {
         5 => tables::table_5(),
         6 => tables::table_6(budget, seed),
         7 => tables::table_strategies(budget, seed),
+        8 => tables::table_serving(budget, seed),
         other => anyhow::bail!(
-            "no table {other} (paper has 2-6; 7 = strategy comparison)"
+            "no table {other} (paper has 2-6; 7 = strategy comparison, \
+             8 = adaptive vs static serving)"
         ),
     };
     println!("{}", table.render());
@@ -380,12 +388,100 @@ fn cmd_e2e(opts: &Opts, seed: u64) -> anyhow::Result<()> {
     cmd_serve_inner(&mut engine, serve_variant, 64, seed)
 }
 
+/// `serve` has two modes: with `--variant` it is the legacy live-PJRT
+/// path (needs artifacts); otherwise it runs the artifact-free
+/// simulated fleet — search, deploy from the Pareto front, and serve a
+/// workload scenario on virtual time (deterministic per seed).
 fn cmd_serve(opts: &Opts, seed: u64) -> anyhow::Result<()> {
-    let n = opts.u64_or("requests", 64)? as usize;
-    let variant = opts.get("variant").unwrap_or("serve_gqa_int8").to_string();
-    let dir = runtime::artifacts_dir();
-    let mut engine = runtime::Engine::new(&dir)?;
-    cmd_serve_inner(&mut engine, &variant, n, seed)
+    if let Some(variant) = opts.get("variant") {
+        let n = opts.u64_or("requests", 64)? as usize;
+        let variant = variant.to_string();
+        let dir = runtime::artifacts_dir();
+        let mut engine = runtime::Engine::new(&dir)?;
+        return cmd_serve_inner(&mut engine, &variant, n, seed);
+    }
+    cmd_serve_simulated(opts, seed)
+}
+
+fn cmd_serve_simulated(opts: &Opts, seed: u64) -> anyhow::Result<()> {
+    use ae_llm::runtime::workload::default_rate_rps;
+    use ae_llm::runtime::{Workload, WorkloadKind};
+    use ae_llm::util::Parallelism;
+
+    let model = opts.get("model").unwrap_or("LLaMA-2-7B");
+    let scenario_name = opts.get("scenario").unwrap_or("steady");
+    let kind = WorkloadKind::by_name(scenario_name).ok_or_else(|| {
+        anyhow::anyhow!(
+            "unknown scenario {scenario_name:?} (known: steady, diurnal, \
+             bursty, heavytail)"
+        )
+    })?;
+    let n = opts.u64_or("requests", 800)? as usize;
+
+    let mut session = AeLlm::for_model(model)?
+        .params(Budget { quick: opts.flag("quick") }.ae_params())
+        .seed(seed);
+    if let Some(s) = opts.get("strategy") {
+        session = session.strategy_named(s)?;
+    }
+    eprintln!(
+        "== serve: searching ({}, strategy {}) then deploying ==",
+        model, session.params_ref().strategy.name()
+    );
+    // Lean outcome-only run (no observer stream / per-iteration
+    // hypervolume): serving only needs the front and the reference.
+    let outcome = session.run_testbed_outcome();
+    let deployment = session.deploy(&outcome)?;
+    let rate = default_rate_rps(outcome.reference.default.latency_ms);
+    let workload = Workload::new(kind, rate, n, seed);
+    let requests = workload.generate();
+    let deploy_report = deployment.serve(&requests, kind.name(), seed,
+                                         Parallelism::Auto);
+
+    if let Some(path) = opts.get("json") {
+        std::fs::write(path, deploy_report.to_json().dump())?;
+        println!("wrote {path}");
+        return Ok(());
+    }
+
+    println!(
+        "fleet of {} slots ({} distinct configs) serving {} `{}` \
+         requests at {:.1} req/s",
+        deployment.slots().len(),
+        deployment.distinct_configs(),
+        n,
+        kind.name(),
+        rate
+    );
+    let mut t = ae_llm::util::table::Table::new(&[
+        "Slot", "Config", "Batch x Seq", "Deadline (ms)", "Done",
+        "p95 (ms)", "Viol (%)",
+    ])
+    .with_title("Per-class serving slots");
+    for (slot, (label, rep)) in
+        deployment.slots().iter().zip(&deploy_report.per_slot)
+    {
+        t.row(&[
+            label.clone(),
+            slot.config.signature(),
+            format!("{} x {}", slot.batch, slot.seq),
+            format!("{:.0}", slot.deadline_ms),
+            rep.completed.to_string(),
+            format!("{:.1}", rep.p95_latency_ms),
+            format!("{:.1}", rep.slo_violation_rate * 100.0),
+        ]);
+    }
+    println!("{}", t.render());
+    let o = &deploy_report.overall;
+    println!(
+        "overall: {} completed in {} batches | p50 {:.1} ms p95 {:.1} ms \
+         | {:.1} req/s | {:.0} tok/s | SLO violations {:.1}% | energy \
+         {:.1} J",
+        o.completed, o.batches, o.p50_latency_ms, o.p95_latency_ms,
+        o.throughput_rps, o.tokens_per_s, o.slo_violation_rate * 100.0,
+        o.energy_j
+    );
+    Ok(())
 }
 
 fn cmd_serve_inner(engine: &mut runtime::Engine, variant: &str, n: usize,
@@ -399,7 +495,7 @@ fn cmd_serve_inner(engine: &mut runtime::Engine, variant: &str, n: usize,
         let len = 8 + rng.below(seq - 8);
         let tokens: Vec<i32> =
             (0..len).map(|_| rng.below(256) as i32).collect();
-        server.submit(runtime::Request { id, tokens });
+        server.submit(runtime::Request::new(id, tokens));
     }
     server.drain()?;
     let r = server.report();
@@ -459,15 +555,19 @@ fn print_help() {
          search  --model M [--task T] [--platform P] [--prefs W]\n  \
          \x20       [--strategy S] [--quick] [--seed N] [--json]\n  \
          \x20       (--json emits the RunReport)\n  \
-         table   --id 2|3|4|5|6|7 [--quick] [--seed N]\n  \
-         \x20       (7 = search-strategy comparison)\n  \
+         table   --id 2|3|4|5|6|7|8 [--quick] [--seed N]\n  \
+         \x20       (7 = strategy comparison, 8 = adaptive vs static \
+         serving)\n  \
          figure  --id 1|2|3|4 [--quick] [--seed N] [--out DIR]\n  \
          e2e     [--repeats N] [--seed N]   hardware-in-the-loop + serving\n  \
-         serve   [--requests N] [--variant V] [--seed N]\n  \
+         serve   [--model M] [--scenario S] [--strategy S] [--requests N]\n  \
+         \x20       [--quick] [--seed N] [--json OUT.json]\n  \
+         \x20       (simulated fleet; --variant V switches to live PJRT)\n  \
          check   load + execute every AOT artifact\n  \
          space   print the configuration-space inventory\n\n\
          prefs: balanced | latency | memory | accuracy | green\n\
-         strategies: nsga2 | random | racing | local"
+         strategies: nsga2 | random | racing | local\n\
+         scenarios: steady | diurnal | bursty | heavytail"
     );
 }
 
@@ -585,6 +685,15 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("--seed expects a number"), "{err}");
+    }
+
+    #[test]
+    fn serve_rejects_unknown_scenario_before_searching() {
+        let err = run(&args(&["serve", "--scenario", "nope"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("nope"), "{err}");
+        assert!(err.contains("bursty"), "{err}");
     }
 
     #[test]

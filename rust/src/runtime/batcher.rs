@@ -1,0 +1,273 @@
+//! Dynamic batch formation (DESIGN.md §11): size- OR deadline-triggered,
+//! replacing the old fixed-size `drain` grouping.
+//!
+//! Requests carry arrival timestamps; the batcher walks them in
+//! submission order and closes a batch when
+//!
+//! 1. it reaches `max_batch` items (size trigger), or
+//! 2. the *next* item arrived after the oldest member had already
+//!    waited `max_delay_ms` (deadline trigger — the batch would have
+//!    been dispatched before that item showed up), or
+//! 3. the queue is flushed (end of drain).
+//!
+//! Each batch records `ready_ms`, the instant it became dispatchable on
+//! the serving timeline: the last member's arrival for size-triggered
+//! and flushed batches, `first_arrival + max_delay` for deadline-
+//! triggered ones.  Batch contents and order are a pure function of the
+//! (item, arrival) sequence — nothing here reads a clock — which is
+//! what makes dynamically batched serving reproducible.
+//!
+//! Invariant every consumer relies on: items never reorder.  Batch `k`
+//! holds a contiguous run of the submission sequence, and batches are
+//! emitted in submission order.
+
+use std::collections::VecDeque;
+
+/// One formed batch: `items` in submission order plus the timestamp at
+/// which the batch became dispatchable.
+#[derive(Clone, Debug)]
+pub struct Batch<T> {
+    pub items: Vec<(T, f64)>,
+    pub ready_ms: f64,
+}
+
+/// Size/deadline-triggered batch former over timestamped items.
+#[derive(Clone, Debug)]
+pub struct Batcher<T> {
+    max_batch: usize,
+    max_delay_ms: f64,
+    pending: VecDeque<(T, f64)>,
+    last_arrival_ms: f64,
+}
+
+impl<T> Batcher<T> {
+    /// `max_batch` ≥ 1; `max_delay_ms` is the longest a request may sit
+    /// waiting for co-riders before a partial batch dispatches.
+    pub fn new(max_batch: usize, max_delay_ms: f64) -> Batcher<T> {
+        Batcher {
+            max_batch: max_batch.max(1),
+            max_delay_ms: max_delay_ms.max(0.0),
+            pending: VecDeque::new(),
+            last_arrival_ms: 0.0,
+        }
+    }
+
+    pub fn max_delay_ms(&self) -> f64 {
+        self.max_delay_ms
+    }
+
+    /// Change the batching deadline; pending items are untouched and
+    /// the new delay applies at the next formation.
+    pub fn set_max_delay_ms(&mut self, delay_ms: f64) {
+        self.max_delay_ms = delay_ms.max(0.0);
+    }
+
+    /// Enqueue an item.  Arrivals are clamped monotone (a request
+    /// cannot arrive before the one submitted ahead of it), keeping the
+    /// formation rule well-defined for live wall-clock submitters.
+    pub fn push(&mut self, item: T, arrival_ms: f64) {
+        let arrival = arrival_ms.max(self.last_arrival_ms);
+        self.last_arrival_ms = arrival;
+        self.pending.push_back((item, arrival));
+    }
+
+    /// Put items back at the *front* of the queue in the given order
+    /// (error-path requeue; arrivals are preserved).
+    pub fn requeue_front(&mut self, items: Vec<(T, f64)>) {
+        for it in items.into_iter().rev() {
+            self.pending.push_front(it);
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Form every batch the pending queue implies and empty it (the
+    /// drain path).  The final partial batch is flushed with
+    /// `ready_ms` = its last arrival.
+    pub fn drain_batches(&mut self) -> Vec<Batch<T>> {
+        self.form(None)
+    }
+
+    /// Form only the batches whose trigger has fired by `now_ms`
+    /// (size-complete, or oldest member past the deadline); later items
+    /// stay pending.
+    pub fn form_ready(&mut self, now_ms: f64) -> Vec<Batch<T>> {
+        self.form(Some(now_ms))
+    }
+
+    fn form(&mut self, now_ms: Option<f64>) -> Vec<Batch<T>> {
+        let mut out: Vec<Batch<T>> = Vec::new();
+        let mut cur: Vec<(T, f64)> = Vec::new();
+        let mut first_arrival = 0.0f64;
+        while let Some((item, arrival)) = self.pending.pop_front() {
+            if cur.is_empty() {
+                first_arrival = arrival;
+            } else if arrival > first_arrival + self.max_delay_ms {
+                // Deadline fired before this item arrived: the open
+                // batch dispatched without it.
+                let ready = first_arrival + self.max_delay_ms;
+                out.push(Batch { items: std::mem::take(&mut cur),
+                                 ready_ms: ready });
+                first_arrival = arrival;
+            }
+            cur.push((item, arrival));
+            if cur.len() == self.max_batch {
+                let ready = cur.last().unwrap().1;
+                out.push(Batch { items: std::mem::take(&mut cur),
+                                 ready_ms: ready });
+            }
+        }
+        let Some(now) = now_ms else {
+            // Drain: flush the tail as soon as its last member arrived.
+            if !cur.is_empty() {
+                out.push(Batch { ready_ms: cur.last().unwrap().1,
+                                 items: cur });
+            }
+            return out;
+        };
+        // Close the tail only if its deadline has fired by `now`.
+        let mut leftover: Vec<(T, f64)> = Vec::new();
+        if !cur.is_empty() {
+            let deadline = first_arrival + self.max_delay_ms;
+            if deadline <= now {
+                out.push(Batch { items: cur, ready_ms: deadline });
+            } else {
+                leftover = cur;
+            }
+        }
+        // A batch is ripe only once its trigger has fired by `now`
+        // (size-complete: last member arrived; deadline: expired).
+        // Arrivals are monotone, so ready_ms is non-decreasing and
+        // everything from the first unripe batch onward waits.
+        let ripe_end = out
+            .iter()
+            .position(|b| b.ready_ms > now)
+            .unwrap_or(out.len());
+        for b in out.split_off(ripe_end) {
+            for it in b.items {
+                self.pending.push_back(it);
+            }
+        }
+        for it in leftover {
+            self.pending.push_back(it);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids<T: Copy>(b: &Batch<T>) -> Vec<T> {
+        b.items.iter().map(|(x, _)| *x).collect()
+    }
+
+    #[test]
+    fn size_trigger_groups_in_submission_order() {
+        let mut b = Batcher::new(4, 100.0);
+        for i in 0..10u64 {
+            b.push(i, i as f64); // 1ms apart, well under the deadline
+        }
+        let batches = b.drain_batches();
+        assert_eq!(batches.len(), 3);
+        assert_eq!(ids(&batches[0]), vec![0, 1, 2, 3]);
+        assert_eq!(ids(&batches[1]), vec![4, 5, 6, 7]);
+        assert_eq!(ids(&batches[2]), vec![8, 9]);
+        // size-triggered batches dispatch when their last member arrives
+        assert_eq!(batches[0].ready_ms, 3.0);
+        assert_eq!(batches[1].ready_ms, 7.0);
+        assert_eq!(batches[2].ready_ms, 9.0); // flushed tail
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn deadline_trigger_closes_partial_batches() {
+        let mut b = Batcher::new(8, 30.0);
+        b.push(0u64, 0.0);
+        b.push(1, 10.0);
+        b.push(2, 100.0); // arrives after 0's deadline (0 + 30)
+        b.push(3, 105.0);
+        let batches = b.drain_batches();
+        assert_eq!(batches.len(), 2);
+        assert_eq!(ids(&batches[0]), vec![0, 1]);
+        assert_eq!(batches[0].ready_ms, 30.0); // first arrival + delay
+        assert_eq!(ids(&batches[1]), vec![2, 3]);
+        assert_eq!(batches[1].ready_ms, 105.0); // flushed tail
+    }
+
+    #[test]
+    fn form_ready_leaves_unripe_tail_pending() {
+        let mut b = Batcher::new(4, 30.0);
+        b.push(0u64, 0.0);
+        b.push(1, 5.0);
+        // At t=10 neither trigger has fired.
+        assert!(b.form_ready(10.0).is_empty());
+        assert_eq!(b.len(), 2);
+        // At t=31 the deadline has fired.
+        let ready = b.form_ready(31.0);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ids(&ready[0]), vec![0, 1]);
+        assert_eq!(ready[0].ready_ms, 30.0);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn form_ready_never_emits_unripe_batches() {
+        // Items time-stamped in the future must not dispatch early —
+        // neither as a deadline batch nor as a size-complete one.
+        let mut b = Batcher::new(4, 30.0);
+        b.push(0u64, 0.0);
+        b.push(1, 100.0); // closes [0]'s deadline batch (ready 30)...
+        // ...but at now=5 that deadline hasn't fired yet.
+        assert!(b.form_ready(5.0).is_empty());
+        assert_eq!(b.len(), 2);
+
+        let mut b = Batcher::new(4, 30.0);
+        for (i, t) in [(0u64, 100.0), (1, 101.0), (2, 102.0), (3, 103.0)] {
+            b.push(i, t);
+        }
+        // size-complete at t=103, which is after now=0
+        assert!(b.form_ready(0.0).is_empty());
+        assert_eq!(b.len(), 4);
+        let ready = b.form_ready(103.0);
+        assert_eq!(ready.len(), 1);
+        assert_eq!(ids(&ready[0]), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn non_monotone_arrivals_are_clamped() {
+        let mut b = Batcher::new(2, 1000.0);
+        b.push(0u64, 50.0);
+        b.push(1, 10.0); // clamped to 50.0
+        let batches = b.drain_batches();
+        assert_eq!(batches[0].ready_ms, 50.0);
+    }
+
+    #[test]
+    fn requeue_front_preserves_order() {
+        let mut b = Batcher::new(4, 1000.0);
+        b.push(2u64, 2.0);
+        b.push(3, 3.0);
+        b.requeue_front(vec![(0, 0.0), (1, 1.0)]);
+        let batches = b.drain_batches();
+        assert_eq!(ids(&batches[0]), vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn zero_delay_degenerates_to_per_arrival_batches() {
+        let mut b = Batcher::new(8, 0.0);
+        b.push(0u64, 0.0);
+        b.push(1, 1.0);
+        b.push(2, 1.0); // same instant: may share a batch
+        let batches = b.drain_batches();
+        assert_eq!(ids(&batches[0]), vec![0]);
+        assert_eq!(ids(&batches[1]), vec![1, 2]);
+    }
+}

@@ -1,0 +1,131 @@
+//! Virtual-time abstraction for the serving subsystem (DESIGN.md §11).
+//!
+//! The serving path used to timestamp everything with `std::time::
+//! Instant`, which made latency percentiles a function of the host's
+//! scheduler — untestable in CI and never reproducible.  `Clock`
+//! factors the *source of time* out of [`super::serve::Server`]:
+//!
+//! * [`WallClock`] — real elapsed milliseconds since construction; the
+//!   deployment-side clock for PJRT execution, where batch execution
+//!   genuinely takes wall time.
+//! * [`VirtualClock`] — a simulated timeline that only moves when the
+//!   server accounts a batch completion.  Combined with
+//!   [`super::backend::SimulatedBackend`], every latency in a
+//!   `ServeReport` becomes a pure function of (workload, config, seed):
+//!   bit-reproducible on any machine, artifact-free, CI-safe.
+//!
+//! Determinism contract: `now_ms` is monotone non-decreasing, and
+//! `advance_to_ms` never moves time backwards.  The server is the only
+//! writer; backends never touch the clock (they *report* `exec_ms`, the
+//! server decides what that does to the timeline).
+
+use std::cell::Cell;
+use std::time::Instant;
+
+/// A monotone millisecond clock the serving loop reads and (for
+/// simulated time) advances.
+pub trait Clock {
+    /// Current time in milliseconds on this clock's timeline.
+    fn now_ms(&self) -> f64;
+
+    /// Move the timeline forward to `t_ms` (no-op if `t_ms` is in the
+    /// past, and always a no-op for wall time, which advances itself).
+    fn advance_to_ms(&self, t_ms: f64);
+}
+
+/// Real time, measured from construction.
+pub struct WallClock {
+    epoch: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ms(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64() * 1e3
+    }
+
+    fn advance_to_ms(&self, _t_ms: f64) {
+        // wall time advances on its own
+    }
+}
+
+/// Simulated time: starts at 0.0 and moves only via `advance_to_ms`.
+///
+/// Interior mutability (`Cell`) keeps `Clock` object-safe behind `&self`
+/// — the serving loop advances time from the ordered reduce, which runs
+/// on the coordinating thread, so no `Sync` is needed.
+pub struct VirtualClock {
+    now: Cell<f64>,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { now: Cell::new(0.0) }
+    }
+
+    /// Start the timeline at `t_ms` instead of 0.
+    pub fn at(t_ms: f64) -> VirtualClock {
+        VirtualClock { now: Cell::new(t_ms) }
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        VirtualClock::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ms(&self) -> f64 {
+        self.now.get()
+    }
+
+    fn advance_to_ms(&self, t_ms: f64) {
+        if t_ms > self.now.get() {
+            self.now.set(t_ms);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_starts_at_zero_and_advances() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now_ms(), 0.0);
+        c.advance_to_ms(12.5);
+        assert_eq!(c.now_ms(), 12.5);
+        c.advance_to_ms(40.0);
+        assert_eq!(c.now_ms(), 40.0);
+    }
+
+    #[test]
+    fn virtual_clock_never_goes_backwards() {
+        let c = VirtualClock::at(100.0);
+        c.advance_to_ms(50.0);
+        assert_eq!(c.now_ms(), 100.0);
+    }
+
+    #[test]
+    fn wall_clock_is_monotone_and_ignores_advance() {
+        let c = WallClock::new();
+        let a = c.now_ms();
+        c.advance_to_ms(1e12);
+        let b = c.now_ms();
+        assert!(b >= a);
+        assert!(b < 1e9, "advance_to_ms must not teleport wall time");
+    }
+}

@@ -1,0 +1,560 @@
+//! Fleet deployment: the serving-side realization of "adaptive vs
+//! static configuration" (DESIGN.md §11).
+//!
+//! Algorithm 1 produces a Pareto *front*; a deployment has to pick
+//! what actually serves traffic.  [`Deployment::from_front`] selects
+//! one front configuration per [`SloClass`] — lowest latency for
+//! interactive traffic, lowest energy for throughput batch work,
+//! lowest memory (KV headroom) for long-context requests, all subject
+//! to an accuracy floor — instantiates each as a simulated server with
+//! a class-appropriate batch shape, and routes every request by its
+//! SLO tag.  [`Deployment::static_single`] is the baseline it is
+//! compared against: one configuration, one general-purpose shape,
+//! serving everything.
+//!
+//! The structural advantage being measured: a static deployment must
+//! pick one operating point, so it either truncates long-context
+//! prompts (quality-SLO breach) or drags interactive latency; the
+//! fleet provisions per-class shapes off the same search result at no
+//! extra search cost.
+
+use crate::config::Config;
+use crate::hardware::Platform;
+use crate::models::ModelSpec;
+use crate::oracle::Objectives;
+use crate::search::archive::{Entry, ParetoArchive};
+use crate::tasks::TaskSpec;
+use crate::util::json::Json;
+use crate::util::pool::Parallelism;
+
+use super::backend::SimulatedBackend;
+use super::serve::{Completion, Request, ServeReport, Server};
+
+// ---------------------------------------------------------------------------
+// SLO classes and policy
+// ---------------------------------------------------------------------------
+
+/// Service-level class a request is tagged with.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SloClass {
+    /// Chat-style traffic: tight latency deadline, short prompts.
+    Interactive,
+    /// Offline/throughput work: generous deadline, mid-size prompts.
+    Batch,
+    /// Long-document traffic: needs sequence headroom above all.
+    LongContext,
+}
+
+impl SloClass {
+    pub const ALL: [SloClass; 3] =
+        [SloClass::Interactive, SloClass::Batch, SloClass::LongContext];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SloClass::Interactive => "interactive",
+            SloClass::Batch => "batch",
+            SloClass::LongContext => "long-context",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<SloClass> {
+        Some(match name {
+            "interactive" => SloClass::Interactive,
+            "batch" => SloClass::Batch,
+            "long-context" | "longcontext" | "long" => SloClass::LongContext,
+            _ => return None,
+        })
+    }
+
+    /// Serve-variant shape (batch, seq) provisioned for this class.
+    pub fn shape(self) -> (usize, usize) {
+        match self {
+            SloClass::Interactive => (8, 256),
+            SloClass::Batch => (16, 512),
+            SloClass::LongContext => (4, 2048),
+        }
+    }
+}
+
+/// Per-class latency deadlines plus the accuracy floor a slot
+/// configuration must keep to be deployable.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SloPolicy {
+    pub interactive_deadline_ms: f64,
+    pub batch_deadline_ms: f64,
+    pub long_deadline_ms: f64,
+    /// Minimum fraction of the front's best accuracy a deployed
+    /// configuration must retain.
+    pub accuracy_floor: f64,
+}
+
+impl SloPolicy {
+    /// Deadlines scaled from the scenario's Default-configuration
+    /// latency (the Table 2 anchor), so the same policy works across
+    /// model scales: interactive 2×, long-context 8×, batch 20×.
+    pub fn for_default_latency(default_latency_ms: f64) -> SloPolicy {
+        SloPolicy {
+            interactive_deadline_ms: 2.0 * default_latency_ms,
+            batch_deadline_ms: 20.0 * default_latency_ms,
+            long_deadline_ms: 8.0 * default_latency_ms,
+            accuracy_floor: 0.97,
+        }
+    }
+
+    pub fn deadline_ms(&self, class: SloClass) -> f64 {
+        match class {
+            SloClass::Interactive => self.interactive_deadline_ms,
+            SloClass::Batch => self.batch_deadline_ms,
+            SloClass::LongContext => self.long_deadline_ms,
+        }
+    }
+}
+
+impl Default for SloPolicy {
+    /// Scaled for the canonical 7B anchor (45 ms Default latency).
+    fn default() -> SloPolicy {
+        SloPolicy::for_default_latency(45.0)
+    }
+}
+
+/// Fraction of a class's deadline spent waiting for batch co-riders
+/// before a partial batch dispatches.
+const BATCH_DELAY_FRAC: f64 = 0.3;
+
+// ---------------------------------------------------------------------------
+// Deployment
+// ---------------------------------------------------------------------------
+
+/// One instantiated serving configuration.
+#[derive(Clone, Debug)]
+pub struct Slot {
+    pub class: SloClass,
+    pub config: Config,
+    pub objectives: Objectives,
+    pub batch: usize,
+    pub seq: usize,
+    pub deadline_ms: f64,
+}
+
+/// A set of serving slots built from a search result, plus the routing
+/// mode (per-class fleet vs single static config).
+#[derive(Clone, Debug)]
+pub struct Deployment {
+    slots: Vec<Slot>,
+    policy: SloPolicy,
+    model: ModelSpec,
+    task: TaskSpec,
+    platform: Platform,
+    static_single: bool,
+}
+
+/// Pick the best entry for `class`: among entries within the accuracy
+/// floor, minimize the class's critical objective.
+fn select_for_class(entries: &[Entry], class: SloClass, floor: f64)
+                    -> Entry {
+    let best_acc = entries
+        .iter()
+        .map(|e| e.objectives.accuracy)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let eligible: Vec<&Entry> = entries
+        .iter()
+        .filter(|e| e.objectives.accuracy >= best_acc * floor)
+        .collect();
+    let pool: &[&Entry] = if eligible.is_empty() {
+        // unreachable in practice (the best-accuracy entry always
+        // qualifies), but stay total
+        &[]
+    } else {
+        &eligible
+    };
+    let key = |e: &Entry| match class {
+        SloClass::Interactive => e.objectives.latency_ms,
+        SloClass::Batch => e.objectives.energy_j,
+        SloClass::LongContext => e.objectives.memory_gb,
+    };
+    let chosen = pool
+        .iter()
+        .min_by(|a, b| key(a).partial_cmp(&key(b)).unwrap())
+        .copied()
+        .unwrap_or(&entries[0]);
+    chosen.clone()
+}
+
+impl Deployment {
+    /// Build the adaptive fleet from a Pareto front: one slot per SLO
+    /// class, each the front's best entry for that class's critical
+    /// objective (subject to the policy's accuracy floor).
+    pub fn from_front(archive: &ParetoArchive, policy: &SloPolicy,
+                      model: &ModelSpec, task: &TaskSpec,
+                      platform: &Platform) -> anyhow::Result<Deployment> {
+        let entries = archive.entries();
+        anyhow::ensure!(!entries.is_empty(),
+                        "cannot deploy from an empty Pareto front");
+        let slots = SloClass::ALL
+            .iter()
+            .map(|&class| {
+                let e = select_for_class(entries, class,
+                                         policy.accuracy_floor);
+                let (batch, seq) = class.shape();
+                Slot {
+                    class,
+                    config: e.config,
+                    objectives: e.objectives,
+                    batch,
+                    seq,
+                    deadline_ms: policy.deadline_ms(class),
+                }
+            })
+            .collect();
+        Ok(Deployment {
+            slots,
+            policy: *policy,
+            model: model.clone(),
+            task: task.clone(),
+            platform: platform.clone(),
+            static_single: false,
+        })
+    }
+
+    /// The comparison baseline: one configuration on the
+    /// general-purpose ([`SloClass::Batch`]) shape serving every class.
+    pub fn static_single(entry: &Entry, policy: &SloPolicy,
+                         model: &ModelSpec, task: &TaskSpec,
+                         platform: &Platform) -> Deployment {
+        let (batch, seq) = SloClass::Batch.shape();
+        Deployment {
+            slots: vec![Slot {
+                class: SloClass::Batch,
+                config: entry.config,
+                objectives: entry.objectives,
+                batch,
+                seq,
+                deadline_ms: policy.deadline_ms(SloClass::Batch),
+            }],
+            policy: *policy,
+            model: model.clone(),
+            task: task.clone(),
+            platform: platform.clone(),
+            static_single: true,
+        }
+    }
+
+    pub fn slots(&self) -> &[Slot] {
+        &self.slots
+    }
+
+    pub fn policy(&self) -> &SloPolicy {
+        &self.policy
+    }
+
+    pub fn is_static(&self) -> bool {
+        self.static_single
+    }
+
+    /// Number of distinct configurations the fleet instantiates.
+    pub fn distinct_configs(&self) -> usize {
+        let mut sigs: Vec<String> =
+            self.slots.iter().map(|s| s.config.signature()).collect();
+        sigs.sort();
+        sigs.dedup();
+        sigs.len()
+    }
+
+    /// Routing label for reports.
+    pub fn routing(&self) -> String {
+        if self.static_single {
+            format!("static:{}", self.slots[0].config.signature())
+        } else {
+            "adaptive".to_string()
+        }
+    }
+
+    /// Serve a timestamped workload on the simulated fleet (virtual
+    /// time; deterministic per seed at every parallelism level) and
+    /// aggregate per-slot + overall statistics.
+    pub fn serve(&self, requests: &[Request], scenario: &str, seed: u64,
+                 par: Parallelism) -> DeploymentReport {
+        let mut servers: Vec<_> = self
+            .slots
+            .iter()
+            .enumerate()
+            .map(|(i, slot)| {
+                let backend = SimulatedBackend::for_config(
+                    slot.class.name(), &slot.config, &self.model,
+                    &self.task, &self.platform, slot.batch, slot.seq,
+                    seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+                // A static deployment serves interactive traffic too,
+                // so it batches at the *tightest* (interactive) delay —
+                // the strongest static configuration, not a strawman.
+                let delay_base = if self.static_single {
+                    self.policy.interactive_deadline_ms
+                } else {
+                    slot.deadline_ms
+                };
+                Server::simulated(backend, slot.class.name())
+                    .expect("slot variant just registered")
+                    .with_policy(self.policy)
+                    .with_max_delay_ms(BATCH_DELAY_FRAC * delay_base)
+                    .with_parallelism(par)
+            })
+            .collect();
+        for r in requests {
+            let i = if self.static_single {
+                0
+            } else {
+                self.slots
+                    .iter()
+                    .position(|s| s.class == r.slo)
+                    .unwrap_or(0)
+            };
+            servers[i].submit(r.clone());
+        }
+        for s in &mut servers {
+            s.drain().expect("simulated backend is infallible");
+        }
+
+        // Per-slot reports + the merged overall view.
+        let per_slot: Vec<(String, ServeReport)> = self
+            .slots
+            .iter()
+            .zip(&servers)
+            .map(|(slot, s)| {
+                let label = if self.static_single {
+                    "static".to_string()
+                } else {
+                    slot.class.name().to_string()
+                };
+                (label, s.report())
+            })
+            .collect();
+        let all: Vec<Completion> = servers
+            .iter()
+            .flat_map(|s| s.completions().iter().cloned())
+            .collect();
+        let exec: Vec<f64> = servers
+            .iter()
+            .flat_map(|s| s.batch_exec_ms().iter().copied())
+            .collect();
+        let energy: f64 = servers.iter().map(|s| s.energy_j()).sum();
+        let tokens: usize = servers
+            .iter()
+            .map(|s| s.completions().len() * s.seq_len())
+            .sum();
+        let span = servers.iter().filter_map(|s| s.span()).fold(
+            None,
+            |acc: Option<(f64, f64)>, (f, l)| Some(match acc {
+                None => (f, l),
+                Some((af, al)) => (af.min(f), al.max(l)),
+            }),
+        );
+        let overall = ServeReport::from_completions(
+            &all, exec.len(), &exec, energy, span, tokens);
+
+        DeploymentReport {
+            routing: self.routing(),
+            scenario: scenario.to_string(),
+            seed,
+            slots: self.slots.clone(),
+            per_slot,
+            overall,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DeploymentReport
+// ---------------------------------------------------------------------------
+
+pub const DEPLOY_REPORT_SCHEMA: &str = "ae-llm.deploy-report/v1";
+
+/// Everything one deployment serving run produced (schema
+/// `ae-llm.deploy-report/v1`; `ae-llm serve --json`).
+#[derive(Clone, Debug)]
+pub struct DeploymentReport {
+    /// `adaptive` or `static:<signature>`.
+    pub routing: String,
+    /// Workload scenario name.
+    pub scenario: String,
+    pub seed: u64,
+    pub slots: Vec<Slot>,
+    pub per_slot: Vec<(String, ServeReport)>,
+    pub overall: ServeReport,
+}
+
+impl DeploymentReport {
+    pub fn to_json(&self) -> Json {
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("schema".into(),
+                    Json::Str(DEPLOY_REPORT_SCHEMA.into()));
+        root.insert("routing".into(), Json::Str(self.routing.clone()));
+        root.insert("scenario".into(), Json::Str(self.scenario.clone()));
+        // String, not Num: Json numbers are f64 and would corrupt
+        // seeds above 2^53 (same convention as RunReport).
+        root.insert("seed".into(), Json::Str(self.seed.to_string()));
+        let slots: Vec<Json> = self
+            .slots
+            .iter()
+            .map(|s| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("class".into(), Json::Str(s.class.name().into()));
+                m.insert("signature".into(),
+                         Json::Str(s.config.signature()));
+                m.insert("batch".into(), Json::Num(s.batch as f64));
+                m.insert("seq".into(), Json::Num(s.seq as f64));
+                m.insert("deadline_ms".into(), Json::Num(s.deadline_ms));
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("slots".into(), Json::Arr(slots));
+        let mut per = std::collections::BTreeMap::new();
+        for (label, report) in &self.per_slot {
+            per.insert(label.clone(), report.to_json());
+        }
+        root.insert("per_slot".into(), Json::Obj(per));
+        root.insert("overall".into(), self.overall.to_json());
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hardware;
+    use crate::models::by_name;
+    use crate::tasks::blended_task;
+    use crate::util::Rng;
+
+    fn cfg(seed: u64) -> Config {
+        crate::config::enumerate::sample(&mut Rng::new(seed))
+    }
+
+    fn obj(acc: f64, lat: f64, mem: f64, en: f64) -> Objectives {
+        Objectives { accuracy: acc, latency_ms: lat, memory_gb: mem,
+                     energy_j: en }
+    }
+
+    /// A hand-built front with one clear specialist per axis.
+    fn specialist_front() -> ParetoArchive {
+        let mut a = ParetoArchive::new(10);
+        a.insert(cfg(1), obj(68.0, 12.0, 10.0, 0.60)); // fast
+        a.insert(cfg(2), obj(68.5, 30.0, 9.0, 0.20));  // frugal
+        a.insert(cfg(3), obj(68.2, 28.0, 4.0, 0.55));  // lean memory
+        a.insert(cfg(4), obj(69.0, 40.0, 12.0, 0.80)); // accurate
+        a
+    }
+
+    #[test]
+    fn slo_class_names_roundtrip() {
+        for c in SloClass::ALL {
+            assert_eq!(SloClass::by_name(c.name()), Some(c));
+        }
+        assert_eq!(SloClass::by_name("nope"), None);
+    }
+
+    #[test]
+    fn policy_scales_with_default_latency() {
+        let p = SloPolicy::for_default_latency(100.0);
+        assert_eq!(p.deadline_ms(SloClass::Interactive), 200.0);
+        assert_eq!(p.deadline_ms(SloClass::LongContext), 800.0);
+        assert_eq!(p.deadline_ms(SloClass::Batch), 2000.0);
+    }
+
+    #[test]
+    fn from_front_picks_class_specialists() {
+        let front = specialist_front();
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let d = Deployment::from_front(&front, &SloPolicy::default(), &m,
+                                       &blended_task(), &hardware::a100())
+            .unwrap();
+        assert_eq!(d.slots().len(), 3);
+        let by_class = |c: SloClass| {
+            d.slots().iter().find(|s| s.class == c).unwrap()
+        };
+        assert_eq!(by_class(SloClass::Interactive).objectives.latency_ms,
+                   12.0);
+        assert_eq!(by_class(SloClass::Batch).objectives.energy_j, 0.20);
+        assert_eq!(by_class(SloClass::LongContext).objectives.memory_gb,
+                   4.0);
+        assert_eq!(d.distinct_configs(), 3);
+        assert_eq!(d.routing(), "adaptive");
+        // class shapes provision sequence headroom where it matters
+        assert!(by_class(SloClass::LongContext).seq
+                    > by_class(SloClass::Interactive).seq);
+    }
+
+    #[test]
+    fn accuracy_floor_filters_fast_but_broken_entries() {
+        let mut front = ParetoArchive::new(10);
+        front.insert(cfg(1), obj(40.0, 5.0, 10.0, 0.6)); // fast, broken
+        front.insert(cfg(2), obj(70.0, 20.0, 10.0, 0.7));
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let d = Deployment::from_front(&front, &SloPolicy::default(), &m,
+                                       &blended_task(), &hardware::a100())
+            .unwrap();
+        let interactive = d.slots().iter()
+            .find(|s| s.class == SloClass::Interactive).unwrap();
+        assert_eq!(interactive.objectives.accuracy, 70.0);
+    }
+
+    #[test]
+    fn empty_front_is_an_error() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        assert!(Deployment::from_front(
+            &ParetoArchive::new(4), &SloPolicy::default(), &m,
+            &blended_task(), &hardware::a100()).is_err());
+    }
+
+    #[test]
+    fn deployment_serves_and_reports_deterministically() {
+        let front = specialist_front();
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = blended_task();
+        let d = Deployment::from_front(&front, &SloPolicy::default(), &m,
+                                       &t, &hardware::a100()).unwrap();
+        let reqs: Vec<Request> = (0..30u64)
+            .map(|i| {
+                let class = SloClass::ALL[(i % 3) as usize];
+                Request::new(i, vec![(i as i32) % 11; 64])
+                    .at(i as f64 * 10.0)
+                    .class(class)
+            })
+            .collect();
+        let go = |par| d.serve(&reqs, "steady", 5, par);
+        let a = go(Parallelism::Sequential);
+        let b = go(Parallelism::Threads(4));
+        assert_eq!(a.to_json().dump(), b.to_json().dump());
+        assert_eq!(a.overall.completed, 30);
+        assert_eq!(a.per_slot.len(), 3);
+        assert!(a.overall.energy_j > 0.0);
+        let j = a.to_json();
+        assert_eq!(j.get("schema").and_then(Json::as_str),
+                   Some(DEPLOY_REPORT_SCHEMA));
+    }
+
+    #[test]
+    fn static_deployment_truncates_long_context() {
+        let front = specialist_front();
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = blended_task();
+        let policy = SloPolicy::default();
+        let adaptive = Deployment::from_front(&front, &policy, &m, &t,
+                                              &hardware::a100()).unwrap();
+        let stat = Deployment::static_single(&front.entries()[0], &policy,
+                                             &m, &t, &hardware::a100());
+        assert!(stat.routing().starts_with("static:"));
+        let reqs: Vec<Request> = (0..20u64)
+            .map(|i| {
+                Request::new(i, vec![1; 1500])
+                    .at(i as f64 * 400.0)
+                    .class(SloClass::LongContext)
+            })
+            .collect();
+        let a = adaptive.serve(&reqs, "steady", 3, Parallelism::Sequential);
+        let s = stat.serve(&reqs, "steady", 3, Parallelism::Sequential);
+        // static's 512-token shape must truncate every 1500-token prompt
+        assert_eq!(s.overall.truncated, 20);
+        assert_eq!(a.overall.truncated, 0);
+        assert!(a.overall.slo_violation_rate
+                    < s.overall.slo_violation_rate);
+    }
+}

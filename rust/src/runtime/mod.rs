@@ -1,19 +1,37 @@
-//! S10: PJRT runtime — the deployment half of the system.
+//! S10: the runtime — the deployment half of the system.
 //!
 //! * [`manifest`] — parses `artifacts/manifest.json` (the python→rust
 //!   contract);
 //! * [`engine`] — PJRT CPU client: load HLO text, compile, execute;
 //! * [`measure`] — hardware-in-the-loop evaluator for Algorithm 1
 //!   (real wall-clock + numeric fidelity per artifact variant);
-//! * [`serve`] — fixed-batch request scheduler over a serve variant.
+//! * [`backend`] — the [`ExecBackend`] seam: PJRT execution vs the
+//!   deterministic cost-model [`SimulatedBackend`];
+//! * [`clock`] — wall vs virtual time for reproducible serving;
+//! * [`batcher`] — size/deadline-triggered dynamic batch formation;
+//! * [`serve`] — the backend-generic request scheduler;
+//! * [`fleet`] — Pareto-front deployments: SLO classes, per-class
+//!   routing, the adaptive-vs-static comparison;
+//! * [`workload`] — seeded traffic generators for the deployment
+//!   scenarios (steady / diurnal / bursty / heavytail).
 
+pub mod backend;
+pub mod batcher;
+pub mod clock;
 pub mod engine;
+pub mod fleet;
 pub mod manifest;
 pub mod measure;
 pub mod serve;
+pub mod workload;
 
+pub use backend::{BatchResult, BatchShape, ExecBackend, PjrtBackend,
+                  SimulatedBackend};
+pub use clock::{Clock, VirtualClock, WallClock};
 pub use engine::{Engine, Forward};
+pub use fleet::{Deployment, DeploymentReport, SloClass, SloPolicy};
 pub use manifest::{artifacts_dir, Manifest, Variant};
 pub use measure::{measure_all, measure_all_with, MeasuredEvaluator,
                   MeasurementTable};
-pub use serve::{Request, ServeReport, Server};
+pub use serve::{Completion, Request, ServeReport, Server};
+pub use workload::{Workload, WorkloadKind};

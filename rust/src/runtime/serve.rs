@@ -1,22 +1,77 @@
-//! Batched serving loop: the deployment-side proof that a chosen
-//! configuration actually runs — requests are queued, grouped into
-//! fixed-size batches (the AOT "serve" variant's batch dimension) and
-//! executed on PJRT, reporting per-request latency and aggregate
-//! throughput.  Used by `examples/e2e_refinement.rs` after Algorithm 1
-//! picks a configuration.
+//! Backend-generic, virtual-time serving (DESIGN.md §11).
+//!
+//! The serving loop is generic over two seams:
+//!
+//! * [`ExecBackend`] — what runs a batch ([`PjrtBackend`] for real
+//!   artifacts, [`SimulatedBackend`] for the deterministic cost-model
+//!   fleet);
+//! * [`Clock`] — where time comes from ([`WallClock`] live,
+//!   [`VirtualClock`] simulated).
+//!
+//! Requests carry arrival timestamps and an [`SloClass`]; the dynamic
+//! [`Batcher`] forms size- or deadline-triggered batches; completions
+//! are accounted on a lane model (one simulated device per lane, batch
+//! assigned to the earliest-free lane in submission order), so latency
+//! percentiles, SLO violations and energy are pure functions of
+//! (workload, config, seed) on the simulated stack — bit-reproducible
+//! with no XLA artifacts present.
+//!
+//! Ordering contract (tests/integration_serve.rs): batch indices and
+//! the completion log always follow submission order, at every
+//! [`Parallelism`] level and whatever order workers finish in.
 
-use std::time::Instant;
-
+use super::backend::{BatchResult, BatchShape, ExecBackend, PjrtBackend,
+                     SimulatedBackend};
+use super::batcher::{Batch, Batcher};
+use super::clock::{Clock, VirtualClock, WallClock};
 use super::engine::Engine;
+use super::fleet::{SloClass, SloPolicy};
+use crate::util::json::Json;
 use crate::util::pool::{self, Parallelism};
 use crate::util::stats;
 
-/// One inference request: a prompt of token ids (padded/truncated to
-/// the variant's sequence length).
+/// One inference request: a prompt of token ids, an arrival timestamp
+/// on the serving clock (0.0 = "now" for live submitters) and an SLO
+/// class used for deadline accounting and fleet routing.
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
     pub tokens: Vec<i32>,
+    pub arrival_ms: f64,
+    pub slo: SloClass,
+}
+
+impl Request {
+    pub fn new(id: u64, tokens: Vec<i32>) -> Request {
+        Request { id, tokens, arrival_ms: 0.0, slo: SloClass::Interactive }
+    }
+
+    /// Set the arrival timestamp (virtual-time workloads).
+    pub fn at(mut self, arrival_ms: f64) -> Request {
+        self.arrival_ms = arrival_ms;
+        self
+    }
+
+    /// Tag the request with an SLO class.
+    pub fn class(mut self, slo: SloClass) -> Request {
+        self.slo = slo;
+        self
+    }
+}
+
+/// Pad/truncate a prompt to the variant's sequence length and clamp
+/// token ids into vocabulary range.  An empty prompt becomes a full
+/// pad row (id 0) rather than a degenerate unpadded row; returns
+/// whether the prompt had to be *truncated* — the quality-SLO breach
+/// the fleet router exists to avoid.
+pub fn pad_tokens(tokens: &[i32], seq: usize, vocab: usize)
+                  -> (Vec<i32>, bool) {
+    let truncated = tokens.len() > seq;
+    let mut out: Vec<i32> = tokens.iter().take(seq)
+        .map(|t| t.rem_euclid(vocab as i32))
+        .collect();
+    out.resize(seq, 0);
+    (out, truncated)
 }
 
 /// Per-request completion record.
@@ -25,14 +80,20 @@ pub struct Completion {
     pub id: u64,
     /// argmax next-token prediction at the last position
     pub next_token: i32,
-    /// time from submission to completion, ms
+    /// time from arrival to batch completion, ms (on the server clock)
     pub latency_ms: f64,
     /// index of the batch this request rode in
     pub batch_index: usize,
+    pub slo: SloClass,
+    /// deadline missed, or prompt truncated
+    pub violated: bool,
+    pub truncated: bool,
+    /// completion timestamp on the server clock
+    pub done_ms: f64,
 }
 
-/// Aggregate serving statistics.
-#[derive(Clone, Debug)]
+/// Aggregate serving statistics (schema `ae-llm.serve-report/v1`).
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServeReport {
     pub completed: usize,
     pub batches: usize,
@@ -41,43 +102,177 @@ pub struct ServeReport {
     pub mean_batch_exec_ms: f64,
     pub throughput_rps: f64,
     pub tokens_per_s: f64,
+    /// Requests that missed their SLO deadline or were truncated.
+    pub slo_violations: usize,
+    pub slo_violation_rate: f64,
+    pub truncated: usize,
+    /// Total energy the backend accounted, J (0.0 for PJRT).
+    pub energy_j: f64,
+    /// First arrival to last completion, ms.
+    pub makespan_ms: f64,
 }
 
-/// Fixed-batch scheduler over one serve variant.
-pub struct Server<'a> {
-    engine: &'a Engine,
+pub const SERVE_REPORT_SCHEMA: &str = "ae-llm.serve-report/v1";
+
+impl ServeReport {
+    /// Aggregate a report from raw completion records (shared by the
+    /// per-server path and the fleet's merged overall view).
+    /// `total_tokens` is Σ completed×seq over the contributing servers.
+    pub fn from_completions(completions: &[Completion], batches: usize,
+                            batch_exec_ms: &[f64], energy_j: f64,
+                            span: Option<(f64, f64)>, total_tokens: usize)
+                            -> ServeReport {
+        let lats: Vec<f64> =
+            completions.iter().map(|c| c.latency_ms).collect();
+        let violations =
+            completions.iter().filter(|c| c.violated).count();
+        let truncated =
+            completions.iter().filter(|c| c.truncated).count();
+        let makespan_ms = span
+            .map(|(first, last)| (last - first).max(0.0))
+            .unwrap_or(0.0);
+        let wall_s = (makespan_ms / 1e3).max(1e-9);
+        ServeReport {
+            completed: completions.len(),
+            batches,
+            p50_latency_ms: stats::quantile(&lats, 0.5),
+            p95_latency_ms: stats::quantile(&lats, 0.95),
+            mean_batch_exec_ms: stats::mean(batch_exec_ms),
+            throughput_rps: completions.len() as f64 / wall_s,
+            tokens_per_s: total_tokens as f64 / wall_s,
+            slo_violations: violations,
+            slo_violation_rate: if completions.is_empty() {
+                0.0
+            } else {
+                violations as f64 / completions.len() as f64
+            },
+            truncated,
+            energy_j,
+            makespan_ms,
+        }
+    }
+
+    /// Serialize (schema `ae-llm.serve-report/v1`).  Every field is a
+    /// deterministic function of the serving inputs, so same-seed
+    /// simulated runs dump byte-identical JSON.
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("schema".into(), Json::Str(SERVE_REPORT_SCHEMA.into()));
+        m.insert("completed".into(), Json::Num(self.completed as f64));
+        m.insert("batches".into(), Json::Num(self.batches as f64));
+        m.insert("p50_latency_ms".into(), Json::Num(self.p50_latency_ms));
+        m.insert("p95_latency_ms".into(), Json::Num(self.p95_latency_ms));
+        m.insert("mean_batch_exec_ms".into(),
+                 Json::Num(self.mean_batch_exec_ms));
+        m.insert("throughput_rps".into(), Json::Num(self.throughput_rps));
+        m.insert("tokens_per_s".into(), Json::Num(self.tokens_per_s));
+        m.insert("slo_violations".into(),
+                 Json::Num(self.slo_violations as f64));
+        m.insert("slo_violation_rate".into(),
+                 Json::Num(self.slo_violation_rate));
+        m.insert("truncated".into(), Json::Num(self.truncated as f64));
+        m.insert("energy_j".into(), Json::Num(self.energy_j));
+        m.insert("makespan_ms".into(), Json::Num(self.makespan_ms));
+        Json::Obj(m)
+    }
+
+    /// Parse a report back from its JSON form (schema-checked).
+    pub fn from_json(j: &Json) -> Result<ServeReport, String> {
+        let schema = j.req_str("schema")?;
+        if schema != SERVE_REPORT_SCHEMA {
+            return Err(format!("unexpected schema {schema:?}"));
+        }
+        Ok(ServeReport {
+            completed: j.req_u64("completed")? as usize,
+            batches: j.req_u64("batches")? as usize,
+            p50_latency_ms: j.req_f64("p50_latency_ms")?,
+            p95_latency_ms: j.req_f64("p95_latency_ms")?,
+            mean_batch_exec_ms: j.req_f64("mean_batch_exec_ms")?,
+            throughput_rps: j.req_f64("throughput_rps")?,
+            tokens_per_s: j.req_f64("tokens_per_s")?,
+            slo_violations: j.req_u64("slo_violations")? as usize,
+            slo_violation_rate: j.req_f64("slo_violation_rate")?,
+            truncated: j.req_u64("truncated")? as usize,
+            energy_j: j.req_f64("energy_j")?,
+            makespan_ms: j.req_f64("makespan_ms")?,
+        })
+    }
+}
+
+/// A padded, deadline-stamped queue entry.
+#[derive(Clone, Debug)]
+struct Item {
+    id: u64,
+    tokens: Vec<i32>,
+    slo: SloClass,
+    deadline_ms: f64,
+    truncated: bool,
+}
+
+/// Dynamic-batch scheduler over one serve variant of an execution
+/// backend, on a wall or virtual clock.
+pub struct Server<B: ExecBackend, C: Clock> {
+    backend: B,
+    clock: C,
     variant: String,
-    batch: usize,
-    seq: usize,
-    vocab: usize,
-    queue: Vec<(Request, Instant)>,
+    shape: BatchShape,
+    batcher: Batcher<Item>,
+    policy: SloPolicy,
     completions: Vec<Completion>,
     batch_exec_ms: Vec<f64>,
-    started: Option<Instant>,
+    energy_j: f64,
+    /// Earliest-free time per serving lane (simulated device replicas).
+    lane_free: Vec<f64>,
+    first_arrival_ms: Option<f64>,
+    last_done_ms: f64,
     /// Worker count for executing independent batches concurrently in
-    /// [`drain`](Self::drain).  PJRT executables are thread-safe for
-    /// concurrent `execute` calls, so full batches of *different*
-    /// requests can run side by side.  Batch indices and the completion
-    /// log always follow submission order regardless of this setting.
+    /// [`drain`](Self::drain).  Purely an execution-throughput knob:
+    /// batch indices, the completion log and (for deterministic
+    /// backends) every reported number are identical at every level.
     parallelism: Parallelism,
 }
 
-impl<'a> Server<'a> {
-    /// `variant` must already be loaded in the engine.
-    pub fn new(engine: &'a Engine, variant: &str) -> anyhow::Result<Server<'a>> {
+impl<'a> Server<PjrtBackend<'a>, WallClock> {
+    /// Live PJRT serving on the wall clock.  `variant` must already be
+    /// loaded in the engine.
+    pub fn new(engine: &'a Engine, variant: &str)
+               -> anyhow::Result<Server<PjrtBackend<'a>, WallClock>> {
         anyhow::ensure!(engine.is_loaded(variant),
                         "variant {variant:?} not loaded");
-        let v = engine.manifest.get(variant).unwrap();
+        Server::with_backend(PjrtBackend::new(engine), variant,
+                             WallClock::new())
+    }
+}
+
+impl Server<SimulatedBackend, VirtualClock> {
+    /// Artifact-free serving: simulated backend on a virtual clock.
+    pub fn simulated(backend: SimulatedBackend, variant: &str)
+                     -> anyhow::Result<Server<SimulatedBackend,
+                                              VirtualClock>> {
+        Server::with_backend(backend, variant, VirtualClock::new())
+    }
+}
+
+impl<B: ExecBackend, C: Clock> Server<B, C> {
+    /// Generic constructor: any backend on any clock.
+    pub fn with_backend(backend: B, variant: &str, clock: C)
+                        -> anyhow::Result<Server<B, C>> {
+        let shape = backend.shape(variant)?;
         Ok(Server {
-            engine,
+            backend,
+            clock,
             variant: variant.to_string(),
-            batch: v.batch as usize,
-            seq: v.seq as usize,
-            vocab: v.config.vocab as usize,
-            queue: Vec::new(),
+            // No deadline by default: batches close on size or flush,
+            // the old fixed-batch behavior.
+            batcher: Batcher::new(shape.batch, f64::INFINITY),
+            shape,
+            policy: SloPolicy::default(),
             completions: Vec::new(),
             batch_exec_ms: Vec::new(),
-            started: None,
+            energy_j: 0.0,
+            lane_free: vec![0.0],
+            first_arrival_ms: None,
+            last_done_ms: 0.0,
             parallelism: Parallelism::Auto,
         })
     }
@@ -89,107 +284,140 @@ impl<'a> Server<'a> {
         self
     }
 
-    pub fn batch_size(&self) -> usize {
-        self.batch
+    /// SLO policy used to stamp per-request deadlines at submit time.
+    pub fn with_policy(mut self, policy: SloPolicy) -> Self {
+        self.policy = policy;
+        self
     }
 
-    /// Enqueue a request (pads/truncates to the sequence length and
-    /// clamps token ids into vocabulary range).
-    pub fn submit(&mut self, mut r: Request) {
-        self.started.get_or_insert_with(Instant::now);
-        r.tokens.resize(self.seq, 0);
-        for t in r.tokens.iter_mut() {
-            *t = (*t).rem_euclid(self.vocab as i32);
-        }
-        self.queue.push((r, Instant::now()));
+    /// Dynamic-batching deadline: the longest a request waits for
+    /// co-riders before a partial batch dispatches.  Already-pending
+    /// requests are kept; the new delay applies at the next batch
+    /// formation.
+    pub fn with_max_delay_ms(mut self, delay_ms: f64) -> Self {
+        self.batcher.set_max_delay_ms(delay_ms);
+        self
+    }
+
+    /// Number of serving lanes (simulated device replicas) completion
+    /// times are accounted against.
+    pub fn with_lanes(mut self, lanes: usize) -> Self {
+        self.lane_free = vec![0.0; lanes.max(1)];
+        self
+    }
+
+    pub fn batch_size(&self) -> usize {
+        self.shape.batch
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.shape.seq
+    }
+
+    /// Enqueue a request: pads/truncates the prompt, clamps token ids,
+    /// stamps the arrival (the later of the request's own timestamp and
+    /// the clock) and the SLO deadline.
+    pub fn submit(&mut self, r: Request) {
+        let arrival = self.clock.now_ms().max(r.arrival_ms);
+        let (tokens, truncated) =
+            pad_tokens(&r.tokens, self.shape.seq, self.shape.vocab);
+        let deadline_ms = arrival + self.policy.deadline_ms(r.slo);
+        self.first_arrival_ms = Some(match self.first_arrival_ms {
+            Some(t) => t.min(arrival),
+            None => arrival,
+        });
+        self.batcher.push(
+            Item { id: r.id, tokens, slo: r.slo, deadline_ms, truncated },
+            arrival,
+        );
     }
 
     pub fn pending(&self) -> usize {
-        self.queue.len()
+        self.batcher.len()
     }
 
-    /// Run batches until the queue is drained.  Short final batches are
-    /// padded with zero-prompts (the static-shape analogue of vLLM-style
-    /// bucket padding).
+    /// Form and execute every batch the queue implies (size- or
+    /// deadline-triggered, final partial flushed).
     ///
     /// Independent batches execute concurrently on up to
-    /// `self.parallelism` workers; completions are merged back in
-    /// submission order (the pool's ordered reduce), so batch indices,
-    /// completion order and next-token results are identical at every
-    /// parallelism level.
+    /// `self.parallelism` workers; completions merge back in submission
+    /// order (the pool's ordered reduce), then completion times are
+    /// accounted on the lane model: each batch starts on the
+    /// earliest-free lane no sooner than it became dispatchable.  On
+    /// the first failed batch, every not-yet-recorded request — the
+    /// failed batch included — is requeued in order, so no request is
+    /// ever silently lost and a retry of `drain()` can pick them up.
     pub fn drain(&mut self) -> anyhow::Result<()> {
-        // Group the queue into fixed-size batches, in submission order.
-        let mut groups: Vec<Vec<(Request, Instant)>> = Vec::new();
-        while !self.queue.is_empty() {
-            let take = self.queue.len().min(self.batch);
-            groups.push(self.queue.drain(..take).collect());
+        let batches = self.batcher.drain_batches();
+        self.execute(batches)
+    }
+
+    fn execute(&mut self, batches: Vec<Batch<Item>>) -> anyhow::Result<()> {
+        if batches.is_empty() {
+            return Ok(());
         }
-        // Flatten each group into its padded token buffer.
-        let flats: Vec<Vec<i32>> = groups
+        let BatchShape { batch, seq, .. } = self.shape;
+        let jobs: Vec<(Vec<i32>, usize)> = batches
             .iter()
-            .map(|group| {
-                let mut flat: Vec<i32> =
-                    Vec::with_capacity(self.batch * self.seq);
-                for (r, _) in group {
-                    flat.extend_from_slice(&r.tokens);
+            .map(|b| {
+                let mut flat: Vec<i32> = Vec::with_capacity(batch * seq);
+                for (item, _) in &b.items {
+                    flat.extend_from_slice(&item.tokens);
                 }
-                flat.resize(self.batch * self.seq, 0); // padding rows
-                flat
+                flat.resize(batch * seq, 0); // padding rows
+                (flat, b.items.len())
             })
             .collect();
-        // Execute independent batches concurrently.
-        let engine = self.engine;
+        let backend = &self.backend;
         let variant = self.variant.clone();
-        let results: Vec<anyhow::Result<(super::engine::Forward, Instant)>> =
-            pool::parallel_map(self.parallelism, &flats, |flat| {
-                let fwd = engine.forward(&variant, flat)?;
-                Ok((fwd, Instant::now()))
+        let results: Vec<anyhow::Result<BatchResult>> =
+            pool::parallel_map(self.parallelism, &jobs, |(flat, rows)| {
+                backend.execute_batch(&variant, flat, *rows)
             });
-        // Ordered reduce: record batches and completions in submission
-        // order whatever order the workers finished in.  On the first
-        // failed batch, every not-yet-recorded request — the failed
-        // batch *included* — goes back on the queue, so no request is
-        // ever silently lost and a retry of drain() can pick them up.
-        // (This is stricter than the old incremental loop, which
-        // dropped the in-flight group on error.)  Callers retrying
-        // drain() in a loop must treat a repeated error as persistent
-        // rather than spinning on the same failing batch.
-        let mut groups_iter = groups.into_iter();
+
+        let mut batches_iter = batches.into_iter();
         for result in results {
-            let group = groups_iter.next().expect("one group per result");
-            let (fwd, done) = match result {
+            let b = batches_iter.next().expect("one batch per result");
+            let res = match result {
                 Ok(ok) => ok,
                 Err(e) => {
-                    let mut requeue: Vec<(Request, Instant)> = group;
-                    for g in groups_iter.by_ref() {
-                        requeue.extend(g);
+                    let mut items = b.items;
+                    for rest in batches_iter.by_ref() {
+                        items.extend(rest.items);
                     }
-                    requeue.append(&mut self.queue);
-                    self.queue = requeue;
+                    self.batcher.requeue_front(items);
                     return Err(e);
                 }
             };
-            self.batch_exec_ms.push(fwd.wall_ms);
+            // Earliest-free lane (deterministic tie-break): completion
+            // accounting never depends on worker scheduling.
+            let lane = (0..self.lane_free.len())
+                .min_by(|&x, &y| {
+                    self.lane_free[x].partial_cmp(&self.lane_free[y])
+                        .unwrap()
+                })
+                .unwrap();
+            let start = self.lane_free[lane].max(b.ready_ms);
+            let done = start + res.exec_ms;
+            self.lane_free[lane] = done;
+            self.batch_exec_ms.push(res.exec_ms);
+            self.energy_j += res.energy_j;
             let batch_index = self.batch_exec_ms.len() - 1;
-            for (row, (r, submitted)) in group.into_iter().enumerate() {
-                // argmax over the last position's logits for this row
-                let base = (row * self.seq + (self.seq - 1)) * self.vocab;
-                let slice = &fwd.logits[base..base + self.vocab];
-                let next_token = slice
-                    .iter()
-                    .enumerate()
-                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-                    .map(|(i, _)| i as i32)
-                    .unwrap_or(0);
+            for (row, (item, arrival)) in b.items.into_iter().enumerate() {
                 self.completions.push(Completion {
-                    id: r.id,
-                    next_token,
-                    latency_ms: done
-                        .duration_since(submitted)
-                        .as_secs_f64() * 1e3,
+                    id: item.id,
+                    next_token: res.next_tokens.get(row).copied()
+                        .unwrap_or(0),
+                    latency_ms: done - arrival,
                     batch_index,
+                    slo: item.slo,
+                    violated: item.truncated || done > item.deadline_ms,
+                    truncated: item.truncated,
+                    done_ms: done,
                 });
             }
+            self.last_done_ms = self.last_done_ms.max(done);
+            self.clock.advance_to_ms(done);
         }
         Ok(())
     }
@@ -198,23 +426,34 @@ impl<'a> Server<'a> {
         &self.completions
     }
 
-    pub fn report(&self) -> ServeReport {
-        let lats: Vec<f64> =
-            self.completions.iter().map(|c| c.latency_ms).collect();
-        let wall_s = self
-            .started
-            .map(|t| t.elapsed().as_secs_f64())
-            .unwrap_or(0.0)
-            .max(1e-9);
-        ServeReport {
-            completed: self.completions.len(),
-            batches: self.batch_exec_ms.len(),
-            p50_latency_ms: stats::quantile(&lats, 0.5),
-            p95_latency_ms: stats::quantile(&lats, 0.95),
-            mean_batch_exec_ms: stats::mean(&self.batch_exec_ms),
-            throughput_rps: self.completions.len() as f64 / wall_s,
-            tokens_per_s: (self.completions.len() * self.seq) as f64 / wall_s,
+    /// Per-batch execution times, in batch-index order.
+    pub fn batch_exec_ms(&self) -> &[f64] {
+        &self.batch_exec_ms
+    }
+
+    /// (first arrival, last completion) on the server clock, if any
+    /// request completed.
+    pub fn span(&self) -> Option<(f64, f64)> {
+        if self.completions.is_empty() {
+            return None;
         }
+        self.first_arrival_ms.map(|f| (f, self.last_done_ms))
+    }
+
+    /// Total energy the backend accounted so far, J.
+    pub fn energy_j(&self) -> f64 {
+        self.energy_j
+    }
+
+    pub fn report(&self) -> ServeReport {
+        ServeReport::from_completions(
+            &self.completions,
+            self.batch_exec_ms.len(),
+            &self.batch_exec_ms,
+            self.energy_j,
+            self.span(),
+            self.completions.len() * self.shape.seq,
+        )
     }
 }
 
@@ -222,6 +461,149 @@ impl<'a> Server<'a> {
 mod tests {
     use super::super::manifest::artifacts_dir;
     use super::*;
+    use crate::config::Config;
+    use crate::hardware;
+    use crate::models::by_name;
+    use crate::tasks::blended_task;
+
+    // ---- simulated-backend tests: run everywhere, no artifacts ----
+
+    fn sim_server(noise: f64) -> Server<SimulatedBackend, VirtualClock> {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = blended_task();
+        let backend = SimulatedBackend::for_config(
+            "sim", &Config::default_baseline(), &m, &t, &hardware::a100(),
+            8, 512, 11)
+            .with_noise(noise);
+        Server::simulated(backend, "sim").unwrap()
+    }
+
+    #[test]
+    fn simulated_serving_is_deterministic_and_ordered() {
+        let run = |par: Parallelism| {
+            let mut s = sim_server(0.05).with_parallelism(par);
+            for i in 0..40u64 {
+                s.submit(Request::new(i, vec![(i as i32) * 5; 80])
+                    .at(i as f64 * 2.0));
+            }
+            s.drain().unwrap();
+            assert_eq!(s.pending(), 0);
+            (s.completions()
+                .iter()
+                .map(|c| (c.id, c.next_token, c.batch_index))
+                .collect::<Vec<_>>(),
+             s.report())
+        };
+        let (log_seq, rep_seq) = run(Parallelism::Sequential);
+        let (log_par, rep_par) = run(Parallelism::Threads(4));
+        assert_eq!(log_seq, log_par);
+        assert_eq!(rep_seq, rep_par);
+        // completion log follows submission order
+        let ids: Vec<u64> = log_seq.iter().map(|(id, _, _)| *id).collect();
+        assert_eq!(ids, (0..40).collect::<Vec<_>>());
+        assert_eq!(rep_seq.completed, 40);
+        assert_eq!(rep_seq.batches, 5);
+        assert!(rep_seq.p95_latency_ms >= rep_seq.p50_latency_ms);
+        assert!(rep_seq.energy_j > 0.0);
+    }
+
+    #[test]
+    fn empty_and_ragged_prompts_are_padded_not_degenerate() {
+        let (row, trunc) = pad_tokens(&[], 8, 256);
+        assert_eq!(row, vec![0; 8]);
+        assert!(!trunc);
+        let (row, trunc) = pad_tokens(&[5; 40], 8, 256);
+        assert_eq!(row.len(), 8);
+        assert!(trunc);
+        let (row, trunc) = pad_tokens(&[-7, 999, 3], 8, 256);
+        assert!(row.iter().all(|&t| (0..256).contains(&t)));
+        assert_eq!(row[0], (-7i32).rem_euclid(256));
+        assert!(!trunc);
+
+        let mut s = sim_server(0.0);
+        s.submit(Request::new(0, vec![]));
+        s.submit(Request::new(1, vec![5; 4000]));
+        s.submit(Request::new(2, vec![-7, 999, 3]));
+        s.drain().unwrap();
+        let r = s.report();
+        assert_eq!(r.completed, 3);
+        assert_eq!(r.truncated, 1);
+        // the truncated request is an SLO violation by definition
+        assert_eq!(r.slo_violations, 1);
+    }
+
+    #[test]
+    fn deadline_and_lane_accounting_set_latencies() {
+        // Two requests 1000ms apart with a 50ms batching deadline: two
+        // deadline-triggered single-row batches; latency = wait + exec.
+        let mut s = sim_server(0.0).with_max_delay_ms(50.0);
+        s.submit(Request::new(0, vec![1; 16]).at(0.0));
+        s.submit(Request::new(1, vec![2; 16]).at(1000.0));
+        s.drain().unwrap();
+        assert_eq!(s.report().batches, 2);
+        let c = s.completions();
+        // batch 0 dispatches at t=50 (deadline), not t=1000
+        assert!(c[0].latency_ms > 50.0 && c[0].latency_ms < 200.0,
+                "latency {}", c[0].latency_ms);
+        // second request rides its own batch after its own deadline
+        assert!(c[1].done_ms > 1000.0);
+    }
+
+    #[test]
+    fn slo_deadlines_flag_violations() {
+        // A policy with an impossible interactive deadline: everything
+        // violates; with a generous one nothing does.
+        let tight = SloPolicy { interactive_deadline_ms: 0.01,
+                                ..SloPolicy::default() };
+        let mut s = sim_server(0.0).with_policy(tight);
+        for i in 0..8u64 {
+            s.submit(Request::new(i, vec![1; 16]));
+        }
+        s.drain().unwrap();
+        assert_eq!(s.report().slo_violations, 8);
+
+        let mut s = sim_server(0.0);
+        for i in 0..8u64 {
+            s.submit(Request::new(i, vec![1; 16]));
+        }
+        s.drain().unwrap();
+        assert_eq!(s.report().slo_violations, 0);
+    }
+
+    #[test]
+    fn more_lanes_reduce_queueing_latency() {
+        let run = |lanes: usize| {
+            let mut s = sim_server(0.0).with_lanes(lanes);
+            for i in 0..64u64 {
+                s.submit(Request::new(i, vec![3; 32]).at(0.0));
+            }
+            s.drain().unwrap();
+            s.report().p95_latency_ms
+        };
+        assert!(run(4) < run(1));
+    }
+
+    #[test]
+    fn serve_report_json_roundtrips() {
+        let mut s = sim_server(0.0);
+        for i in 0..20u64 {
+            s.submit(Request::new(i, vec![(i as i32) % 7; 64])
+                .at(i as f64));
+        }
+        s.drain().unwrap();
+        let r = s.report();
+        let j = r.to_json();
+        assert_eq!(j.get("schema").and_then(Json::as_str),
+                   Some(SERVE_REPORT_SCHEMA));
+        let back = ServeReport::from_json(&j).unwrap();
+        assert_eq!(back, r);
+        // schema mismatch is rejected
+        let mut wrong = std::collections::BTreeMap::new();
+        wrong.insert("schema".to_string(), Json::Str("nope".into()));
+        assert!(ServeReport::from_json(&Json::Obj(wrong)).is_err());
+    }
+
+    // ---- PJRT tests: skip without artifacts ----
 
     fn engine_or_skip() -> Option<Engine> {
         let dir = artifacts_dir();
@@ -239,10 +621,7 @@ mod tests {
         let mut s = Server::new(&e, "serve_gqa_int8").unwrap();
         assert_eq!(s.batch_size(), 8);
         for i in 0..20 {
-            s.submit(Request {
-                id: i,
-                tokens: vec![(i as i32) % 256; 100],
-            });
+            s.submit(Request::new(i, vec![(i as i32) % 256; 100]));
         }
         s.drain().unwrap();
         let r = s.report();
@@ -259,17 +638,6 @@ mod tests {
     }
 
     #[test]
-    fn handles_ragged_prompts_and_bad_tokens() {
-        let Some(e) = engine_or_skip() else { return };
-        let mut s = Server::new(&e, "serve_gqa_int8").unwrap();
-        s.submit(Request { id: 0, tokens: vec![] }); // empty
-        s.submit(Request { id: 1, tokens: vec![5; 4000] }); // too long
-        s.submit(Request { id: 2, tokens: vec![-7, 999, 3] }); // out of range
-        s.drain().unwrap();
-        assert_eq!(s.report().completed, 3);
-    }
-
-    #[test]
     fn rejects_unloaded_variant() {
         let Some(e) = engine_or_skip() else { return };
         assert!(Server::new(&e, "mha_fp16").is_err()); // not loaded
@@ -281,7 +649,7 @@ mod tests {
         let run = || {
             let mut s = Server::new(&e, "serve_gqa_int8").unwrap();
             for i in 0..8 {
-                s.submit(Request { id: i, tokens: vec![i as i32 * 3; 64] });
+                s.submit(Request::new(i, vec![i as i32 * 3; 64]));
             }
             s.drain().unwrap();
             s.completions()
@@ -300,7 +668,7 @@ mod tests {
                 .unwrap()
                 .with_parallelism(par);
             for i in 0..40 {
-                s.submit(Request { id: i, tokens: vec![(i as i32) * 5; 80] });
+                s.submit(Request::new(i, vec![(i as i32) * 5; 80]));
             }
             s.drain().unwrap();
             s.completions()

@@ -1,0 +1,273 @@
+//! Seeded workload generators: the paper's "deployment scenarios" as
+//! traffic, not just preference weights (DESIGN.md §11).
+//!
+//! Four scenario shapes, each emitting timestamped, SLO-tagged
+//! [`Request`]s from a single seed:
+//!
+//! * **steady** — homogeneous Poisson arrivals, chat-heavy mix;
+//! * **diurnal** — sinusoidally modulated rate (the day/night wave);
+//! * **bursty** — Poisson base load with multiplicative arrival spikes;
+//! * **heavytail** — long-context-heavy mix with Pareto-distributed
+//!   prompt lengths (the document-analytics workload).
+//!
+//! Every scenario mixes all three [`SloClass`]es (in different
+//! proportions) because that is what makes routing interesting:
+//! technique rankings flip with workload shape (EfficientLLM), and a
+//! single static configuration cannot be right for all of the mix.
+//! Arrival times are non-decreasing, so generated traffic can be
+//! submitted in order to any server.
+
+use crate::util::Rng;
+
+use super::fleet::SloClass;
+use super::serve::Request;
+
+/// Workload scenario shapes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WorkloadKind {
+    Steady,
+    Diurnal,
+    Bursty,
+    HeavyTail,
+}
+
+impl WorkloadKind {
+    pub const ALL: [WorkloadKind; 4] = [
+        WorkloadKind::Steady,
+        WorkloadKind::Diurnal,
+        WorkloadKind::Bursty,
+        WorkloadKind::HeavyTail,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            WorkloadKind::Steady => "steady",
+            WorkloadKind::Diurnal => "diurnal",
+            WorkloadKind::Bursty => "bursty",
+            WorkloadKind::HeavyTail => "heavytail",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<WorkloadKind> {
+        Some(match name {
+            "steady" => WorkloadKind::Steady,
+            "diurnal" => WorkloadKind::Diurnal,
+            "bursty" => WorkloadKind::Bursty,
+            "heavytail" | "heavy-tail" => WorkloadKind::HeavyTail,
+            _ => return None,
+        })
+    }
+
+    /// SLO-class mix (interactive, batch, long-context); sums to 1.
+    fn mix(self) -> [f64; 3] {
+        match self {
+            WorkloadKind::Steady => [0.70, 0.25, 0.05],
+            WorkloadKind::Diurnal => [0.60, 0.30, 0.10],
+            WorkloadKind::Bursty => [0.75, 0.18, 0.07],
+            WorkloadKind::HeavyTail => [0.45, 0.25, 0.30],
+        }
+    }
+}
+
+/// A sized, seeded traffic description.
+#[derive(Clone, Copy, Debug)]
+pub struct Workload {
+    pub kind: WorkloadKind,
+    /// Mean arrival rate, requests/second.
+    pub rate_rps: f64,
+    /// Number of requests to emit.
+    pub requests: usize,
+    pub seed: u64,
+}
+
+/// A serving rate that moderately loads a deployment of the given
+/// scale: ~1.2k requests per "default latency" second of compute.
+pub fn default_rate_rps(default_latency_ms: f64) -> f64 {
+    1200.0 / default_latency_ms.max(1e-9)
+}
+
+/// Burst parameters: a burst multiplies the arrival rate by
+/// `BURST_FACTOR` for `BURST_LEN` consecutive requests.
+const BURST_START_P: f64 = 0.04;
+const BURST_FACTOR: f64 = 10.0;
+const BURST_LEN: usize = 24;
+
+impl Workload {
+    pub fn new(kind: WorkloadKind, rate_rps: f64, requests: usize,
+               seed: u64) -> Workload {
+        Workload { kind, rate_rps, requests, seed }
+    }
+
+    /// Generate the request stream.  Pure function of the fields: the
+    /// same workload always produces byte-identical traffic.
+    pub fn generate(&self) -> Vec<Request> {
+        let mut rng = Rng::new(self.seed ^ 0x5e41_11e5_4ea7_71c0);
+        let mix = self.kind.mix();
+        let rate_per_ms = self.rate_rps.max(1e-9) / 1e3;
+        // Diurnal wave period: ~3 waves across the expected horizon.
+        let horizon_ms = self.requests as f64 / rate_per_ms;
+        let period_ms = (horizon_ms / 3.0).max(2000.0);
+
+        let mut out = Vec::with_capacity(self.requests);
+        let mut t_ms = 0.0f64;
+        let mut burst_left = 0usize;
+        for id in 0..self.requests as u64 {
+            let mut rate = rate_per_ms;
+            match self.kind {
+                WorkloadKind::Diurnal => {
+                    let phase = std::f64::consts::TAU * t_ms / period_ms;
+                    rate *= 0.3 + 0.7 * 0.5 * (1.0 + phase.sin());
+                }
+                WorkloadKind::Bursty => {
+                    if burst_left == 0 && rng.chance(BURST_START_P) {
+                        burst_left = BURST_LEN;
+                    }
+                    if burst_left > 0 {
+                        burst_left -= 1;
+                        rate *= BURST_FACTOR;
+                    }
+                }
+                WorkloadKind::Steady | WorkloadKind::HeavyTail => {}
+            }
+            // Exponential inter-arrival gap at the momentary rate.
+            let u = rng.f64().max(1e-12);
+            t_ms += -u.ln() / rate;
+
+            let class = {
+                let x = rng.f64();
+                if x < mix[0] {
+                    SloClass::Interactive
+                } else if x < mix[0] + mix[1] {
+                    SloClass::Batch
+                } else {
+                    SloClass::LongContext
+                }
+            };
+            let len = self.prompt_len(class, &mut rng);
+            let tokens: Vec<i32> =
+                (0..len).map(|_| rng.below(256) as i32).collect();
+            out.push(Request::new(id, tokens).at(t_ms).class(class));
+        }
+        out
+    }
+
+    /// Prompt length per class; the heavy-tail scenario draws
+    /// long-context lengths from a (truncated) Pareto instead of a
+    /// uniform band.
+    fn prompt_len(&self, class: SloClass, rng: &mut Rng) -> usize {
+        match class {
+            SloClass::Interactive => 8 + rng.below(152),
+            SloClass::Batch => 160 + rng.below(320),
+            SloClass::LongContext => {
+                if self.kind == WorkloadKind::HeavyTail {
+                    let u = rng.f64().max(1e-9);
+                    let l = 700.0 * u.powf(-0.35);
+                    (l as usize).min(1900)
+                } else {
+                    700 + rng.below(1200)
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen(kind: WorkloadKind) -> Vec<Request> {
+        Workload::new(kind, 50.0, 1000, 7).generate()
+    }
+
+    #[test]
+    fn generation_is_deterministic_per_seed() {
+        for kind in WorkloadKind::ALL {
+            let a = gen(kind);
+            let b = gen(kind);
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id);
+                assert_eq!(x.arrival_ms, y.arrival_ms);
+                assert_eq!(x.tokens, y.tokens);
+                assert_eq!(x.slo, y.slo);
+            }
+            let c = Workload::new(kind, 50.0, 1000, 8).generate();
+            assert!(a.iter().zip(&c).any(|(x, y)|
+                x.arrival_ms != y.arrival_ms));
+        }
+    }
+
+    #[test]
+    fn arrivals_are_monotone_and_rate_is_respected() {
+        for kind in WorkloadKind::ALL {
+            let reqs = gen(kind);
+            for w in reqs.windows(2) {
+                assert!(w[1].arrival_ms >= w[0].arrival_ms, "{kind:?}");
+            }
+            // 1000 requests at 50 rps ≈ 20s horizon, loosely
+            let horizon_s = reqs.last().unwrap().arrival_ms / 1e3;
+            assert!((8.0..60.0).contains(&horizon_s),
+                    "{kind:?} horizon {horizon_s}");
+        }
+    }
+
+    #[test]
+    fn every_scenario_mixes_all_classes() {
+        for kind in WorkloadKind::ALL {
+            let reqs = gen(kind);
+            for class in SloClass::ALL {
+                let share = reqs.iter().filter(|r| r.slo == class).count()
+                    as f64 / reqs.len() as f64;
+                assert!(share > 0.02, "{kind:?} lacks {}", class.name());
+            }
+        }
+    }
+
+    #[test]
+    fn long_context_prompts_exceed_the_static_shape() {
+        for kind in WorkloadKind::ALL {
+            let reqs = gen(kind);
+            assert!(reqs.iter()
+                        .filter(|r| r.slo == SloClass::LongContext)
+                        .all(|r| r.tokens.len() > 512 &&
+                                 r.tokens.len() <= 2048),
+                    "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn heavy_tail_skews_long_and_bursty_clusters() {
+        let heavy = gen(WorkloadKind::HeavyTail);
+        let steady = gen(WorkloadKind::Steady);
+        let long_share = |rs: &[Request]| {
+            rs.iter().filter(|r| r.slo == SloClass::LongContext).count()
+                as f64 / rs.len() as f64
+        };
+        assert!(long_share(&heavy) > 2.0 * long_share(&steady));
+
+        // bursty: the minimum inter-arrival gap cluster is much denser
+        // than steady's mean gap
+        let gaps = |rs: &[Request]| -> Vec<f64> {
+            rs.windows(2).map(|w| w[1].arrival_ms - w[0].arrival_ms)
+                .collect()
+        };
+        let bursty = gen(WorkloadKind::Bursty);
+        let mean_steady =
+            crate::util::stats::mean(&gaps(&steady));
+        let p10_bursty =
+            crate::util::stats::quantile(&gaps(&bursty), 0.10);
+        assert!(p10_bursty < mean_steady * 0.5,
+                "bursts not visible: p10 {p10_bursty} vs steady mean \
+                 {mean_steady}");
+    }
+
+    #[test]
+    fn names_roundtrip() {
+        for kind in WorkloadKind::ALL {
+            assert_eq!(WorkloadKind::by_name(kind.name()), Some(kind));
+        }
+        assert_eq!(WorkloadKind::by_name("heavy-tail"),
+                   Some(WorkloadKind::HeavyTail));
+        assert!(WorkloadKind::by_name("nope").is_none());
+    }
+}

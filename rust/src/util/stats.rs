@@ -189,6 +189,26 @@ mod tests {
     }
 
     #[test]
+    fn quantile_interpolation_at_small_n() {
+        // n = 1: every quantile is the single sample
+        for p in [0.0, 0.5, 0.95, 1.0] {
+            assert_eq!(quantile(&[7.5], p), 7.5);
+        }
+        // n = 2: linear interpolation between the two samples
+        assert_eq!(quantile(&[1.0, 3.0], 0.5), 2.0);
+        assert!((quantile(&[1.0, 3.0], 0.95) - 2.9).abs() < 1e-12);
+        assert_eq!(quantile(&[3.0, 1.0], 0.0), 1.0); // sorts first
+        // n = 3: idx = p * 2; p95 lands between the 2nd and 3rd sample
+        assert_eq!(quantile(&[1.0, 2.0, 4.0], 0.5), 2.0);
+        assert!((quantile(&[4.0, 1.0, 2.0], 0.95) - 3.8).abs() < 1e-12);
+        // out-of-range p clamps
+        assert_eq!(quantile(&[1.0, 2.0], 1.5), 2.0);
+        assert_eq!(quantile(&[1.0, 2.0], -0.5), 1.0);
+        // empty input stays defined
+        assert_eq!(quantile(&[], 0.95), 0.0);
+    }
+
+    #[test]
     fn r2_perfect_and_mean_predictor() {
         let t = [1.0, 2.0, 3.0];
         assert_eq!(r_squared(&t, &t), 1.0);

@@ -151,7 +151,7 @@ fn serving_latency_scales_with_batches() {
     let run = |n: usize| -> ae_llm::runtime::ServeReport {
         let mut s = runtime::Server::new(&e, "serve_gqa_int8").unwrap();
         for id in 0..n as u64 {
-            s.submit(runtime::Request { id, tokens: vec![1; 64] });
+            s.submit(runtime::Request::new(id, vec![1; 64]));
         }
         s.drain().unwrap();
         s.report()
