@@ -1,0 +1,63 @@
+//! Microbenchmarks of the continual-adaptation loop — artifact-free,
+//! so CI tracks the closed search→serve→re-search pipeline on every
+//! PR.
+//!
+//! Emits `BENCH_adapt.json` (to `$AE_LLM_BENCH_OUT` or the current
+//! directory); `AE_LLM_BENCH_QUICK=1` / `--quick` shrinks epochs.
+
+use std::collections::BTreeMap;
+
+use ae_llm::coordinator::{AdaptParams, AeLlm};
+use ae_llm::runtime::WorkloadKind;
+use ae_llm::util::bench::{self, time_it};
+use ae_llm::util::json::Json;
+
+fn main() {
+    let quick = bench::quick();
+    println!("== perf_adapt: continual adaptation loop{} ==",
+             if quick { " (quick)" } else { "" });
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+
+    let session = AeLlm::for_model("Phi-2").unwrap().quick().seed(7);
+    // Search once; the adaptation loop (not the initial search) is the
+    // thing being benched.
+    let outcome = session.run_testbed_outcome();
+    let params = AdaptParams {
+        epochs: if quick { 4 } else { 6 },
+        requests_per_epoch: if quick { 200 } else { 500 },
+        ..AdaptParams::default()
+    };
+
+    for kind in WorkloadKind::DRIFTING {
+        for adaptive in [true, false] {
+            let p = if adaptive { params } else { params.one_shot() };
+            let label = format!(
+                "adapt {} ({})", kind.name(),
+                if adaptive { "continual" } else { "one-shot" });
+            let mut last = None;
+            let tm = time_it(&label, 1, 5, || {
+                last = Some(session.adapt_from(&outcome, kind, &p)
+                    .unwrap());
+            });
+            let rep = last.expect("at least one iteration ran");
+            println!(
+                "    {} searches, {} redeploys | viol {:.1}%",
+                rep.searches, rep.redeployments,
+                rep.overall.slo_violation_rate * 100.0);
+            report.insert(format!("{label} wall ms"), Json::Num(tm.mean_ms));
+            report.insert(format!("{label} violation rate"),
+                          Json::Num(rep.overall.slo_violation_rate));
+            report.insert(format!("{label} redeployments"),
+                          Json::Num(rep.redeployments as f64));
+        }
+    }
+
+    report.insert("bench".into(), Json::Str("perf_adapt".into()));
+    report.insert("quick".into(), Json::Bool(quick));
+    let out = std::env::var("AE_LLM_BENCH_OUT").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&out).join("BENCH_adapt.json");
+    match std::fs::write(&path, Json::Obj(report).dump()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

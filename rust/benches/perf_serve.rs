@@ -27,7 +27,10 @@ fn main() {
     let rate = default_rate_rps(outcome.reference.default.latency_ms);
     let n = if quick { 1000 } else { 5000 };
 
-    for kind in WorkloadKind::ALL {
+    // Stationary scenarios only: keeps BENCH_serve.json's key set (and
+    // wall time) comparable across PRs; the drifting scenarios are
+    // perf_adapt's subject.
+    for kind in WorkloadKind::STATIONARY {
         let requests = Workload::new(kind, rate, n, 11).generate();
         let mut last_rps = 0.0;
         let tm = time_it(&format!("serve {n} `{}` requests", kind.name()),

@@ -285,6 +285,71 @@ impl Config {
         }
     }
 
+    /// Parse a configuration back from its [`signature`](Self::signature)
+    /// — the inverse used by the persistent-front serialization
+    /// (`ae-llm.front/v1`), so archived fronts survive process restarts
+    /// without a second encoding of the configuration space.
+    pub fn from_signature(s: &str) -> Result<Config, String> {
+        let parts: Vec<&str> = s.split('/').collect();
+        if parts.len() != 5 {
+            return Err(format!("signature {s:?}: expected 5 '/'-separated \
+                                stages, got {}", parts.len()));
+        }
+        let attention = Attention::ALL
+            .into_iter()
+            .find(|a| a.name() == parts[0])
+            .ok_or_else(|| format!("unknown attention {:?}", parts[0]))?;
+        let moe = MoE::ALL
+            .into_iter()
+            .find(|m| m.name() == parts[1])
+            .ok_or_else(|| format!("unknown MoE setting {:?}", parts[1]))?;
+        let ft = if parts[2] == "Full" {
+            FtConfig::full()
+        } else {
+            // `{method}-r{rank}a{alpha_mult}`
+            let (method_name, tail) = parts[2]
+                .split_once("-r")
+                .ok_or_else(|| format!("bad ft stage {:?}", parts[2]))?;
+            let method = FtMethod::ALL
+                .into_iter()
+                .find(|m| m.name() == method_name)
+                .ok_or_else(|| format!("unknown ft method {method_name:?}"))?;
+            let (rank, alpha_mult) = tail
+                .split_once('a')
+                .ok_or_else(|| format!("bad ft stage {:?}", parts[2]))?;
+            FtConfig {
+                method,
+                rank: rank.parse()
+                    .map_err(|_| format!("bad rank {rank:?}"))?,
+                alpha_mult: alpha_mult.parse()
+                    .map_err(|_| format!("bad alpha mult {alpha_mult:?}"))?,
+            }
+        };
+        let (prec_name, quant_name) = parts[3]
+            .split_once('-')
+            .ok_or_else(|| format!("bad inference stage {:?}", parts[3]))?;
+        let precision = Precision::ALL
+            .into_iter()
+            .find(|p| p.name() == prec_name)
+            .ok_or_else(|| format!("unknown precision {prec_name:?}"))?;
+        let quant_method = QuantMethod::ALL
+            .into_iter()
+            .find(|q| q.name() == quant_name)
+            .ok_or_else(|| format!("unknown quant method {quant_name:?}"))?;
+        let kv_name = parts[4]
+            .strip_prefix("KV-")
+            .ok_or_else(|| format!("bad KV stage {:?}", parts[4]))?;
+        let kv_cache = KvCache::ALL
+            .into_iter()
+            .find(|k| k.name() == kv_name)
+            .ok_or_else(|| format!("unknown KV cache {kv_name:?}"))?;
+        Ok(Config {
+            arch: ArchConfig { attention, moe },
+            ft,
+            inf: InfConfig { precision, quant_method, kv_cache },
+        })
+    }
+
     /// Short human-readable signature, e.g.
     /// `GQA/MoE4t2/LoRA-r32a2/INT8-AWQ/KV-GQA`.
     pub fn signature(&self) -> String {
@@ -381,6 +446,31 @@ mod tests {
     fn alpha_computation() {
         let ft = FtConfig { method: FtMethod::RsLoRA, rank: 64, alpha_mult: 4 };
         assert_eq!(ft.alpha(), 256.0);
+    }
+
+    #[test]
+    fn signature_roundtrips_through_from_signature() {
+        // Every valid configuration survives the textual round trip —
+        // the invariant the persistent-front schema relies on.
+        let mut rng = crate::util::Rng::new(17);
+        for _ in 0..300 {
+            let c = crate::config::enumerate::sample(&mut rng);
+            let back = Config::from_signature(&c.signature()).unwrap();
+            assert_eq!(back, c, "signature {}", c.signature());
+        }
+        let d = Config::default_baseline();
+        assert_eq!(Config::from_signature(&d.signature()).unwrap(), d);
+    }
+
+    #[test]
+    fn from_signature_rejects_malformed_text() {
+        for bad in ["", "MHA", "MHA/Dense/Full/FP16-GPTQ",
+                    "XXX/Dense/Full/FP16-GPTQ/KV-Full",
+                    "MHA/Dense/LoRA-r32/FP16-GPTQ/KV-Full",
+                    "MHA/Dense/Full/FP16/KV-Full",
+                    "MHA/Dense/Full/FP16-GPTQ/Full"] {
+            assert!(Config::from_signature(bad).is_err(), "{bad:?}");
+        }
     }
 
     #[test]

@@ -36,7 +36,7 @@ use crate::config::{encode, Config};
 use crate::evaluator::{EvalContext, Evaluator, FnEvaluator};
 use crate::metrics::{efficiency_score, utility, Reference};
 use crate::oracle::Objectives;
-use crate::search::archive::ParetoArchive;
+use crate::search::archive::{Entry, ParetoArchive};
 use crate::search::dominance::MinVec;
 use crate::search::hypervolume;
 use crate::search::nsga2::{Nsga2Params, Toggles};
@@ -234,6 +234,27 @@ pub fn optimize_with_observer(
                            observer, rng)
 }
 
+/// [`optimize_with_observer`] warm-started from a prior Pareto front
+/// (DESIGN.md §12): the continual-adaptation re-search entry point.
+/// `warm` entries are re-measured on `evaluator` under *this*
+/// scenario — their archived objectives belong to the regime that
+/// produced them — and seed the measured archive, the seen-set and
+/// (when surrogates run) the training sample, whose random part
+/// shrinks by `warm.len()` so the re-search costs no more than a cold
+/// run.  An empty `warm` is byte-for-byte a cold run.
+pub fn optimize_with_observer_warm(
+    scenario: &Scenario,
+    params: &AeLlmParams,
+    warm: &[Entry],
+    evaluator: &mut dyn Evaluator,
+    observer: &mut dyn RunObserver,
+    rng: &mut Rng,
+) -> Outcome {
+    let mut strategy = params.strategy.build();
+    optimize_with_strategy_warm(scenario, params, strategy.as_mut(), warm,
+                                evaluator, observer, rng)
+}
+
 /// Run Algorithm 1 with an explicit [`SearchStrategy`] instance (the
 /// generalized form of [`optimize_with_observer`], for strategies not
 /// reachable through [`StrategyKind`], e.g. baseline selectors or
@@ -249,6 +270,34 @@ pub fn optimize_with_strategy(
     scenario: &Scenario,
     params: &AeLlmParams,
     strategy: &mut dyn SearchStrategy,
+    evaluator: &mut dyn Evaluator,
+    observer: &mut dyn RunObserver,
+    rng: &mut Rng,
+) -> Outcome {
+    optimize_with_strategy_warm(scenario, params, strategy, &[], evaluator,
+                                observer, rng)
+}
+
+/// [`optimize_with_strategy`] with a warm-start front (DESIGN.md §12).
+/// With `warm` empty this *is* the cold run — same RNG stream, same
+/// evaluator calls — which is what keeps every pre-existing
+/// bit-identity contract intact.  With entries present:
+///
+/// 1. `strategy.warm_start(warm)` fires (before any RNG use);
+/// 2. the prior configurations are re-measured in one batch under this
+///    scenario's context and seeded into the measured archive (the
+///    front is *persistent*, but its objective values are not portable
+///    across regimes — re-measurement re-anchors them);
+/// 3. when the strategy warm-starts surrogates, the random initial
+///    sample shrinks by the warm count, so the warm re-search fits the
+///    cold budget ceiling; strategies without a surrogate warm-start
+///    (racing, random) pay `warm.len()` extra measurements — the price
+///    of re-anchoring the front — on top of their exact cold budgets.
+pub fn optimize_with_strategy_warm(
+    scenario: &Scenario,
+    params: &AeLlmParams,
+    strategy: &mut dyn SearchStrategy,
+    warm: &[Entry],
     evaluator: &mut dyn Evaluator,
     observer: &mut dyn RunObserver,
     rng: &mut Rng,
@@ -273,11 +322,44 @@ pub fn optimize_with_strategy(
     let ctx = EvalContext::new(m, t, par);
     let gbt_params = GbtParams { parallelism: par, ..params.gbt };
 
+    // Measured results accumulate here; P* is built from measurements,
+    // never from raw surrogate (or cheap-fidelity) guesses.
+    let mut measured = ParetoArchive::new(params.nsga.archive_capacity);
+    let mut measured_configs: BTreeSet<Config> = Default::default();
+
+    // ---- warm start from a prior front ----------------------------------
+    let mut warm_samples: Vec<Sample> = Vec::new();
+    if !warm.is_empty() {
+        strategy.warm_start(warm);
+        let mut warm_cfgs: Vec<Config> = Vec::with_capacity(warm.len());
+        for e in warm {
+            let c = mask.clamp(e.config);
+            if !warm_cfgs.contains(&c) {
+                warm_cfgs.push(c);
+            }
+        }
+        testbed_evals += warm_cfgs.len();
+        let objectives = evaluator.measure_batch(&warm_cfgs, &ctx, rng);
+        assert_eq!(objectives.len(), warm_cfgs.len(),
+                   "evaluator must return one Objectives per config");
+        for (c, o) in warm_cfgs.iter().zip(objectives) {
+            measured_configs.insert(*c);
+            if tb.platform.feasible(o.memory_gb, tb.power_w(c, m, t)) {
+                measured.insert(*c, o);
+            }
+            warm_samples.push(Sample {
+                features: encode::encode(c, m, t),
+                objectives: o,
+            });
+        }
+    }
+
     // ---- line 1: initial sample + surrogate training --------------------
     let warm_start = params.use_surrogates && strategy.uses_surrogates();
     let mut surrogates: Option<SurrogateSet> = if warm_start {
+        let fresh_n = params.initial_sample.saturating_sub(warm.len());
         let configs: Vec<Config> =
-            crate::config::enumerate::sample_distinct(rng, params.initial_sample)
+            crate::config::enumerate::sample_distinct(rng, fresh_n)
                 .into_iter()
                 .map(|c| mask.clamp(c))
                 .collect();
@@ -285,7 +367,7 @@ pub fn optimize_with_strategy(
         let objectives = evaluator.measure_batch(&configs, &ctx, rng);
         assert_eq!(objectives.len(), configs.len(),
                    "evaluator must return one Objectives per config");
-        let samples: Vec<Sample> = configs
+        let mut samples: Vec<Sample> = configs
             .iter()
             .zip(objectives)
             .map(|(c, o)| Sample {
@@ -293,15 +375,11 @@ pub fn optimize_with_strategy(
                 objectives: o,
             })
             .collect();
+        samples.append(&mut warm_samples);
         Some(SurrogateSet::fit(samples, gbt_params, rng))
     } else {
         None
     };
-
-    // Measured results accumulate here; P* is built from measurements,
-    // never from raw surrogate (or cheap-fidelity) guesses.
-    let mut measured = ParetoArchive::new(params.nsga.archive_capacity);
-    let mut measured_configs: BTreeSet<Config> = Default::default();
 
     let iters = strategy.rounds(params).max(1);
 

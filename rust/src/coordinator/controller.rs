@@ -1,0 +1,373 @@
+//! The continual-adaptation controller (DESIGN.md §12): the loop that
+//! closes search → deploy → serve back onto search.
+//!
+//! One-shot `run_and_deploy` treats the Pareto front as a terminal
+//! artifact; this module makes it a *living* one.  Serving runs in
+//! epochs on the virtual clock ([`crate::runtime::EpochFleet`]); each
+//! epoch emits an [`EpochTelemetry`]; an EWMA drift detector
+//! ([`crate::runtime::DriftDetector`]) watches the workload shape; and
+//! when the shape departs from baseline, the controller
+//!
+//! 1. re-scopes the scenario's task descriptor to the *observed*
+//!    workload (prompt lengths, class mix) so the oracle prices
+//!    configurations for the traffic that actually arrived,
+//! 2. re-searches warm-started from the persistent front
+//!    ([`optimize_with_observer_warm`]), and
+//! 3. hot-swaps the deployment
+//!    ([`crate::runtime::Deployment::refresh_from_front`] + a lane
+//!    re-plan) without dropping queued requests.
+//!
+//! Everything is a deterministic function of (scenario, workload kind,
+//! seed, params): the [`AdaptReport`] serializes byte-identically for
+//! the same seed at every parallelism level (no wall-clock fields —
+//! that is deliberate).
+
+use crate::runtime::drift::{DriftDetector, EpochTelemetry, DRIFT_ALPHA,
+                            DRIFT_THRESHOLD};
+use crate::runtime::fleet::{infeasible_class_at, lane_plan, EpochFleet,
+                            RedeployPlan};
+use crate::runtime::workload::default_rate_rps;
+use crate::runtime::{ServeReport, Workload, WorkloadKind};
+use crate::search::archive::ParetoArchive;
+use crate::tasks::{Category, TaskSpec};
+use crate::util::json::Json;
+use crate::util::Rng;
+
+use super::algorithm1::{optimize_with_observer_warm, Outcome};
+use super::observer::NullObserver;
+use super::scenario::Scenario;
+use super::session::{AeLlm, AeLlmError};
+
+/// Controller knobs.  Defaults give six epochs of 400 requests — long
+/// enough for the drifting scenarios to move regimes mid-run with
+/// whole epochs on each side of the transition.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptParams {
+    /// Serving epochs (drift decisions happen at epoch boundaries).
+    pub epochs: usize,
+    /// Requests generated per epoch.
+    pub requests_per_epoch: usize,
+    /// EWMA smoothing of the drift baseline.
+    pub ewma_alpha: f64,
+    /// Drift threshold (see [`DriftDetector`] scoring).
+    pub drift_threshold: f64,
+    /// Total serving lanes split across the fleet's slots.
+    pub lane_budget: usize,
+    /// `false` = the one-shot baseline: same initial search, same
+    /// epoch-0 deployment and lane plan, but drift never triggers
+    /// re-search or re-deployment.  The comparison `table --id 9`
+    /// reports.
+    pub adaptive: bool,
+}
+
+impl Default for AdaptParams {
+    fn default() -> AdaptParams {
+        AdaptParams {
+            epochs: 6,
+            requests_per_epoch: 400,
+            ewma_alpha: DRIFT_ALPHA,
+            drift_threshold: DRIFT_THRESHOLD,
+            lane_budget: 6,
+            adaptive: true,
+        }
+    }
+}
+
+impl AdaptParams {
+    /// One-shot baseline variant of these parameters.
+    pub fn one_shot(self) -> AdaptParams {
+        AdaptParams { adaptive: false, ..self }
+    }
+}
+
+/// One epoch's row in the [`AdaptReport`].
+#[derive(Clone, Debug)]
+pub struct EpochRecord {
+    pub epoch: usize,
+    pub telemetry: EpochTelemetry,
+    /// Serve statistics over exactly this epoch's completions.
+    pub report: ServeReport,
+    pub drift_score: f64,
+    pub drifted: bool,
+    /// A re-search ran and the fleet was hot-swapped after this epoch.
+    pub redeployed: bool,
+    /// Size of the (persistent) front after this epoch's decision.
+    pub front_size: usize,
+    /// Per-slot lane provisioning in force after this epoch's decision.
+    pub lanes: Vec<usize>,
+}
+
+pub const ADAPT_REPORT_SCHEMA: &str = "ae-llm.adapt-report/v1";
+
+/// Everything one adaptation run produced (schema
+/// `ae-llm.adapt-report/v1`; `ae-llm adapt --json`).  Deliberately
+/// wall-clock-free: same seed → byte-identical JSON.
+#[derive(Clone, Debug)]
+pub struct AdaptReport {
+    pub model: String,
+    /// Workload scenario name.
+    pub scenario: String,
+    /// `continual` or `one-shot`.
+    pub mode: String,
+    pub seed: u64,
+    pub epochs: Vec<EpochRecord>,
+    /// Total searches (the initial one plus every drift-triggered
+    /// re-search).
+    pub searches: usize,
+    pub redeployments: usize,
+    /// Whole-run serve statistics across every epoch.
+    pub overall: ServeReport,
+    /// The persistent front as of the end of the run
+    /// (schema `ae-llm.front/v1` when serialized).
+    pub final_front: ParetoArchive,
+}
+
+impl AdaptReport {
+    pub fn to_json(&self) -> Json {
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("schema".into(), Json::Str(ADAPT_REPORT_SCHEMA.into()));
+        root.insert("model".into(), Json::Str(self.model.clone()));
+        root.insert("scenario".into(), Json::Str(self.scenario.clone()));
+        root.insert("mode".into(), Json::Str(self.mode.clone()));
+        // String, not Num: Json numbers are f64 and would corrupt
+        // seeds above 2^53 (same convention as RunReport).
+        root.insert("seed".into(), Json::Str(self.seed.to_string()));
+        let epochs: Vec<Json> = self
+            .epochs
+            .iter()
+            .map(|e| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("epoch".into(), Json::Num(e.epoch as f64));
+                m.insert("telemetry".into(), e.telemetry.to_json());
+                m.insert("report".into(), e.report.to_json());
+                m.insert("drift_score".into(), Json::Num(e.drift_score));
+                m.insert("drifted".into(), Json::Bool(e.drifted));
+                m.insert("redeployed".into(), Json::Bool(e.redeployed));
+                m.insert("front_size".into(),
+                         Json::Num(e.front_size as f64));
+                m.insert(
+                    "lanes".into(),
+                    Json::Arr(e.lanes.iter()
+                        .map(|&l| Json::Num(l as f64)).collect()),
+                );
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("epochs".into(), Json::Arr(epochs));
+        root.insert("searches".into(), Json::Num(self.searches as f64));
+        root.insert("redeployments".into(),
+                    Json::Num(self.redeployments as f64));
+        root.insert("overall".into(), self.overall.to_json());
+        root.insert("front".into(), self.final_front.to_json());
+        Json::Obj(root)
+    }
+}
+
+/// Re-scope a task descriptor to the observed workload shape: the
+/// oracle's `EvalContext` carries (model, task), and the task's
+/// sequence length / category are what make its cost landscape — so a
+/// re-search under the re-scoped task selects configurations for the
+/// traffic that actually arrived, not for the static scenario the run
+/// was launched with.
+pub fn rescope_task(base: &TaskSpec, telemetry: &EpochTelemetry)
+                    -> TaskSpec {
+    // prompt + completion allowance; the clamp keeps the descriptor in
+    // the band the cost model is calibrated for
+    let seq_len = (2.0 * telemetry.mean_seq).clamp(256.0, 16384.0) as u32;
+    let category = if telemetry.class_share[2] > 0.30 {
+        Category::LongContext
+    } else {
+        base.category
+    };
+    TaskSpec {
+        name: "Observed",
+        category,
+        seq_len,
+        ..base.clone()
+    }
+}
+
+/// Run the adaptation loop.  `seed` drives everything: the initial
+/// search (through `session`), the workload, the epoch fleet and every
+/// re-search (each gets a distinct derived stream).
+pub fn run_adapt(session: &AeLlm, seed: u64, kind: WorkloadKind,
+                 params: &AdaptParams) -> Result<AdaptReport, AeLlmError> {
+    let outcome = session.run_testbed_outcome();
+    run_adapt_from(session, seed, kind, params, &outcome)
+}
+
+/// [`run_adapt`] starting from a precomputed epoch-0 search outcome.
+/// The outcome depends only on (session, seed) — not on workload kind
+/// or adaptivity — so comparisons like `table --id 9` (2 scenarios ×
+/// 2 modes) search once and reuse it, which is also what makes the
+/// one-shot baseline *provably* share the continual run's epoch-0
+/// front.
+pub fn run_adapt_from(session: &AeLlm, seed: u64, kind: WorkloadKind,
+                      params: &AdaptParams, outcome: &Outcome)
+                      -> Result<AdaptReport, AeLlmError> {
+    let scenario = session.scenario();
+    let par = session.params_ref().parallelism;
+
+    // ---- epoch 0 state: deploy the precomputed search ------------------
+    let policy = session.slo_policy();
+    let deployment = session.deploy_with(outcome, &policy)?;
+    // Provision lanes for the scenario's *starting* regime — the best
+    // static choice, so the one-shot baseline is not a strawman.
+    let plan = lane_plan(&kind.mix_at(0.0), deployment.slots(),
+                         params.lane_budget);
+    let deployment = deployment.with_lane_plan(&plan);
+
+    let rate = default_rate_rps(outcome.reference.default.latency_ms);
+    let n_epochs = params.epochs.max(1);
+    let per_epoch = params.requests_per_epoch.max(1);
+    let requests =
+        Workload::new(kind, rate, n_epochs * per_epoch, seed).generate();
+
+    let mut fleet = EpochFleet::new(deployment, seed, par);
+    let mut detector =
+        DriftDetector::new(params.ewma_alpha, params.drift_threshold);
+    let mut front = outcome.pareto.clone();
+    let mut searches = 1usize;
+    let mut records: Vec<EpochRecord> = Vec::with_capacity(n_epochs);
+    // A drift whose swap was refused (infeasible front) retries next
+    // epoch even if the detector's EWMA has since absorbed the shift.
+    let mut retry_swap = false;
+
+    // ---- the loop: serve, sense, re-search, swap -----------------------
+    for epoch in 0..n_epochs {
+        let slice = &requests[epoch * per_epoch..(epoch + 1) * per_epoch];
+        let out = fleet.serve_epoch(epoch, slice);
+        let decision = detector.observe(&out.telemetry);
+
+        let mut redeployed = false;
+        // Re-searching after the final epoch would adapt to traffic
+        // that will never arrive.
+        if params.adaptive
+            && (decision.drifted || retry_swap)
+            && epoch + 1 < n_epochs
+        {
+            let observed = Scenario {
+                model: scenario.model.clone(),
+                task: rescope_task(&scenario.task, &out.telemetry),
+                testbed: scenario.testbed.clone(),
+                prefs: scenario.prefs,
+            };
+            let warm: Vec<_> = front.entries().to_vec();
+            let mut evaluator = observed.testbed.clone();
+            let mut rng = Rng::new(seed ^ (epoch as u64 + 1)
+                .wrapping_mul(0x9E37_79B9_7F4A_7C15));
+            let re = optimize_with_observer_warm(
+                &observed, session.params_ref(), &warm, &mut evaluator,
+                &mut NullObserver, &mut rng);
+            searches += 1;
+            front = re.pareto;
+            let plan = RedeployPlan::from_telemetry(
+                &out.telemetry, fleet.deployment().slots(),
+                params.lane_budget);
+            // Same gate deploy_with applies on the epoch-0 path —
+            // priced at the shape the swap would actually deploy
+            // (plan.long_seq, not the class default).  A front that
+            // cannot serve a class must not be hot-swapped in: keep
+            // the current deployment and retry with a fresh re-search
+            // next epoch (the retry flag carries the intent — the
+            // detector's EWMA baseline absorbs a persisting shift
+            // within a couple of epochs, so it cannot).
+            let feasible = infeasible_class_at(
+                &front, fleet.deployment().policy(), plan.long_seq)
+                .is_none();
+            let mut refreshed = fleet.deployment().clone();
+            if feasible
+                && refreshed.refresh_from_front(&front, Some(&plan)).is_ok()
+            {
+                fleet.redeploy(refreshed);
+                detector.rebase(&out.telemetry);
+                redeployed = true;
+                retry_swap = false;
+            } else {
+                retry_swap = true;
+            }
+        }
+
+        records.push(EpochRecord {
+            epoch,
+            telemetry: out.telemetry,
+            report: out.report,
+            drift_score: decision.score,
+            drifted: decision.drifted,
+            redeployed,
+            front_size: front.len(),
+            lanes: fleet.deployment().slots().iter().map(|s| s.lanes)
+                .collect(),
+        });
+    }
+
+    Ok(AdaptReport {
+        model: scenario.model.name.to_string(),
+        scenario: kind.name().to_string(),
+        mode: if params.adaptive { "continual" } else { "one-shot" }
+            .to_string(),
+        seed,
+        epochs: records,
+        searches,
+        redeployments: fleet.redeployments(),
+        overall: fleet.overall_report(),
+        final_front: front,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::drift::SEQ_BUCKETS;
+    use crate::tasks::blended_task;
+
+    fn telemetry(share: [f64; 3], mean_seq: f64) -> EpochTelemetry {
+        EpochTelemetry {
+            epoch: 0,
+            requests: 100,
+            class_counts: [0; 3],
+            class_share: share,
+            rate_rps: 20.0,
+            mean_seq,
+            max_seq: mean_seq as usize,
+            seq_hist: [0; SEQ_BUCKETS],
+            completed: 100,
+            violations: 0,
+            violation_rate: 0.0,
+            truncated: 0,
+            p95_latency_ms: 10.0,
+            energy_j: 1.0,
+            span_ms: 100.0,
+        }
+    }
+
+    #[test]
+    fn rescope_tracks_observed_shape() {
+        let base = blended_task();
+        // chat-era traffic: short prompts, category preserved
+        let chat = rescope_task(&base, &telemetry([0.8, 0.17, 0.03], 150.0));
+        assert_eq!(chat.name, "Observed");
+        assert_eq!(chat.seq_len, 300);
+        assert_eq!(chat.category, base.category);
+        assert_eq!(chat.quant_sensitivity, base.quant_sensitivity);
+        // long-heavy traffic: the descriptor goes long-context
+        let long = rescope_task(&base,
+                                &telemetry([0.25, 0.15, 0.60], 1100.0));
+        assert_eq!(long.seq_len, 2200);
+        assert_eq!(long.category, Category::LongContext);
+        // clamps hold at the extremes
+        assert_eq!(rescope_task(&base, &telemetry([1.0, 0.0, 0.0], 10.0))
+                       .seq_len, 256);
+        assert_eq!(rescope_task(&base, &telemetry([0.0, 0.0, 1.0], 99999.0))
+                       .seq_len, 16384);
+    }
+
+    #[test]
+    fn adapt_params_one_shot_flips_only_adaptivity() {
+        let p = AdaptParams::default();
+        let o = p.one_shot();
+        assert!(p.adaptive && !o.adaptive);
+        assert_eq!(p.epochs, o.epochs);
+        assert_eq!(p.lane_budget, o.lane_budget);
+    }
+}

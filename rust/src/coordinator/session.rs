@@ -47,6 +47,14 @@ pub enum AeLlmError {
     UnknownPlatform(String),
     UnknownPrefs(String),
     UnknownStrategy(String),
+    /// Deployment asked of an empty Pareto front.
+    EmptyFront,
+    /// The front cannot serve `class` under the SLO policy: no entry
+    /// clears the accuracy floor, or none can meet the class deadline
+    /// at its serve shape.  `run_and_deploy` used to silently deploy
+    /// anyway and let every request of the class violate at serve
+    /// time; now the infeasibility is typed and surfaced up front.
+    InfeasibleClass { class: String, reason: String },
 }
 
 fn join_names<I: IntoIterator<Item = &'static str>>(names: I) -> String {
@@ -96,6 +104,14 @@ impl fmt::Display for AeLlmError {
                 "unknown strategy {name:?} (known: {})",
                 join_names(StrategyKind::ALL.iter().map(|k| k.name())
                     .collect::<Vec<_>>()),
+            ),
+            AeLlmError::EmptyFront => {
+                write!(f, "cannot deploy from an empty Pareto front")
+            }
+            AeLlmError::InfeasibleClass { class, reason } => write!(
+                f,
+                "SLO class {class:?} is infeasible under this policy: \
+                 {reason}"
             ),
         }
     }
@@ -270,27 +286,68 @@ impl AeLlm {
     /// front: one simulated slot per SLO class, routed per request
     /// (see [`crate::runtime::Deployment`]).
     pub fn deploy(&self, outcome: &Outcome)
-                  -> anyhow::Result<crate::runtime::Deployment> {
+                  -> Result<crate::runtime::Deployment, AeLlmError> {
         self.deploy_with(outcome, &self.slo_policy())
     }
 
-    /// [`deploy`](Self::deploy) under an explicit SLO policy.
+    /// [`deploy`](Self::deploy) under an explicit SLO policy.  Checks
+    /// serve-time feasibility first: a class no front entry can serve
+    /// within the accuracy floor *and* the class deadline returns a
+    /// typed [`AeLlmError::InfeasibleClass`] instead of a deployment
+    /// that is guaranteed to violate.
     pub fn deploy_with(&self, outcome: &Outcome,
                        policy: &crate::runtime::SloPolicy)
-                       -> anyhow::Result<crate::runtime::Deployment> {
-        crate::runtime::Deployment::from_front(
+                       -> Result<crate::runtime::Deployment, AeLlmError> {
+        if outcome.pareto.is_empty() {
+            return Err(AeLlmError::EmptyFront);
+        }
+        if let Some((class, reason)) =
+            crate::runtime::fleet::infeasible_class(&outcome.pareto, policy)
+        {
+            return Err(AeLlmError::InfeasibleClass {
+                class: class.name().to_string(),
+                reason,
+            });
+        }
+        Ok(crate::runtime::Deployment::from_front(
             &outcome.pareto, policy, &self.scenario.model,
             &self.scenario.task, &self.scenario.testbed.platform)
+            .expect("feasibility pre-checked above"))
     }
 
     /// Search, then deploy: the full loop the paper promises — a
     /// scenario goes in, a served fleet comes out.
     pub fn run_and_deploy(&self)
-                          -> anyhow::Result<(RunReport,
-                                             crate::runtime::Deployment)> {
+                          -> Result<(RunReport, crate::runtime::Deployment),
+                                    AeLlmError> {
         let report = self.run_testbed();
         let deployment = self.deploy(&report.outcome)?;
         Ok((report, deployment))
+    }
+
+    // -- continual adaptation (DESIGN.md §12) --------------------------
+
+    /// Run the continual-adaptation loop on a workload scenario:
+    /// search, deploy, then serve in epochs — re-searching (warm-
+    /// started from the persistent front, re-scoped to the observed
+    /// workload) and hot-swapping the fleet whenever the drift
+    /// detector fires.  See [`super::controller::run_adapt`].
+    pub fn adapt(&self, kind: crate::runtime::WorkloadKind,
+                 params: &super::controller::AdaptParams)
+                 -> Result<super::controller::AdaptReport, AeLlmError> {
+        super::controller::run_adapt(self, self.seed, kind, params)
+    }
+
+    /// [`adapt`](Self::adapt) reusing a precomputed epoch-0 search
+    /// outcome (it depends only on this session and its seed), so
+    /// continual-vs-one-shot comparisons search once instead of once
+    /// per mode.
+    pub fn adapt_from(&self, outcome: &Outcome,
+                      kind: crate::runtime::WorkloadKind,
+                      params: &super::controller::AdaptParams)
+                      -> Result<super::controller::AdaptReport, AeLlmError> {
+        super::controller::run_adapt_from(self, self.seed, kind, params,
+                                          outcome)
     }
 }
 
@@ -334,12 +391,8 @@ pub struct RunReport {
 }
 
 fn objectives_json(o: &crate::oracle::Objectives) -> Json {
-    let mut m = std::collections::BTreeMap::new();
-    m.insert("accuracy".into(), Json::Num(o.accuracy));
-    m.insert("latency_ms".into(), Json::Num(o.latency_ms));
-    m.insert("memory_gb".into(), Json::Num(o.memory_gb));
-    m.insert("energy_j".into(), Json::Num(o.energy_j));
-    Json::Obj(m)
+    // Shared shape with the persistent front and the adapt report.
+    o.to_json()
 }
 
 impl RunReport {
@@ -492,6 +545,43 @@ mod tests {
         let policy = AeLlm::for_model("Phi-2").unwrap().slo_policy();
         assert!((policy.interactive_deadline_ms - 2.0 * 18.3).abs()
                     < 1e-9);
+    }
+
+    #[test]
+    fn deploy_rejects_infeasible_class_with_typed_error() {
+        // Regression for the silent fallback: a policy no front entry
+        // can satisfy must be a typed error, not a deployment that is
+        // guaranteed to violate at serve time.
+        let session = AeLlm::for_model("Phi-2").unwrap().quick().seed(4);
+        let outcome = session.run_testbed_outcome();
+        // feasible under the scenario policy
+        assert!(session.deploy(&outcome).is_ok());
+        // an impossible interactive deadline: typed, names the class
+        let tight = crate::runtime::SloPolicy {
+            interactive_deadline_ms: 0.01,
+            ..session.slo_policy()
+        };
+        match session.deploy_with(&outcome, &tight) {
+            Err(AeLlmError::InfeasibleClass { class, reason }) => {
+                assert_eq!(class, "interactive");
+                assert!(reason.contains("deadline"), "{reason}");
+            }
+            other => panic!("expected InfeasibleClass, got {other:?}"),
+        }
+        // an accuracy floor above 1.0 excludes every entry
+        let absurd = crate::runtime::SloPolicy {
+            accuracy_floor: 1.5,
+            ..session.slo_policy()
+        };
+        assert!(matches!(session.deploy_with(&outcome, &absurd),
+                         Err(AeLlmError::InfeasibleClass { .. })));
+        // the error message renders the class and reason
+        let e = AeLlmError::InfeasibleClass {
+            class: "interactive".into(),
+            reason: "over the deadline".into(),
+        };
+        let s = e.to_string();
+        assert!(s.contains("interactive") && s.contains("deadline"), "{s}");
     }
 
     #[test]

@@ -12,6 +12,10 @@
 //!                [--strategy S] [--requests N] [--quick] [--seed N]
 //!                [--json OUT.json]        # simulated fleet, artifact-free
 //! ae-llm serve   --variant V [--requests N] [--seed N]  # live PJRT path
+//! ae-llm adapt   [--model M] [--scenario regime_shift|ramp|...]
+//!                [--strategy S] [--epochs N] [--requests N/epoch]
+//!                [--one-shot] [--quick] [--seed N] [--json OUT.json]
+//!                # continual adaptation: drift-triggered re-search
 //! ae-llm check   # artifacts sanity: load + execute every variant
 //! ae-llm space   # print the configuration-space inventory
 //! ```
@@ -128,6 +132,42 @@ fn closest<'a>(key: &str, allowed: &[&'a str]) -> Option<&'a str> {
         .map(|(_, a)| a)
 }
 
+/// Unknown *value* of a valued option (`--scenario bursy`): same
+/// did-you-mean treatment the option keys get, plus the full list of
+/// valid names.
+fn unknown_value_msg(what: &str, got: &str, allowed: &[&str]) -> String {
+    let mut msg = format!("unknown {what} {got:?}");
+    if let Some(s) = closest(got, allowed) {
+        msg.push_str(&format!(" (did you mean {s}?)"));
+    }
+    msg.push_str(&format!("; known: {}", allowed.join(", ")));
+    msg
+}
+
+/// Resolve a `--scenario` value with a nearest-match suggestion.
+fn parse_scenario(name: &str)
+                  -> anyhow::Result<ae_llm::runtime::WorkloadKind> {
+    ae_llm::runtime::WorkloadKind::by_name(name).ok_or_else(|| {
+        let names: Vec<&str> = ae_llm::runtime::WorkloadKind::ALL
+            .iter()
+            .map(|k| k.name())
+            .collect();
+        anyhow::anyhow!("{}", unknown_value_msg("scenario", name, &names))
+    })
+}
+
+/// Resolve a `--strategy` value with a nearest-match suggestion.
+fn parse_strategy(name: &str)
+                  -> anyhow::Result<ae_llm::search::StrategyKind> {
+    ae_llm::search::StrategyKind::by_name(name).ok_or_else(|| {
+        let names: Vec<&str> = ae_llm::search::StrategyKind::ALL
+            .iter()
+            .map(|k| k.name())
+            .collect();
+        anyhow::anyhow!("{}", unknown_value_msg("strategy", name, &names))
+    })
+}
+
 /// Plain Levenshtein distance (small inputs; O(|a|·|b|)).
 fn edit_distance(a: &str, b: &str) -> usize {
     let a: Vec<char> = a.chars().collect();
@@ -159,6 +199,9 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "serve" => (&["requests", "variant", "seed", "model", "scenario",
                       "strategy", "json"],
                     &["quick"]),
+        "adapt" => (&["requests", "epochs", "seed", "model", "scenario",
+                      "strategy", "json"],
+                    &["quick", "one-shot"]),
         "check" | "space" => (&[], &[]),
         "help" | "--help" | "-h" => {
             print_help();
@@ -176,6 +219,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "figure" => cmd_figure(&opts, &budget, seed),
         "e2e" => cmd_e2e(&opts, seed),
         "serve" => cmd_serve(&opts, seed),
+        "adapt" => cmd_adapt(&opts, seed),
         "check" => cmd_check(),
         "space" => cmd_space(),
         _ => unreachable!("allowed-list match covers every command"),
@@ -198,7 +242,7 @@ fn cmd_search(opts: &Opts, budget: &Budget, seed: u64) -> anyhow::Result<()> {
     if let Some(s) = opts.get("strategy") {
         // After `params(...)` so the budget preset can't reset the
         // strategy choice back to the default.
-        session = session.strategy_named(s)?;
+        session = session.strategy(parse_strategy(s)?);
     }
     let session = session;
 
@@ -279,9 +323,11 @@ fn cmd_table(opts: &Opts, budget: &Budget, seed: u64) -> anyhow::Result<()> {
         6 => tables::table_6(budget, seed),
         7 => tables::table_strategies(budget, seed),
         8 => tables::table_serving(budget, seed),
+        9 => tables::table_adaptation(budget, seed),
         other => anyhow::bail!(
             "no table {other} (paper has 2-6; 7 = strategy comparison, \
-             8 = adaptive vs static serving)"
+             8 = adaptive vs static serving, 9 = continual adaptation \
+             vs one-shot)"
         ),
     };
     println!("{}", table.render());
@@ -405,24 +451,18 @@ fn cmd_serve(opts: &Opts, seed: u64) -> anyhow::Result<()> {
 
 fn cmd_serve_simulated(opts: &Opts, seed: u64) -> anyhow::Result<()> {
     use ae_llm::runtime::workload::default_rate_rps;
-    use ae_llm::runtime::{Workload, WorkloadKind};
+    use ae_llm::runtime::Workload;
     use ae_llm::util::Parallelism;
 
     let model = opts.get("model").unwrap_or("LLaMA-2-7B");
-    let scenario_name = opts.get("scenario").unwrap_or("steady");
-    let kind = WorkloadKind::by_name(scenario_name).ok_or_else(|| {
-        anyhow::anyhow!(
-            "unknown scenario {scenario_name:?} (known: steady, diurnal, \
-             bursty, heavytail)"
-        )
-    })?;
+    let kind = parse_scenario(opts.get("scenario").unwrap_or("steady"))?;
     let n = opts.u64_or("requests", 800)? as usize;
 
     let mut session = AeLlm::for_model(model)?
         .params(Budget { quick: opts.flag("quick") }.ae_params())
         .seed(seed);
     if let Some(s) = opts.get("strategy") {
-        session = session.strategy_named(s)?;
+        session = session.strategy(parse_strategy(s)?);
     }
     eprintln!(
         "== serve: searching ({}, strategy {}) then deploying ==",
@@ -480,6 +520,77 @@ fn cmd_serve_simulated(opts: &Opts, seed: u64) -> anyhow::Result<()> {
         o.completed, o.batches, o.p50_latency_ms, o.p95_latency_ms,
         o.throughput_rps, o.tokens_per_s, o.slo_violation_rate * 100.0,
         o.energy_j
+    );
+    Ok(())
+}
+
+/// Continual adaptation (DESIGN.md §12): search once, then serve a
+/// (possibly drifting) workload in epochs — re-searching warm-started
+/// from the persistent front and hot-swapping the fleet whenever the
+/// drift detector fires.  `--one-shot` freezes the epoch-0 deployment
+/// for comparison; `--json` dumps the deterministic `AdaptReport`.
+fn cmd_adapt(opts: &Opts, seed: u64) -> anyhow::Result<()> {
+    use ae_llm::coordinator::AdaptParams;
+
+    let model = opts.get("model").unwrap_or("LLaMA-2-7B");
+    let kind =
+        parse_scenario(opts.get("scenario").unwrap_or("regime_shift"))?;
+    let mut session = AeLlm::for_model(model)?
+        .params(Budget { quick: opts.flag("quick") }.ae_params())
+        .seed(seed);
+    if let Some(s) = opts.get("strategy") {
+        session = session.strategy(parse_strategy(s)?);
+    }
+    let defaults = AdaptParams::default();
+    let params = AdaptParams {
+        epochs: opts.u64_or("epochs", defaults.epochs as u64)? as usize,
+        requests_per_epoch: opts
+            .u64_or("requests", defaults.requests_per_epoch as u64)?
+            as usize,
+        adaptive: !opts.flag("one-shot"),
+        ..defaults
+    };
+
+    eprintln!(
+        "== adapt: {} serving `{}` for {} epochs x {} requests ({}) ==",
+        model, kind.name(), params.epochs, params.requests_per_epoch,
+        if params.adaptive { "continual" } else { "one-shot" }
+    );
+    let report = session.adapt(kind, &params)?;
+
+    if let Some(path) = opts.get("json") {
+        std::fs::write(path, report.to_json().dump())?;
+        println!("wrote {path}");
+        return Ok(());
+    }
+
+    let mut t = ae_llm::util::table::Table::new(&[
+        "Epoch", "Req", "Long (%)", "Rate (req/s)", "p95 (ms)",
+        "Viol (%)", "Drift", "Action",
+    ])
+    .with_title("Continual adaptation epochs");
+    for e in &report.epochs {
+        t.row(&[
+            e.epoch.to_string(),
+            e.telemetry.requests.to_string(),
+            format!("{:.0}", e.telemetry.class_share[2] * 100.0),
+            format!("{:.1}", e.telemetry.rate_rps),
+            format!("{:.1}", e.report.p95_latency_ms),
+            format!("{:.1}", e.report.slo_violation_rate * 100.0),
+            format!("{:.2}{}", e.drift_score,
+                    if e.drifted { " !" } else { "" }),
+            if e.redeployed { "re-search + swap" } else { "-" }
+                .to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    let o = &report.overall;
+    println!(
+        "{}: {} searches, {} redeployments | overall SLO violations \
+         {:.1}% | p95 {:.1} ms | energy {:.1} J | front {}",
+        report.mode, report.searches, report.redeployments,
+        o.slo_violation_rate * 100.0, o.p95_latency_ms, o.energy_j,
+        report.final_front.len()
     );
     Ok(())
 }
@@ -555,19 +666,25 @@ fn print_help() {
          search  --model M [--task T] [--platform P] [--prefs W]\n  \
          \x20       [--strategy S] [--quick] [--seed N] [--json]\n  \
          \x20       (--json emits the RunReport)\n  \
-         table   --id 2|3|4|5|6|7|8 [--quick] [--seed N]\n  \
-         \x20       (7 = strategy comparison, 8 = adaptive vs static \
-         serving)\n  \
+         table   --id 2|3|4|5|6|7|8|9 [--quick] [--seed N]\n  \
+         \x20       (7 = strategies, 8 = adaptive vs static serving,\n  \
+         \x20        9 = continual adaptation vs one-shot)\n  \
          figure  --id 1|2|3|4 [--quick] [--seed N] [--out DIR]\n  \
          e2e     [--repeats N] [--seed N]   hardware-in-the-loop + serving\n  \
          serve   [--model M] [--scenario S] [--strategy S] [--requests N]\n  \
          \x20       [--quick] [--seed N] [--json OUT.json]\n  \
          \x20       (simulated fleet; --variant V switches to live PJRT)\n  \
+         adapt   [--model M] [--scenario S] [--strategy S] [--epochs N]\n  \
+         \x20       [--requests N/epoch] [--one-shot] [--quick] [--seed N]\n  \
+         \x20       [--json OUT.json]\n  \
+         \x20       (continual adaptation: epoch serving, drift-triggered\n  \
+         \x20        warm re-search, fleet hot-swap)\n  \
          check   load + execute every AOT artifact\n  \
          space   print the configuration-space inventory\n\n\
          prefs: balanced | latency | memory | accuracy | green\n\
          strategies: nsga2 | random | racing | local\n\
-         scenarios: steady | diurnal | bursty | heavytail"
+         scenarios: steady | diurnal | bursty | heavytail (stationary)\n\
+         \x20          regime_shift | ramp (drifting, for `adapt`)"
     );
 }
 
@@ -694,6 +811,50 @@ mod tests {
             .to_string();
         assert!(err.contains("nope"), "{err}");
         assert!(err.contains("bursty"), "{err}");
+        // drifting scenarios are listed as valid names too
+        assert!(err.contains("regime_shift") && err.contains("ramp"),
+                "{err}");
+    }
+
+    #[test]
+    fn scenario_and_strategy_values_get_did_you_mean() {
+        // typo'd scenario value: nearest-match suggestion + full list
+        let err = run(&args(&["serve", "--scenario", "bursy"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean bursty?"), "{err}");
+        let err = run(&args(&["adapt", "--scenario", "regime_shif"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean regime_shift?"), "{err}");
+        assert!(err.contains("steady"), "{err}");
+        // typo'd strategy value, on serve and adapt alike
+        let err = run(&args(&["serve", "--strategy", "racng"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean racing?"), "{err}");
+        let err = run(&args(&["adapt", "--strategy", "nsga3"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean nsga2?"), "{err}");
+        assert!(err.contains("local"), "{err}");
+    }
+
+    #[test]
+    fn adapt_parses_its_options_and_rejects_typos() {
+        let err = run(&args(&["adapt", "--epoch", "3"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean --epochs?"), "{err}");
+        let err = run(&args(&["adapt", "--epochs", "three"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--epochs expects a number"), "{err}");
+        // `--one-shot` is a flag, never swallows a value
+        let err = run(&args(&["adapt", "--one-shot", "yes"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unexpected argument \"yes\""), "{err}");
     }
 
     #[test]

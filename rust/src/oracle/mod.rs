@@ -48,6 +48,29 @@ impl Objectives {
     pub fn as_min_vec(&self) -> [f64; 4] {
         [-self.accuracy, self.latency_ms, self.memory_gb, self.energy_j]
     }
+
+    /// Serialize (the shared shape used by `RunReport`, the persistent
+    /// front and the adaptation report).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("accuracy".into(), Json::Num(self.accuracy));
+        m.insert("latency_ms".into(), Json::Num(self.latency_ms));
+        m.insert("memory_gb".into(), Json::Num(self.memory_gb));
+        m.insert("energy_j".into(), Json::Num(self.energy_j));
+        Json::Obj(m)
+    }
+
+    /// Parse back from [`to_json`](Self::to_json)'s shape.
+    pub fn from_json(j: &crate::util::json::Json)
+                     -> Result<Objectives, String> {
+        Ok(Objectives {
+            accuracy: j.req_f64("accuracy")?,
+            latency_ms: j.req_f64("latency_ms")?,
+            memory_gb: j.req_f64("memory_gb")?,
+            energy_j: j.req_f64("energy_j")?,
+        })
+    }
 }
 
 /// Table 2 "Default" anchor rows: (accuracy %, latency ms, memory GB,

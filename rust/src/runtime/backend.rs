@@ -147,9 +147,17 @@ pub struct SimulatedBackend {
 
 /// Batching amortizes per-request work: a full batch costs 1.25× the
 /// base latency while a single occupied row costs ~0.53× — matching the
-/// sub-linear batch scaling real serving stacks exhibit.
-const EXEC_FLOOR: f64 = 0.45;
-const EXEC_SLOPE: f64 = 0.80;
+/// sub-linear batch scaling real serving stacks exhibit.  Public so the
+/// fleet's deadline-feasibility check prices a full batch the same way
+/// the backend will.
+pub const EXEC_FLOOR: f64 = 0.45;
+pub const EXEC_SLOPE: f64 = 0.80;
+
+/// Sub-linear sequence-length scaling exponent: a serve shape's cost
+/// rescales from the measurement reference ([`cost::INPUT_TOKENS`]) as
+/// `(seq / 512)^0.85`.  Shared by [`sim_variant`], the fleet's lane
+/// provisioning and the deadline-feasibility check.
+pub const SEQ_SCALE_EXP: f64 = 0.85;
 
 impl SimulatedBackend {
     pub fn new(seed: u64) -> SimulatedBackend {
@@ -202,7 +210,7 @@ pub fn sim_variant(config: &Config, model: &ModelSpec, task: &TaskSpec,
         .true_objectives(config, model, task);
     // Longer serve shapes read more KV and decode more positions; scale
     // sub-linearly from the measurement reference (cost::INPUT_TOKENS).
-    let seq_scale = (seq as f64 / cost::INPUT_TOKENS).powf(0.85);
+    let seq_scale = (seq as f64 / cost::INPUT_TOKENS).powf(SEQ_SCALE_EXP);
     SimVariant {
         shape: BatchShape { batch, seq, vocab: 256 },
         base_ms: truth.latency_ms * seq_scale,

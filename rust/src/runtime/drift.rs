@@ -1,0 +1,417 @@
+//! Serving telemetry and drift detection — the sensors of the
+//! continual-adaptation loop (DESIGN.md §12).
+//!
+//! Each serving epoch distills into one [`EpochTelemetry`]: the
+//! arrival-side workload shape (per-SLO-class rates and shares, the
+//! prompt seq-length histogram) plus the serve-side outcome stats
+//! (violations, truncations, latency, energy).  The
+//! [`DriftDetector`] maintains an EWMA baseline over the workload-shape
+//! features ([`crate::util::stats::ewma_step`]) and signals drift when
+//! the current epoch departs from that baseline by more than a
+//! threshold — at which point the controller re-scopes the search to
+//! the observed shape, warm-starts from the persistent front and
+//! hot-swaps the deployment.
+//!
+//! Everything here is a pure function of its inputs: no clocks, no
+//! RNG.  Same epochs in → same decisions out, at every parallelism
+//! level — which is what keeps the whole `AdaptReport` byte-identical
+//! per seed.
+
+use crate::util::json::Json;
+use crate::util::stats;
+
+use super::fleet::SloClass;
+use super::serve::{Arrival, Completion};
+
+/// Upper edges of the prompt seq-length histogram buckets (the last
+/// bucket is open-ended).
+pub const SEQ_BUCKET_EDGES: [usize; 7] = [64, 128, 256, 512, 1024, 1536, 2048];
+
+/// Number of histogram buckets (`edges + 1` for the open tail).
+pub const SEQ_BUCKETS: usize = SEQ_BUCKET_EDGES.len() + 1;
+
+/// One serving epoch's telemetry (DESIGN.md §12): what arrived, and
+/// how serving it went.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EpochTelemetry {
+    pub epoch: usize,
+    /// Requests that arrived this epoch.
+    pub requests: usize,
+    /// Arrivals per [`SloClass`] (interactive, batch, long-context).
+    pub class_counts: [usize; 3],
+    /// Class shares; sums to 1 for a non-empty epoch.
+    pub class_share: [f64; 3],
+    /// Mean arrival rate over the epoch's arrival span, requests/s.
+    pub rate_rps: f64,
+    /// Mean raw prompt length, tokens.
+    pub mean_seq: f64,
+    /// Longest raw prompt observed, tokens (what shape re-provisioning
+    /// keys on: a serve shape below this truncates).
+    pub max_seq: usize,
+    /// Prompt-length histogram over [`SEQ_BUCKET_EDGES`].
+    pub seq_hist: [usize; SEQ_BUCKETS],
+    /// Completions accounted this epoch.
+    pub completed: usize,
+    pub violations: usize,
+    pub violation_rate: f64,
+    pub truncated: usize,
+    pub p95_latency_ms: f64,
+    /// Energy the backends drew this epoch, J.
+    pub energy_j: f64,
+    /// First arrival to last completion of the epoch, ms.
+    pub span_ms: f64,
+}
+
+impl EpochTelemetry {
+    /// Distill one epoch from the serving hooks: the arrival log slice
+    /// and the completion records the fleet accounted this epoch.
+    pub fn from_epoch(epoch: usize, arrivals: &[Arrival],
+                      completions: &[Completion], energy_j: f64)
+                      -> EpochTelemetry {
+        let n = arrivals.len();
+        let mut class_counts = [0usize; 3];
+        let mut seq_hist = [0usize; SEQ_BUCKETS];
+        let mut seq_sum = 0usize;
+        let mut max_seq = 0usize;
+        let mut first_arrival = f64::INFINITY;
+        let mut last_arrival = f64::NEG_INFINITY;
+        for a in arrivals {
+            max_seq = max_seq.max(a.len);
+            let i = SloClass::ALL
+                .iter()
+                .position(|&c| c == a.slo)
+                .expect("every class is in ALL");
+            class_counts[i] += 1;
+            let bucket = SEQ_BUCKET_EDGES
+                .iter()
+                .position(|&edge| a.len <= edge)
+                .unwrap_or(SEQ_BUCKETS - 1);
+            seq_hist[bucket] += 1;
+            seq_sum += a.len;
+            first_arrival = first_arrival.min(a.arrival_ms);
+            last_arrival = last_arrival.max(a.arrival_ms);
+        }
+        let mut class_share = [0.0; 3];
+        if n > 0 {
+            for i in 0..3 {
+                class_share[i] = class_counts[i] as f64 / n as f64;
+            }
+        }
+        let arrival_span_ms = (last_arrival - first_arrival).max(0.0);
+        let rate_rps = if n > 1 && arrival_span_ms > 0.0 {
+            (n as f64 - 1.0) / (arrival_span_ms / 1e3)
+        } else {
+            0.0
+        };
+
+        let violations = completions.iter().filter(|c| c.violated).count();
+        let truncated = completions.iter().filter(|c| c.truncated).count();
+        let lats: Vec<f64> =
+            completions.iter().map(|c| c.latency_ms).collect();
+        let last_done = completions
+            .iter()
+            .map(|c| c.done_ms)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let span_ms = if n > 0 && !completions.is_empty() {
+            (last_done - first_arrival).max(0.0)
+        } else {
+            0.0
+        };
+        EpochTelemetry {
+            epoch,
+            requests: n,
+            class_counts,
+            class_share,
+            rate_rps,
+            mean_seq: if n > 0 { seq_sum as f64 / n as f64 } else { 0.0 },
+            max_seq,
+            seq_hist,
+            completed: completions.len(),
+            violations,
+            violation_rate: if completions.is_empty() {
+                0.0
+            } else {
+                violations as f64 / completions.len() as f64
+            },
+            truncated,
+            p95_latency_ms: stats::quantile(&lats, 0.95),
+            energy_j,
+            span_ms,
+        }
+    }
+
+    /// The workload-shape feature vector the drift detector baselines:
+    /// the three class shares, the arrival rate and the mean prompt
+    /// length.
+    pub fn shape_features(&self) -> [f64; 5] {
+        [
+            self.class_share[0],
+            self.class_share[1],
+            self.class_share[2],
+            self.rate_rps,
+            self.mean_seq,
+        ]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = std::collections::BTreeMap::new();
+        m.insert("epoch".into(), Json::Num(self.epoch as f64));
+        m.insert("requests".into(), Json::Num(self.requests as f64));
+        m.insert(
+            "class_counts".into(),
+            Json::Arr(self.class_counts.iter()
+                .map(|&c| Json::Num(c as f64)).collect()),
+        );
+        m.insert(
+            "class_share".into(),
+            Json::Arr(self.class_share.iter()
+                .map(|&s| Json::Num(s)).collect()),
+        );
+        m.insert("rate_rps".into(), Json::Num(self.rate_rps));
+        m.insert("mean_seq".into(), Json::Num(self.mean_seq));
+        m.insert("max_seq".into(), Json::Num(self.max_seq as f64));
+        m.insert(
+            "seq_hist".into(),
+            Json::Arr(self.seq_hist.iter()
+                .map(|&c| Json::Num(c as f64)).collect()),
+        );
+        m.insert("completed".into(), Json::Num(self.completed as f64));
+        m.insert("violations".into(), Json::Num(self.violations as f64));
+        m.insert("violation_rate".into(), Json::Num(self.violation_rate));
+        m.insert("truncated".into(), Json::Num(self.truncated as f64));
+        m.insert("p95_latency_ms".into(), Json::Num(self.p95_latency_ms));
+        m.insert("energy_j".into(), Json::Num(self.energy_j));
+        m.insert("span_ms".into(), Json::Num(self.span_ms));
+        Json::Obj(m)
+    }
+}
+
+/// What one [`DriftDetector::observe`] call decided.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DriftDecision {
+    /// Distance of the epoch's workload shape from the EWMA baseline.
+    pub score: f64,
+    pub drifted: bool,
+}
+
+/// EWMA drift detector over the workload-shape features.
+///
+/// Score = Σ|Δ class share| + min(1, |ln(rate / baseline rate)|)
+///       + min(1, |Δ mean seq| / baseline mean seq); the log/relative
+/// terms make the score scale-free, the caps keep one runaway feature
+/// from swamping the budget.  To resist single-epoch sampling noise,
+/// drift fires only when the score exceeds the threshold in two
+/// consecutive epochs, or exceeds 2× the threshold outright (an abrupt
+/// regime shift).  Pure and seedless: decisions are a deterministic
+/// function of the telemetry stream.
+#[derive(Clone, Debug)]
+pub struct DriftDetector {
+    alpha: f64,
+    threshold: f64,
+    baseline: Option<[f64; 5]>,
+    /// Previous epoch exceeded the threshold (confirmation state).
+    armed: bool,
+}
+
+/// Default EWMA smoothing for the baseline.
+pub const DRIFT_ALPHA: f64 = 0.35;
+/// Default drift threshold (see [`DriftDetector`] scoring).
+pub const DRIFT_THRESHOLD: f64 = 0.45;
+
+impl DriftDetector {
+    pub fn new(alpha: f64, threshold: f64) -> DriftDetector {
+        DriftDetector { alpha, threshold, baseline: None, armed: false }
+    }
+
+    /// Observe one epoch: score it against the baseline, fold it into
+    /// the EWMA, and decide.  The first epoch seeds the baseline and
+    /// never signals drift.
+    pub fn observe(&mut self, t: &EpochTelemetry) -> DriftDecision {
+        let x = t.shape_features();
+        let Some(b) = self.baseline else {
+            self.baseline = Some(x);
+            return DriftDecision { score: 0.0, drifted: false };
+        };
+        let mut score = 0.0;
+        for i in 0..3 {
+            score += (x[i] - b[i]).abs();
+        }
+        if x[3] > 0.0 && b[3] > 0.0 {
+            score += (x[3] / b[3]).ln().abs().min(1.0);
+        }
+        if b[4] > 0.0 {
+            score += ((x[4] - b[4]) / b[4]).abs().min(1.0);
+        }
+        let exceeded = score > self.threshold;
+        let drifted = (exceeded && self.armed)
+            || score > 2.0 * self.threshold;
+        self.armed = exceeded && !drifted;
+        let mut next = b;
+        for i in 0..5 {
+            next[i] = stats::ewma_step(b[i], x[i], self.alpha);
+        }
+        self.baseline = Some(next);
+        DriftDecision { score, drifted }
+    }
+
+    /// Re-anchor the baseline on the current regime — called after a
+    /// re-deployment so the freshly-adapted fleet is not immediately
+    /// re-flagged against the pre-drift baseline.
+    pub fn rebase(&mut self, t: &EpochTelemetry) {
+        self.baseline = Some(t.shape_features());
+        self.armed = false;
+    }
+}
+
+impl Default for DriftDetector {
+    fn default() -> DriftDetector {
+        DriftDetector::new(DRIFT_ALPHA, DRIFT_THRESHOLD)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn telemetry(epoch: usize, share: [f64; 3], rate: f64, seq: f64)
+                 -> EpochTelemetry {
+        EpochTelemetry {
+            epoch,
+            requests: 400,
+            class_counts: [
+                (share[0] * 400.0) as usize,
+                (share[1] * 400.0) as usize,
+                (share[2] * 400.0) as usize,
+            ],
+            class_share: share,
+            rate_rps: rate,
+            mean_seq: seq,
+            max_seq: seq as usize,
+            seq_hist: [0; SEQ_BUCKETS],
+            completed: 400,
+            violations: 0,
+            violation_rate: 0.0,
+            truncated: 0,
+            p95_latency_ms: 10.0,
+            energy_j: 1.0,
+            span_ms: 1000.0,
+        }
+    }
+
+    #[test]
+    fn from_epoch_aggregates_arrivals_and_completions() {
+        let arrivals = vec![
+            Arrival { slo: SloClass::Interactive, len: 50,
+                      arrival_ms: 0.0 },
+            Arrival { slo: SloClass::Interactive, len: 100,
+                      arrival_ms: 500.0 },
+            Arrival { slo: SloClass::LongContext, len: 1500,
+                      arrival_ms: 1000.0 },
+        ];
+        let completions = vec![Completion {
+            id: 0,
+            next_token: 1,
+            latency_ms: 20.0,
+            batch_index: 0,
+            slo: SloClass::Interactive,
+            violated: true,
+            truncated: false,
+            done_ms: 20.0,
+        }];
+        let t = EpochTelemetry::from_epoch(3, &arrivals, &completions, 2.5);
+        assert_eq!(t.epoch, 3);
+        assert_eq!(t.requests, 3);
+        assert_eq!(t.class_counts, [2, 0, 1]);
+        assert!((t.class_share[0] - 2.0 / 3.0).abs() < 1e-12);
+        // 2 gaps over 1s of arrivals -> 2 rps
+        assert!((t.rate_rps - 2.0).abs() < 1e-9, "rate {}", t.rate_rps);
+        assert!((t.mean_seq - 550.0).abs() < 1e-9);
+        assert_eq!(t.max_seq, 1500);
+        // 50 -> bucket 0 (<=64), 100 -> bucket 1 (<=128),
+        // 1500 -> bucket 5 (<=1536)
+        assert_eq!(t.seq_hist[0], 1);
+        assert_eq!(t.seq_hist[1], 1);
+        assert_eq!(t.seq_hist[5], 1);
+        assert_eq!(t.violations, 1);
+        assert_eq!(t.energy_j, 2.5);
+        assert_eq!(t.span_ms, 20.0);
+    }
+
+    #[test]
+    fn empty_epoch_stays_defined() {
+        let t = EpochTelemetry::from_epoch(0, &[], &[], 0.0);
+        assert_eq!(t.requests, 0);
+        assert_eq!(t.rate_rps, 0.0);
+        assert_eq!(t.violation_rate, 0.0);
+        assert_eq!(t.mean_seq, 0.0);
+    }
+
+    #[test]
+    fn telemetry_json_is_complete() {
+        let t = telemetry(2, [0.7, 0.25, 0.05], 30.0, 200.0);
+        let j = t.to_json();
+        for key in ["epoch", "requests", "class_share", "rate_rps",
+                    "mean_seq", "seq_hist", "violation_rate", "energy_j"] {
+            assert!(j.get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn stable_stream_never_drifts() {
+        let mut d = DriftDetector::default();
+        for e in 0..20 {
+            // small sampling jitter around a fixed regime
+            let w = 0.01 * ((e % 3) as f64 - 1.0);
+            let dec = d.observe(&telemetry(
+                e, [0.70 + w, 0.25 - w, 0.05], 30.0 + w * 10.0,
+                200.0 + w * 40.0));
+            assert!(!dec.drifted, "epoch {e} score {}", dec.score);
+            assert!(dec.score < DRIFT_THRESHOLD, "score {}", dec.score);
+        }
+    }
+
+    #[test]
+    fn abrupt_shift_drifts_immediately() {
+        let mut d = DriftDetector::default();
+        for e in 0..3 {
+            assert!(!d.observe(&telemetry(e, [0.8, 0.17, 0.03], 30.0,
+                                          150.0)).drifted);
+        }
+        // the regime flips: shares, rate and lengths all move
+        let dec = d.observe(&telemetry(3, [0.25, 0.15, 0.60], 60.0,
+                                       1000.0));
+        assert!(dec.drifted, "score {}", dec.score);
+        assert!(dec.score > 2.0 * DRIFT_THRESHOLD);
+    }
+
+    #[test]
+    fn gradual_drift_needs_confirmation_then_fires() {
+        let mut d = DriftDetector::new(DRIFT_ALPHA, 0.2);
+        assert!(!d.observe(&telemetry(0, [0.8, 0.17, 0.03], 30.0,
+                                      150.0)).drifted);
+        // two consecutive moderately-drifted epochs: the first exceeds
+        // the threshold but stays under 2x (arms, does not fire), the
+        // second fires
+        let first = d.observe(&telemetry(1, [0.74, 0.18, 0.08], 32.0,
+                                         175.0));
+        assert!(!first.drifted && first.score > 0.2 && first.score < 0.4,
+                "score {}", first.score);
+        let second = d.observe(&telemetry(2, [0.70, 0.18, 0.12], 34.0,
+                                          210.0));
+        assert!(second.drifted, "score {}", second.score);
+    }
+
+    #[test]
+    fn rebase_accepts_the_new_regime() {
+        let mut d = DriftDetector::default();
+        d.observe(&telemetry(0, [0.8, 0.17, 0.03], 30.0, 150.0));
+        let t_new = telemetry(1, [0.25, 0.15, 0.60], 60.0, 1000.0);
+        assert!(d.observe(&t_new).drifted);
+        d.rebase(&t_new);
+        // the same hot regime is now the baseline: no re-flagging
+        let dec = d.observe(&telemetry(2, [0.26, 0.15, 0.59], 59.0,
+                                       990.0));
+        assert!(!dec.drifted, "score {}", dec.score);
+        assert!(dec.score < 0.1);
+    }
+}

@@ -18,17 +18,22 @@
 //! fleet provisions per-class shapes off the same search result at no
 //! extra search cost.
 
+use std::collections::BTreeMap;
+
 use crate::config::Config;
 use crate::hardware::Platform;
 use crate::models::ModelSpec;
-use crate::oracle::Objectives;
+use crate::oracle::{cost, Objectives};
 use crate::search::archive::{Entry, ParetoArchive};
 use crate::tasks::TaskSpec;
 use crate::util::json::Json;
 use crate::util::pool::Parallelism;
 
-use super::backend::SimulatedBackend;
-use super::serve::{Completion, Request, ServeReport, Server};
+use super::backend::{SimulatedBackend, EXEC_FLOOR, EXEC_SLOPE,
+                     SEQ_SCALE_EXP};
+use super::clock::VirtualClock;
+use super::drift::EpochTelemetry;
+use super::serve::{Arrival, Completion, Request, ServeReport, Server};
 
 // ---------------------------------------------------------------------------
 // SLO classes and policy
@@ -134,6 +139,10 @@ pub struct Slot {
     pub batch: usize,
     pub seq: usize,
     pub deadline_ms: f64,
+    /// Serving lanes (simulated device replicas) provisioned for this
+    /// slot.  1 everywhere unless a lane plan re-provisions capacity to
+    /// the observed per-class load (DESIGN.md §12).
+    pub lanes: usize,
 }
 
 /// A set of serving slots built from a search result, plus the routing
@@ -148,36 +157,232 @@ pub struct Deployment {
     static_single: bool,
 }
 
-/// Pick the best entry for `class`: among entries within the accuracy
-/// floor, minimize the class's critical objective.
-fn select_for_class(entries: &[Entry], class: SloClass, floor: f64)
-                    -> Entry {
+/// Entries within the accuracy floor (relative to the front's best).
+fn eligible_for_floor(entries: &[Entry], floor: f64) -> Vec<&Entry> {
     let best_acc = entries
         .iter()
         .map(|e| e.objectives.accuracy)
         .fold(f64::NEG_INFINITY, f64::max);
-    let eligible: Vec<&Entry> = entries
+    entries
         .iter()
         .filter(|e| e.objectives.accuracy >= best_acc * floor)
-        .collect();
-    let pool: &[&Entry] = if eligible.is_empty() {
-        // unreachable in practice (the best-accuracy entry always
-        // qualifies), but stay total
-        &[]
-    } else {
-        &eligible
-    };
+        .collect()
+}
+
+/// Fraction of the class deadline a slot's predicted full-batch
+/// execution should fit inside, leaving headroom for batching delay
+/// and queueing; entries over this bound are deprioritized even when
+/// they win on the class's critical objective.
+const DEADLINE_EXEC_FRAC: f64 = 0.6;
+
+/// Pick the best entry for `class` at serve shape `seq`: among entries
+/// within the accuracy floor, prefer those whose predicted full-batch
+/// execution fits comfortably inside the class deadline, then minimize
+/// the class's critical objective; if nothing fits comfortably, take
+/// the fastest eligible entry (the deadline-feasibility check decides
+/// whether even that is deployable).  `None` when no entry clears the
+/// floor (a policy with a floor above 1.0 can exclude everything) —
+/// callers surface that as a typed infeasibility instead of silently
+/// deploying a below-floor configuration.
+fn select_for_class(entries: &[Entry], class: SloClass, floor: f64,
+                    seq: usize, deadline_ms: f64) -> Option<Entry> {
+    let eligible = eligible_for_floor(entries, floor);
+    let exec =
+        |e: &Entry| predicted_full_batch_exec_ms(e.objectives.latency_ms,
+                                                 seq);
     let key = |e: &Entry| match class {
         SloClass::Interactive => e.objectives.latency_ms,
         SloClass::Batch => e.objectives.energy_j,
         SloClass::LongContext => e.objectives.memory_gb,
     };
-    let chosen = pool
+    let fits: Vec<&Entry> = eligible
         .iter()
-        .min_by(|a, b| key(a).partial_cmp(&key(b)).unwrap())
         .copied()
-        .unwrap_or(&entries[0]);
-    chosen.clone()
+        .filter(|e| exec(e) <= DEADLINE_EXEC_FRAC * deadline_ms)
+        .collect();
+    if fits.is_empty() {
+        eligible
+            .iter()
+            .copied()
+            .min_by(|a, b| exec(a).partial_cmp(&exec(b)).unwrap())
+            .map(Entry::clone)
+    } else {
+        fits.iter()
+            .copied()
+            .min_by(|a, b| key(a).partial_cmp(&key(b)).unwrap())
+            .map(Entry::clone)
+    }
+}
+
+/// Modeled execution time of a *full* batch of `entry` at a class
+/// serve shape — the same pricing [`SimulatedBackend`] will apply
+/// (`latency × (seq/512)^0.85 × (floor + slope)`), so the feasibility
+/// check below predicts exactly what serving would observe.
+fn predicted_full_batch_exec_ms(latency_ms: f64, seq: usize) -> f64 {
+    latency_ms * (seq as f64 / cost::INPUT_TOKENS).powf(SEQ_SCALE_EXP)
+        * (EXEC_FLOOR + EXEC_SLOPE)
+}
+
+/// Serve-time feasibility of a front under a policy: for each class
+/// there must be an accuracy-floor-eligible entry whose predicted
+/// full-batch execution at the class shape fits inside the class
+/// deadline (otherwise *every* request of that class would violate its
+/// SLO the moment it is served).  Returns the first failing class and
+/// why — the typed `AeLlmError::InfeasibleClass` surfaces it from
+/// `AeLlm::deploy`/`run_and_deploy`.  Prices each class at its default
+/// serve shape; the hot-swap path uses
+/// [`infeasible_class_at`] so a re-provisioned long-context length is
+/// priced at the shape it will actually serve.
+pub fn infeasible_class(archive: &ParetoArchive, policy: &SloPolicy)
+                        -> Option<(SloClass, String)> {
+    infeasible_class_at(archive, policy, SloClass::LongContext.shape().1)
+}
+
+/// [`infeasible_class`] with the long-context slot priced at an
+/// explicit (re-provisioned) serve length.  Cost scales as
+/// `(seq/512)^0.85`, so a front that is feasible at the default 2048
+/// shape can be infeasible at 4096 — the gate must price what the
+/// swap will deploy.
+pub fn infeasible_class_at(archive: &ParetoArchive, policy: &SloPolicy,
+                           long_seq: usize)
+                           -> Option<(SloClass, String)> {
+    let entries = archive.entries();
+    // Floor eligibility is class-independent: compute it once.
+    let eligible = eligible_for_floor(entries, policy.accuracy_floor);
+    if eligible.is_empty() {
+        return Some((SloClass::Interactive, format!(
+            "no front entry within the accuracy floor {:.2}",
+            policy.accuracy_floor)));
+    }
+    for class in SloClass::ALL {
+        let seq = if class == SloClass::LongContext {
+            long_seq
+        } else {
+            class.shape().1
+        };
+        let deadline = policy.deadline_ms(class);
+        let best_exec = eligible
+            .iter()
+            .map(|e| predicted_full_batch_exec_ms(
+                e.objectives.latency_ms, seq))
+            .fold(f64::INFINITY, f64::min);
+        if best_exec > deadline {
+            return Some((class, format!(
+                "fastest eligible config needs {best_exec:.1} ms per \
+                 batch at seq {seq}, over the {deadline:.1} ms deadline")));
+        }
+    }
+    None
+}
+
+/// Serve-shape options for long-context re-provisioning; the smallest
+/// that covers the observed maximum wins (2048 is the class default).
+const LONG_SEQ_LADDER: [usize; 3] = [2048, 4096, 8192];
+
+/// Smallest long-context serve length that covers `max_seq` without
+/// truncation (saturates at the top of the ladder).
+pub fn provisioned_seq(max_seq: usize) -> usize {
+    for s in LONG_SEQ_LADDER {
+        if s >= max_seq {
+            return s;
+        }
+    }
+    LONG_SEQ_LADDER[LONG_SEQ_LADDER.len() - 1]
+}
+
+/// How a re-deployment re-scopes the fleet to observed telemetry:
+/// lane capacity follows the per-class compute load, and the
+/// long-context serve length grows to cover the longest document
+/// actually seen (a shape below it silently truncates, which is a
+/// quality-SLO violation).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RedeployPlan {
+    /// Per-slot lanes, aligned with [`Deployment::slots`].
+    pub lanes: Vec<usize>,
+    /// Re-provisioned long-context sequence length.
+    pub long_seq: usize,
+}
+
+impl RedeployPlan {
+    /// Derive the plan from one epoch's telemetry.  The lane split is
+    /// priced at the shapes the swap will *deploy* — the long slot's
+    /// cost weight uses the re-provisioned `long_seq`, not the current
+    /// (possibly smaller) one, since a `(4096/2048)^0.85 ≈ 1.8×`
+    /// per-request cost jump at exactly the moment the long share
+    /// spikes is the case the plan exists for.
+    pub fn from_telemetry(telemetry: &EpochTelemetry, slots: &[Slot],
+                          lane_budget: usize) -> RedeployPlan {
+        let long_seq = provisioned_seq(telemetry.max_seq);
+        let resized: Vec<Slot> = slots
+            .iter()
+            .cloned()
+            .map(|mut s| {
+                if s.class == SloClass::LongContext {
+                    s.seq = long_seq;
+                }
+                s
+            })
+            .collect();
+        RedeployPlan {
+            lanes: lane_plan(&telemetry.class_share, &resized, lane_budget),
+            long_seq,
+        }
+    }
+}
+
+/// Budgeted lane provisioning: split `budget` lanes across the slots
+/// proportionally to each class's offered *compute* load — its traffic
+/// share times the per-request cost of its serve shape — with at least
+/// one lane per slot (largest-remainder rounding, deterministic
+/// tie-break by slot order).  This is how a re-deployment turns
+/// observed telemetry into capacity: when the long-context share
+/// triples, the long slot gets the lanes, and the one-shot fleet that
+/// provisioned for the old mix saturates.
+pub fn lane_plan(class_share: &[f64; 3], slots: &[Slot], budget: usize)
+                 -> Vec<usize> {
+    let weight = |slot: &Slot| -> f64 {
+        let i = SloClass::ALL
+            .iter()
+            .position(|&c| c == slot.class)
+            .expect("every class is in ALL");
+        // per-request cost of the shape: full-batch exec / batch rows
+        let cost_per_req = (slot.seq as f64 / cost::INPUT_TOKENS)
+            .powf(SEQ_SCALE_EXP)
+            * (EXEC_FLOOR + EXEC_SLOPE)
+            / slot.batch.max(1) as f64;
+        class_share[i].max(0.0) * cost_per_req
+    };
+    let budget = budget.max(slots.len());
+    let weights: Vec<f64> = slots.iter().map(weight).collect();
+    let total: f64 = weights.iter().sum();
+    if total <= 0.0 {
+        // degenerate (no traffic observed): spread evenly
+        let mut lanes = vec![budget / slots.len(); slots.len()];
+        for lane in lanes.iter_mut().take(budget % slots.len()) {
+            *lane += 1;
+        }
+        return lanes;
+    }
+    // Reserve one lane per slot, split the rest by largest remainder.
+    let spare = (budget - slots.len()) as f64;
+    let raw: Vec<f64> = weights.iter().map(|w| spare * w / total).collect();
+    let mut lanes: Vec<usize> = raw.iter().map(|r| 1 + r.floor() as usize)
+        .collect();
+    let mut remaining = budget - lanes.iter().sum::<usize>();
+    let mut order: Vec<usize> = (0..slots.len()).collect();
+    order.sort_by(|&a, &b| {
+        let fa = raw[a] - raw[a].floor();
+        let fb = raw[b] - raw[b].floor();
+        fb.partial_cmp(&fa).unwrap().then(a.cmp(&b))
+    });
+    for &i in order.iter().cycle().take(slots.len() * 2) {
+        if remaining == 0 {
+            break;
+        }
+        lanes[i] += 1;
+        remaining -= 1;
+    }
+    lanes
 }
 
 impl Deployment {
@@ -193,19 +398,25 @@ impl Deployment {
         let slots = SloClass::ALL
             .iter()
             .map(|&class| {
-                let e = select_for_class(entries, class,
-                                         policy.accuracy_floor);
                 let (batch, seq) = class.shape();
-                Slot {
+                let e = select_for_class(entries, class,
+                                         policy.accuracy_floor, seq,
+                                         policy.deadline_ms(class))
+                    .ok_or_else(|| anyhow::anyhow!(
+                        "no front entry within the accuracy floor {:.2} \
+                         for class {}", policy.accuracy_floor,
+                        class.name()))?;
+                Ok(Slot {
                     class,
                     config: e.config,
                     objectives: e.objectives,
                     batch,
                     seq,
                     deadline_ms: policy.deadline_ms(class),
-                }
+                    lanes: 1,
+                })
             })
-            .collect();
+            .collect::<anyhow::Result<Vec<Slot>>>()?;
         Ok(Deployment {
             slots,
             policy: *policy,
@@ -230,6 +441,7 @@ impl Deployment {
                 batch,
                 seq,
                 deadline_ms: policy.deadline_ms(SloClass::Batch),
+                lanes: 1,
             }],
             policy: *policy,
             model: model.clone(),
@@ -239,8 +451,92 @@ impl Deployment {
         }
     }
 
+    /// Apply a per-slot lane plan (see [`lane_plan`]); extra entries
+    /// are ignored, missing ones leave the slot at its current lanes.
+    pub fn with_lane_plan(mut self, lanes: &[usize]) -> Deployment {
+        for (slot, &n) in self.slots.iter_mut().zip(lanes) {
+            slot.lanes = n.max(1);
+        }
+        self
+    }
+
+    /// Hot-swap the slot configurations from an updated Pareto front,
+    /// in place: every slot re-selects its class's best eligible entry
+    /// under the deployment's existing policy, and a [`RedeployPlan`]
+    /// (when given) re-provisions lanes and the long-context sequence
+    /// length to the observed workload at the same time.  The
+    /// deployment object itself survives — queued requests are the
+    /// serving side's business ([`EpochFleet::redeploy`] carries them
+    /// over without loss).
+    pub fn refresh_from_front(&mut self, archive: &ParetoArchive,
+                              plan: Option<&RedeployPlan>)
+                              -> anyhow::Result<()> {
+        let entries = archive.entries();
+        anyhow::ensure!(!entries.is_empty(),
+                        "cannot refresh from an empty Pareto front");
+        anyhow::ensure!(!self.static_single,
+                        "a static deployment does not track fronts");
+        for (i, slot) in self.slots.iter_mut().enumerate() {
+            if let Some(p) = plan {
+                if slot.class == SloClass::LongContext {
+                    // Shape re-provision *before* selection, so the
+                    // entry is chosen for the shape it will serve.
+                    slot.seq = p.long_seq;
+                }
+                if let Some(&n) = p.lanes.get(i) {
+                    slot.lanes = n.max(1);
+                }
+            }
+            let e = select_for_class(entries, slot.class,
+                                     self.policy.accuracy_floor,
+                                     slot.seq, slot.deadline_ms)
+                .ok_or_else(|| anyhow::anyhow!(
+                    "no front entry within the accuracy floor {:.2} for \
+                     class {}", self.policy.accuracy_floor,
+                    slot.class.name()))?;
+            slot.config = e.config;
+            slot.objectives = e.objectives;
+        }
+        Ok(())
+    }
+
     pub fn slots(&self) -> &[Slot] {
         &self.slots
+    }
+
+    /// Which slot a request of class `slo` routes to.
+    fn route_index(&self, slo: SloClass) -> usize {
+        if self.static_single {
+            0
+        } else {
+            self.slots.iter().position(|s| s.class == slo).unwrap_or(0)
+        }
+    }
+
+    /// Instantiate slot `i` as a simulated server (shared by the
+    /// one-shot [`serve`](Self::serve) path and the epoch-based
+    /// [`EpochFleet`]).
+    fn make_server(&self, i: usize, seed: u64, par: Parallelism)
+                   -> Server<SimulatedBackend, VirtualClock> {
+        let slot = &self.slots[i];
+        let backend = SimulatedBackend::for_config(
+            slot.class.name(), &slot.config, &self.model, &self.task,
+            &self.platform, slot.batch, slot.seq,
+            seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        // A static deployment serves interactive traffic too, so it
+        // batches at the *tightest* (interactive) delay — the strongest
+        // static configuration, not a strawman.
+        let delay_base = if self.static_single {
+            self.policy.interactive_deadline_ms
+        } else {
+            slot.deadline_ms
+        };
+        Server::simulated(backend, slot.class.name())
+            .expect("slot variant just registered")
+            .with_policy(self.policy)
+            .with_max_delay_ms(BATCH_DELAY_FRAC * delay_base)
+            .with_lanes(slot.lanes)
+            .with_parallelism(par)
     }
 
     pub fn policy(&self) -> &SloPolicy {
@@ -274,40 +570,11 @@ impl Deployment {
     /// aggregate per-slot + overall statistics.
     pub fn serve(&self, requests: &[Request], scenario: &str, seed: u64,
                  par: Parallelism) -> DeploymentReport {
-        let mut servers: Vec<_> = self
-            .slots
-            .iter()
-            .enumerate()
-            .map(|(i, slot)| {
-                let backend = SimulatedBackend::for_config(
-                    slot.class.name(), &slot.config, &self.model,
-                    &self.task, &self.platform, slot.batch, slot.seq,
-                    seed ^ (i as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
-                // A static deployment serves interactive traffic too,
-                // so it batches at the *tightest* (interactive) delay —
-                // the strongest static configuration, not a strawman.
-                let delay_base = if self.static_single {
-                    self.policy.interactive_deadline_ms
-                } else {
-                    slot.deadline_ms
-                };
-                Server::simulated(backend, slot.class.name())
-                    .expect("slot variant just registered")
-                    .with_policy(self.policy)
-                    .with_max_delay_ms(BATCH_DELAY_FRAC * delay_base)
-                    .with_parallelism(par)
-            })
+        let mut servers: Vec<_> = (0..self.slots.len())
+            .map(|i| self.make_server(i, seed, par))
             .collect();
         for r in requests {
-            let i = if self.static_single {
-                0
-            } else {
-                self.slots
-                    .iter()
-                    .position(|s| s.class == r.slo)
-                    .unwrap_or(0)
-            };
-            servers[i].submit(r.clone());
+            servers[self.route_index(r.slo)].submit(r.clone());
         }
         for s in &mut servers {
             s.drain().expect("simulated backend is infallible");
@@ -399,6 +666,11 @@ impl DeploymentReport {
                 m.insert("class".into(), Json::Str(s.class.name().into()));
                 m.insert("signature".into(),
                          Json::Str(s.config.signature()));
+                // `lanes` is deliberately NOT serialized here: the
+                // deploy-report/v1 shape predates lane provisioning
+                // and stays byte-compatible (on the one-shot serve
+                // path lanes is always 1); the adaptation report
+                // carries the per-epoch lane plan instead.
                 m.insert("batch".into(), Json::Num(s.batch as f64));
                 m.insert("seq".into(), Json::Num(s.seq as f64));
                 m.insert("deadline_ms".into(), Json::Num(s.deadline_ms));
@@ -413,6 +685,224 @@ impl DeploymentReport {
         root.insert("per_slot".into(), Json::Obj(per));
         root.insert("overall".into(), self.overall.to_json());
         Json::Obj(root)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// EpochFleet: the persistent, hot-swappable serving loop
+// ---------------------------------------------------------------------------
+
+/// What one [`EpochFleet::serve_epoch`] call produced.
+#[derive(Clone, Debug)]
+pub struct EpochOutcome {
+    /// Serve statistics over exactly this epoch's completions.
+    pub report: ServeReport,
+    /// The telemetry record the drift detector consumes.
+    pub telemetry: EpochTelemetry,
+}
+
+/// The serving side of the adaptation controller (DESIGN.md §12):
+/// a [`Deployment`]'s servers kept alive *across* epochs, with
+/// per-epoch telemetry extraction and a hot-swap path
+/// ([`redeploy`](Self::redeploy)) that replaces the fleet without
+/// dropping queued requests — anything submitted but not yet completed
+/// is carried into the new servers with its original arrival timestamp
+/// and deadline.  The epoch controller drains every slot before it
+/// decides to swap, so on that path the carry-over set is empty by
+/// construction; the machinery is the safety net that makes the
+/// no-drop guarantee hold for *any* swap point (mid-epoch swaps, error
+/// paths that requeued items, callers driving `submit`/`redeploy`
+/// directly), and the unit tests exercise it in exactly that mode.
+pub struct EpochFleet {
+    deployment: Deployment,
+    servers: Vec<Server<SimulatedBackend, VirtualClock>>,
+    seed: u64,
+    par: Parallelism,
+    /// Submitted-but-not-completed requests, by id (the carry-over set
+    /// a redeploy must not lose).
+    in_flight: BTreeMap<u64, Request>,
+    // Per-server high-water marks delimiting the current epoch.
+    comp_mark: Vec<usize>,
+    exec_mark: Vec<usize>,
+    arr_mark: Vec<usize>,
+    energy_mark: Vec<f64>,
+    // Whole-run accumulation (survives redeploys).
+    all_completions: Vec<Completion>,
+    all_exec: Vec<f64>,
+    total_energy_j: f64,
+    total_tokens: usize,
+    first_arrival_ms: f64,
+    last_done_ms: f64,
+    redeployments: usize,
+}
+
+impl EpochFleet {
+    pub fn new(deployment: Deployment, seed: u64, par: Parallelism)
+               -> EpochFleet {
+        let servers = (0..deployment.slots().len())
+            .map(|i| deployment.make_server(i, seed, par))
+            .collect::<Vec<_>>();
+        let n = servers.len();
+        EpochFleet {
+            deployment,
+            servers,
+            seed,
+            par,
+            in_flight: BTreeMap::new(),
+            comp_mark: vec![0; n],
+            exec_mark: vec![0; n],
+            arr_mark: vec![0; n],
+            energy_mark: vec![0.0; n],
+            all_completions: Vec::new(),
+            all_exec: Vec::new(),
+            total_energy_j: 0.0,
+            total_tokens: 0,
+            first_arrival_ms: f64::INFINITY,
+            last_done_ms: 0.0,
+            redeployments: 0,
+        }
+    }
+
+    pub fn deployment(&self) -> &Deployment {
+        &self.deployment
+    }
+
+    pub fn redeployments(&self) -> usize {
+        self.redeployments
+    }
+
+    /// Requests submitted but not yet completed.
+    pub fn pending(&self) -> usize {
+        self.in_flight.len()
+    }
+
+    /// Route and enqueue one request (tracked until its completion is
+    /// accounted, so a redeploy can carry it).
+    pub fn submit(&mut self, r: Request) {
+        let i = self.deployment.route_index(r.slo);
+        self.in_flight.insert(r.id, r.clone());
+        self.servers[i].submit(r);
+    }
+
+    /// Serve one epoch: submit the epoch's requests, drain every slot,
+    /// and distill the telemetry + serve stats of exactly this epoch.
+    pub fn serve_epoch(&mut self, epoch: usize, requests: &[Request])
+                       -> EpochOutcome {
+        for r in requests {
+            self.submit(r.clone());
+        }
+        for s in &mut self.servers {
+            s.drain().expect("simulated backend is infallible");
+        }
+
+        // Collect this epoch's deltas, per server in slot order.
+        let mut arrivals: Vec<Arrival> = Vec::new();
+        let mut completions: Vec<Completion> = Vec::new();
+        let mut exec: Vec<f64> = Vec::new();
+        let mut energy = 0.0;
+        let mut tokens = 0usize;
+        for (i, s) in self.servers.iter().enumerate() {
+            arrivals.extend_from_slice(&s.arrivals()[self.arr_mark[i]..]);
+            let fresh = &s.completions()[self.comp_mark[i]..];
+            completions.extend_from_slice(fresh);
+            tokens += fresh.len() * s.seq_len();
+            exec.extend_from_slice(&s.batch_exec_ms()[self.exec_mark[i]..]);
+            energy += s.energy_j() - self.energy_mark[i];
+            self.arr_mark[i] = s.arrivals().len();
+            self.comp_mark[i] = s.completions().len();
+            self.exec_mark[i] = s.batch_exec_ms().len();
+            self.energy_mark[i] = s.energy_j();
+        }
+        for c in &completions {
+            self.in_flight.remove(&c.id);
+            self.last_done_ms = self.last_done_ms.max(c.done_ms);
+        }
+        // First arrival this epoch accounts for: the arrival log, plus
+        // the implied arrival (done - latency) of completions whose
+        // arrivals were logged in an earlier epoch (requests carried
+        // across a redeploy) — otherwise a carried-only epoch would
+        // have no span and report absurd throughput.
+        let epoch_first = arrivals
+            .iter()
+            .map(|a| a.arrival_ms)
+            .chain(completions.iter().map(|c| c.done_ms - c.latency_ms))
+            .fold(f64::INFINITY, f64::min);
+        if epoch_first.is_finite() {
+            self.first_arrival_ms = self.first_arrival_ms.min(epoch_first);
+        }
+        let epoch_last = completions
+            .iter()
+            .map(|c| c.done_ms)
+            .fold(f64::NEG_INFINITY, f64::max);
+        let span = if completions.is_empty() || !epoch_first.is_finite() {
+            None
+        } else {
+            Some((epoch_first, epoch_last))
+        };
+        let report = ServeReport::from_completions(
+            &completions, exec.len(), &exec, energy, span, tokens);
+        let telemetry = EpochTelemetry::from_epoch(
+            epoch, &arrivals, &completions, energy);
+        self.all_completions.extend(completions);
+        self.all_exec.extend(exec);
+        self.total_energy_j += energy;
+        self.total_tokens += tokens;
+        EpochOutcome { report, telemetry }
+    }
+
+    /// Hot-swap the fleet onto `deployment`: fresh servers (typically
+    /// refreshed via [`Deployment::refresh_from_front`]), with every
+    /// pending request resubmitted in arrival order — original arrival
+    /// timestamps, so waiting time keeps counting against the deadline;
+    /// nothing queued is dropped.  The resubmissions are excluded from
+    /// the next epoch's arrival telemetry (they already counted once).
+    pub fn redeploy(&mut self, deployment: Deployment) {
+        self.deployment = deployment;
+        let servers: Vec<_> = (0..self.deployment.slots().len())
+            .map(|i| self.deployment.make_server(i, self.seed, self.par))
+            .collect();
+        self.servers = servers;
+        let n = self.servers.len();
+        self.comp_mark = vec![0; n];
+        self.exec_mark = vec![0; n];
+        self.arr_mark = vec![0; n];
+        self.energy_mark = vec![0.0; n];
+        self.redeployments += 1;
+        let mut pending: Vec<Request> =
+            self.in_flight.values().cloned().collect();
+        pending.sort_by(|a, b| {
+            a.arrival_ms
+                .partial_cmp(&b.arrival_ms)
+                .unwrap()
+                .then(a.id.cmp(&b.id))
+        });
+        for r in pending {
+            let i = self.deployment.route_index(r.slo);
+            self.servers[i].submit(r);
+        }
+        // Carried requests are not new arrivals.
+        for (i, s) in self.servers.iter().enumerate() {
+            self.arr_mark[i] = s.arrivals().len();
+        }
+    }
+
+    /// Whole-run serve statistics across every epoch and redeploy.
+    pub fn overall_report(&self) -> ServeReport {
+        let span = if self.all_completions.is_empty()
+            || !self.first_arrival_ms.is_finite()
+        {
+            None
+        } else {
+            Some((self.first_arrival_ms, self.last_done_ms))
+        };
+        ServeReport::from_completions(
+            &self.all_completions,
+            self.all_exec.len(),
+            &self.all_exec,
+            self.total_energy_j,
+            span,
+            self.total_tokens,
+        )
     }
 }
 
@@ -529,6 +1019,180 @@ mod tests {
         let j = a.to_json();
         assert_eq!(j.get("schema").and_then(Json::as_str),
                    Some(DEPLOY_REPORT_SCHEMA));
+    }
+
+    #[test]
+    fn lane_plan_follows_offered_load() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let d = Deployment::from_front(&specialist_front(),
+                                       &SloPolicy::default(), &m,
+                                       &blended_task(), &hardware::a100())
+            .unwrap();
+        // chat-heavy mix: interactive gets the lanes, everyone keeps >= 1
+        let chat = lane_plan(&[0.80, 0.17, 0.03], d.slots(), 6);
+        assert_eq!(chat.iter().sum::<usize>(), 6);
+        assert!(chat.iter().all(|&l| l >= 1), "{chat:?}");
+        // long-heavy mix: the expensive long-context shape dominates
+        let long = lane_plan(&[0.25, 0.15, 0.60], d.slots(), 6);
+        assert_eq!(long.iter().sum::<usize>(), 6);
+        assert!(long[2] > chat[2],
+                "long-context lanes must grow: {chat:?} -> {long:?}");
+        assert!(long[2] >= 3, "{long:?}");
+        // no traffic at all: still a valid plan
+        let idle = lane_plan(&[0.0, 0.0, 0.0], d.slots(), 6);
+        assert_eq!(idle.iter().sum::<usize>(), 6);
+    }
+
+    #[test]
+    fn provisioned_seq_climbs_the_ladder() {
+        assert_eq!(provisioned_seq(0), 2048);
+        assert_eq!(provisioned_seq(1900), 2048);
+        assert_eq!(provisioned_seq(2048), 2048);
+        assert_eq!(provisioned_seq(2049), 4096);
+        assert_eq!(provisioned_seq(2900), 4096);
+        assert_eq!(provisioned_seq(100_000), 8192);
+    }
+
+    #[test]
+    fn refresh_from_front_reslots_in_place() {
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = blended_task();
+        let mut d = Deployment::from_front(&specialist_front(),
+                                           &SloPolicy::default(), &m, &t,
+                                           &hardware::a100())
+            .unwrap();
+        assert_eq!(
+            d.slots()[0].objectives.latency_ms, 12.0,
+            "interactive slot starts on the front's fastest entry");
+        // A new front with a strictly better fast entry appears.
+        let mut front = specialist_front();
+        front.insert(cfg(9), obj(68.4, 8.0, 9.5, 0.58));
+        let plan = RedeployPlan { lanes: vec![2, 1, 3], long_seq: 4096 };
+        d.refresh_from_front(&front, Some(&plan)).unwrap();
+        assert_eq!(d.slots()[0].objectives.latency_ms, 8.0);
+        assert_eq!(d.slots()[0].lanes, 2);
+        assert_eq!(d.slots()[2].lanes, 3);
+        // the long-context shape re-provisions; others survive
+        assert_eq!(d.slots()[2].seq, 4096);
+        assert_eq!(d.slots()[0].seq, 256);
+        // empty and static refusals
+        assert!(d.refresh_from_front(&ParetoArchive::new(2), None).is_err());
+        let mut stat = Deployment::static_single(
+            &front.entries()[0], &SloPolicy::default(), &m, &t,
+            &hardware::a100());
+        assert!(stat.refresh_from_front(&front, None).is_err());
+    }
+
+    #[test]
+    fn infeasible_class_flags_impossible_policies() {
+        let front = specialist_front();
+        // the default policy is comfortably feasible on this front
+        assert!(infeasible_class(&front, &SloPolicy::default()).is_none());
+        // a sub-millisecond interactive deadline cannot be met by any
+        // entry: typed infeasibility, naming the class
+        let tight = SloPolicy { interactive_deadline_ms: 0.5,
+                                ..SloPolicy::default() };
+        let (class, reason) = infeasible_class(&front, &tight).unwrap();
+        assert_eq!(class, SloClass::Interactive);
+        assert!(reason.contains("deadline"), "{reason}");
+        // a floor above 1.0 excludes every entry
+        let absurd = SloPolicy { accuracy_floor: 1.5,
+                                 ..SloPolicy::default() };
+        let (_, reason) = infeasible_class(&front, &absurd).unwrap();
+        assert!(reason.contains("accuracy floor"), "{reason}");
+        // shape-aware pricing: a deadline the front meets at the
+        // default 2048 long shape but not at a 4096 re-provision —
+        // exec scales by (seq/512)^0.85, fastest entry lat 12:
+        // 4.06x12=48.7 fits a 60 ms deadline, 7.32x12=87.9 does not
+        let narrow = SloPolicy { long_deadline_ms: 60.0,
+                                 ..SloPolicy::default() };
+        assert!(infeasible_class(&front, &narrow).is_none());
+        let (class, reason) =
+            infeasible_class_at(&front, &narrow, 4096).unwrap();
+        assert_eq!(class, SloClass::LongContext);
+        assert!(reason.contains("4096"), "{reason}");
+    }
+
+    #[test]
+    fn epoch_fleet_accounts_epochs_exactly_once() {
+        let front = specialist_front();
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = blended_task();
+        let d = Deployment::from_front(&front, &SloPolicy::default(), &m,
+                                       &t, &hardware::a100()).unwrap();
+        let reqs: Vec<Request> = (0..60u64)
+            .map(|i| {
+                Request::new(i, vec![(i as i32) % 11; 64])
+                    .at(i as f64 * 10.0)
+                    .class(SloClass::ALL[(i % 3) as usize])
+            })
+            .collect();
+        let mut fleet =
+            EpochFleet::new(d.clone(), 5, Parallelism::Sequential);
+        let e0 = fleet.serve_epoch(0, &reqs[..30]);
+        let e1 = fleet.serve_epoch(1, &reqs[30..]);
+        assert_eq!(fleet.pending(), 0);
+        // every request accounted exactly once, in its own epoch
+        assert_eq!(e0.report.completed, 30);
+        assert_eq!(e1.report.completed, 30);
+        assert_eq!(e0.telemetry.requests, 30);
+        assert_eq!(e1.telemetry.epoch, 1);
+        assert!(e0.telemetry.rate_rps > 0.0);
+        // whole-run totals are the sum of the epoch views
+        let overall = fleet.overall_report();
+        assert_eq!(overall.completed, 60);
+        assert_eq!(overall.slo_violations,
+                   e0.report.slo_violations + e1.report.slo_violations);
+        assert!((overall.energy_j
+                     - (e0.report.energy_j + e1.report.energy_j)).abs()
+                    < 1e-9);
+        assert_eq!(overall.batches, e0.report.batches + e1.report.batches);
+        // the run is deterministic: a second identical fleet agrees
+        let mut again =
+            EpochFleet::new(d, 5, Parallelism::Sequential);
+        again.serve_epoch(0, &reqs[..30]);
+        again.serve_epoch(1, &reqs[30..]);
+        assert_eq!(again.overall_report(), overall);
+    }
+
+    #[test]
+    fn redeploy_carries_queued_requests_without_loss() {
+        let front = specialist_front();
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = blended_task();
+        let d = Deployment::from_front(&front, &SloPolicy::default(), &m,
+                                       &t, &hardware::a100()).unwrap();
+        let mut fleet =
+            EpochFleet::new(d.clone(), 3, Parallelism::Sequential);
+        // Submit without draining: these are queued when the swap hits.
+        for i in 0..9u64 {
+            fleet.submit(Request::new(i, vec![1; 700])
+                .at(i as f64 * 5.0)
+                .class(SloClass::ALL[(i % 3) as usize]));
+        }
+        assert_eq!(fleet.pending(), 9);
+        let mut refreshed = d.clone();
+        let plan = RedeployPlan { lanes: vec![1, 1, 2], long_seq: 2048 };
+        refreshed.refresh_from_front(&front, Some(&plan)).unwrap();
+        fleet.redeploy(refreshed);
+        assert_eq!(fleet.pending(), 9, "hot swap dropped queued requests");
+        assert_eq!(fleet.redeployments(), 1);
+        let out = fleet.serve_epoch(0, &[]);
+        assert_eq!(out.report.completed, 9,
+                   "carried requests must complete after the swap");
+        assert_eq!(fleet.pending(), 0);
+        // carried requests do not recount as arrivals...
+        assert_eq!(out.telemetry.requests, 0);
+        // ...but their span is still accounted (implied arrivals), so
+        // throughput stays sane instead of dividing by a zero makespan
+        assert!(out.report.makespan_ms > 0.0,
+                "carried-only epoch lost its span");
+        assert!(out.report.throughput_rps < 1e4,
+                "absurd throughput {}", out.report.throughput_rps);
+        // every id accounted exactly once across the swap
+        let overall = fleet.overall_report();
+        assert_eq!(overall.completed, 9);
+        assert!(overall.makespan_ms > 0.0);
     }
 
     #[test]

@@ -11,13 +11,19 @@
 //! * [`batcher`] — size/deadline-triggered dynamic batch formation;
 //! * [`serve`] — the backend-generic request scheduler;
 //! * [`fleet`] — Pareto-front deployments: SLO classes, per-class
-//!   routing, the adaptive-vs-static comparison;
+//!   routing, lane provisioning, the adaptive-vs-static comparison,
+//!   and the epoch-based [`fleet::EpochFleet`] the adaptation
+//!   controller serves through;
 //! * [`workload`] — seeded traffic generators for the deployment
-//!   scenarios (steady / diurnal / bursty / heavytail).
+//!   scenarios (steady / diurnal / bursty / heavytail, plus the
+//!   drifting regime_shift / ramp);
+//! * [`drift`] — per-epoch serving telemetry and the EWMA drift
+//!   detector that triggers re-search (DESIGN.md §12).
 
 pub mod backend;
 pub mod batcher;
 pub mod clock;
+pub mod drift;
 pub mod engine;
 pub mod fleet;
 pub mod manifest;
@@ -28,10 +34,12 @@ pub mod workload;
 pub use backend::{BatchResult, BatchShape, ExecBackend, PjrtBackend,
                   SimulatedBackend};
 pub use clock::{Clock, VirtualClock, WallClock};
+pub use drift::{DriftDecision, DriftDetector, EpochTelemetry};
 pub use engine::{Engine, Forward};
-pub use fleet::{Deployment, DeploymentReport, SloClass, SloPolicy};
+pub use fleet::{Deployment, DeploymentReport, EpochFleet, EpochOutcome,
+                RedeployPlan, SloClass, SloPolicy};
 pub use manifest::{artifacts_dir, Manifest, Variant};
 pub use measure::{measure_all, measure_all_with, MeasuredEvaluator,
                   MeasurementTable};
-pub use serve::{Completion, Request, ServeReport, Server};
+pub use serve::{Arrival, Completion, Request, ServeReport, Server};
 pub use workload::{Workload, WorkloadKind};

@@ -199,6 +199,18 @@ impl ServeReport {
     }
 }
 
+/// Arrival-side observation recorded at submit time — the serving
+/// telemetry hook (DESIGN.md §12).  Captures the *raw* prompt length
+/// (before padding/truncation), so epoch telemetry sees the workload
+/// shape the clients actually sent, not what the serve shape kept.
+#[derive(Clone, Copy, Debug)]
+pub struct Arrival {
+    pub slo: SloClass,
+    /// Raw prompt length in tokens, pre-pad/truncate.
+    pub len: usize,
+    pub arrival_ms: f64,
+}
+
 /// A padded, deadline-stamped queue entry.
 #[derive(Clone, Debug)]
 struct Item {
@@ -218,6 +230,8 @@ pub struct Server<B: ExecBackend, C: Clock> {
     shape: BatchShape,
     batcher: Batcher<Item>,
     policy: SloPolicy,
+    /// Arrival log (telemetry hook); one record per submitted request.
+    arrivals: Vec<Arrival>,
     completions: Vec<Completion>,
     batch_exec_ms: Vec<f64>,
     energy_j: f64,
@@ -267,6 +281,7 @@ impl<B: ExecBackend, C: Clock> Server<B, C> {
             batcher: Batcher::new(shape.batch, f64::INFINITY),
             shape,
             policy: SloPolicy::default(),
+            arrivals: Vec::new(),
             completions: Vec::new(),
             batch_exec_ms: Vec::new(),
             energy_j: 0.0,
@@ -319,6 +334,11 @@ impl<B: ExecBackend, C: Clock> Server<B, C> {
     /// the clock) and the SLO deadline.
     pub fn submit(&mut self, r: Request) {
         let arrival = self.clock.now_ms().max(r.arrival_ms);
+        self.arrivals.push(Arrival {
+            slo: r.slo,
+            len: r.tokens.len(),
+            arrival_ms: arrival,
+        });
         let (tokens, truncated) =
             pad_tokens(&r.tokens, self.shape.seq, self.shape.vocab);
         let deadline_ms = arrival + self.policy.deadline_ms(r.slo);
@@ -424,6 +444,11 @@ impl<B: ExecBackend, C: Clock> Server<B, C> {
 
     pub fn completions(&self) -> &[Completion] {
         &self.completions
+    }
+
+    /// Arrival observations, in submission order (telemetry hook).
+    pub fn arrivals(&self) -> &[Arrival] {
+        &self.arrivals
     }
 
     /// Per-batch execution times, in batch-index order.

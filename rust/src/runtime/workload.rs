@@ -1,14 +1,26 @@
 //! Seeded workload generators: the paper's "deployment scenarios" as
-//! traffic, not just preference weights (DESIGN.md §11).
+//! traffic, not just preference weights (DESIGN.md §11, §12).
 //!
-//! Four scenario shapes, each emitting timestamped, SLO-tagged
-//! [`Request`]s from a single seed:
+//! Six scenario shapes, each emitting timestamped, SLO-tagged
+//! [`Request`]s from a single seed.  Four are *stationary* (their
+//! statistics do not change over the run):
 //!
 //! * **steady** — homogeneous Poisson arrivals, chat-heavy mix;
 //! * **diurnal** — sinusoidally modulated rate (the day/night wave);
 //! * **bursty** — Poisson base load with multiplicative arrival spikes;
 //! * **heavytail** — long-context-heavy mix with Pareto-distributed
 //!   prompt lengths (the document-analytics workload).
+//!
+//! Two are *drifting* — class mix, arrival rate and prompt lengths
+//! change mid-run, which is what gives the adaptation controller
+//! (DESIGN.md §12) something real to win on:
+//!
+//! * **regime_shift** — an abrupt change at the half-way point, from a
+//!   chat-heavy regime to a 3× hotter, long-context-heavy one whose
+//!   documents outgrow the default 2048 serve shape (the "product
+//!   launch" scenario);
+//! * **ramp** — the same transition as a continuous drift (the
+//!   "gradual adoption" scenario).
 //!
 //! Every scenario mixes all three [`SloClass`]es (in different
 //! proportions) because that is what makes routing interesting:
@@ -29,15 +41,51 @@ pub enum WorkloadKind {
     Diurnal,
     Bursty,
     HeavyTail,
+    /// Abrupt mid-run regime change: chat-heavy → hot, long-heavy.
+    RegimeShift,
+    /// The same transition as a continuous ramp.
+    Ramp,
+}
+
+/// Drifting-mix endpoints: the chat-heavy starting regime and the hot,
+/// long-context-heavy regime the drifting scenarios move toward.
+const DRIFT_MIX_FROM: [f64; 3] = [0.80, 0.17, 0.03];
+const DRIFT_MIX_TO: [f64; 3] = [0.25, 0.15, 0.60];
+/// Arrival-rate multiplier of the hot regime.  3× is what makes the
+/// drift *structural*: the long-context compute load of the hot regime
+/// exceeds the lane capacity any chat-era provisioning assigns to the
+/// long slot, so a deployment that never re-provisions must saturate.
+const DRIFT_RATE_TO: f64 = 3.0;
+
+/// The ramp reaches the hot regime at 70% of the stream and plateaus,
+/// so the fully-hot phase lasts whole epochs rather than one instant.
+fn ramp_ease(progress: f64) -> f64 {
+    (progress / 0.7).clamp(0.0, 1.0)
 }
 
 impl WorkloadKind {
-    pub const ALL: [WorkloadKind; 4] = [
+    pub const ALL: [WorkloadKind; 6] = [
+        WorkloadKind::Steady,
+        WorkloadKind::Diurnal,
+        WorkloadKind::Bursty,
+        WorkloadKind::HeavyTail,
+        WorkloadKind::RegimeShift,
+        WorkloadKind::Ramp,
+    ];
+
+    /// The stationary scenarios (the adaptive-vs-static serving table
+    /// and its acceptance tests sweep exactly these four).
+    pub const STATIONARY: [WorkloadKind; 4] = [
         WorkloadKind::Steady,
         WorkloadKind::Diurnal,
         WorkloadKind::Bursty,
         WorkloadKind::HeavyTail,
     ];
+
+    /// The drifting scenarios (what the adaptation controller is
+    /// measured on).
+    pub const DRIFTING: [WorkloadKind; 2] =
+        [WorkloadKind::RegimeShift, WorkloadKind::Ramp];
 
     pub fn name(self) -> &'static str {
         match self {
@@ -45,6 +93,8 @@ impl WorkloadKind {
             WorkloadKind::Diurnal => "diurnal",
             WorkloadKind::Bursty => "bursty",
             WorkloadKind::HeavyTail => "heavytail",
+            WorkloadKind::RegimeShift => "regime_shift",
+            WorkloadKind::Ramp => "ramp",
         }
     }
 
@@ -54,17 +104,52 @@ impl WorkloadKind {
             "diurnal" => WorkloadKind::Diurnal,
             "bursty" => WorkloadKind::Bursty,
             "heavytail" | "heavy-tail" => WorkloadKind::HeavyTail,
+            "regime_shift" | "regime-shift" => WorkloadKind::RegimeShift,
+            "ramp" => WorkloadKind::Ramp,
             _ => return None,
         })
     }
 
-    /// SLO-class mix (interactive, batch, long-context); sums to 1.
-    fn mix(self) -> [f64; 3] {
+    pub fn is_drifting(self) -> bool {
+        matches!(self, WorkloadKind::RegimeShift | WorkloadKind::Ramp)
+    }
+
+    /// SLO-class mix (interactive, batch, long-context) at `progress`
+    /// ∈ [0, 1] through the request stream; sums to 1.  Stationary
+    /// scenarios ignore `progress`.
+    pub fn mix_at(self, progress: f64) -> [f64; 3] {
         match self {
             WorkloadKind::Steady => [0.70, 0.25, 0.05],
             WorkloadKind::Diurnal => [0.60, 0.30, 0.10],
             WorkloadKind::Bursty => [0.75, 0.18, 0.07],
             WorkloadKind::HeavyTail => [0.45, 0.25, 0.30],
+            WorkloadKind::RegimeShift => {
+                if progress < 0.5 { DRIFT_MIX_FROM } else { DRIFT_MIX_TO }
+            }
+            WorkloadKind::Ramp => {
+                let q = ramp_ease(progress);
+                let mut m = [0.0; 3];
+                for i in 0..3 {
+                    m[i] = DRIFT_MIX_FROM[i]
+                        + q * (DRIFT_MIX_TO[i] - DRIFT_MIX_FROM[i]);
+                }
+                m
+            }
+        }
+    }
+
+    /// Arrival-rate multiplier at `progress` (1.0 for every stationary
+    /// scenario; their modulation — diurnal wave, bursts — stays inside
+    /// [`Workload::generate`] because it is stochastic, not a drift).
+    fn rate_mult_at(self, progress: f64) -> f64 {
+        match self {
+            WorkloadKind::RegimeShift => {
+                if progress < 0.5 { 1.0 } else { DRIFT_RATE_TO }
+            }
+            WorkloadKind::Ramp => {
+                1.0 + ramp_ease(progress) * (DRIFT_RATE_TO - 1.0)
+            }
+            _ => 1.0,
         }
     }
 }
@@ -99,10 +184,13 @@ impl Workload {
     }
 
     /// Generate the request stream.  Pure function of the fields: the
-    /// same workload always produces byte-identical traffic.
+    /// same workload always produces byte-identical traffic.  For the
+    /// drifting scenarios the class mix, arrival rate and long-context
+    /// prompt lengths are functions of the request's *progress* through
+    /// the stream (id / requests), so slicing the stream into epochs
+    /// hands the adaptation controller a genuinely moving target.
     pub fn generate(&self) -> Vec<Request> {
         let mut rng = Rng::new(self.seed ^ 0x5e41_11e5_4ea7_71c0);
-        let mix = self.kind.mix();
         let rate_per_ms = self.rate_rps.max(1e-9) / 1e3;
         // Diurnal wave period: ~3 waves across the expected horizon.
         let horizon_ms = self.requests as f64 / rate_per_ms;
@@ -112,7 +200,9 @@ impl Workload {
         let mut t_ms = 0.0f64;
         let mut burst_left = 0usize;
         for id in 0..self.requests as u64 {
-            let mut rate = rate_per_ms;
+            let progress = id as f64 / self.requests.max(1) as f64;
+            let mix = self.kind.mix_at(progress);
+            let mut rate = rate_per_ms * self.kind.rate_mult_at(progress);
             match self.kind {
                 WorkloadKind::Diurnal => {
                     let phase = std::f64::consts::TAU * t_ms / period_ms;
@@ -127,7 +217,10 @@ impl Workload {
                         rate *= BURST_FACTOR;
                     }
                 }
-                WorkloadKind::Steady | WorkloadKind::HeavyTail => {}
+                WorkloadKind::Steady
+                | WorkloadKind::HeavyTail
+                | WorkloadKind::RegimeShift
+                | WorkloadKind::Ramp => {}
             }
             // Exponential inter-arrival gap at the momentary rate.
             let u = rng.f64().max(1e-12);
@@ -143,7 +236,7 @@ impl Workload {
                     SloClass::LongContext
                 }
             };
-            let len = self.prompt_len(class, &mut rng);
+            let len = self.prompt_len(class, progress, &mut rng);
             let tokens: Vec<i32> =
                 (0..len).map(|_| rng.below(256) as i32).collect();
             out.push(Request::new(id, tokens).at(t_ms).class(class));
@@ -153,20 +246,42 @@ impl Workload {
 
     /// Prompt length per class; the heavy-tail scenario draws
     /// long-context lengths from a (truncated) Pareto instead of a
-    /// uniform band.
-    fn prompt_len(&self, class: SloClass, rng: &mut Rng) -> usize {
+    /// uniform band.  Stationary long-context lengths stay within
+    /// (512, 2048] — over the static 512 shape, under the long-context
+    /// one — while the drifting scenarios push the hot regime's
+    /// documents past 2048 (but under 4096, the first re-provision
+    /// step): documents get longer, not just more frequent.
+    fn prompt_len(&self, class: SloClass, progress: f64, rng: &mut Rng)
+                  -> usize {
         match class {
             SloClass::Interactive => 8 + rng.below(152),
             SloClass::Batch => 160 + rng.below(320),
-            SloClass::LongContext => {
-                if self.kind == WorkloadKind::HeavyTail {
+            SloClass::LongContext => match self.kind {
+                WorkloadKind::HeavyTail => {
                     let u = rng.f64().max(1e-9);
                     let l = 700.0 * u.powf(-0.35);
                     (l as usize).min(1900)
-                } else {
-                    700 + rng.below(1200)
                 }
-            }
+                // Drifting scenarios: the hot regime's documents grow
+                // *past* the 2048-token long-context serve shape — the
+                // structural reason a deployment that never
+                // re-provisions must truncate (= violate) them, while
+                // the adaptation controller re-scopes the slot's
+                // sequence length from observed telemetry.
+                WorkloadKind::RegimeShift => {
+                    if progress < 0.5 {
+                        700 + rng.below(400)
+                    } else {
+                        2200 + rng.below(700)
+                    }
+                }
+                WorkloadKind::Ramp => {
+                    let base =
+                        700 + (ramp_ease(progress) * 1700.0) as usize;
+                    base + rng.below(500)
+                }
+                _ => 700 + rng.below(1200),
+            },
         }
     }
 }
@@ -225,13 +340,40 @@ mod tests {
 
     #[test]
     fn long_context_prompts_exceed_the_static_shape() {
-        for kind in WorkloadKind::ALL {
+        // Stationary scenarios stay within the 2048 long-context serve
+        // shape (their structural margin is against the *static 512*
+        // shape only).
+        for kind in WorkloadKind::STATIONARY {
             let reqs = gen(kind);
             assert!(reqs.iter()
                         .filter(|r| r.slo == SloClass::LongContext)
                         .all(|r| r.tokens.len() > 512 &&
                                  r.tokens.len() <= 2048),
                     "{kind:?}");
+        }
+        // Drifting scenarios additionally overflow the 2048 shape in
+        // the hot regime — the truncation margin the adaptation
+        // controller wins by — but never the 4096 re-provision.
+        for kind in WorkloadKind::DRIFTING {
+            let reqs = gen(kind);
+            let longs: Vec<usize> = reqs
+                .iter()
+                .filter(|r| r.slo == SloClass::LongContext)
+                .map(|r| r.tokens.len())
+                .collect();
+            assert!(longs.iter().all(|&l| l > 512 && l < 4096),
+                    "{kind:?}");
+            assert!(longs.iter().any(|&l| l > 2048),
+                    "{kind:?}: hot regime never overflows the 2048 \
+                     shape");
+            // the cold half still fits the default provisioning
+            let cold: Vec<usize> = reqs[..reqs.len() / 2]
+                .iter()
+                .filter(|r| r.slo == SloClass::LongContext)
+                .map(|r| r.tokens.len())
+                .collect();
+            assert!(cold.iter().take(5).all(|&l| l <= 2048),
+                    "{kind:?}: cold regime already overflows");
         }
     }
 
@@ -268,6 +410,87 @@ mod tests {
         }
         assert_eq!(WorkloadKind::by_name("heavy-tail"),
                    Some(WorkloadKind::HeavyTail));
+        assert_eq!(WorkloadKind::by_name("regime-shift"),
+                   Some(WorkloadKind::RegimeShift));
         assert!(WorkloadKind::by_name("nope").is_none());
+        assert_eq!(WorkloadKind::STATIONARY.len()
+                       + WorkloadKind::DRIFTING.len(),
+                   WorkloadKind::ALL.len());
+        assert!(WorkloadKind::DRIFTING.iter().all(|k| k.is_drifting()));
+        assert!(WorkloadKind::STATIONARY.iter().all(|k| !k.is_drifting()));
+    }
+
+    /// Per-class share and mean long-context length over a slice.
+    fn shape(rs: &[Request]) -> ([f64; 3], f64) {
+        let n = rs.len() as f64;
+        let mut shares = [0.0; 3];
+        let mut long_len = 0.0;
+        let mut long_n = 0.0;
+        for r in rs {
+            let i = SloClass::ALL.iter().position(|&c| c == r.slo).unwrap();
+            shares[i] += 1.0 / n;
+            if r.slo == SloClass::LongContext {
+                long_len += r.tokens.len() as f64;
+                long_n += 1.0;
+            }
+        }
+        (shares, long_len / long_n.max(1.0))
+    }
+
+    #[test]
+    fn drifting_scenarios_move_mix_rate_and_lengths() {
+        for kind in WorkloadKind::DRIFTING {
+            let reqs = Workload::new(kind, 50.0, 2000, 7).generate();
+            let (first, second) = reqs.split_at(1000);
+            let (s1, len1) = shape(first);
+            let (s2, len2) = shape(second);
+            // class mix moves from chat-heavy toward long-heavy
+            assert!(s2[2] > s1[2] + 0.15,
+                    "{kind:?} long share {:.2} -> {:.2}", s1[2], s2[2]);
+            assert!(s1[0] > s2[0] + 0.15,
+                    "{kind:?} interactive share {:.2} -> {:.2}",
+                    s1[0], s2[0]);
+            // documents get longer, not just more frequent
+            assert!(len2 > len1 + 100.0,
+                    "{kind:?} long length {len1:.0} -> {len2:.0}");
+            // the hot regime arrives faster: the second half spans less
+            // virtual time per request than the first
+            let span = |rs: &[Request]| {
+                rs.last().unwrap().arrival_ms - rs[0].arrival_ms
+            };
+            assert!(span(second) < span(first) * 0.85,
+                    "{kind:?} rate did not increase: {:.0} vs {:.0}",
+                    span(first), span(second));
+        }
+        // stationary control: steady's halves look alike
+        let reqs = Workload::new(WorkloadKind::Steady, 50.0, 2000, 7)
+            .generate();
+        let (first, second) = reqs.split_at(1000);
+        let (s1, _) = shape(first);
+        let (s2, _) = shape(second);
+        for i in 0..3 {
+            assert!((s1[i] - s2[i]).abs() < 0.08,
+                    "steady share {i} moved: {:.2} -> {:.2}", s1[i], s2[i]);
+        }
+    }
+
+    #[test]
+    fn regime_shift_is_abrupt_and_ramp_is_gradual() {
+        let quarters = |kind: WorkloadKind| -> Vec<f64> {
+            let reqs = Workload::new(kind, 50.0, 2000, 3).generate();
+            reqs.chunks(500).map(|c| shape(c).0[2]).collect()
+        };
+        let shift = quarters(WorkloadKind::RegimeShift);
+        // flat before the break, flat after it, one jump between
+        assert!((shift[0] - shift[1]).abs() < 0.06, "{shift:?}");
+        assert!((shift[2] - shift[3]).abs() < 0.08, "{shift:?}");
+        assert!(shift[2] - shift[1] > 0.3, "{shift:?}");
+        let ramp = quarters(WorkloadKind::Ramp);
+        // monotone-ish climb, no single jump as large as the shift's
+        assert!(ramp[3] > ramp[0] + 0.3, "{ramp:?}");
+        for w in ramp.windows(2) {
+            assert!(w[1] > w[0] - 0.05, "not climbing: {ramp:?}");
+            assert!(w[1] - w[0] < 0.3, "ramp jumped: {ramp:?}");
+        }
     }
 }

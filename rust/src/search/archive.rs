@@ -5,7 +5,12 @@
 use crate::config::Config;
 use crate::oracle::Objectives;
 use crate::search::dominance;
+use crate::util::json::Json;
 use crate::util::pool::{self, Parallelism};
+
+/// Schema tag of the serialized front (see
+/// [`ParetoArchive::to_json`]).
+pub const FRONT_SCHEMA: &str = "ae-llm.front/v1";
 
 /// One archived solution.
 #[derive(Clone, Debug)]
@@ -173,6 +178,60 @@ impl ParetoArchive {
             .iter()
             .max_by(|a, b| utility(a).partial_cmp(&utility(b)).unwrap())
     }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Serialize the archive (schema [`FRONT_SCHEMA`]): capacity plus
+    /// the entries in archive order, each as (signature, objectives).
+    /// This is what makes the Pareto front a *persistent* artifact the
+    /// adaptation controller can warm-start re-searches from.
+    pub fn to_json(&self) -> Json {
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("schema".into(), Json::Str(FRONT_SCHEMA.into()));
+        root.insert("capacity".into(), Json::Num(self.capacity as f64));
+        let entries: Vec<Json> = self
+            .entries
+            .iter()
+            .map(|e| {
+                let mut m = std::collections::BTreeMap::new();
+                m.insert("signature".into(), Json::Str(e.config.signature()));
+                m.insert("objectives".into(), e.objectives.to_json());
+                Json::Obj(m)
+            })
+            .collect();
+        root.insert("entries".into(), Json::Arr(entries));
+        Json::Obj(root)
+    }
+
+    /// Parse an archive back from [`to_json`](Self::to_json)'s form
+    /// (schema-checked).  Entries are restored verbatim — same order,
+    /// same objective values — rather than re-inserted, so a round trip
+    /// preserves the archive exactly (a serialized front is already
+    /// mutually non-dominated; re-insertion would only re-derive that).
+    /// Capacity behavior survives too: later insertions truncate by
+    /// crowding at the original capacity.
+    pub fn from_json(j: &Json) -> Result<ParetoArchive, String> {
+        let schema = j.req_str("schema")?;
+        if schema != FRONT_SCHEMA {
+            return Err(format!("unexpected schema {schema:?}"));
+        }
+        let capacity = j.req_u64("capacity")? as usize;
+        let raw = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("missing/invalid entries array")?;
+        let mut entries = Vec::with_capacity(raw.len());
+        for e in raw {
+            let sig = e.req_str("signature")?;
+            let config = Config::from_signature(&sig)?;
+            let objectives = Objectives::from_json(
+                e.get("objectives").ok_or("entry missing objectives")?)?;
+            entries.push(Entry { config, objectives });
+        }
+        Ok(ParetoArchive { entries, capacity })
+    }
 }
 
 #[cfg(test)]
@@ -306,6 +365,101 @@ mod tests {
                             round {round}");
             }
         }
+    }
+
+    /// Entry-level equality key for round-trip comparisons (Objectives
+    /// is PartialEq; Debug-format it so tuples are Eq-comparable).
+    fn key(a: &ParetoArchive) -> Vec<(Config, String)> {
+        a.entries()
+            .iter()
+            .map(|e| (e.config, format!("{:?}", e.objectives)))
+            .collect()
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_entries_and_order() {
+        // Property: from_json(to_json(a)) == a — entries, ordering and
+        // capacity — over randomized archives, including duplicate
+        // configs (refreshed objectives) and tight capacities.
+        for (seed, capacity, dup) in
+            [(1u64, 30usize, false), (2, 8, false), (3, 30, true)]
+        {
+            let mut rng = crate::util::Rng::new(seed);
+            let mut a = ParetoArchive::new(capacity);
+            for i in 0..150u64 {
+                let c = if dup { cfg(i % 25) } else { cfg(i) };
+                a.insert(c, Objectives {
+                    accuracy: 50.0 + 40.0 * rng.f64(),
+                    latency_ms: 5.0 + 50.0 * rng.f64(),
+                    memory_gb: 1.0 + 10.0 * rng.f64(),
+                    energy_j: 0.1 + rng.f64(),
+                });
+            }
+            // through the Json value AND through its text form (the
+            // on-disk path): both must restore the archive exactly
+            let back = ParetoArchive::from_json(&a.to_json()).unwrap();
+            assert_eq!(key(&a), key(&back), "seed {seed}");
+            assert_eq!(back.capacity(), capacity);
+            let text = a.to_json().dump();
+            let reparsed = ParetoArchive::from_json(
+                &crate::util::json::Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(key(&a), key(&reparsed), "seed {seed} (text)");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_empty_front_and_duplicate_objectives() {
+        // Empty front: entries [] and capacity survive.
+        let empty = ParetoArchive::new(7);
+        let back = ParetoArchive::from_json(&empty.to_json()).unwrap();
+        assert!(back.is_empty());
+        assert_eq!(back.capacity(), 7);
+
+        // Distinct configs with byte-identical objectives (mutually
+        // non-dominating duplicates) all survive, in order.
+        let mut a = ParetoArchive::new(10);
+        let o = obj(70.0, 10.0);
+        a.insert(cfg(1), o);
+        a.insert(cfg(2), o);
+        a.insert(cfg(3), o);
+        assert_eq!(a.len(), 3, "equal objectives are mutually \
+                                non-dominated and must all be kept");
+        let back = ParetoArchive::from_json(&a.to_json()).unwrap();
+        assert_eq!(key(&a), key(&back));
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_capacity_behavior() {
+        // After a round trip, inserting past capacity truncates by
+        // crowding exactly like the original would.
+        let mut a = ParetoArchive::new(5);
+        for i in 0..3 {
+            a.insert(cfg(i), obj(50.0 + i as f64, 10.0 + i as f64));
+        }
+        let mut b = ParetoArchive::from_json(&a.to_json()).unwrap();
+        for i in 3..20 {
+            let o = obj(50.0 + i as f64, 10.0 + i as f64);
+            a.insert(cfg(i), o);
+            b.insert(cfg(i), o);
+        }
+        assert_eq!(a.len(), 5);
+        assert_eq!(key(&a), key(&b));
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_schema_and_garbage() {
+        let mut wrong = std::collections::BTreeMap::new();
+        wrong.insert("schema".to_string(),
+                     crate::util::json::Json::Str("nope".into()));
+        assert!(ParetoArchive::from_json(
+            &crate::util::json::Json::Obj(wrong)).is_err());
+        let j = crate::util::json::Json::parse(
+            r#"{"schema":"ae-llm.front/v1","capacity":4,
+                "entries":[{"signature":"bogus","objectives":
+                {"accuracy":1,"latency_ms":1,"memory_gb":1,"energy_j":1}}]}"#,
+        )
+        .unwrap();
+        assert!(ParetoArchive::from_json(&j).is_err());
     }
 
     #[test]

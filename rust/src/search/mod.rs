@@ -12,7 +12,7 @@ pub mod nsga2;
 pub mod operators;
 pub mod strategy;
 
-pub use archive::{Entry, ParetoArchive};
+pub use archive::{Entry, ParetoArchive, FRONT_SCHEMA};
 pub use baselines::Baseline;
 pub use nsga2::{Nsga2Params, SearchResult, Toggles};
 pub use strategy::{BaselineStrategy, LocalSearchStrategy, Nsga2Strategy,

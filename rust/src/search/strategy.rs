@@ -57,7 +57,7 @@ use crate::coordinator::scenario::Scenario;
 use crate::evaluator::{EvalContext, Evaluator};
 use crate::metrics::{utility, Preferences, Reference};
 use crate::oracle::Objectives;
-use crate::search::archive::ParetoArchive;
+use crate::search::archive::{Entry, ParetoArchive};
 use crate::search::baselines::{self, Baseline};
 use crate::search::nsga2::{self, Nsga2Params};
 use crate::surrogate::SurrogateSet;
@@ -135,6 +135,18 @@ pub trait SearchStrategy {
     fn rounds(&self, params: &AeLlmParams) -> usize {
         params.refine_iters.max(1)
     }
+
+    /// Warm-start hook (DESIGN.md §12): called once, before round 0,
+    /// when the coordinator seeds a run from a prior Pareto front
+    /// (continual adaptation re-search).  The coordinator itself
+    /// re-measures the prior entries under the new scenario and seeds
+    /// the measured archive with them, so strategies that climb from
+    /// `cx.measured` (local search) or avoid `cx.seen` inherit the
+    /// warm start for free; override to bias proposals further (e.g.
+    /// seeding an evolutionary population).  Never called on cold
+    /// runs, so implementations cannot perturb the cold-start RNG
+    /// stream.
+    fn warm_start(&mut self, _prior: &[Entry]) {}
 
     /// Produce this round's measurement candidates.
     fn propose(&mut self, cx: &StrategyCx, evaluator: &mut dyn Evaluator,

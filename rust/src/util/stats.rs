@@ -144,6 +144,26 @@ pub fn ranks(xs: &[f64]) -> Vec<f64> {
     out
 }
 
+/// One exponentially-weighted moving-average update:
+/// `alpha * x + (1 - alpha) * prev`.  `alpha` is clamped to [0, 1];
+/// `alpha = 0` keeps the baseline frozen, `alpha = 1` tracks the
+/// latest sample exactly.  The drift detector's building block.
+pub fn ewma_step(prev: f64, x: f64, alpha: f64) -> f64 {
+    let a = alpha.clamp(0.0, 1.0);
+    a * x + (1.0 - a) * prev
+}
+
+/// EWMA over a whole sequence, seeded from the first sample
+/// (`s_0 = x_0`, `s_i = alpha*x_i + (1-alpha)*s_{i-1}`).  Returns 0.0
+/// for an empty slice; a single sample is its own average at every
+/// alpha.
+pub fn ewma(xs: &[f64], alpha: f64) -> f64 {
+    let Some((&first, rest)) = xs.split_first() else {
+        return 0.0;
+    };
+    rest.iter().fold(first, |s, &x| ewma_step(s, x, alpha))
+}
+
 /// min/max of a slice, NaN-free input assumed.
 pub fn min_max(xs: &[f64]) -> (f64, f64) {
     xs.iter().fold((f64::INFINITY, f64::NEG_INFINITY), |(lo, hi), &x| {
@@ -248,5 +268,36 @@ mod tests {
     fn cv_basic() {
         assert_eq!(cv(&[5.0, 5.0, 5.0]), 0.0);
         assert!(cv(&[1.0, 9.0]) > 0.5);
+    }
+
+    #[test]
+    fn ewma_small_n_edges() {
+        // n = 0: stays defined (mirrors quantile's empty-input rule)
+        assert_eq!(ewma(&[], 0.3), 0.0);
+        // n = 1: the single sample is the average at every alpha
+        for alpha in [0.0, 0.3, 1.0] {
+            assert_eq!(ewma(&[7.5], alpha), 7.5);
+        }
+    }
+
+    #[test]
+    fn ewma_alpha_extremes() {
+        let xs = [1.0, 5.0, 9.0];
+        // alpha = 0: frozen at the seed sample
+        assert_eq!(ewma(&xs, 0.0), 1.0);
+        // alpha = 1: tracks the latest sample exactly
+        assert_eq!(ewma(&xs, 1.0), 9.0);
+        // in between: strictly between seed and latest
+        let mid = ewma(&xs, 0.5);
+        assert!(mid > 1.0 && mid < 9.0, "mid={mid}");
+        // hand-checked: 0.5*9 + 0.5*(0.5*5 + 0.5*1) = 6.0
+        assert!((mid - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_step_clamps_alpha() {
+        assert_eq!(ewma_step(2.0, 10.0, -1.0), 2.0);
+        assert_eq!(ewma_step(2.0, 10.0, 2.0), 10.0);
+        assert!((ewma_step(2.0, 10.0, 0.25) - 4.0).abs() < 1e-12);
     }
 }

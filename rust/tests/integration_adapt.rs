@@ -1,0 +1,218 @@
+//! Integration tests for the continual-adaptation controller
+//! (DESIGN.md §12): determinism of the full closed loop, the
+//! continual-vs-one-shot comparison on drifting workloads, quiescence
+//! on stationary traffic, and the warm-start search seam.
+//!
+//! Everything runs on the simulated stack (virtual time, no
+//! artifacts), so CI executes all of it.
+
+use ae_llm::coordinator::{optimize_with_observer, optimize_with_observer_warm,
+                          AdaptParams, AeLlm, NullObserver};
+use ae_llm::runtime::WorkloadKind;
+use ae_llm::util::{Parallelism, Rng};
+
+fn session(seed: u64, par: Parallelism) -> AeLlm {
+    let params = ae_llm::coordinator::AeLlmParams {
+        parallelism: par,
+        ..ae_llm::coordinator::AeLlmParams::small()
+    };
+    AeLlm::for_model("Phi-2").unwrap().params(params).seed(seed)
+}
+
+#[test]
+fn same_seed_adapt_is_bit_identical_at_any_parallelism() {
+    // The whole closed loop — search, epoch serving, drift decisions,
+    // warm re-search, hot swap — must serialize byte-identically for
+    // the same seed, sequentially or on 4 workers, across independent
+    // runs.
+    let run = |par: Parallelism| {
+        let params = AdaptParams {
+            epochs: 4,
+            requests_per_epoch: 150,
+            ..AdaptParams::default()
+        };
+        session(11, par)
+            .adapt(WorkloadKind::RegimeShift, &params)
+            .unwrap()
+            .to_json()
+            .dump()
+    };
+    let a = run(Parallelism::Sequential);
+    let b = run(Parallelism::Threads(4));
+    let c = run(Parallelism::Sequential);
+    assert_eq!(a, b, "parallelism changed the adapt report");
+    assert_eq!(a, c, "same seed produced different adapt reports");
+    assert!(a.contains("\"schema\":\"ae-llm.adapt-report/v1\""), "{a}");
+    // the persistent front rides inside, under its own schema
+    assert!(a.contains("\"schema\":\"ae-llm.front/v1\""), "{a}");
+}
+
+#[test]
+fn continual_beats_one_shot_on_drifting_workloads() {
+    // The acceptance bar for `table --id 9`: on both drifting
+    // scenarios the adaptive controller must strictly beat the
+    // one-shot deployment on SLO-violation rate.  No strawman: the
+    // one-shot baseline gets the *same* initial search, the same
+    // epoch-0 deployment and the same epoch-0 lane plan — it just
+    // never re-searches or re-deploys.
+    let s = session(7, Parallelism::Auto);
+    // one search shared by every comparison below — the one-shot runs
+    // start from literally the same epoch-0 front
+    let outcome = s.run_testbed_outcome();
+    for kind in WorkloadKind::DRIFTING {
+        let params = AdaptParams {
+            epochs: 6,
+            requests_per_epoch: 250,
+            ..AdaptParams::default()
+        };
+        let continual = s.adapt_from(&outcome, kind, &params).unwrap();
+        let one_shot =
+            s.adapt_from(&outcome, kind, &params.one_shot()).unwrap();
+
+        assert_eq!(one_shot.redeployments, 0);
+        assert_eq!(one_shot.searches, 1);
+        assert!(continual.redeployments >= 1,
+                "{}: drift never triggered a redeployment", kind.name());
+        assert!(continual.searches > 1);
+
+        // both served everything
+        let n = params.epochs * params.requests_per_epoch;
+        assert_eq!(continual.overall.completed, n, "{}", kind.name());
+        assert_eq!(one_shot.overall.completed, n, "{}", kind.name());
+
+        // the structural margin: the hot regime's documents overflow
+        // the never-re-provisioned 2048 shape, so the one-shot fleet
+        // must truncate (= violate); the controller re-provisions
+        let adaptive_rate = continual.overall.slo_violation_rate;
+        let static_rate = one_shot.overall.slo_violation_rate;
+        assert!(static_rate > 0.10,
+                "{}: one-shot unexpectedly healthy ({static_rate:.3})",
+                kind.name());
+        assert!(adaptive_rate < static_rate,
+                "{}: continual {adaptive_rate:.3} did not beat one-shot \
+                 {static_rate:.3}", kind.name());
+        assert!(one_shot.overall.truncated > continual.overall.truncated,
+                "{}: truncation margin missing ({} vs {})", kind.name(),
+                one_shot.overall.truncated, continual.overall.truncated);
+
+        // until the first redeployment the two runs are the same
+        // system serving the same traffic
+        let first_swap = continual
+            .epochs
+            .iter()
+            .position(|e| e.redeployed)
+            .expect("at least one redeploy");
+        for (c, o) in continual.epochs[..=first_swap]
+            .iter()
+            .zip(&one_shot.epochs)
+        {
+            assert_eq!(c.report.slo_violations, o.report.slo_violations,
+                       "{}: pre-swap epochs diverged", kind.name());
+        }
+    }
+}
+
+#[test]
+fn unchanged_workload_triggers_no_drift_and_no_redeploys() {
+    // Acceptance criterion (c): a stationary workload must sail
+    // through with zero drift signals and zero re-deployments — the
+    // controller's quiescence guarantee.
+    let params = AdaptParams {
+        epochs: 5,
+        requests_per_epoch: 400,
+        ..AdaptParams::default()
+    };
+    let report = session(13, Parallelism::Auto)
+        .adapt(WorkloadKind::Steady, &params)
+        .unwrap();
+    assert_eq!(report.searches, 1);
+    assert_eq!(report.redeployments, 0);
+    for e in &report.epochs {
+        assert!(!e.drifted, "epoch {} drifted (score {:.3})", e.epoch,
+                e.drift_score);
+        assert!(!e.redeployed);
+        // sampling noise must stay well inside the immediate-fire band
+        assert!(e.drift_score < 2.0 * params.drift_threshold,
+                "epoch {} score {:.3} near the firing band", e.epoch,
+                e.drift_score);
+    }
+    // and the one-shot twin is the same system end to end
+    let one_shot = session(13, Parallelism::Auto)
+        .adapt(WorkloadKind::Steady, &params.one_shot())
+        .unwrap();
+    assert_eq!(report.overall.slo_violations,
+               one_shot.overall.slo_violations);
+    assert_eq!(report.overall.completed, one_shot.overall.completed);
+}
+
+#[test]
+fn warm_started_search_is_cold_identical_when_front_is_empty() {
+    // The warm entry point with no warm entries must be byte-for-byte
+    // the cold run — the seam cannot disturb the PR-1/2/3 determinism
+    // contracts.
+    let scenario = ae_llm::coordinator::Scenario::for_model("Phi-2")
+        .unwrap();
+    let params = ae_llm::coordinator::AeLlmParams::small();
+    let cold = {
+        let mut evaluator = scenario.testbed.clone();
+        let mut rng = Rng::new(5);
+        optimize_with_observer(&scenario, &params, &mut evaluator,
+                               &mut NullObserver, &mut rng)
+    };
+    let warm_empty = {
+        let mut evaluator = scenario.testbed.clone();
+        let mut rng = Rng::new(5);
+        optimize_with_observer_warm(&scenario, &params, &[],
+                                    &mut evaluator, &mut NullObserver,
+                                    &mut rng)
+    };
+    assert_eq!(cold.chosen, warm_empty.chosen);
+    assert_eq!(cold.testbed_evals, warm_empty.testbed_evals);
+    assert_eq!(cold.surrogate_evals, warm_empty.surrogate_evals);
+    let key = |o: &ae_llm::coordinator::Outcome| {
+        let mut front: Vec<String> = o
+            .pareto
+            .entries()
+            .iter()
+            .map(|e| format!("{} {:?}", e.config.signature(),
+                             e.objectives))
+            .collect();
+        front.sort();
+        front
+    };
+    assert_eq!(key(&cold), key(&warm_empty));
+}
+
+#[test]
+fn warm_started_search_reuses_the_prior_front_at_no_extra_cost() {
+    let scenario = ae_llm::coordinator::Scenario::for_model("Phi-2")
+        .unwrap();
+    let params = ae_llm::coordinator::AeLlmParams::small();
+    let first = {
+        let mut evaluator = scenario.testbed.clone();
+        let mut rng = Rng::new(5);
+        optimize_with_observer(&scenario, &params, &mut evaluator,
+                               &mut NullObserver, &mut rng)
+    };
+    let warm: Vec<_> = first.pareto.entries().to_vec();
+    assert!(!warm.is_empty() && warm.len() < params.initial_sample);
+    let second = {
+        let mut evaluator = scenario.testbed.clone();
+        let mut rng = Rng::new(6);
+        optimize_with_observer_warm(&scenario, &params, &warm,
+                                    &mut evaluator, &mut NullObserver,
+                                    &mut rng)
+    };
+    // the warm measurements replace part of the random initial sample:
+    // a warm run fits the same budget ceiling as a cold one
+    // (initial_sample + R*k + the Default fallback)
+    let ceiling = params.initial_sample
+        + params.refine_iters * params.evals_per_iter
+        + 1;
+    assert!(second.testbed_evals <= ceiling,
+            "warm start exceeded the cold budget: {} > {ceiling}",
+            second.testbed_evals);
+    assert!(second.testbed_evals >= params.initial_sample,
+            "warm start under-sampled: {}", second.testbed_evals);
+    assert!(!second.pareto.is_empty());
+}
