@@ -1,0 +1,93 @@
+//! Before/after microbenchmark of the discrete-event core at cluster
+//! scale (DESIGN.md §13): the same workload served through
+//! `Cluster::serve` (event heap) and `Cluster::serve_polled` (the
+//! pre-refactor fixed-step tick loop), reported as requests simulated
+//! per wall-clock second.  The polled loop's cost grows with virtual
+//! time swept × nodes; the event core's with events processed — the
+//! speedup is the whole point of the refactor.
+//!
+//! Emits `BENCH_cluster.json` (to `$AE_LLM_BENCH_OUT` or the current
+//! directory); `AE_LLM_BENCH_QUICK=1` / `--quick` shrinks the fleet.
+
+use std::collections::BTreeMap;
+
+use ae_llm::coordinator::AeLlm;
+use ae_llm::runtime::workload::default_rate_rps;
+use ae_llm::runtime::{Cluster, ClusterParams, Workload, WorkloadKind};
+use ae_llm::util::bench::{self, time_once};
+use ae_llm::util::json::Json;
+use ae_llm::util::Parallelism;
+
+fn main() {
+    let quick = bench::quick();
+    println!("== perf_cluster: event core vs polled tick loop{} ==",
+             if quick { " (quick)" } else { "" });
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+
+    let session = AeLlm::for_model("Phi-2").unwrap().quick().seed(7);
+    let outcome = session.run_testbed_outcome();
+    let deployment = session.deploy(&outcome).unwrap();
+
+    let params = ClusterParams {
+        nodes: if quick { 8 } else { 64 },
+        tick_ms: if quick { 5.0 } else { 1.0 },
+        ..ClusterParams::default()
+    };
+    let n = if quick { 5_000 } else { 100_000 };
+    let rate = params.nodes as f64
+        * default_rate_rps(outcome.reference.default.latency_ms);
+    let requests =
+        Workload::new(WorkloadKind::Steady, rate, n, 7).generate();
+    println!(
+        "  {} nodes, {} requests at {:.0} req/s (tick {} ms)",
+        params.nodes, n, rate, params.tick_ms
+    );
+
+    let cluster = Cluster::new(deployment, params, 7, Parallelism::Auto);
+    let (event_rep, event_ms) =
+        time_once("cluster serve (event core)",
+                  || cluster.serve(&requests, "steady"));
+    let (polled_rep, polled_ms) =
+        time_once("cluster serve (polled ticks)",
+                  || cluster.serve_polled(&requests, "steady"));
+
+    assert_eq!(event_rep.overall.completed, n,
+               "event core dropped requests");
+    assert_eq!(polled_rep.overall.completed, n,
+               "polled loop dropped requests");
+    assert_eq!(event_rep.routed, polled_rep.routed,
+               "drivers diverged on routing");
+
+    let event_rps = n as f64 / (event_ms / 1e3).max(1e-9);
+    let polled_rps = n as f64 / (polled_ms / 1e3).max(1e-9);
+    let speedup = event_rps / polled_rps.max(1e-9);
+    println!(
+        "    event core : {event_rps:.0} requests simulated / wall s"
+    );
+    println!(
+        "    polled loop: {polled_rps:.0} requests simulated / wall s"
+    );
+    println!("    speedup    : {speedup:.1}x");
+
+    report.insert("nodes".into(), Json::Num(params.nodes as f64));
+    report.insert("requests".into(), Json::Num(n as f64));
+    report.insert("tick_ms".into(), Json::Num(params.tick_ms));
+    report.insert("event wall ms".into(), Json::Num(event_ms));
+    report.insert("polled wall ms".into(), Json::Num(polled_ms));
+    report.insert("event requests per wall s".into(),
+                  Json::Num(event_rps));
+    report.insert("polled requests per wall s".into(),
+                  Json::Num(polled_rps));
+    report.insert("event vs polled speedup".into(), Json::Num(speedup));
+    report.insert("slo violation rate (event)".into(),
+                  Json::Num(event_rep.overall.slo_violation_rate));
+
+    report.insert("bench".into(), Json::Str("perf_cluster".into()));
+    report.insert("quick".into(), Json::Bool(quick));
+    let out = std::env::var("AE_LLM_BENCH_OUT").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&out).join("BENCH_cluster.json");
+    match std::fs::write(&path, Json::Obj(report).dump()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -21,11 +21,22 @@
 //! seed, params): the [`AdaptReport`] serializes byte-identically for
 //! the same seed at every parallelism level (no wall-clock fields —
 //! that is deliberate).
+//!
+//! Since the event-core refactor (DESIGN.md §13) the epoch loop runs
+//! on the deterministic event heap: every request is an `Arrival`
+//! event, every epoch end an `EpochBoundary` event at the epoch's last
+//! arrival timestamp — pushed *between* that epoch's arrivals and the
+//! next epoch's, so the `(time, seq)` tie-break reproduces the old
+//! index-sliced loop exactly.  [`run_adapt_from_polled`] keeps the
+//! pre-refactor loop as the reference the golden-report test compares
+//! byte-for-byte against.
 
 use crate::runtime::drift::{DriftDetector, EpochTelemetry, DRIFT_ALPHA,
                             DRIFT_THRESHOLD};
+use crate::runtime::events::{Event, EventQueue};
 use crate::runtime::fleet::{infeasible_class_at, lane_plan, EpochFleet,
-                            RedeployPlan};
+                            EpochOutcome, RedeployPlan};
+use crate::runtime::serve::DrainDriver;
 use crate::runtime::workload::default_rate_rps;
 use crate::runtime::{ServeReport, Workload, WorkloadKind};
 use crate::search::archive::ParetoArchive;
@@ -123,6 +134,8 @@ pub struct AdaptReport {
 }
 
 impl AdaptReport {
+    /// Serialize (schema `ae-llm.adapt-report/v1`; field reference in
+    /// docs/SCHEMAS.md).  Same-seed runs dump byte-identical JSON.
     pub fn to_json(&self) -> Json {
         let mut root = std::collections::BTreeMap::new();
         root.insert("schema".into(), Json::Str(ADAPT_REPORT_SCHEMA.into()));
@@ -201,10 +214,41 @@ pub fn run_adapt(session: &AeLlm, seed: u64, kind: WorkloadKind,
 /// or adaptivity — so comparisons like `table --id 9` (2 scenarios ×
 /// 2 modes) search once and reuse it, which is also what makes the
 /// one-shot baseline *provably* share the continual run's epoch-0
-/// front.
+/// front.  Runs on the event core ([`EventQueue`]); the pre-refactor
+/// loop survives as [`run_adapt_from_polled`].
 pub fn run_adapt_from(session: &AeLlm, seed: u64, kind: WorkloadKind,
                       params: &AdaptParams, outcome: &Outcome)
                       -> Result<AdaptReport, AeLlmError> {
+    run_adapt_impl(session, seed, kind, params, outcome,
+                   DrainDriver::Event)
+}
+
+/// The PR 5 reference implementation: index-sliced epoch loop on the
+/// pooled drain path.  Kept so the golden-report test can prove the
+/// event core's [`AdaptReport`] is byte-identical to pre-refactor
+/// output; not a serving path anything else should use.
+#[doc(hidden)]
+pub fn run_adapt_from_polled(session: &AeLlm, seed: u64,
+                             kind: WorkloadKind, params: &AdaptParams,
+                             outcome: &Outcome)
+                             -> Result<AdaptReport, AeLlmError> {
+    run_adapt_impl(session, seed, kind, params, outcome,
+                   DrainDriver::Polled)
+}
+
+/// Mutable controller state threaded through the epoch boundaries.
+struct LoopState {
+    fleet: EpochFleet,
+    detector: DriftDetector,
+    front: ParetoArchive,
+    searches: usize,
+    retry_swap: bool,
+    records: Vec<EpochRecord>,
+}
+
+fn run_adapt_impl(session: &AeLlm, seed: u64, kind: WorkloadKind,
+                  params: &AdaptParams, outcome: &Outcome,
+                  driver: DrainDriver) -> Result<AdaptReport, AeLlmError> {
     let scenario = session.scenario();
     let par = session.params_ref().parallelism;
 
@@ -223,82 +267,69 @@ pub fn run_adapt_from(session: &AeLlm, seed: u64, kind: WorkloadKind,
     let requests =
         Workload::new(kind, rate, n_epochs * per_epoch, seed).generate();
 
-    let mut fleet = EpochFleet::new(deployment, seed, par);
-    let mut detector =
-        DriftDetector::new(params.ewma_alpha, params.drift_threshold);
-    let mut front = outcome.pareto.clone();
-    let mut searches = 1usize;
-    let mut records: Vec<EpochRecord> = Vec::with_capacity(n_epochs);
-    // A drift whose swap was refused (infeasible front) retries next
-    // epoch even if the detector's EWMA has since absorbed the shift.
-    let mut retry_swap = false;
+    let mut state = LoopState {
+        fleet: EpochFleet::new(deployment, seed, par).with_driver(driver),
+        detector: DriftDetector::new(params.ewma_alpha,
+                                     params.drift_threshold),
+        front: outcome.pareto.clone(),
+        searches: 1,
+        // A drift whose swap was refused (infeasible front) retries
+        // next epoch even if the detector's EWMA has since absorbed
+        // the shift.
+        retry_swap: false,
+        records: Vec::with_capacity(n_epochs),
+    };
 
-    // ---- the loop: serve, sense, re-search, swap -----------------------
-    for epoch in 0..n_epochs {
-        let slice = &requests[epoch * per_epoch..(epoch + 1) * per_epoch];
-        let out = fleet.serve_epoch(epoch, slice);
-        let decision = detector.observe(&out.telemetry);
-
-        let mut redeployed = false;
-        // Re-searching after the final epoch would adapt to traffic
-        // that will never arrive.
-        if params.adaptive
-            && (decision.drifted || retry_swap)
-            && epoch + 1 < n_epochs
-        {
-            let observed = Scenario {
-                model: scenario.model.clone(),
-                task: rescope_task(&scenario.task, &out.telemetry),
-                testbed: scenario.testbed.clone(),
-                prefs: scenario.prefs,
-            };
-            let warm: Vec<_> = front.entries().to_vec();
-            let mut evaluator = observed.testbed.clone();
-            let mut rng = Rng::new(seed ^ (epoch as u64 + 1)
-                .wrapping_mul(0x9E37_79B9_7F4A_7C15));
-            let re = optimize_with_observer_warm(
-                &observed, session.params_ref(), &warm, &mut evaluator,
-                &mut NullObserver, &mut rng);
-            searches += 1;
-            front = re.pareto;
-            let plan = RedeployPlan::from_telemetry(
-                &out.telemetry, fleet.deployment().slots(),
-                params.lane_budget);
-            // Same gate deploy_with applies on the epoch-0 path —
-            // priced at the shape the swap would actually deploy
-            // (plan.long_seq, not the class default).  A front that
-            // cannot serve a class must not be hot-swapped in: keep
-            // the current deployment and retry with a fresh re-search
-            // next epoch (the retry flag carries the intent — the
-            // detector's EWMA baseline absorbs a persisting shift
-            // within a couple of epochs, so it cannot).
-            let feasible = infeasible_class_at(
-                &front, fleet.deployment().policy(), plan.long_seq)
-                .is_none();
-            let mut refreshed = fleet.deployment().clone();
-            if feasible
-                && refreshed.refresh_from_front(&front, Some(&plan)).is_ok()
-            {
-                fleet.redeploy(refreshed);
-                detector.rebase(&out.telemetry);
-                redeployed = true;
-                retry_swap = false;
-            } else {
-                retry_swap = true;
+    match driver {
+        DrainDriver::Event => {
+            // ---- the loop as events: every request an Arrival, every
+            // epoch end an EpochBoundary at the epoch's last arrival
+            // timestamp.  Boundaries are pushed between their epoch's
+            // arrivals and the next epoch's, so ties resolve exactly
+            // like the index-sliced loop: a next-epoch request sharing
+            // the boundary's timestamp still arrives *after* the drain.
+            let mut queue: EventQueue<Event> = EventQueue::new();
+            let mut boundary = 0.0f64;
+            for epoch in 0..n_epochs {
+                let lo = epoch * per_epoch;
+                for (k, r) in requests[lo..lo + per_epoch].iter()
+                    .enumerate()
+                {
+                    queue.push(r.arrival_ms,
+                               Event::Arrival { index: lo + k });
+                }
+                boundary = requests[lo + per_epoch - 1]
+                    .arrival_ms
+                    .max(boundary);
+                queue.push(boundary, Event::EpochBoundary { epoch });
+            }
+            while let Some((_t, _seq, ev)) = queue.pop() {
+                match ev {
+                    Event::Arrival { index } => {
+                        state.fleet.submit(requests[index].clone());
+                    }
+                    Event::EpochBoundary { epoch } => {
+                        let out = state.fleet.close_epoch(epoch);
+                        epoch_boundary(session, seed, params, n_epochs,
+                                       epoch, out, &mut state);
+                    }
+                    Event::BatchClose { .. }
+                    | Event::BatchComplete { .. } => {
+                        unreachable!("batch events live inside drains")
+                    }
+                }
             }
         }
-
-        records.push(EpochRecord {
-            epoch,
-            telemetry: out.telemetry,
-            report: out.report,
-            drift_score: decision.score,
-            drifted: decision.drifted,
-            redeployed,
-            front_size: front.len(),
-            lanes: fleet.deployment().slots().iter().map(|s| s.lanes)
-                .collect(),
-        });
+        DrainDriver::Polled => {
+            // ---- the PR 5 loop: serve, sense, re-search, swap ----------
+            for epoch in 0..n_epochs {
+                let slice =
+                    &requests[epoch * per_epoch..(epoch + 1) * per_epoch];
+                let out = state.fleet.serve_epoch(epoch, slice);
+                epoch_boundary(session, seed, params, n_epochs, epoch,
+                               out, &mut state);
+            }
+        }
     }
 
     Ok(AdaptReport {
@@ -307,12 +338,84 @@ pub fn run_adapt_from(session: &AeLlm, seed: u64, kind: WorkloadKind,
         mode: if params.adaptive { "continual" } else { "one-shot" }
             .to_string(),
         seed,
-        epochs: records,
-        searches,
-        redeployments: fleet.redeployments(),
-        overall: fleet.overall_report(),
-        final_front: front,
+        epochs: state.records,
+        searches: state.searches,
+        redeployments: state.fleet.redeployments(),
+        overall: state.fleet.overall_report(),
+        final_front: state.front,
     })
+}
+
+/// The decision block at every epoch boundary: observe drift,
+/// re-search + hot-swap when warranted, record the epoch.
+fn epoch_boundary(session: &AeLlm, seed: u64, params: &AdaptParams,
+                  n_epochs: usize, epoch: usize, out: EpochOutcome,
+                  state: &mut LoopState) {
+    let scenario = session.scenario();
+    let decision = state.detector.observe(&out.telemetry);
+
+    let mut redeployed = false;
+    // Re-searching after the final epoch would adapt to traffic
+    // that will never arrive.
+    if params.adaptive
+        && (decision.drifted || state.retry_swap)
+        && epoch + 1 < n_epochs
+    {
+        let observed = Scenario {
+            model: scenario.model.clone(),
+            task: rescope_task(&scenario.task, &out.telemetry),
+            testbed: scenario.testbed.clone(),
+            prefs: scenario.prefs,
+        };
+        let warm: Vec<_> = state.front.entries().to_vec();
+        let mut evaluator = observed.testbed.clone();
+        let mut rng = Rng::new(seed ^ (epoch as u64 + 1)
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let re = optimize_with_observer_warm(
+            &observed, session.params_ref(), &warm, &mut evaluator,
+            &mut NullObserver, &mut rng);
+        state.searches += 1;
+        state.front = re.pareto;
+        let plan = RedeployPlan::from_telemetry(
+            &out.telemetry, state.fleet.deployment().slots(),
+            params.lane_budget);
+        // Same gate deploy_with applies on the epoch-0 path —
+        // priced at the shape the swap would actually deploy
+        // (plan.long_seq, not the class default).  A front that
+        // cannot serve a class must not be hot-swapped in: keep
+        // the current deployment and retry with a fresh re-search
+        // next epoch (the retry flag carries the intent — the
+        // detector's EWMA baseline absorbs a persisting shift
+        // within a couple of epochs, so it cannot).
+        let feasible = infeasible_class_at(
+            &state.front, state.fleet.deployment().policy(),
+            plan.long_seq)
+            .is_none();
+        let mut refreshed = state.fleet.deployment().clone();
+        if feasible
+            && refreshed.refresh_from_front(&state.front,
+                                            Some(&plan)).is_ok()
+        {
+            state.fleet.redeploy(refreshed);
+            state.detector.rebase(&out.telemetry);
+            redeployed = true;
+            state.retry_swap = false;
+        } else {
+            state.retry_swap = true;
+        }
+    }
+
+    state.records.push(EpochRecord {
+        epoch,
+        telemetry: out.telemetry,
+        report: out.report,
+        drift_score: decision.score,
+        drifted: decision.drifted,
+        redeployed,
+        front_size: state.front.len(),
+        lanes: state.fleet.deployment().slots().iter().map(|s| s.lanes)
+            .collect(),
+    });
 }
 
 #[cfg(test)]

@@ -285,6 +285,17 @@ impl AeLlm {
     /// Build the adaptive serving fleet from a search outcome's Pareto
     /// front: one simulated slot per SLO class, routed per request
     /// (see [`crate::runtime::Deployment`]).
+    ///
+    /// ```
+    /// use ae_llm::coordinator::AeLlm;
+    ///
+    /// # fn main() -> Result<(), ae_llm::coordinator::AeLlmError> {
+    /// let session = AeLlm::for_model("Phi-2")?.quick().seed(7);
+    /// let outcome = session.run_testbed_outcome();
+    /// let deployment = session.deploy(&outcome)?;
+    /// assert!(!deployment.slots().is_empty());
+    /// # Ok(()) }
+    /// ```
     pub fn deploy(&self, outcome: &Outcome)
                   -> Result<crate::runtime::Deployment, AeLlmError> {
         self.deploy_with(outcome, &self.slo_policy())
@@ -317,6 +328,23 @@ impl AeLlm {
 
     /// Search, then deploy: the full loop the paper promises — a
     /// scenario goes in, a served fleet comes out.
+    ///
+    /// ```
+    /// use ae_llm::coordinator::AeLlm;
+    /// use ae_llm::runtime::{Workload, WorkloadKind};
+    /// use ae_llm::util::Parallelism;
+    ///
+    /// # fn main() -> Result<(), ae_llm::coordinator::AeLlmError> {
+    /// let session = AeLlm::for_model("Phi-2")?.quick().seed(7);
+    /// let (report, deployment) = session.run_and_deploy()?;
+    /// let requests =
+    ///     Workload::new(WorkloadKind::Steady, 40.0, 50, 7).generate();
+    /// let served = deployment.serve(&requests, "steady", 7,
+    ///                               Parallelism::Sequential);
+    /// assert_eq!(served.overall.completed, 50);
+    /// assert!(!report.outcome.pareto.is_empty());
+    /// # Ok(()) }
+    /// ```
     pub fn run_and_deploy(&self)
                           -> Result<(RunReport, crate::runtime::Deployment),
                                     AeLlmError> {
@@ -332,6 +360,20 @@ impl AeLlm {
     /// started from the persistent front, re-scoped to the observed
     /// workload) and hot-swapping the fleet whenever the drift
     /// detector fires.  See [`super::controller::run_adapt`].
+    ///
+    /// ```no_run
+    /// use ae_llm::coordinator::{AdaptParams, AeLlm};
+    /// use ae_llm::runtime::WorkloadKind;
+    ///
+    /// # fn main() -> Result<(), ae_llm::coordinator::AeLlmError> {
+    /// let report = AeLlm::for_model("Phi-2")?
+    ///     .quick()
+    ///     .seed(7)
+    ///     .adapt(WorkloadKind::RegimeShift, &AdaptParams::default())?;
+    /// println!("{} re-searches, {} redeployments",
+    ///          report.searches, report.redeployments);
+    /// # Ok(()) }
+    /// ```
     pub fn adapt(&self, kind: crate::runtime::WorkloadKind,
                  params: &super::controller::AdaptParams)
                  -> Result<super::controller::AdaptReport, AeLlmError> {
@@ -342,6 +384,22 @@ impl AeLlm {
     /// outcome (it depends only on this session and its seed), so
     /// continual-vs-one-shot comparisons search once instead of once
     /// per mode.
+    ///
+    /// ```no_run
+    /// use ae_llm::coordinator::{AdaptParams, AeLlm};
+    /// use ae_llm::runtime::WorkloadKind;
+    ///
+    /// # fn main() -> Result<(), ae_llm::coordinator::AeLlmError> {
+    /// let session = AeLlm::for_model("Phi-2")?.quick().seed(7);
+    /// let outcome = session.run_testbed_outcome(); // search once ...
+    /// let continual = session.adapt_from(
+    ///     &outcome, WorkloadKind::Ramp, &AdaptParams::default())?;
+    /// let frozen = session.adapt_from(
+    ///     &outcome, WorkloadKind::Ramp, &AdaptParams::default().one_shot())?;
+    /// // ... compare continual vs one-shot on the same epoch-0 front.
+    /// assert!(continual.searches >= frozen.searches);
+    /// # Ok(()) }
+    /// ```
     pub fn adapt_from(&self, outcome: &Outcome,
                       kind: crate::runtime::WorkloadKind,
                       params: &super::controller::AdaptParams)
@@ -399,7 +457,7 @@ impl RunReport {
     /// Serialize the full report (schema `ae-llm.run-report/v2`; v2
     /// adds the `strategy` name and the `strategy_evals` counter —
     /// the strategy's own mid-round measurements, split out of
-    /// `testbed_evals`).
+    /// `testbed_evals`).  Field reference in docs/SCHEMAS.md.
     pub fn to_json(&self) -> Json {
         let mut root = std::collections::BTreeMap::new();
         root.insert("schema".into(),

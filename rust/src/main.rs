@@ -4,8 +4,9 @@
 //! ae-llm search  --model Mistral-7B [--task GSM8K] [--platform A100-80GB]
 //!                [--prefs latency] [--strategy nsga2|random|racing|local]
 //!                [--quick] [--seed N] [--json]
-//! ae-llm table   --id 2|3|4|5|6|7|8 [--quick] [--seed N]
-//!                # 7 = strategies, 8 = adaptive vs static serving
+//! ae-llm table   --id 2|3|4|5|6|7|8|9|10 [--quick] [--seed N]
+//!                # 7 = strategies, 8 = serving, 9 = adaptation,
+//!                # 10 = cluster-scale serving
 //! ae-llm figure  --id 1|2|3|4 [--quick] [--seed N] [--out reports/]
 //! ae-llm e2e     [--repeats N] [--seed N]  # hardware-in-the-loop Algorithm 1
 //! ae-llm serve   [--model M] [--scenario steady|diurnal|bursty|heavytail]
@@ -16,6 +17,10 @@
 //!                [--strategy S] [--epochs N] [--requests N/epoch]
 //!                [--one-shot] [--quick] [--seed N] [--json OUT.json]
 //!                # continual adaptation: drift-triggered re-search
+//! ae-llm cluster [--model M] [--scenario S] [--strategy S]
+//!                [--requests N] [--nodes N] [--capacity N] [--epochs N]
+//!                [--quick] [--seed N] [--json OUT.json]
+//!                # cluster-scale serving on the event core
 //! ae-llm check   # artifacts sanity: load + execute every variant
 //! ae-llm space   # print the configuration-space inventory
 //! ```
@@ -202,6 +207,9 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "adapt" => (&["requests", "epochs", "seed", "model", "scenario",
                       "strategy", "json"],
                     &["quick", "one-shot"]),
+        "cluster" => (&["requests", "nodes", "capacity", "epochs", "seed",
+                        "model", "scenario", "strategy", "json"],
+                      &["quick"]),
         "check" | "space" => (&[], &[]),
         "help" | "--help" | "-h" => {
             print_help();
@@ -220,6 +228,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "e2e" => cmd_e2e(&opts, seed),
         "serve" => cmd_serve(&opts, seed),
         "adapt" => cmd_adapt(&opts, seed),
+        "cluster" => cmd_cluster(&opts, seed),
         "check" => cmd_check(),
         "space" => cmd_space(),
         _ => unreachable!("allowed-list match covers every command"),
@@ -324,10 +333,11 @@ fn cmd_table(opts: &Opts, budget: &Budget, seed: u64) -> anyhow::Result<()> {
         7 => tables::table_strategies(budget, seed),
         8 => tables::table_serving(budget, seed),
         9 => tables::table_adaptation(budget, seed),
+        10 => tables::table_cluster(budget, seed),
         other => anyhow::bail!(
             "no table {other} (paper has 2-6; 7 = strategy comparison, \
              8 = adaptive vs static serving, 9 = continual adaptation \
-             vs one-shot)"
+             vs one-shot, 10 = cluster-scale serving)"
         ),
     };
     println!("{}", table.render());
@@ -595,6 +605,87 @@ fn cmd_adapt(opts: &Opts, seed: u64) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Cluster-scale serving (DESIGN.md §13): search once, deploy the
+/// front onto N fleet nodes behind the seeded least-loaded router, and
+/// serve the workload on the event core.  `--json` dumps the
+/// deterministic `ClusterReport` (schema `ae-llm.cluster-report/v1`).
+fn cmd_cluster(opts: &Opts, seed: u64) -> anyhow::Result<()> {
+    use ae_llm::runtime::workload::default_rate_rps;
+    use ae_llm::runtime::{Cluster, ClusterParams, Workload};
+    use ae_llm::util::Parallelism;
+
+    let model = opts.get("model").unwrap_or("LLaMA-2-7B");
+    let kind = parse_scenario(opts.get("scenario").unwrap_or("steady"))?;
+    let n = opts.u64_or("requests", 4000)? as usize;
+    let defaults = ClusterParams::default();
+    let params = ClusterParams {
+        nodes: opts.u64_or("nodes", defaults.nodes as u64)? as usize,
+        capacity: opts.u64_or("capacity", defaults.capacity as u64)?
+            as usize,
+        epochs: opts.u64_or("epochs", defaults.epochs as u64)? as usize,
+        ..defaults
+    };
+
+    let mut session = AeLlm::for_model(model)?
+        .params(Budget { quick: opts.flag("quick") }.ae_params())
+        .seed(seed);
+    if let Some(s) = opts.get("strategy") {
+        session = session.strategy(parse_strategy(s)?);
+    }
+    eprintln!(
+        "== cluster: searching ({}, strategy {}) then deploying {} \
+         nodes ==",
+        model, session.params_ref().strategy.name(), params.nodes
+    );
+    let outcome = session.run_testbed_outcome();
+    let deployment = session.deploy(&outcome)?;
+    // Offered load scales with the fleet: rate per node x nodes.
+    let rate = params.nodes as f64
+        * default_rate_rps(outcome.reference.default.latency_ms);
+    let requests = Workload::new(kind, rate, n, seed).generate();
+    let report = Cluster::new(deployment, params, seed, Parallelism::Auto)
+        .serve(&requests, kind.name());
+
+    if let Some(path) = opts.get("json") {
+        std::fs::write(path, report.to_json().dump())?;
+        println!("wrote {path}");
+        return Ok(());
+    }
+
+    println!(
+        "cluster of {} nodes (capacity {} pending each) serving {} `{}` \
+         requests at {:.1} req/s over {} epochs",
+        report.nodes, report.capacity, n, kind.name(), rate, report.epochs
+    );
+    let mut t = ae_llm::util::table::Table::new(&[
+        "Node", "Routed", "Done", "p50 (ms)", "p95 (ms)", "Viol (%)",
+        "Energy (J)",
+    ])
+    .with_title("Per-node serving");
+    for (i, (rep, &routed)) in
+        report.per_node.iter().zip(&report.routed).enumerate()
+    {
+        t.row(&[
+            i.to_string(),
+            routed.to_string(),
+            rep.completed.to_string(),
+            format!("{:.1}", rep.p50_latency_ms),
+            format!("{:.1}", rep.p95_latency_ms),
+            format!("{:.1}", rep.slo_violation_rate * 100.0),
+            format!("{:.1}", rep.energy_j),
+        ]);
+    }
+    println!("{}", t.render());
+    let o = &report.overall;
+    println!(
+        "overall: {} completed in {} batches | p50 {:.1} ms p95 {:.1} ms \
+         | {:.1} req/s | SLO violations {:.1}% | energy {:.1} J",
+        o.completed, o.batches, o.p50_latency_ms, o.p95_latency_ms,
+        o.throughput_rps, o.slo_violation_rate * 100.0, o.energy_j
+    );
+    Ok(())
+}
+
 fn cmd_serve_inner(engine: &mut runtime::Engine, variant: &str, n: usize,
                    seed: u64) -> anyhow::Result<()> {
     println!("== batched serving on {variant} ({n} requests) ==");
@@ -666,9 +757,10 @@ fn print_help() {
          search  --model M [--task T] [--platform P] [--prefs W]\n  \
          \x20       [--strategy S] [--quick] [--seed N] [--json]\n  \
          \x20       (--json emits the RunReport)\n  \
-         table   --id 2|3|4|5|6|7|8|9 [--quick] [--seed N]\n  \
+         table   --id 2|3|4|5|6|7|8|9|10 [--quick] [--seed N]\n  \
          \x20       (7 = strategies, 8 = adaptive vs static serving,\n  \
-         \x20        9 = continual adaptation vs one-shot)\n  \
+         \x20        9 = continual adaptation vs one-shot,\n  \
+         \x20        10 = cluster-scale serving)\n  \
          figure  --id 1|2|3|4 [--quick] [--seed N] [--out DIR]\n  \
          e2e     [--repeats N] [--seed N]   hardware-in-the-loop + serving\n  \
          serve   [--model M] [--scenario S] [--strategy S] [--requests N]\n  \
@@ -679,6 +771,11 @@ fn print_help() {
          \x20       [--json OUT.json]\n  \
          \x20       (continual adaptation: epoch serving, drift-triggered\n  \
          \x20        warm re-search, fleet hot-swap)\n  \
+         cluster [--model M] [--scenario S] [--strategy S] [--requests N]\n  \
+         \x20       [--nodes N] [--capacity N] [--epochs N] [--quick]\n  \
+         \x20       [--seed N] [--json OUT.json]\n  \
+         \x20       (N fleet nodes behind a seeded least-loaded router,\n  \
+         \x20        on the discrete-event core)\n  \
          check   load + execute every AOT artifact\n  \
          space   print the configuration-space inventory\n\n\
          prefs: balanced | latency | memory | accuracy | green\n\
@@ -855,6 +952,22 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("unexpected argument \"yes\""), "{err}");
+    }
+
+    #[test]
+    fn cluster_parses_its_options_and_rejects_typos() {
+        let err = run(&args(&["cluster", "--node", "4"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean --nodes?"), "{err}");
+        let err = run(&args(&["cluster", "--nodes", "four"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--nodes expects a number"), "{err}");
+        let err = run(&args(&["cluster", "--scenario", "bursy"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean bursty?"), "{err}");
     }
 
     #[test]

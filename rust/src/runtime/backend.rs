@@ -55,6 +55,27 @@ pub struct BatchResult {
 /// `Sync` because independent batches fan out across the thread pool;
 /// implementations must be safe to call concurrently and — see the
 /// module docs — deterministic per input.
+///
+/// ```
+/// use ae_llm::config::Config;
+/// use ae_llm::runtime::{ExecBackend, SimulatedBackend};
+///
+/// let model = ae_llm::models::by_name("LLaMA-2-7B").unwrap();
+/// let task = ae_llm::tasks::blended_task();
+/// let backend = SimulatedBackend::for_config(
+///     "sim", &Config::default_baseline(), &model, &task,
+///     &ae_llm::hardware::a100(), 8, 512, 7);
+///
+/// let shape = backend.shape("sim").unwrap();
+/// let flat = vec![3i32; shape.batch * shape.seq]; // padded token buffer
+/// let out = backend.execute_batch("sim", &flat, 5).unwrap();
+/// assert_eq!(out.next_tokens.len(), 5);           // occupied rows only
+/// assert_eq!(out.tokens, 5 * shape.seq);
+///
+/// // Pure function of (variant, buffer, rows): re-running is identical.
+/// let again = backend.execute_batch("sim", &flat, 5).unwrap();
+/// assert_eq!(out.exec_ms, again.exec_ms);
+/// ```
 pub trait ExecBackend: Sync {
     /// Batch/seq/vocab shape of a variant (error if unknown).
     fn shape(&self, variant: &str) -> anyhow::Result<BatchShape>;

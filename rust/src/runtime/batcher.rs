@@ -79,6 +79,18 @@ impl<T> Batcher<T> {
         }
     }
 
+    /// Take the pending queue — items with their (already clamped,
+    /// monotone) arrivals, in submission order — leaving the batcher
+    /// empty.  The event-driven drain (DESIGN.md §13) re-feeds them
+    /// through [`push`](Self::push) one `Arrival` event at a time; the
+    /// arrival clamp is reset so the re-feed reproduces each stored
+    /// timestamp exactly (the sequence is monotone, so re-pushing it in
+    /// order restores the clamp to the same high-water mark).
+    pub fn take_pending(&mut self) -> Vec<(T, f64)> {
+        self.last_arrival_ms = 0.0;
+        self.pending.drain(..).collect()
+    }
+
     pub fn len(&self) -> usize {
         self.pending.len()
     }

@@ -1,0 +1,525 @@
+//! Cluster-scale serving (DESIGN.md §13): N fleet nodes behind a
+//! deterministic cross-node router, driven by the discrete-event core.
+//!
+//! One [`super::fleet::EpochFleet`] models a single machine's slot
+//! servers.  A [`Cluster`] stacks N of them — each node gets its own
+//! derived seed and per-slot lane budget via its [`Deployment`] — and
+//! routes every arriving request to the least-loaded node (pending
+//! in-flight count), with a per-node soft capacity cap and a *seeded*
+//! tie-break so same-seed runs route byte-identically:
+//!
+//! ```text
+//!                  ┌────────────────────────────────────┐
+//!   requests ──▶   │ Cluster: least-loaded router (Rng) │
+//!                  └──┬──────────────┬──────────────┬───┘
+//!                     ▼              ▼              ▼
+//!                EpochFleet     EpochFleet     EpochFleet   (node 0..N)
+//!                     │              │              │
+//!                     ▼              ▼              ▼
+//!                  Server×slots   Server×slots  Server×slots
+//!                     │              │              │
+//!                     ▼              ▼              ▼
+//!                  Backend        Backend        Backend
+//! ```
+//!
+//! Two drivers serve the same workload:
+//!
+//! * [`Cluster::serve`] — the event core: arrivals and epoch
+//!   boundaries are heap events on one [`EventQueue`], so wall-clock
+//!   cost is proportional to events processed.  This is what makes
+//!   64-node / 100k-request simulation tractable.
+//! * [`Cluster::serve_polled`] — the pre-event-core reference: a
+//!   fixed-step tick loop that polls every node at every tick
+//!   (`benches/perf_cluster.rs` measures the before/after).
+//!
+//! Both submit arrivals in the same order and harvest completions only
+//! at epoch boundaries, so `pending()` — and therefore every routing
+//! decision — is identical between them; the drivers differ only in
+//! *when* ripe batches execute mid-epoch (the tick loop dispatches
+//! deadline-triggered tails at deadline ticks, the event driver flushes
+//! them at the boundary drain), which is why the cluster tests assert
+//! identical routing and completion counts rather than byte-equal
+//! reports across drivers.  Within one driver, same-seed runs are
+//! byte-identical at every parallelism level.
+
+use crate::util::json::Json;
+use crate::util::pool::Parallelism;
+use crate::util::rng::Rng;
+
+use super::events::{Event, EventQueue};
+use super::fleet::{Deployment, EpochFleet};
+use super::serve::{Completion, Request, ServeReport};
+
+/// Golden-ratio stride used everywhere the repo derives child seeds.
+const SEED_STRIDE: u64 = 0x9E37_79B9_7F4A_7C15;
+/// Salt for the router's tie-break stream, so routing noise is
+/// decorrelated from the nodes' backend noise at the same seed.
+const ROUTE_SALT: u64 = 0x5EED_0F0A_7E55_C1A5;
+
+/// Sizing of a simulated cluster.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ClusterParams {
+    /// Number of fleet nodes.
+    pub nodes: usize,
+    /// Soft cap on per-node pending requests: nodes at or over it are
+    /// skipped by the router while any node is under it (when every
+    /// node is saturated the router falls back to least-loaded over
+    /// all of them, so requests are never dropped).
+    pub capacity: usize,
+    /// Serving epochs the workload is split into; completions are
+    /// harvested (and per-node queues drained) at each boundary.
+    pub epochs: usize,
+    /// Virtual-time step of the tick-polled reference driver, ms.
+    pub tick_ms: f64,
+}
+
+impl Default for ClusterParams {
+    fn default() -> ClusterParams {
+        ClusterParams { nodes: 4, capacity: 64, epochs: 4, tick_ms: 1.0 }
+    }
+}
+
+/// N deployment nodes behind a seeded least-loaded router.
+///
+/// Construction is cheap; the fleets are instantiated per serve call
+/// so one `Cluster` value can drive both the event and the polled
+/// driver from the same (deployment, seed) without shared state.
+pub struct Cluster {
+    deployment: Deployment,
+    params: ClusterParams,
+    seed: u64,
+    par: Parallelism,
+}
+
+impl Cluster {
+    pub fn new(deployment: Deployment, params: ClusterParams, seed: u64,
+               par: Parallelism) -> Cluster {
+        Cluster {
+            deployment,
+            params: ClusterParams {
+                nodes: params.nodes.max(1),
+                capacity: params.capacity.max(1),
+                epochs: params.epochs.max(1),
+                tick_ms: if params.tick_ms > 0.0 {
+                    params.tick_ms
+                } else {
+                    1.0
+                },
+            },
+            seed,
+            par,
+        }
+    }
+
+    pub fn params(&self) -> &ClusterParams {
+        &self.params
+    }
+
+    /// Serve a timestamped workload across the cluster on the event
+    /// core and aggregate per-node + merged statistics (schema
+    /// `ae-llm.cluster-report/v1`).  Deterministic per seed at every
+    /// parallelism level.
+    ///
+    /// ```
+    /// use ae_llm::config::enumerate::sample;
+    /// use ae_llm::oracle::Objectives;
+    /// use ae_llm::runtime::fleet::{Deployment, SloPolicy};
+    /// use ae_llm::runtime::{Cluster, ClusterParams, Request, SloClass};
+    /// use ae_llm::search::archive::ParetoArchive;
+    /// use ae_llm::util::{Parallelism, Rng};
+    ///
+    /// let mut front = ParetoArchive::new(8);
+    /// front.insert(sample(&mut Rng::new(1)),
+    ///              Objectives { accuracy: 68.0, latency_ms: 12.0,
+    ///                           memory_gb: 10.0, energy_j: 0.6 });
+    /// let model = ae_llm::models::by_name("LLaMA-2-7B").unwrap();
+    /// let deployment = Deployment::from_front(
+    ///     &front, &SloPolicy::default(), &model,
+    ///     &ae_llm::tasks::blended_task(), &ae_llm::hardware::a100())
+    ///     .unwrap();
+    /// let requests: Vec<Request> = (0..40)
+    ///     .map(|i| Request::new(i, vec![1; 64])
+    ///         .at(i as f64 * 8.0)
+    ///         .class(SloClass::Interactive))
+    ///     .collect();
+    /// let cluster = Cluster::new(deployment,
+    ///                            ClusterParams { nodes: 2,
+    ///                                            ..Default::default() },
+    ///                            7, Parallelism::Sequential);
+    /// let report = cluster.serve(&requests, "steady");
+    /// assert_eq!(report.overall.completed, 40);
+    /// assert_eq!(report.routed.iter().sum::<usize>(), 40);
+    /// ```
+    pub fn serve(&self, requests: &[Request], scenario: &str)
+                 -> ClusterReport {
+        let mut nodes = self.make_nodes(super::serve::DrainDriver::Event);
+        let mut rng = Rng::new(self.seed ^ ROUTE_SALT);
+        let mut routed = vec![0usize; nodes.len()];
+
+        let per = chunk_len(requests.len(), self.params.epochs);
+        let mut queue: EventQueue<Event> = EventQueue::new();
+        let mut boundary = 0.0f64;
+        for (epoch, chunk) in requests.chunks(per).enumerate() {
+            let base = epoch * per;
+            for (k, r) in chunk.iter().enumerate() {
+                queue.push(r.arrival_ms, Event::Arrival { index: base + k });
+            }
+            // The boundary shares the last arrival's timestamp but is
+            // pushed *after* it, so it loses ties to its own epoch's
+            // arrivals and wins them against the next epoch's.
+            boundary = chunk
+                .last()
+                .map(|r| r.arrival_ms)
+                .unwrap_or(boundary)
+                .max(boundary);
+            queue.push(boundary, Event::EpochBoundary { epoch });
+        }
+
+        while let Some((_, _, ev)) = queue.pop() {
+            match ev {
+                Event::Arrival { index } => {
+                    let n = route(&nodes, self.params.capacity, &mut rng);
+                    routed[n] += 1;
+                    nodes[n].submit(requests[index].clone());
+                }
+                Event::EpochBoundary { epoch } => {
+                    for node in &mut nodes {
+                        node.close_epoch(epoch);
+                    }
+                }
+                Event::BatchClose { .. } | Event::BatchComplete { .. } => {
+                    unreachable!("batch events live inside server drains")
+                }
+            }
+        }
+        self.build_report(scenario, nodes, routed)
+    }
+
+    /// [`serve`](Self::serve) through the pre-event-core tick loop:
+    /// virtual time advances in fixed `tick_ms` steps and every node is
+    /// polled at every tick — wall-clock cost proportional to virtual
+    /// time swept times nodes, the cost profile the event core removes.
+    /// Kept as the before-side of `benches/perf_cluster.rs` and as a
+    /// routing cross-check (both drivers make identical routing
+    /// decisions; see the module docs for why reports may differ in
+    /// mid-epoch dispatch timing).
+    pub fn serve_polled(&self, requests: &[Request], scenario: &str)
+                        -> ClusterReport {
+        let mut nodes = self.make_nodes(super::serve::DrainDriver::Polled);
+        let mut rng = Rng::new(self.seed ^ ROUTE_SALT);
+        let mut routed = vec![0usize; nodes.len()];
+
+        let per = chunk_len(requests.len(), self.params.epochs);
+        let mut t = 0.0f64;
+        let mut boundary = 0.0f64;
+        for (epoch, chunk) in requests.chunks(per).enumerate() {
+            boundary = chunk
+                .last()
+                .map(|r| r.arrival_ms)
+                .unwrap_or(boundary)
+                .max(boundary);
+            let mut next = 0usize;
+            while t < boundary {
+                while next < chunk.len()
+                    && chunk[next].arrival_ms <= t
+                {
+                    let n = route(&nodes, self.params.capacity, &mut rng);
+                    routed[n] += 1;
+                    nodes[n].submit(chunk[next].clone());
+                    next += 1;
+                }
+                for node in &mut nodes {
+                    node.poll(t);
+                }
+                t += self.params.tick_ms;
+            }
+            for r in &chunk[next..] {
+                let n = route(&nodes, self.params.capacity, &mut rng);
+                routed[n] += 1;
+                nodes[n].submit(r.clone());
+            }
+            for node in &mut nodes {
+                node.close_epoch(epoch);
+            }
+        }
+        self.build_report(scenario, nodes, routed)
+    }
+
+    fn make_nodes(&self, driver: super::serve::DrainDriver)
+                  -> Vec<EpochFleet> {
+        (0..self.params.nodes)
+            .map(|i| {
+                let seed = self.seed
+                    ^ ((i as u64) + 1).wrapping_mul(SEED_STRIDE);
+                EpochFleet::new(self.deployment.clone(), seed, self.par)
+                    .with_driver(driver)
+            })
+            .collect()
+    }
+
+    fn build_report(&self, scenario: &str, nodes: Vec<EpochFleet>,
+                    routed: Vec<usize>) -> ClusterReport {
+        let per_node: Vec<ServeReport> =
+            nodes.iter().map(|n| n.overall_report()).collect();
+        let all: Vec<Completion> = nodes
+            .iter()
+            .flat_map(|n| n.completions().iter().cloned())
+            .collect();
+        let exec: Vec<f64> = nodes
+            .iter()
+            .flat_map(|n| n.batch_exec_ms().iter().copied())
+            .collect();
+        let energy: f64 = nodes.iter().map(|n| n.total_energy_j()).sum();
+        let tokens: usize = nodes.iter().map(|n| n.total_tokens()).sum();
+        let span = nodes.iter().filter_map(|n| n.span()).fold(
+            None,
+            |acc: Option<(f64, f64)>, (f, l)| Some(match acc {
+                None => (f, l),
+                Some((af, al)) => (af.min(f), al.max(l)),
+            }),
+        );
+        let overall = ServeReport::from_completions(
+            &all, exec.len(), &exec, energy, span, tokens);
+        ClusterReport {
+            scenario: scenario.to_string(),
+            seed: self.seed,
+            nodes: self.params.nodes,
+            capacity: self.params.capacity,
+            epochs: self.params.epochs,
+            routed,
+            per_node,
+            overall,
+        }
+    }
+}
+
+/// Epoch chunk length: ceil(len / epochs), at least 1.
+fn chunk_len(len: usize, epochs: usize) -> usize {
+    (len.div_ceil(epochs.max(1))).max(1)
+}
+
+/// Least-loaded routing with a soft capacity cap: candidates are the
+/// nodes under `capacity` pending (all nodes when saturated); among
+/// candidates, minimum `pending()` wins, and exact ties are broken by
+/// the seeded stream — `rng` is consumed *only* on a tie, so the
+/// stream stays aligned across runs that make the same decisions.
+fn route(nodes: &[EpochFleet], capacity: usize, rng: &mut Rng) -> usize {
+    let pending: Vec<usize> = nodes.iter().map(|n| n.pending()).collect();
+    let candidates: Vec<usize> = {
+        let under: Vec<usize> = (0..nodes.len())
+            .filter(|&i| pending[i] < capacity)
+            .collect();
+        if under.is_empty() {
+            (0..nodes.len()).collect()
+        } else {
+            under
+        }
+    };
+    let min = candidates
+        .iter()
+        .map(|&i| pending[i])
+        .min()
+        .expect("cluster has at least one node");
+    let ties: Vec<usize> = candidates
+        .into_iter()
+        .filter(|&i| pending[i] == min)
+        .collect();
+    if ties.len() == 1 {
+        ties[0]
+    } else {
+        ties[rng.below(ties.len())]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ClusterReport
+// ---------------------------------------------------------------------------
+
+pub const CLUSTER_REPORT_SCHEMA: &str = "ae-llm.cluster-report/v1";
+
+/// Everything one cluster serving run produced (schema
+/// `ae-llm.cluster-report/v1`; `ae-llm cluster --json`).
+#[derive(Clone, Debug)]
+pub struct ClusterReport {
+    pub scenario: String,
+    pub seed: u64,
+    pub nodes: usize,
+    pub capacity: usize,
+    pub epochs: usize,
+    /// Requests routed to each node, aligned with `per_node`.
+    pub routed: Vec<usize>,
+    /// Whole-run serve statistics per node.
+    pub per_node: Vec<ServeReport>,
+    /// Merged statistics across every node.
+    pub overall: ServeReport,
+}
+
+impl ClusterReport {
+    /// Serialize (schema `ae-llm.cluster-report/v1`; field reference in
+    /// docs/SCHEMAS.md).  Same-seed runs dump byte-identical JSON.
+    pub fn to_json(&self) -> Json {
+        let mut root = std::collections::BTreeMap::new();
+        root.insert("schema".into(),
+                    Json::Str(CLUSTER_REPORT_SCHEMA.into()));
+        root.insert("scenario".into(), Json::Str(self.scenario.clone()));
+        // String, not Num: Json numbers are f64 and would corrupt
+        // seeds above 2^53 (same convention as RunReport).
+        root.insert("seed".into(), Json::Str(self.seed.to_string()));
+        root.insert("nodes".into(), Json::Num(self.nodes as f64));
+        root.insert("capacity".into(), Json::Num(self.capacity as f64));
+        root.insert("epochs".into(), Json::Num(self.epochs as f64));
+        root.insert("routed".into(), Json::Arr(
+            self.routed.iter().map(|&n| Json::Num(n as f64)).collect()));
+        root.insert("per_node".into(), Json::Arr(
+            self.per_node.iter().map(ServeReport::to_json).collect()));
+        root.insert("overall".into(), self.overall.to_json());
+        Json::Obj(root)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::fleet::{SloClass, SloPolicy};
+    use super::super::workload::{Workload, WorkloadKind};
+    use super::*;
+    use crate::config::Config;
+    use crate::oracle::Objectives;
+    use crate::search::archive::ParetoArchive;
+    use crate::util::Rng;
+
+    fn cfg(seed: u64) -> Config {
+        crate::config::enumerate::sample(&mut Rng::new(seed))
+    }
+
+    fn front() -> ParetoArchive {
+        let mut a = ParetoArchive::new(10);
+        a.insert(cfg(1), Objectives { accuracy: 68.0, latency_ms: 12.0,
+                                      memory_gb: 10.0, energy_j: 0.60 });
+        a.insert(cfg(2), Objectives { accuracy: 68.5, latency_ms: 30.0,
+                                      memory_gb: 9.0, energy_j: 0.20 });
+        a.insert(cfg(3), Objectives { accuracy: 68.2, latency_ms: 28.0,
+                                      memory_gb: 4.0, energy_j: 0.55 });
+        a
+    }
+
+    fn deployment() -> Deployment {
+        let m = crate::models::by_name("LLaMA-2-7B").unwrap();
+        Deployment::from_front(&front(), &SloPolicy::default(), &m,
+                               &crate::tasks::blended_task(),
+                               &crate::hardware::a100())
+            .unwrap()
+    }
+
+    #[test]
+    fn same_seed_cluster_serve_is_byte_identical() {
+        let reqs = Workload::new(WorkloadKind::Bursty, 60.0, 300, 9)
+            .generate();
+        let go = |par| {
+            Cluster::new(deployment(),
+                         ClusterParams { nodes: 3, ..Default::default() },
+                         11, par)
+                .serve(&reqs, "bursty")
+                .to_json()
+                .dump()
+        };
+        let a = go(Parallelism::Sequential);
+        let b = go(Parallelism::Threads(4));
+        let c = go(Parallelism::Sequential);
+        assert_eq!(a, b, "parallelism changed the cluster report");
+        assert_eq!(a, c, "same seed produced different cluster reports");
+        assert!(a.contains("\"schema\":\"ae-llm.cluster-report/v1\""),
+                "{a}");
+    }
+
+    #[test]
+    fn event_and_polled_drivers_route_identically_and_complete_all() {
+        let reqs = Workload::new(WorkloadKind::Steady, 50.0, 240, 5)
+            .generate();
+        let params = ClusterParams { nodes: 4, capacity: 32, epochs: 3,
+                                     tick_ms: 2.0 };
+        let cluster =
+            Cluster::new(deployment(), params, 7, Parallelism::Sequential);
+        let event = cluster.serve(&reqs, "steady");
+        let polled = cluster.serve_polled(&reqs, "steady");
+        // pending() moves only at epoch boundaries on both drivers, so
+        // every routing decision is shared.
+        assert_eq!(event.routed, polled.routed);
+        assert_eq!(event.routed.iter().sum::<usize>(), reqs.len());
+        assert_eq!(event.overall.completed, reqs.len());
+        assert_eq!(polled.overall.completed, reqs.len());
+        // per-node completions line up with routing on both drivers
+        for (rep, &n) in event.per_node.iter().zip(&event.routed) {
+            assert_eq!(rep.completed, n);
+        }
+        for (rep, &n) in polled.per_node.iter().zip(&polled.routed) {
+            assert_eq!(rep.completed, n);
+        }
+    }
+
+    #[test]
+    fn routing_spreads_load_across_nodes() {
+        let reqs = Workload::new(WorkloadKind::Steady, 80.0, 400, 3)
+            .generate();
+        let report = Cluster::new(
+            deployment(),
+            ClusterParams { nodes: 4, capacity: 16, ..Default::default() },
+            13, Parallelism::Sequential)
+            .serve(&reqs, "steady");
+        assert_eq!(report.routed.len(), 4);
+        assert!(report.routed.iter().all(|&n| n > 0),
+                "a node was starved: {:?}", report.routed);
+        let max = *report.routed.iter().max().unwrap();
+        assert!(max < reqs.len(),
+                "one node swallowed the whole workload: {:?}",
+                report.routed);
+        // least-loaded routing keeps the split roughly even
+        let min = *report.routed.iter().min().unwrap();
+        assert!(max <= 2 * min + 16,
+                "routing badly skewed: {:?}", report.routed);
+    }
+
+    #[test]
+    fn single_node_cluster_matches_its_own_fleet() {
+        // With one node there is nothing to route; the cluster view is
+        // exactly that node's whole-run report.
+        let reqs = Workload::new(WorkloadKind::Diurnal, 40.0, 200, 9)
+            .generate();
+        let report = Cluster::new(
+            deployment(),
+            ClusterParams { nodes: 1, epochs: 2, ..Default::default() },
+            21, Parallelism::Sequential)
+            .serve(&reqs, "diurnal");
+        assert_eq!(report.routed, vec![reqs.len()]);
+        assert_eq!(report.per_node.len(), 1);
+        assert_eq!(report.per_node[0].to_json().dump(),
+                   report.overall.to_json().dump());
+    }
+
+    #[test]
+    fn report_json_carries_per_node_and_routing() {
+        let reqs: Vec<_> = (0..30u64)
+            .map(|i| super::super::serve::Request::new(i, vec![1; 64])
+                .at(i as f64 * 12.0)
+                .class(SloClass::ALL[(i % 3) as usize]))
+            .collect();
+        let j = Cluster::new(
+            deployment(),
+            ClusterParams { nodes: 2, ..Default::default() },
+            5, Parallelism::Sequential)
+            .serve(&reqs, "steady")
+            .to_json();
+        assert_eq!(j.get("schema").and_then(Json::as_str),
+                   Some(CLUSTER_REPORT_SCHEMA));
+        assert_eq!(j.get("nodes").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(j.get("seed").and_then(Json::as_str), Some("5"));
+        let per = match j.get("per_node") {
+            Some(Json::Arr(a)) => a.len(),
+            _ => panic!("per_node missing"),
+        };
+        assert_eq!(per, 2);
+        match j.get("routed") {
+            Some(Json::Arr(a)) => assert_eq!(a.len(), 2),
+            _ => panic!("routed missing"),
+        }
+    }
+}

@@ -1,0 +1,235 @@
+//! Deterministic discrete-event core (DESIGN.md §13).
+//!
+//! The serving stack used to advance by *polling*: walk requests, walk
+//! servers, step virtual time, repeat — wall-clock cost proportional to
+//! the amount of virtual time swept.  This module replaces that with a
+//! binary event heap: producers push timestamped events, the consumer
+//! pops them in timeline order, and wall-clock cost is proportional to
+//! the number of *events processed*, which is what makes cluster-scale
+//! simulation (hundreds of nodes, millions of requests) tractable.
+//!
+//! Event taxonomy (see [`Event`]):
+//!
+//! * `Arrival` — a request reaches a server's queue;
+//! * `BatchClose` — a formed batch becomes dispatchable (size- or
+//!   deadline-triggered, per [`super::batcher::Batcher`]);
+//! * `BatchComplete` — an executing batch finishes on its lane;
+//! * `EpochBoundary` — the adaptation controller's epoch ends (drain,
+//!   telemetry, drift decision).
+//!
+//! Ordering and determinism contract: every event is keyed by
+//! `(time_ms, seq)` where `seq` is a monotonically increasing counter
+//! assigned at push.  The heap pops strictly in that key order, so
+//!
+//! 1. events at distinct times pop in timeline order, and
+//! 2. events at the *same* time pop in **submission order** — the tie-
+//!    break is stable, never a hash or pointer comparison.
+//!
+//! That second property is what keeps same-seed runs byte-identical
+//! across machines and parallelism levels: whenever two things happen
+//! "at the same instant" (a batch closing exactly when the next request
+//! arrives, an epoch boundary sharing a timestamp with the first
+//! arrival of the next epoch), the winner is decided by push order,
+//! which every deterministic driver reproduces exactly.  Times must be
+//! non-NaN (`push` asserts); infinities are allowed and sort last.
+
+use std::cmp::{Ordering, Reverse};
+use std::collections::BinaryHeap;
+
+/// The event taxonomy of the serving simulation.  Payloads are indices
+/// into the driver's own side tables (request lists, formed-batch
+/// tables), keeping the heap small and `Copy`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// Request `index` (into the driver's submission-ordered request
+    /// list) arrives at its server's queue.
+    Arrival { index: usize },
+    /// Formed batch `batch` (into the driver's side table of closed
+    /// batches) becomes dispatchable.
+    BatchClose { batch: usize },
+    /// Executing batch `batch` completes on its serving lane.
+    BatchComplete { batch: usize },
+    /// Serving epoch `epoch` ends: drain, extract telemetry, decide.
+    EpochBoundary { epoch: usize },
+}
+
+/// Heap entry: the `(time_ms, seq)` ordering key plus the payload.
+/// `Ord` looks only at the key, so the payload type needs no bounds.
+struct Keyed<E> {
+    time_ms: f64,
+    seq: u64,
+    event: E,
+}
+
+impl<E> PartialEq for Keyed<E> {
+    fn eq(&self, other: &Self) -> bool {
+        // seq is unique per queue, so this is really seq equality; the
+        // time check keeps eq consistent with cmp by construction.
+        self.seq == other.seq && self.time_ms == other.time_ms
+    }
+}
+
+impl<E> Eq for Keyed<E> {}
+
+impl<E> PartialOrd for Keyed<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Keyed<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // Times are asserted non-NaN at push, so partial_cmp is total
+        // here; seq breaks ties stably (push order).
+        self.time_ms
+            .partial_cmp(&other.time_ms)
+            .expect("event times are never NaN")
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+/// A deterministic min-heap of timestamped events.
+///
+/// Pops in `(time_ms, seq)` order: timeline order first, push order
+/// among ties.  Generic over the payload so drivers can carry their
+/// own event types ([`Event`] is the shared taxonomy).
+pub struct EventQueue<E> {
+    heap: BinaryHeap<Reverse<Keyed<E>>>,
+    next_seq: u64,
+}
+
+impl<E> EventQueue<E> {
+    pub fn new() -> EventQueue<E> {
+        EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
+    }
+
+    /// Schedule `event` at `time_ms`; returns the sequence number that
+    /// breaks ties against other events at the same time (monotonically
+    /// increasing, so later pushes lose ties to earlier ones).
+    pub fn push(&mut self, time_ms: f64, event: E) -> u64 {
+        assert!(!time_ms.is_nan(), "event time must not be NaN");
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.heap.push(Reverse(Keyed { time_ms, seq, event }));
+        seq
+    }
+
+    /// Pop the earliest event: smallest `(time_ms, seq)` key.
+    pub fn pop(&mut self) -> Option<(f64, u64, E)> {
+        self.heap
+            .pop()
+            .map(|Reverse(k)| (k.time_ms, k.seq, k.event))
+    }
+
+    /// Timestamp of the next event without popping it.
+    pub fn peek_time_ms(&self) -> Option<f64> {
+        self.heap.peek().map(|Reverse(k)| k.time_ms)
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+impl<E> Default for EventQueue<E> {
+    fn default() -> Self {
+        EventQueue::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.push(30.0, "c");
+        q.push(10.0, "a");
+        q.push(20.0, "b");
+        assert_eq!(q.len(), 3);
+        assert_eq!(q.peek_time_ms(), Some(10.0));
+        let order: Vec<&str> =
+            std::iter::from_fn(|| q.pop()).map(|(_, _, e)| e).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn same_time_events_pop_in_submission_order() {
+        let mut q = EventQueue::new();
+        for i in 0..100usize {
+            q.push(5.0, i);
+        }
+        let order: Vec<usize> =
+            std::iter::from_fn(|| q.pop()).map(|(_, _, e)| e).collect();
+        assert_eq!(order, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn interleaved_pushes_and_pops_keep_key_order() {
+        let mut q = EventQueue::new();
+        q.push(10.0, 0usize);
+        q.push(10.0, 1);
+        assert_eq!(q.pop().map(|(_, _, e)| e), Some(0));
+        // A later push at the same instant still loses the tie to the
+        // event pushed before it.
+        q.push(10.0, 2);
+        assert_eq!(q.pop().map(|(_, _, e)| e), Some(1));
+        assert_eq!(q.pop().map(|(_, _, e)| e), Some(2));
+        assert_eq!(q.pop().map(|(_, _, e)| e), None);
+    }
+
+    #[test]
+    fn property_random_tied_times_preserve_submission_order() {
+        // Many events drawn from a tiny set of timestamps (maximal
+        // tying): the pop sequence must be sorted by time, and within
+        // every timestamp must preserve push order exactly.
+        let mut rng = Rng::new(42);
+        let mut q = EventQueue::new();
+        let mut pushed: Vec<(f64, usize)> = Vec::new();
+        for i in 0..500usize {
+            let t = [0.0, 1.0, 1.0, 2.5, 7.0][rng.below(5) as usize];
+            q.push(t, i);
+            pushed.push((t, i));
+        }
+        let popped: Vec<(f64, usize)> =
+            std::iter::from_fn(|| q.pop()).map(|(t, _, e)| (t, e)).collect();
+        // stable sort of the push log by time == heap pop order
+        let mut expect = pushed.clone();
+        expect.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        assert_eq!(popped, expect);
+    }
+
+    #[test]
+    fn infinity_sorts_last_and_seq_is_returned() {
+        let mut q = EventQueue::new();
+        let s0 = q.push(f64::INFINITY, "flush");
+        let s1 = q.push(3.0, "work");
+        assert!(s1 > s0);
+        assert_eq!(q.pop().map(|(t, s, e)| (t, s, e)),
+                   Some((3.0, s1, "work")));
+        assert_eq!(q.pop().map(|(_, _, e)| e), Some("flush"));
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn nan_times_are_rejected() {
+        EventQueue::new().push(f64::NAN, 0usize);
+    }
+
+    #[test]
+    fn taxonomy_is_copy_and_comparable() {
+        let e = Event::Arrival { index: 3 };
+        let f = e; // Copy
+        assert_eq!(e, f);
+        assert_ne!(Event::BatchClose { batch: 0 },
+                   Event::BatchComplete { batch: 0 });
+        let _ = Event::EpochBoundary { epoch: 1 };
+    }
+}

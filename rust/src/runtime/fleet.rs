@@ -33,7 +33,8 @@ use super::backend::{SimulatedBackend, EXEC_FLOOR, EXEC_SLOPE,
                      SEQ_SCALE_EXP};
 use super::clock::VirtualClock;
 use super::drift::EpochTelemetry;
-use super::serve::{Arrival, Completion, Request, ServeReport, Server};
+use super::serve::{Arrival, Completion, DrainDriver, Request,
+                   ServeReport, Server};
 
 // ---------------------------------------------------------------------------
 // SLO classes and policy
@@ -567,9 +568,25 @@ impl Deployment {
 
     /// Serve a timestamped workload on the simulated fleet (virtual
     /// time; deterministic per seed at every parallelism level) and
-    /// aggregate per-slot + overall statistics.
+    /// aggregate per-slot + overall statistics.  Runs on the event
+    /// core; [`serve_polled`](Self::serve_polled) is the pre-refactor
+    /// reference path the golden-report tests compare against.
     pub fn serve(&self, requests: &[Request], scenario: &str, seed: u64,
                  par: Parallelism) -> DeploymentReport {
+        self.serve_with(requests, scenario, seed, par, DrainDriver::Event)
+    }
+
+    /// [`serve`](Self::serve) through the pre-event-core pooled loop —
+    /// the reference implementation kept for byte-identity regression
+    /// tests and the before/after rows of `benches/perf_cluster.rs`.
+    pub fn serve_polled(&self, requests: &[Request], scenario: &str,
+                        seed: u64, par: Parallelism) -> DeploymentReport {
+        self.serve_with(requests, scenario, seed, par, DrainDriver::Polled)
+    }
+
+    fn serve_with(&self, requests: &[Request], scenario: &str, seed: u64,
+                  par: Parallelism, driver: DrainDriver)
+                  -> DeploymentReport {
         let mut servers: Vec<_> = (0..self.slots.len())
             .map(|i| self.make_server(i, seed, par))
             .collect();
@@ -577,7 +594,7 @@ impl Deployment {
             servers[self.route_index(r.slo)].submit(r.clone());
         }
         for s in &mut servers {
-            s.drain().expect("simulated backend is infallible");
+            s.drain_with(driver).expect("simulated backend is infallible");
         }
 
         // Per-slot reports + the merged overall view.
@@ -649,6 +666,8 @@ pub struct DeploymentReport {
 }
 
 impl DeploymentReport {
+    /// Serialize (schema `ae-llm.deploy-report/v1`; field reference in
+    /// docs/SCHEMAS.md).  Same-seed runs dump byte-identical JSON.
     pub fn to_json(&self) -> Json {
         let mut root = std::collections::BTreeMap::new();
         root.insert("schema".into(),
@@ -734,6 +753,7 @@ pub struct EpochFleet {
     first_arrival_ms: f64,
     last_done_ms: f64,
     redeployments: usize,
+    driver: DrainDriver,
 }
 
 impl EpochFleet {
@@ -760,7 +780,15 @@ impl EpochFleet {
             first_arrival_ms: f64::INFINITY,
             last_done_ms: 0.0,
             redeployments: 0,
+            driver: DrainDriver::Event,
         }
+    }
+
+    /// Select the serving loop (event core by default; the polled
+    /// reference path exists for byte-identity regression tests).
+    pub fn with_driver(mut self, driver: DrainDriver) -> EpochFleet {
+        self.driver = driver;
+        self
     }
 
     pub fn deployment(&self) -> &Deployment {
@@ -784,15 +812,40 @@ impl EpochFleet {
         self.servers[i].submit(r);
     }
 
-    /// Serve one epoch: submit the epoch's requests, drain every slot,
-    /// and distill the telemetry + serve stats of exactly this epoch.
+    /// Serve one epoch: submit the epoch's requests, then
+    /// [`close_epoch`](Self::close_epoch).
     pub fn serve_epoch(&mut self, epoch: usize, requests: &[Request])
                        -> EpochOutcome {
         for r in requests {
             self.submit(r.clone());
         }
+        self.close_epoch(epoch)
+    }
+
+    /// Poll every server: form and execute whatever batches are ripe by
+    /// `now_ms` (the tick-stepped reference driver the cluster bench
+    /// measures the event core against).  Completions stay un-harvested
+    /// until [`close_epoch`](Self::close_epoch) — `pending()` moves at
+    /// epoch boundaries on both drivers, which is what keeps routing
+    /// decisions comparable between them.
+    pub fn poll(&mut self, now_ms: f64) -> usize {
+        self.servers
+            .iter_mut()
+            .map(|s| {
+                s.poll_ready(now_ms)
+                    .expect("simulated backend is infallible")
+            })
+            .sum()
+    }
+
+    /// Drain every slot through the fleet's [`DrainDriver`] and distill
+    /// the telemetry + serve stats of exactly this epoch (everything
+    /// since the previous close).
+    pub fn close_epoch(&mut self, epoch: usize) -> EpochOutcome {
+        let driver = self.driver;
         for s in &mut self.servers {
-            s.drain().expect("simulated backend is infallible");
+            s.drain_with(driver)
+                .expect("simulated backend is infallible");
         }
 
         // Collect this epoch's deltas, per server in slot order.
@@ -888,21 +941,47 @@ impl EpochFleet {
 
     /// Whole-run serve statistics across every epoch and redeploy.
     pub fn overall_report(&self) -> ServeReport {
-        let span = if self.all_completions.is_empty()
-            || !self.first_arrival_ms.is_finite()
-        {
-            None
-        } else {
-            Some((self.first_arrival_ms, self.last_done_ms))
-        };
         ServeReport::from_completions(
             &self.all_completions,
             self.all_exec.len(),
             &self.all_exec,
             self.total_energy_j,
-            span,
+            self.span(),
             self.total_tokens,
         )
+    }
+
+    // Whole-run raw views (the cluster layer merges these per node).
+
+    /// Every completion accounted so far, across epochs and redeploys.
+    pub fn completions(&self) -> &[Completion] {
+        &self.all_completions
+    }
+
+    /// Every batch execution time accounted so far.
+    pub fn batch_exec_ms(&self) -> &[f64] {
+        &self.all_exec
+    }
+
+    pub fn total_energy_j(&self) -> f64 {
+        self.total_energy_j
+    }
+
+    /// Σ completed × seq over the contributing servers.
+    pub fn total_tokens(&self) -> usize {
+        self.total_tokens
+    }
+
+    /// (first arrival, last completion) across the whole run, if any
+    /// request completed.
+    pub fn span(&self) -> Option<(f64, f64)> {
+        if self.all_completions.is_empty()
+            || !self.first_arrival_ms.is_finite()
+        {
+            None
+        } else {
+            Some((self.first_arrival_ms, self.last_done_ms))
+        }
     }
 }
 
@@ -1019,6 +1098,60 @@ mod tests {
         let j = a.to_json();
         assert_eq!(j.get("schema").and_then(Json::as_str),
                    Some(DEPLOY_REPORT_SCHEMA));
+    }
+
+    #[test]
+    fn event_core_reproduces_polled_reports_on_all_scenarios() {
+        // The golden-report regression the refactor is gated on: for
+        // every workload scenario, the event-driven serve path must
+        // dump byte-identical DeploymentReport JSON to the PR 5 polled
+        // loop — across parallelism levels.
+        use super::super::workload::{Workload, WorkloadKind};
+        let front = specialist_front();
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = blended_task();
+        let d = Deployment::from_front(&front, &SloPolicy::default(), &m,
+                                       &t, &hardware::a100()).unwrap();
+        for kind in WorkloadKind::ALL {
+            let reqs = Workload::new(kind, 40.0, 400, 11).generate();
+            let event =
+                d.serve(&reqs, kind.name(), 7, Parallelism::Sequential);
+            let polled = d.serve_polled(&reqs, kind.name(), 7,
+                                        Parallelism::Threads(4));
+            assert_eq!(event.to_json().dump(), polled.to_json().dump(),
+                       "event core diverged from the polled loop on \
+                        {kind:?}");
+        }
+    }
+
+    #[test]
+    fn epoch_fleet_event_and_polled_drivers_agree() {
+        let front = specialist_front();
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = blended_task();
+        let d = Deployment::from_front(&front, &SloPolicy::default(), &m,
+                                       &t, &hardware::a100()).unwrap();
+        let reqs: Vec<Request> = (0..90u64)
+            .map(|i| {
+                Request::new(i, vec![(i as i32) % 11; 64])
+                    .at(i as f64 * 6.0)
+                    .class(SloClass::ALL[(i % 3) as usize])
+            })
+            .collect();
+        let run = |driver: DrainDriver| {
+            let mut fleet = EpochFleet::new(d.clone(), 5,
+                                            Parallelism::Sequential)
+                .with_driver(driver);
+            let mut dumps = Vec::new();
+            for (e, chunk) in reqs.chunks(30).enumerate() {
+                let out = fleet.serve_epoch(e, chunk);
+                dumps.push(out.report.to_json().dump());
+                dumps.push(out.telemetry.to_json().dump());
+            }
+            dumps.push(fleet.overall_report().to_json().dump());
+            dumps
+        };
+        assert_eq!(run(DrainDriver::Event), run(DrainDriver::Polled));
     }
 
     #[test]

@@ -18,13 +18,19 @@
 //!   scenarios (steady / diurnal / bursty / heavytail, plus the
 //!   drifting regime_shift / ramp);
 //! * [`drift`] — per-epoch serving telemetry and the EWMA drift
-//!   detector that triggers re-search (DESIGN.md §12).
+//!   detector that triggers re-search (DESIGN.md §12);
+//! * [`events`] — the deterministic `(time, seq)`-keyed event heap the
+//!   serving loops run on (DESIGN.md §13);
+//! * [`cluster`] — N fleet nodes behind a seeded least-loaded router,
+//!   driven by the event core (DESIGN.md §13).
 
 pub mod backend;
 pub mod batcher;
 pub mod clock;
+pub mod cluster;
 pub mod drift;
 pub mod engine;
+pub mod events;
 pub mod fleet;
 pub mod manifest;
 pub mod measure;
@@ -34,12 +40,16 @@ pub mod workload;
 pub use backend::{BatchResult, BatchShape, ExecBackend, PjrtBackend,
                   SimulatedBackend};
 pub use clock::{Clock, VirtualClock, WallClock};
+pub use cluster::{Cluster, ClusterParams, ClusterReport,
+                  CLUSTER_REPORT_SCHEMA};
 pub use drift::{DriftDecision, DriftDetector, EpochTelemetry};
 pub use engine::{Engine, Forward};
+pub use events::{Event, EventQueue};
 pub use fleet::{Deployment, DeploymentReport, EpochFleet, EpochOutcome,
                 RedeployPlan, SloClass, SloPolicy};
 pub use manifest::{artifacts_dir, Manifest, Variant};
 pub use measure::{measure_all, measure_all_with, MeasuredEvaluator,
                   MeasurementTable};
-pub use serve::{Arrival, Completion, Request, ServeReport, Server};
+pub use serve::{Arrival, Completion, DrainDriver, Request, ServeReport,
+                Server};
 pub use workload::{Workload, WorkloadKind};

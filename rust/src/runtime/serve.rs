@@ -19,11 +19,20 @@
 //! Ordering contract (tests/integration_serve.rs): batch indices and
 //! the completion log always follow submission order, at every
 //! [`Parallelism`] level and whatever order workers finish in.
+//!
+//! Since the event-core refactor (DESIGN.md §13), [`drain`](
+//! Server::drain) runs on the deterministic [`EventQueue`]: arrivals,
+//! batch closes and batch completions are heap events keyed by
+//! `(time, seq)`, so wall-clock cost tracks events processed rather
+//! than virtual time swept.  The pre-refactor pooled loop survives as
+//! [`drain_polled`](Server::drain_polled) — the reference
+//! implementation the byte-identity regression tests compare against.
 
 use super::backend::{BatchResult, BatchShape, ExecBackend, PjrtBackend,
                      SimulatedBackend};
 use super::batcher::{Batch, Batcher};
 use super::clock::{Clock, VirtualClock, WallClock};
+use super::events::{Event, EventQueue};
 use super::engine::Engine;
 use super::fleet::{SloClass, SloPolicy};
 use crate::util::json::Json;
@@ -152,9 +161,10 @@ impl ServeReport {
         }
     }
 
-    /// Serialize (schema `ae-llm.serve-report/v1`).  Every field is a
-    /// deterministic function of the serving inputs, so same-seed
-    /// simulated runs dump byte-identical JSON.
+    /// Serialize (schema `ae-llm.serve-report/v1`; field reference in
+    /// docs/SCHEMAS.md).  Every field is a deterministic function of
+    /// the serving inputs, so same-seed simulated runs dump
+    /// byte-identical JSON.
     pub fn to_json(&self) -> Json {
         let mut m = std::collections::BTreeMap::new();
         m.insert("schema".into(), Json::Str(SERVE_REPORT_SCHEMA.into()));
@@ -211,6 +221,16 @@ pub struct Arrival {
     pub arrival_ms: f64,
 }
 
+/// Which serving loop a fleet drives its servers with: the event core
+/// ([`Server::drain`], the default) or the pre-refactor pooled loop
+/// ([`Server::drain_polled`], kept as the reference implementation the
+/// byte-identity tests compare against).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DrainDriver {
+    Event,
+    Polled,
+}
+
 /// A padded, deadline-stamped queue entry.
 #[derive(Clone, Debug)]
 struct Item {
@@ -240,9 +260,11 @@ pub struct Server<B: ExecBackend, C: Clock> {
     first_arrival_ms: Option<f64>,
     last_done_ms: f64,
     /// Worker count for executing independent batches concurrently in
-    /// [`drain`](Self::drain).  Purely an execution-throughput knob:
-    /// batch indices, the completion log and (for deterministic
-    /// backends) every reported number are identical at every level.
+    /// [`drain_polled`](Self::drain_polled).  Purely an execution-
+    /// throughput knob: batch indices, the completion log and (for
+    /// deterministic backends) every reported number are identical at
+    /// every level — the event-driven [`drain`](Self::drain) executes
+    /// inline and ignores it entirely.
     parallelism: Parallelism,
 }
 
@@ -357,19 +379,189 @@ impl<B: ExecBackend, C: Clock> Server<B, C> {
     }
 
     /// Form and execute every batch the queue implies (size- or
-    /// deadline-triggered, final partial flushed).
+    /// deadline-triggered, final partial flushed), on the discrete-
+    /// event core (DESIGN.md §13).
     ///
-    /// Independent batches execute concurrently on up to
-    /// `self.parallelism` workers; completions merge back in submission
-    /// order (the pool's ordered reduce), then completion times are
-    /// accounted on the lane model: each batch starts on the
-    /// earliest-free lane no sooner than it became dispatchable.  On
-    /// the first failed batch, every not-yet-recorded request — the
+    /// Pending requests replay as `Arrival` events in `(time, seq)`
+    /// order; each arrival feeds the batcher, and every batch the
+    /// batcher closes is scheduled as a `BatchClose` event at its
+    /// `ready_ms`, executed when popped, with a `BatchComplete` event
+    /// at its lane completion time advancing the clock.  Because batch
+    /// `ready_ms` is non-decreasing in formation order and the heap
+    /// tie-break is submission order, batches execute in exactly the
+    /// order the one-shot [`drain_polled`](Self::drain_polled) loop
+    /// produced — reports stay byte-identical (the regression tests
+    /// compare the two paths directly).
+    ///
+    /// On the first failed batch, every not-yet-recorded request — the
     /// failed batch included — is requeued in order, so no request is
     /// ever silently lost and a retry of `drain()` can pick them up.
     pub fn drain(&mut self) -> anyhow::Result<()> {
+        let pending = self.batcher.take_pending();
+        if pending.is_empty() {
+            return Ok(());
+        }
+        let mut queue: EventQueue<Event> = EventQueue::new();
+        let mut waiting: Vec<Option<(Item, f64)>> = Vec::new();
+        for (item, arrival) in pending {
+            queue.push(arrival, Event::Arrival { index: waiting.len() });
+            waiting.push(Some((item, arrival)));
+        }
+        // Side table of closed-but-not-yet-executed batches, indexed by
+        // the `BatchClose` payload.
+        let mut closed: Vec<Option<Batch<Item>>> = Vec::new();
+        // Completion times, indexed by the `BatchComplete` payload.
+        let mut done_at: Vec<f64> = Vec::new();
+        while let Some((now, _seq, ev)) = queue.pop() {
+            match ev {
+                Event::Arrival { index } => {
+                    let (item, arrival) =
+                        waiting[index].take().expect("arrival fires once");
+                    self.batcher.push(item, arrival);
+                    for b in self.batcher.form_ready(now) {
+                        queue.push(b.ready_ms,
+                                   Event::BatchClose { batch: closed.len() });
+                        closed.push(Some(b));
+                    }
+                }
+                Event::BatchClose { batch } => {
+                    let b = closed[batch].take().expect("close fires once");
+                    match self.run_batch(b) {
+                        Ok(done) => {
+                            queue.push(done, Event::BatchComplete {
+                                batch: done_at.len(),
+                            });
+                            done_at.push(done);
+                        }
+                        Err((e, failed)) => {
+                            self.requeue_after_failure(
+                                failed, &mut queue, &mut closed,
+                                &mut waiting, &done_at);
+                            return Err(e);
+                        }
+                    }
+                }
+                Event::BatchComplete { batch } => {
+                    let done = done_at[batch];
+                    self.last_done_ms = self.last_done_ms.max(done);
+                    self.clock.advance_to_ms(done);
+                }
+                Event::EpochBoundary { .. } => {
+                    unreachable!("serve drain schedules no epoch events")
+                }
+            }
+        }
+        // Flush the tail the deadline never closed (ready at its last
+        // member's arrival, exactly as the one-shot formation).
+        let tail = self.batcher.drain_batches();
+        self.run_batches(tail)
+    }
+
+    /// Error-path cleanup for the event drain: apply the timeline
+    /// effects of batches that already executed, then requeue every
+    /// unaccounted request — failed batch, closed-but-unexecuted
+    /// batches, unformed pending, unarrived items — in submission
+    /// order.
+    fn requeue_after_failure(&mut self, failed: Batch<Item>,
+                             queue: &mut EventQueue<Event>,
+                             closed: &mut [Option<Batch<Item>>],
+                             waiting: &mut [Option<(Item, f64)>],
+                             done_at: &[f64]) {
+        while let Some((_, _, ev)) = queue.pop() {
+            if let Event::BatchComplete { batch } = ev {
+                let done = done_at[batch];
+                self.last_done_ms = self.last_done_ms.max(done);
+                self.clock.advance_to_ms(done);
+            }
+        }
+        // Submission order: executed batches precede the failed one,
+        // which precedes later closed batches, then the batcher's
+        // unformed pending, then items whose arrival never fired.
+        let mut front = failed.items;
+        for b in closed.iter_mut().filter_map(Option::take) {
+            front.extend(b.items);
+        }
+        self.batcher.requeue_front(front);
+        for (item, arrival) in waiting.iter_mut().filter_map(Option::take) {
+            self.batcher.push(item, arrival);
+        }
+    }
+
+    /// The pre-event-core serving loop, kept as the reference
+    /// implementation: one-shot batch formation, pooled execution on up
+    /// to `self.parallelism` workers, completions merged back in
+    /// submission order (the pool's ordered reduce).  Byte-identical to
+    /// [`drain`](Self::drain) for deterministic backends — the
+    /// regression tests and `benches/perf_cluster.rs` hold the two
+    /// paths against each other.
+    pub fn drain_polled(&mut self) -> anyhow::Result<()> {
         let batches = self.batcher.drain_batches();
         self.execute(batches)
+    }
+
+    /// Drain through the selected [`DrainDriver`].
+    pub fn drain_with(&mut self, driver: DrainDriver)
+                      -> anyhow::Result<()> {
+        match driver {
+            DrainDriver::Event => self.drain(),
+            DrainDriver::Polled => self.drain_polled(),
+        }
+    }
+
+    /// Poll-driven serving step (the "before" driver the cluster bench
+    /// measures): form every batch that is ripe by `now_ms` and execute
+    /// it inline.  Returns the number of batches executed.  Each call
+    /// re-walks the pending queue — the per-tick cost the event core
+    /// exists to remove.
+    pub fn poll_ready(&mut self, now_ms: f64) -> anyhow::Result<usize> {
+        let ready = self.batcher.form_ready(now_ms);
+        let n = ready.len();
+        self.run_batches(ready)?;
+        Ok(n)
+    }
+
+    /// Execute batches inline, in order, advancing the clock per
+    /// completion; on failure requeues the failed batch and everything
+    /// after it.
+    fn run_batches(&mut self, batches: Vec<Batch<Item>>)
+                   -> anyhow::Result<()> {
+        let mut iter = batches.into_iter();
+        while let Some(b) = iter.next() {
+            match self.run_batch(b) {
+                Ok(done) => {
+                    self.last_done_ms = self.last_done_ms.max(done);
+                    self.clock.advance_to_ms(done);
+                }
+                Err((e, failed)) => {
+                    let mut items = failed.items;
+                    for rest in iter.by_ref() {
+                        items.extend(rest.items);
+                    }
+                    self.batcher.requeue_front(items);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute one batch: earliest-free-lane assignment, per-item
+    /// completion records, energy/exec accounting.  Returns the lane
+    /// completion time; on failure hands the batch back untouched.
+    fn run_batch(&mut self, b: Batch<Item>)
+                 -> Result<f64, (anyhow::Error, Batch<Item>)> {
+        let BatchShape { batch, seq, .. } = self.shape;
+        let mut flat: Vec<i32> = Vec::with_capacity(batch * seq);
+        for (item, _) in &b.items {
+            flat.extend_from_slice(&item.tokens);
+        }
+        flat.resize(batch * seq, 0); // padding rows
+        let res = match self.backend.execute_batch(&self.variant, &flat,
+                                                   b.items.len()) {
+            Ok(ok) => ok,
+            Err(e) => return Err((e, b)),
+        };
+        Ok(self.account_batch(b, res))
     }
 
     fn execute(&mut self, batches: Vec<Batch<Item>>) -> anyhow::Result<()> {
@@ -409,37 +601,43 @@ impl<B: ExecBackend, C: Clock> Server<B, C> {
                     return Err(e);
                 }
             };
-            // Earliest-free lane (deterministic tie-break): completion
-            // accounting never depends on worker scheduling.
-            let lane = (0..self.lane_free.len())
-                .min_by(|&x, &y| {
-                    self.lane_free[x].partial_cmp(&self.lane_free[y])
-                        .unwrap()
-                })
-                .unwrap();
-            let start = self.lane_free[lane].max(b.ready_ms);
-            let done = start + res.exec_ms;
-            self.lane_free[lane] = done;
-            self.batch_exec_ms.push(res.exec_ms);
-            self.energy_j += res.energy_j;
-            let batch_index = self.batch_exec_ms.len() - 1;
-            for (row, (item, arrival)) in b.items.into_iter().enumerate() {
-                self.completions.push(Completion {
-                    id: item.id,
-                    next_token: res.next_tokens.get(row).copied()
-                        .unwrap_or(0),
-                    latency_ms: done - arrival,
-                    batch_index,
-                    slo: item.slo,
-                    violated: item.truncated || done > item.deadline_ms,
-                    truncated: item.truncated,
-                    done_ms: done,
-                });
-            }
+            let done = self.account_batch(b, res);
             self.last_done_ms = self.last_done_ms.max(done);
             self.clock.advance_to_ms(done);
         }
         Ok(())
+    }
+
+    /// Lane-model accounting shared by the event and polled paths:
+    /// assign the batch to the earliest-free lane (deterministic
+    /// tie-break — completion accounting never depends on worker
+    /// scheduling), record exec/energy and one [`Completion`] per item.
+    /// Returns the batch's lane completion time.
+    fn account_batch(&mut self, b: Batch<Item>, res: BatchResult) -> f64 {
+        let lane = (0..self.lane_free.len())
+            .min_by(|&x, &y| {
+                self.lane_free[x].partial_cmp(&self.lane_free[y]).unwrap()
+            })
+            .unwrap();
+        let start = self.lane_free[lane].max(b.ready_ms);
+        let done = start + res.exec_ms;
+        self.lane_free[lane] = done;
+        self.batch_exec_ms.push(res.exec_ms);
+        self.energy_j += res.energy_j;
+        let batch_index = self.batch_exec_ms.len() - 1;
+        for (row, (item, arrival)) in b.items.into_iter().enumerate() {
+            self.completions.push(Completion {
+                id: item.id,
+                next_token: res.next_tokens.get(row).copied().unwrap_or(0),
+                latency_ms: done - arrival,
+                batch_index,
+                slo: item.slo,
+                violated: item.truncated || done > item.deadline_ms,
+                truncated: item.truncated,
+                done_ms: done,
+            });
+        }
+        done
     }
 
     pub fn completions(&self) -> &[Completion] {
@@ -530,6 +728,88 @@ mod tests {
         assert_eq!(rep_seq.batches, 5);
         assert!(rep_seq.p95_latency_ms >= rep_seq.p50_latency_ms);
         assert!(rep_seq.energy_j > 0.0);
+    }
+
+    #[test]
+    fn event_drain_matches_polled_reference_byte_for_byte() {
+        // Same submissions through the event core and through the
+        // pre-refactor pooled loop: completion logs (to the bit) and
+        // serialized reports must be indistinguishable, at any
+        // parallelism.  Timestamps are deliberately tied in triples to
+        // stress the (time, seq) tie-break.
+        let run = |event: bool, par: Parallelism| {
+            let mut s = sim_server(0.05)
+                .with_parallelism(par)
+                .with_max_delay_ms(40.0)
+                .with_lanes(2);
+            for i in 0..120u64 {
+                let len = 60 + (i as usize % 90);
+                s.submit(Request::new(i, vec![(i as i32) % 13; len])
+                    .at((i / 3) as f64 * 7.0));
+            }
+            if event {
+                s.drain().unwrap();
+            } else {
+                s.drain_polled().unwrap();
+            }
+            assert_eq!(s.pending(), 0);
+            (s.completions()
+                .iter()
+                .map(|c| (c.id, c.next_token, c.batch_index,
+                          c.latency_ms.to_bits(), c.done_ms.to_bits(),
+                          c.violated))
+                .collect::<Vec<_>>(),
+             s.report().to_json().dump())
+        };
+        let (log_event, json_event) = run(true, Parallelism::Sequential);
+        let (log_polled, json_polled) = run(false, Parallelism::Threads(4));
+        assert_eq!(log_event, log_polled);
+        assert_eq!(json_event, json_polled);
+    }
+
+    #[test]
+    fn same_timestamp_arrivals_complete_in_submission_order() {
+        // Twelve requests share each arrival instant: the heap's
+        // (time, seq) key must pop them in submission order, at
+        // Parallelism 1 and 4 alike.
+        for par in [Parallelism::Sequential, Parallelism::Threads(4)] {
+            let mut s = sim_server(0.0)
+                .with_parallelism(par)
+                .with_max_delay_ms(25.0);
+            for i in 0..48u64 {
+                s.submit(Request::new(i, vec![2; 32])
+                    .at((i / 12) as f64 * 100.0));
+            }
+            s.drain().unwrap();
+            let ids: Vec<u64> =
+                s.completions().iter().map(|c| c.id).collect();
+            assert_eq!(ids, (0..48).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn poll_driven_serving_completes_everything() {
+        // The tick-polled reference driver: repeatedly form-and-execute
+        // whatever is ripe, then flush.  Everything completes exactly
+        // once.
+        let mut s = sim_server(0.0).with_max_delay_ms(30.0);
+        for i in 0..30u64 {
+            s.submit(Request::new(i, vec![1; 40]).at(i as f64 * 10.0));
+        }
+        let mut polled = 0usize;
+        let mut t = 0.0;
+        while t <= 400.0 {
+            polled += s.poll_ready(t).unwrap();
+            t += 5.0;
+        }
+        assert!(polled > 0, "ticks never dispatched a batch");
+        s.drain().unwrap();
+        let r = s.report();
+        assert_eq!(r.completed, 30);
+        let mut ids: Vec<u64> =
+            s.completions().iter().map(|c| c.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..30).collect::<Vec<_>>());
     }
 
     #[test]

@@ -186,7 +186,8 @@ impl ParetoArchive {
     /// Serialize the archive (schema [`FRONT_SCHEMA`]): capacity plus
     /// the entries in archive order, each as (signature, objectives).
     /// This is what makes the Pareto front a *persistent* artifact the
-    /// adaptation controller can warm-start re-searches from.
+    /// adaptation controller can warm-start re-searches from.  Field
+    /// reference in docs/SCHEMAS.md.
     pub fn to_json(&self) -> Json {
         let mut root = std::collections::BTreeMap::new();
         root.insert("schema".into(), Json::Str(FRONT_SCHEMA.into()));

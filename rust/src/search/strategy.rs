@@ -118,6 +118,53 @@ pub struct StrategyOutcome {
 /// backend measurements through `evaluator` (reported in
 /// [`StrategyOutcome::strategy_evals`]), and must never return a
 /// configuration in `cx.seen`.
+///
+/// A custom strategy plugs straight into Algorithm 1 via
+/// [`crate::coordinator::optimize_with_strategy`]:
+///
+/// ```
+/// use ae_llm::config::enumerate;
+/// use ae_llm::coordinator::{optimize_with_strategy, AeLlmParams,
+///                           NullObserver, Scenario};
+/// use ae_llm::evaluator::Evaluator;
+/// use ae_llm::search::{SearchStrategy, StrategyCx, StrategyOutcome};
+/// use ae_llm::util::Rng;
+///
+/// /// One random unseen configuration per round — the smallest
+/// /// possible custom procedure.
+/// struct OneRandom;
+///
+/// impl SearchStrategy for OneRandom {
+///     fn name(&self) -> &'static str {
+///         "one-random"
+///     }
+///     fn uses_surrogates(&self) -> bool {
+///         false
+///     }
+///     fn propose(&mut self, cx: &StrategyCx,
+///                _evaluator: &mut dyn Evaluator, rng: &mut Rng)
+///                -> StrategyOutcome {
+///         let mut c = cx.params.mask.clamp(enumerate::sample(rng));
+///         while cx.seen.contains(&c) {
+///             c = cx.params.mask.clamp(enumerate::sample(rng));
+///         }
+///         StrategyOutcome {
+///             proposals: vec![c],
+///             surrogate_evals: 0,
+///             strategy_evals: 0,
+///         }
+///     }
+/// }
+///
+/// let scenario = Scenario::for_model("Phi-2").unwrap();
+/// let params = AeLlmParams::small();
+/// let mut evaluator = scenario.testbed.clone();
+/// let mut rng = Rng::new(7);
+/// let outcome = optimize_with_strategy(&scenario, &params, &mut OneRandom,
+///                                      &mut evaluator, &mut NullObserver,
+///                                      &mut rng);
+/// assert!(!outcome.pareto.is_empty());
+/// ```
 pub trait SearchStrategy {
     /// Stable lowercase identifier (CLI `--strategy` value, report
     /// rows, `RunReport.strategy`).

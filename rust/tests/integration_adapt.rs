@@ -48,6 +48,33 @@ fn same_seed_adapt_is_bit_identical_at_any_parallelism() {
 }
 
 #[test]
+fn event_core_adapt_matches_polled_loop_byte_for_byte() {
+    // The tentpole's golden-report gate (DESIGN.md §13): driving the
+    // controller's epoch loop off the event heap must reproduce the
+    // PR 5 index-sliced polled loop *byte-for-byte* — same-seed
+    // adapt reports identical before vs after the refactor, on both a
+    // drifting and a stationary scenario.
+    let s = session(11, Parallelism::Auto);
+    let outcome = s.run_testbed_outcome();
+    for kind in [WorkloadKind::RegimeShift, WorkloadKind::Steady] {
+        let params = AdaptParams {
+            epochs: 4,
+            requests_per_epoch: 150,
+            ..AdaptParams::default()
+        };
+        let event = ae_llm::coordinator::run_adapt_from(
+            &s, 11, kind, &params, &outcome)
+            .unwrap();
+        let polled = ae_llm::coordinator::controller::run_adapt_from_polled(
+            &s, 11, kind, &params, &outcome)
+            .unwrap();
+        assert_eq!(event.to_json().dump(), polled.to_json().dump(),
+                   "event-core adapt diverged from the polled loop on {}",
+                   kind.name());
+    }
+}
+
+#[test]
 fn continual_beats_one_shot_on_drifting_workloads() {
     // The acceptance bar for `table --id 9`: on both drifting
     // scenarios the adaptive controller must strictly beat the
