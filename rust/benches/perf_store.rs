@@ -1,0 +1,94 @@
+//! Microbenchmark of the content-addressed artifact store
+//! (DESIGN.md §14): hand-rolled SHA-256 throughput in MB/s, and blob
+//! put/get throughput in operations per wall-clock second over a few
+//! thousand catalog-sized JSON payloads.
+//!
+//! Emits `BENCH_store.json` (to `$AE_LLM_BENCH_OUT` or the current
+//! directory); `AE_LLM_BENCH_QUICK=1` / `--quick` shrinks the volume.
+
+use std::collections::BTreeMap;
+
+use ae_llm::store::sha256::sha256;
+use ae_llm::store::BlobStore;
+use ae_llm::util::bench::{self, time_once};
+use ae_llm::util::json::Json;
+use ae_llm::util::Rng;
+
+fn main() {
+    let quick = bench::quick();
+    println!("== perf_store: sha256 + blob put/get throughput{} ==",
+             if quick { " (quick)" } else { "" });
+    let mut report: BTreeMap<String, Json> = BTreeMap::new();
+    let mut rng = Rng::new(7);
+
+    // -- sha256 throughput ----------------------------------------------
+    let mib = if quick { 8 } else { 64 };
+    let buf: Vec<u8> = (0..mib * 1024 * 1024)
+        .map(|_| rng.below(256) as u8)
+        .collect();
+    let (digest, hash_ms) = time_once("sha256 over buffer",
+                                      || sha256(&buf));
+    assert_ne!(digest, [0u8; 32], "degenerate digest");
+    let mb_per_s = mib as f64 / (hash_ms / 1e3).max(1e-9);
+    println!("    sha256     : {mb_per_s:.0} MB/s over {mib} MiB");
+
+    // -- blob put/get throughput ----------------------------------------
+    // Distinct catalog-sized JSON payloads, like the fronts and run
+    // reports the store holds in practice.
+    let n = if quick { 200 } else { 2_000 };
+    let payload_len = 4096;
+    let payloads: Vec<Vec<u8>> = (0..n)
+        .map(|i| {
+            let mut p =
+                format!("{{\"schema\":\"bench/v0\",\"i\":{i},\"pad\":\"")
+                    .into_bytes();
+            while p.len() < payload_len - 2 {
+                p.push(b'a' + rng.below(26) as u8);
+            }
+            p.extend_from_slice(b"\"}");
+            p
+        })
+        .collect();
+    let root = std::env::temp_dir()
+        .join(format!("ae-llm-perf-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&root);
+    let store = BlobStore::open(&root).unwrap();
+
+    let (hashes, put_ms) = time_once("put blobs", || {
+        payloads
+            .iter()
+            .map(|p| store.put(p).unwrap())
+            .collect::<Vec<_>>()
+    });
+    let (got_bytes, get_ms) = time_once("get blobs", || {
+        hashes.iter().map(|h| store.get(h).unwrap().len()).sum::<usize>()
+    });
+    assert_eq!(got_bytes,
+               payloads.iter().map(Vec::len).sum::<usize>(),
+               "get returned the wrong number of bytes");
+    let puts_per_s = n as f64 / (put_ms / 1e3).max(1e-9);
+    let gets_per_s = n as f64 / (get_ms / 1e3).max(1e-9);
+    println!("    blob put   : {puts_per_s:.0} blobs/s \
+              ({n} x {payload_len} B)");
+    println!("    blob get   : {gets_per_s:.0} blobs/s (verified loads)");
+    let _ = std::fs::remove_dir_all(&root);
+
+    report.insert("sha256 MiB hashed".into(), Json::Num(mib as f64));
+    report.insert("sha256 wall ms".into(), Json::Num(hash_ms));
+    report.insert("sha256 MB per s".into(), Json::Num(mb_per_s));
+    report.insert("blobs".into(), Json::Num(n as f64));
+    report.insert("payload bytes".into(), Json::Num(payload_len as f64));
+    report.insert("put wall ms".into(), Json::Num(put_ms));
+    report.insert("get wall ms".into(), Json::Num(get_ms));
+    report.insert("puts per wall s".into(), Json::Num(puts_per_s));
+    report.insert("gets per wall s".into(), Json::Num(gets_per_s));
+
+    report.insert("bench".into(), Json::Str("perf_store".into()));
+    report.insert("quick".into(), Json::Bool(quick));
+    let out = std::env::var("AE_LLM_BENCH_OUT").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&out).join("BENCH_store.json");
+    match std::fs::write(&path, Json::Obj(report).dump()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}

@@ -40,6 +40,7 @@ use crate::runtime::serve::DrainDriver;
 use crate::runtime::workload::default_rate_rps;
 use crate::runtime::{ServeReport, Workload, WorkloadKind};
 use crate::search::archive::ParetoArchive;
+use crate::store::{CatalogKey, Store, StoreError};
 use crate::tasks::{Category, TaskSpec};
 use crate::util::json::Json;
 use crate::util::Rng;
@@ -223,6 +224,38 @@ pub fn run_adapt_from(session: &AeLlm, seed: u64, kind: WorkloadKind,
                    DrainDriver::Event)
 }
 
+/// [`run_adapt`] against a persistent [`Store`] (the fleet-wide warm
+/// re-search loop): the epoch-0 search warm-starts from the catalog's
+/// best front for a similar scenario — byte-for-byte the cold path
+/// when the catalog has no hit — and every searched front (epoch 0
+/// plus each drift-triggered re-search) is persisted and indexed as
+/// it is produced, so the catalog's final entry is always the run's
+/// final front.
+///
+/// Store writes happen strictly *after* each search has consumed its
+/// RNG stream, so given the same warm entries the report is
+/// byte-identical to the purely in-memory path
+/// ([`AeLlm::run_testbed_outcome_warm`] + [`run_adapt_from`]) at every
+/// parallelism level — the contract tests/integration_store.rs proves.
+/// Mid-run store failures are captured, the serve loop finishes, and
+/// the first failure surfaces as [`AeLlmError::Store`].
+pub fn run_adapt_stored(session: &AeLlm, seed: u64, kind: WorkloadKind,
+                        params: &AdaptParams, store: &mut Store)
+                        -> Result<AdaptReport, AeLlmError> {
+    let key = session.store_key(kind.name());
+    let warm = store.warm_entries(&key, seed)?;
+    let outcome = session.run_testbed_outcome_warm(&warm);
+    store.put_front(&key, seed, &outcome.pareto)?;
+    let mut persist = Persist { store, key, seed, error: None };
+    let report = run_adapt_impl_persist(session, seed, kind, params,
+                                        &outcome, DrainDriver::Event,
+                                        Some(&mut persist))?;
+    match persist.error {
+        Some(e) => Err(e.into()),
+        None => Ok(report),
+    }
+}
+
 /// The PR 5 reference implementation: index-sliced epoch loop on the
 /// pooled drain path.  Kept so the golden-report test can prove the
 /// event core's [`AdaptReport`] is byte-identical to pre-refactor
@@ -246,9 +279,41 @@ struct LoopState {
     records: Vec<EpochRecord>,
 }
 
+/// Store-persistence context for [`run_adapt_stored`]: where
+/// re-searched fronts are filed.  The first write error is captured
+/// here instead of aborting the serve loop mid-epoch (the run's
+/// *results* are sound either way — persistence is a side effect).
+struct Persist<'a> {
+    store: &'a mut Store,
+    key: CatalogKey,
+    seed: u64,
+    error: Option<StoreError>,
+}
+
+impl Persist<'_> {
+    fn put_front(&mut self, front: &ParetoArchive) {
+        if self.error.is_none() {
+            if let Err(e) =
+                self.store.put_front(&self.key, self.seed, front)
+            {
+                self.error = Some(e);
+            }
+        }
+    }
+}
+
 fn run_adapt_impl(session: &AeLlm, seed: u64, kind: WorkloadKind,
                   params: &AdaptParams, outcome: &Outcome,
                   driver: DrainDriver) -> Result<AdaptReport, AeLlmError> {
+    run_adapt_impl_persist(session, seed, kind, params, outcome, driver,
+                           None)
+}
+
+fn run_adapt_impl_persist(session: &AeLlm, seed: u64, kind: WorkloadKind,
+                          params: &AdaptParams, outcome: &Outcome,
+                          driver: DrainDriver,
+                          mut persist: Option<&mut Persist>)
+                          -> Result<AdaptReport, AeLlmError> {
     let scenario = session.scenario();
     let par = session.params_ref().parallelism;
 
@@ -311,7 +376,8 @@ fn run_adapt_impl(session: &AeLlm, seed: u64, kind: WorkloadKind,
                     Event::EpochBoundary { epoch } => {
                         let out = state.fleet.close_epoch(epoch);
                         epoch_boundary(session, seed, params, n_epochs,
-                                       epoch, out, &mut state);
+                                       epoch, out, &mut state,
+                                       persist.as_deref_mut());
                     }
                     Event::BatchClose { .. }
                     | Event::BatchComplete { .. } => {
@@ -327,7 +393,7 @@ fn run_adapt_impl(session: &AeLlm, seed: u64, kind: WorkloadKind,
                     &requests[epoch * per_epoch..(epoch + 1) * per_epoch];
                 let out = state.fleet.serve_epoch(epoch, slice);
                 epoch_boundary(session, seed, params, n_epochs, epoch,
-                               out, &mut state);
+                               out, &mut state, persist.as_deref_mut());
             }
         }
     }
@@ -347,10 +413,13 @@ fn run_adapt_impl(session: &AeLlm, seed: u64, kind: WorkloadKind,
 }
 
 /// The decision block at every epoch boundary: observe drift,
-/// re-search + hot-swap when warranted, record the epoch.
+/// re-search + hot-swap when warranted, record the epoch.  When a
+/// persistence context is present, each re-searched front is filed in
+/// the store — strictly after the re-search consumed its RNG, so
+/// persistence never perturbs the deterministic streams.
 fn epoch_boundary(session: &AeLlm, seed: u64, params: &AdaptParams,
                   n_epochs: usize, epoch: usize, out: EpochOutcome,
-                  state: &mut LoopState) {
+                  state: &mut LoopState, persist: Option<&mut Persist>) {
     let scenario = session.scenario();
     let decision = state.detector.observe(&out.telemetry);
 
@@ -376,6 +445,9 @@ fn epoch_boundary(session: &AeLlm, seed: u64, params: &AdaptParams,
             &mut NullObserver, &mut rng);
         state.searches += 1;
         state.front = re.pareto;
+        if let Some(p) = persist {
+            p.put_front(&state.front);
+        }
         let plan = RedeployPlan::from_telemetry(
             &out.telemetry, state.fleet.deployment().slots(),
             params.lane_budget);

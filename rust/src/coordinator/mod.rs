@@ -23,8 +23,9 @@ pub mod session;
 pub use algorithm1::{optimize_with_observer, optimize_with_observer_warm,
                      optimize_with_strategy, optimize_with_strategy_warm,
                      pareto_hypervolume, AeLlmParams, Outcome};
-pub use controller::{run_adapt, run_adapt_from, AdaptParams, AdaptReport,
-                     EpochRecord, ADAPT_REPORT_SCHEMA};
+pub use controller::{run_adapt, run_adapt_from, run_adapt_stored,
+                     AdaptParams, AdaptReport, EpochRecord,
+                     ADAPT_REPORT_SCHEMA};
 pub use observer::{CollectingObserver, FnObserver, IterationEvent,
                    NullObserver, RunObserver};
 pub use scenario::{Scenario, SpaceMask};

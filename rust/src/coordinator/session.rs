@@ -55,6 +55,16 @@ pub enum AeLlmError {
     /// anyway and let every request of the class violate at serve
     /// time; now the infeasibility is typed and surfaced up front.
     InfeasibleClass { class: String, reason: String },
+    /// A persistent-store operation failed (rendered
+    /// [`crate::store::StoreError`]; stringly so this enum stays
+    /// `Eq`-comparable — `std::io::Error` is not).
+    Store(String),
+}
+
+impl From<crate::store::StoreError> for AeLlmError {
+    fn from(e: crate::store::StoreError) -> AeLlmError {
+        AeLlmError::Store(e.to_string())
+    }
 }
 
 fn join_names<I: IntoIterator<Item = &'static str>>(names: I) -> String {
@@ -113,6 +123,7 @@ impl fmt::Display for AeLlmError {
                 "SLO class {class:?} is infeasible under this policy: \
                  {reason}"
             ),
+            AeLlmError::Store(msg) => write!(f, "{msg}"),
         }
     }
 }
@@ -261,6 +272,34 @@ impl AeLlm {
                                &mut NullObserver, &mut rng)
     }
 
+    /// [`run_testbed_outcome`](Self::run_testbed_outcome) warm-started
+    /// from prior front entries (typically
+    /// [`crate::store::Store::warm_entries`]).  With `warm` empty this
+    /// is byte-for-byte the cold path — the
+    /// `optimize_with_observer_warm` contract — so catalog misses need
+    /// no special-casing.
+    pub fn run_testbed_outcome_warm(
+        &self, warm: &[crate::search::archive::Entry]) -> Outcome {
+        let mut evaluator = self.scenario.testbed.clone();
+        let mut rng = Rng::new(self.seed);
+        super::algorithm1::optimize_with_observer_warm(
+            &self.scenario, &self.params, warm, &mut evaluator,
+            &mut NullObserver, &mut rng)
+    }
+
+    /// This session's catalog coordinates: (model, task, platform)
+    /// from the scenario plus the caller's workload tag (`"-"` for
+    /// plain searches, the [`crate::runtime::WorkloadKind`] name for
+    /// adaptation runs).
+    pub fn store_key(&self, scenario_tag: &str) -> crate::store::CatalogKey {
+        crate::store::CatalogKey::new(
+            self.scenario.model.name,
+            self.scenario.task.name,
+            self.scenario.testbed.platform.name,
+            scenario_tag,
+        )
+    }
+
     /// [`run_testbed`](Self::run_testbed) with an observer.
     pub fn run_testbed_observed(&self, observer: &mut dyn RunObserver)
                                 -> RunReport {
@@ -406,6 +445,21 @@ impl AeLlm {
                       -> Result<super::controller::AdaptReport, AeLlmError> {
         super::controller::run_adapt_from(self, self.seed, kind, params,
                                           outcome)
+    }
+
+    /// [`adapt`](Self::adapt) against a persistent
+    /// [`crate::store::Store`]: the epoch-0 search warm-starts from
+    /// the catalog's best similar front, and every searched front is
+    /// persisted and indexed as it is produced — so the next process
+    /// (or node) inherits this run's knowledge.  See
+    /// [`super::controller::run_adapt_stored`].
+    pub fn adapt_stored(&self, kind: crate::runtime::WorkloadKind,
+                        params: &super::controller::AdaptParams,
+                        store: &mut crate::store::Store)
+                        -> Result<super::controller::AdaptReport,
+                                  AeLlmError> {
+        super::controller::run_adapt_stored(self, self.seed, kind,
+                                            params, store)
     }
 }
 

@@ -29,6 +29,7 @@ pub mod oracle;
 pub mod report;
 pub mod runtime;
 pub mod search;
+pub mod store;
 pub mod surrogate;
 pub mod tasks;
 pub mod util;

@@ -21,6 +21,11 @@
 //!                [--requests N] [--nodes N] [--capacity N] [--epochs N]
 //!                [--quick] [--seed N] [--json OUT.json]
 //!                # cluster-scale serving on the event core
+//! ae-llm store   ls|gc|verify [--store DIR]
+//!                # content-addressed artifact store: list the catalog,
+//!                # sweep unreferenced blobs, verify blob integrity
+//!                # (DIR defaults to $AE_LLM_STORE; `search --store` /
+//!                #  `adapt --store` write into it)
 //! ae-llm check   # artifacts sanity: load + execute every variant
 //! ae-llm space   # print the configuration-space inventory
 //! ```
@@ -196,7 +201,7 @@ fn run(args: &[String]) -> anyhow::Result<()> {
     };
     let (valued, flags): (&[&str], &[&str]) = match cmd.as_str() {
         "search" => (&["model", "task", "platform", "prefs", "strategy",
-                       "seed"],
+                       "seed", "store"],
                      &["quick", "json"]),
         "table" => (&["id", "seed"], &["quick"]),
         "figure" => (&["id", "seed", "out"], &["quick"]),
@@ -205,17 +210,31 @@ fn run(args: &[String]) -> anyhow::Result<()> {
                       "strategy", "json"],
                     &["quick"]),
         "adapt" => (&["requests", "epochs", "seed", "model", "scenario",
-                      "strategy", "json"],
+                      "strategy", "json", "store"],
                     &["quick", "one-shot"]),
         "cluster" => (&["requests", "nodes", "capacity", "epochs", "seed",
                         "model", "scenario", "strategy", "json"],
                       &["quick"]),
         "check" | "space" => (&[], &[]),
+        // `store` takes a positional action (`store ls`), which the
+        // generic option parser would reject — it has its own parse.
+        "store" => return cmd_store(&args[1..]),
         "help" | "--help" | "-h" => {
             print_help();
             return Ok(());
         }
-        other => anyhow::bail!("unknown command {other:?} (try `help`)"),
+        other => {
+            // Same did-you-mean treatment the option keys get.
+            const COMMANDS: &[&str] = &[
+                "search", "table", "figure", "e2e", "serve", "adapt",
+                "cluster", "store", "check", "space", "help",
+            ];
+            let hint = match closest(other, COMMANDS) {
+                Some(s) => format!(" (did you mean `{s}`?)"),
+                None => String::new(),
+            };
+            anyhow::bail!("unknown command {other:?}{hint}; try `help`")
+        }
     };
     let opts = Opts::parse(cmd, valued, flags, &args[1..])?;
     let budget = Budget { quick: opts.flag("quick") };
@@ -256,8 +275,10 @@ fn cmd_search(opts: &Opts, budget: &Budget, seed: u64) -> anyhow::Result<()> {
     let session = session;
 
     if opts.flag("json") {
-        // Machine-readable RunReport; nothing else on stdout.
+        // Machine-readable RunReport; nothing else on stdout (the
+        // store notice goes to stderr).
         let report = session.run_testbed();
+        persist_search(opts, &session, seed, &report)?;
         println!("{}", report.to_json().dump());
         return Ok(());
     }
@@ -282,6 +303,7 @@ fn cmd_search(opts: &Opts, budget: &Budget, seed: u64) -> anyhow::Result<()> {
             );
         },
     ));
+    persist_search(opts, &session, seed, &report)?;
     let out = &report.outcome;
     println!(
         "search done in {:.2}s: {} testbed evals, {} surrogate evals\n",
@@ -566,7 +588,18 @@ fn cmd_adapt(opts: &Opts, seed: u64) -> anyhow::Result<()> {
         model, kind.name(), params.epochs, params.requests_per_epoch,
         if params.adaptive { "continual" } else { "one-shot" }
     );
-    let report = session.adapt(kind, &params)?;
+    let report = match resolve_store(opts) {
+        Some(root) => {
+            let mut store = ae_llm::store::Store::open(&root)?;
+            eprintln!(
+                "artifact store {} ({} catalog entries): warm-seeding \
+                 the search and persisting each epoch's front",
+                root.display(), store.ls().len()
+            );
+            session.adapt_stored(kind, &params, &mut store)?
+        }
+        None => session.adapt(kind, &params)?,
+    };
 
     if let Some(path) = opts.get("json") {
         std::fs::write(path, report.to_json().dump())?;
@@ -749,6 +782,108 @@ fn cmd_space() -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Resolve the artifact store root for a command: an explicit
+/// `--store DIR` wins, falling back to the `AE_LLM_STORE` environment
+/// variable.  `None` means persistence is off.
+fn resolve_store(opts: &Opts) -> Option<std::path::PathBuf> {
+    opts.get("store")
+        .map(std::path::PathBuf::from)
+        .or_else(|| std::env::var_os("AE_LLM_STORE")
+            .map(std::path::PathBuf::from))
+}
+
+/// Persist a finished search into the artifact store, if one is
+/// configured: the Pareto front (warm-start seed for later runs) and
+/// the full run report.  Status goes to stderr so `--json` stdout
+/// stays pure.
+fn persist_search(opts: &Opts, session: &AeLlm, seed: u64,
+                  report: &ae_llm::coordinator::RunReport)
+                  -> anyhow::Result<()> {
+    let Some(root) = resolve_store(opts) else { return Ok(()) };
+    let mut store = ae_llm::store::Store::open(&root)?;
+    let key = session.store_key("-");
+    let front = store.put_front(&key, seed, &report.outcome.pareto)?;
+    let run = store.put_run_report(&key, report)?;
+    eprintln!("stored front {} + run report {} under {}",
+              &front[..12], &run[..12], root.display());
+    Ok(())
+}
+
+/// `store ls|gc|verify`: inspect and maintain the content-addressed
+/// artifact store (DESIGN.md §14).  The action is positional, so this
+/// parses its own tail instead of going through the generic table in
+/// [`run`].
+fn cmd_store(args: &[String]) -> anyhow::Result<()> {
+    const ACTIONS: [&str; 3] = ["ls", "gc", "verify"];
+    let Some(action) = args.first() else {
+        anyhow::bail!(
+            "`store` needs an action: ae-llm store ls|gc|verify \
+             [--store DIR]"
+        );
+    };
+    anyhow::ensure!(
+        ACTIONS.contains(&action.as_str()),
+        "{}",
+        unknown_value_msg("store action", action, &ACTIONS)
+    );
+    let opts = Opts::parse("store", &["store"], &[], &args[1..])?;
+    let Some(root) = resolve_store(&opts) else {
+        anyhow::bail!(
+            "no store configured: pass --store DIR or set AE_LLM_STORE"
+        );
+    };
+    let mut store = ae_llm::store::Store::open(&root)?;
+    match action.as_str() {
+        "ls" => {
+            let mut t = ae_llm::util::table::Table::new(&[
+                "Seq", "Kind", "Model", "Task", "Platform", "Scenario",
+                "Seed", "Front", "Hash",
+            ])
+            .with_title("Artifact store catalog");
+            for e in store.ls() {
+                t.row(&[
+                    e.seq.to_string(),
+                    e.kind.name().to_string(),
+                    e.key.model.clone(),
+                    e.key.task.clone(),
+                    e.key.platform.clone(),
+                    e.key.scenario.clone(),
+                    e.seed.to_string(),
+                    e.front_size.to_string(),
+                    e.hash[..12].to_string(),
+                ]);
+            }
+            println!("{}", t.render());
+            println!("{} catalog entries, {} blobs on disk at {}",
+                     store.ls().len(), store.blobs().list()?.len(),
+                     root.display());
+        }
+        "gc" => {
+            let report = store.gc()?;
+            for h in &report.removed {
+                println!("removed unreferenced blob {h}");
+            }
+            println!("gc done: kept {} referenced blob(s), removed {}",
+                     report.kept, report.removed.len());
+        }
+        "verify" => {
+            let report = store.verify()?;
+            if report.ok() {
+                println!("store ok: {} blob(s) verified at {}",
+                         report.checked, root.display());
+            } else {
+                for p in &report.problems {
+                    eprintln!("problem: {p}");
+                }
+                anyhow::bail!("store verify failed: {} problem(s) in {}",
+                              report.problems.len(), root.display());
+            }
+        }
+        _ => unreachable!("action validated above"),
+    }
+    Ok(())
+}
+
 fn print_help() {
     println!(
         "AE-LLM: Adaptive Efficiency Optimization for LLMs\n\n\
@@ -756,7 +891,9 @@ fn print_help() {
          COMMANDS:\n  \
          search  --model M [--task T] [--platform P] [--prefs W]\n  \
          \x20       [--strategy S] [--quick] [--seed N] [--json]\n  \
-         \x20       (--json emits the RunReport)\n  \
+         \x20       [--store DIR]\n  \
+         \x20       (--json emits the RunReport; --store persists the\n  \
+         \x20        front + report into the artifact store)\n  \
          table   --id 2|3|4|5|6|7|8|9|10 [--quick] [--seed N]\n  \
          \x20       (7 = strategies, 8 = adaptive vs static serving,\n  \
          \x20        9 = continual adaptation vs one-shot,\n  \
@@ -768,14 +905,19 @@ fn print_help() {
          \x20       (simulated fleet; --variant V switches to live PJRT)\n  \
          adapt   [--model M] [--scenario S] [--strategy S] [--epochs N]\n  \
          \x20       [--requests N/epoch] [--one-shot] [--quick] [--seed N]\n  \
-         \x20       [--json OUT.json]\n  \
+         \x20       [--json OUT.json] [--store DIR]\n  \
          \x20       (continual adaptation: epoch serving, drift-triggered\n  \
-         \x20        warm re-search, fleet hot-swap)\n  \
+         \x20        warm re-search, fleet hot-swap; --store warm-seeds\n  \
+         \x20        from the catalog and persists each epoch's front)\n  \
          cluster [--model M] [--scenario S] [--strategy S] [--requests N]\n  \
          \x20       [--nodes N] [--capacity N] [--epochs N] [--quick]\n  \
          \x20       [--seed N] [--json OUT.json]\n  \
          \x20       (N fleet nodes behind a seeded least-loaded router,\n  \
          \x20        on the discrete-event core)\n  \
+         store   ls|gc|verify [--store DIR]\n  \
+         \x20       (content-addressed artifact store: list the catalog,\n  \
+         \x20        sweep unreferenced blobs, verify blob integrity;\n  \
+         \x20        DIR defaults to $AE_LLM_STORE)\n  \
          check   load + execute every AOT artifact\n  \
          space   print the configuration-space inventory\n\n\
          prefs: balanced | latency | memory | accuracy | green\n\
@@ -968,6 +1110,60 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("did you mean bursty?"), "{err}");
+    }
+
+    #[test]
+    fn commands_get_did_you_mean() {
+        let err = run(&args(&["stor"])).unwrap_err().to_string();
+        assert!(err.contains("unknown command \"stor\""), "{err}");
+        assert!(err.contains("did you mean `store`?"), "{err}");
+        let err = run(&args(&["serch"])).unwrap_err().to_string();
+        assert!(err.contains("did you mean `search`?"), "{err}");
+        // no near match: no suggestion, still points at `help`
+        let err = run(&args(&["flyme"])).unwrap_err().to_string();
+        assert!(!err.contains("did you mean"), "{err}");
+        assert!(err.contains("help"), "{err}");
+    }
+
+    #[test]
+    fn store_actions_get_did_you_mean() {
+        // missing action: usage line
+        let err = run(&args(&["store"])).unwrap_err().to_string();
+        assert!(err.contains("ls|gc|verify"), "{err}");
+        // typo'd action: nearest-match suggestion + full list
+        let err = run(&args(&["store", "lss"])).unwrap_err().to_string();
+        assert!(err.contains("unknown store action \"lss\""), "{err}");
+        assert!(err.contains("did you mean ls?"), "{err}");
+        assert!(err.contains("verify"), "{err}");
+        let err = run(&args(&["store", "verfy"])).unwrap_err().to_string();
+        assert!(err.contains("did you mean verify?"), "{err}");
+        // typo'd option key after a valid action
+        let err = run(&args(&["store", "ls", "--stroe", "/tmp/x"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean --store?"), "{err}");
+    }
+
+    #[test]
+    fn store_without_a_root_is_a_clear_error() {
+        if std::env::var_os("AE_LLM_STORE").is_some() {
+            return; // the environment provides a root; nothing to assert
+        }
+        let err = run(&args(&["store", "ls"])).unwrap_err().to_string();
+        assert!(err.contains("AE_LLM_STORE"), "{err}");
+    }
+
+    #[test]
+    fn store_maintenance_works_on_an_empty_store() {
+        let dir = std::env::temp_dir().join(format!(
+            "ae-llm-cli-store-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let root = dir.to_string_lossy().to_string();
+        run(&args(&["store", "ls", "--store", root.as_str()])).unwrap();
+        run(&args(&["store", "verify", "--store", root.as_str()]))
+            .unwrap();
+        run(&args(&["store", "gc", "--store", root.as_str()])).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -1,0 +1,305 @@
+//! Content-addressed blob storage: canonical JSON bytes filed under
+//! their own SHA-256 (`objects/<first2>/<remaining 62 hex>`), re-hashed
+//! on every load so a flipped bit is a typed [`StoreError::Corrupt`] —
+//! never a silently wrong Pareto front.
+//!
+//! Content addressing works here *because* the repo's serialization is
+//! canonical: `util::json` emits sorted keys, one number form, one
+//! escape form (docs/SCHEMAS.md).  Equal documents are equal bytes, so
+//! equal bytes are one blob — dedup falls out for free.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use crate::search::archive::{ParetoArchive, FRONT_SCHEMA};
+use crate::util::json::Json;
+
+use super::sha256::{is_valid_hex_digest, sha256_hex};
+use super::StoreError;
+
+/// Schema tag of serialized run reports
+/// ([`crate::coordinator::RunReport::to_json`]).
+pub const RUN_REPORT_SCHEMA: &str = "ae-llm.run-report/v2";
+
+/// The object store: a directory of immutable, hash-named blobs.
+#[derive(Debug)]
+pub struct BlobStore {
+    objects_dir: PathBuf,
+}
+
+impl BlobStore {
+    /// Open (creating if needed) the object store under `root`.
+    /// Blobs live in `root/objects/`.
+    pub fn open(root: &Path) -> Result<BlobStore, StoreError> {
+        let objects_dir = root.join("objects");
+        fs::create_dir_all(&objects_dir)?;
+        Ok(BlobStore { objects_dir })
+    }
+
+    /// On-disk path of (a hypothetical) blob `hash`.
+    fn path_of(&self, hash: &str) -> PathBuf {
+        self.objects_dir.join(&hash[..2]).join(&hash[2..])
+    }
+
+    /// Store `bytes`; returns their content address.  A blob that
+    /// already exists is left untouched (same hash ⇒ same bytes), so
+    /// `put` is idempotent and duplicate fronts cost one copy.  New
+    /// blobs are written to a temp file and renamed into place, so a
+    /// crash mid-write never leaves a half-blob at a valid address.
+    pub fn put(&self, bytes: &[u8]) -> Result<String, StoreError> {
+        let hash = sha256_hex(bytes);
+        let path = self.path_of(&hash);
+        if path.exists() {
+            return Ok(hash);
+        }
+        let dir = path.parent().expect("objects/<xx>/ has a parent");
+        fs::create_dir_all(dir)?;
+        let tmp = dir.join(format!("{}.tmp", &hash[2..]));
+        {
+            let mut f = fs::File::create(&tmp)?;
+            f.write_all(bytes)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, &path)?;
+        Ok(hash)
+    }
+
+    /// Load the blob at `hash`, verifying its content address: the
+    /// bytes are re-hashed and any mismatch is [`StoreError::Corrupt`].
+    pub fn get(&self, hash: &str) -> Result<Vec<u8>, StoreError> {
+        if !is_valid_hex_digest(hash) {
+            return Err(StoreError::Malformed(format!(
+                "not a sha-256 address: {hash:?}"
+            )));
+        }
+        let path = self.path_of(hash);
+        let bytes = match fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Err(StoreError::Missing(hash.to_string()));
+            }
+            Err(e) => return Err(StoreError::Io(e)),
+        };
+        let actual = sha256_hex(&bytes);
+        if actual != hash {
+            return Err(StoreError::Corrupt {
+                hash: hash.to_string(),
+                actual,
+            });
+        }
+        Ok(bytes)
+    }
+
+    /// Whether a blob with this address exists (no integrity check —
+    /// that happens on `get`).
+    pub fn contains(&self, hash: &str) -> bool {
+        is_valid_hex_digest(hash) && self.path_of(hash).exists()
+    }
+
+    /// Every blob address present on disk, sorted (deterministic for
+    /// `verify`/`gc` reports).  Files that are not shaped like
+    /// `<2 hex>/<62 hex>` are ignored — they are not reachable
+    /// addresses (leftover temp files, stray notes).
+    pub fn list(&self) -> Result<Vec<String>, StoreError> {
+        let mut out = Vec::new();
+        for prefix in fs::read_dir(&self.objects_dir)? {
+            let prefix = prefix?;
+            if !prefix.file_type()?.is_dir() {
+                continue;
+            }
+            let Some(p) = prefix.file_name().to_str().map(String::from)
+            else {
+                continue;
+            };
+            for entry in fs::read_dir(prefix.path())? {
+                let entry = entry?;
+                let Some(rest) = entry.file_name().to_str().map(String::from)
+                else {
+                    continue;
+                };
+                let hash = format!("{p}{rest}");
+                if is_valid_hex_digest(&hash) {
+                    out.push(hash);
+                }
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+
+    /// Delete the blob at `hash` (used by `gc`; missing is fine —
+    /// the goal state "not present" already holds).
+    pub fn remove(&self, hash: &str) -> Result<(), StoreError> {
+        if !is_valid_hex_digest(hash) {
+            return Err(StoreError::Malformed(format!(
+                "not a sha-256 address: {hash:?}"
+            )));
+        }
+        match fs::remove_file(self.path_of(hash)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(StoreError::Io(e)),
+        }
+    }
+
+    // -- typed helpers over the two stored document kinds ---------------
+
+    /// Store a Pareto front as its canonical `ae-llm.front/v1` bytes.
+    pub fn put_front(&self, front: &ParetoArchive)
+                     -> Result<String, StoreError> {
+        self.put(front.to_json().dump().as_bytes())
+    }
+
+    /// Load + schema-check + parse a stored front.
+    pub fn get_front(&self, hash: &str)
+                     -> Result<ParetoArchive, StoreError> {
+        let j = self.get_json(hash, FRONT_SCHEMA)?;
+        ParetoArchive::from_json(&j)
+            .map_err(|e| StoreError::Malformed(format!("blob {hash}: {e}")))
+    }
+
+    /// Load a blob as JSON and require its `schema` tag.  The
+    /// integrity check already proved the bytes are exactly what was
+    /// stored; this guards against *addressing* the wrong kind of
+    /// document (a run report where a front was expected).
+    pub fn get_json(&self, hash: &str, schema: &str)
+                    -> Result<Json, StoreError> {
+        let bytes = self.get(hash)?;
+        let text = std::str::from_utf8(&bytes).map_err(|e| {
+            StoreError::Malformed(format!("blob {hash}: not UTF-8: {e}"))
+        })?;
+        let j = Json::parse(text).map_err(|e| {
+            StoreError::Malformed(format!("blob {hash}: {e}"))
+        })?;
+        let found = j.req_str("schema").map_err(|e| {
+            StoreError::Malformed(format!("blob {hash}: {e}"))
+        })?;
+        if found != schema {
+            return Err(StoreError::Schema {
+                expected: schema.to_string(),
+                found,
+            });
+        }
+        Ok(j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::oracle::Objectives;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ae-llm-blob-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    fn sample_front(seed: u64, n: u64) -> ParetoArchive {
+        let mut a = ParetoArchive::new(32);
+        let mut rng = crate::util::Rng::new(seed);
+        for _ in 0..n {
+            let c: Config = crate::config::enumerate::sample(&mut rng);
+            a.insert(c, Objectives {
+                accuracy: 50.0 + 40.0 * rng.f64(),
+                latency_ms: 5.0 + 50.0 * rng.f64(),
+                memory_gb: 1.0 + 10.0 * rng.f64(),
+                energy_j: 0.1 + rng.f64(),
+            });
+        }
+        a
+    }
+
+    #[test]
+    fn put_get_roundtrip_is_byte_identical() {
+        let dir = tmp_dir("roundtrip");
+        let store = BlobStore::open(&dir).unwrap();
+        let payload = b"{\"schema\":\"x\"}".to_vec();
+        let hash = store.put(&payload).unwrap();
+        assert_eq!(store.get(&hash).unwrap(), payload);
+        // idempotent: same bytes, same address, still one blob
+        assert_eq!(store.put(&payload).unwrap(), hash);
+        assert_eq!(store.list().unwrap(), vec![hash.clone()]);
+        assert!(store.contains(&hash));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn front_roundtrip_preserves_bytes_and_entries() {
+        let dir = tmp_dir("front");
+        let store = BlobStore::open(&dir).unwrap();
+        let front = sample_front(7, 60);
+        let hash = store.put_front(&front).unwrap();
+        let back = store.get_front(&hash).unwrap();
+        // byte-identity through the store: re-serializing the loaded
+        // front reproduces the stored bytes exactly
+        assert_eq!(back.to_json().dump(), front.to_json().dump());
+        assert_eq!(back.to_json().dump().as_bytes(),
+                   store.get(&hash).unwrap().as_slice());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn bit_flip_anywhere_is_detected_as_corrupt() {
+        let dir = tmp_dir("corrupt");
+        let store = BlobStore::open(&dir).unwrap();
+        let front = sample_front(3, 10);
+        let hash = store.put_front(&front).unwrap();
+        let clean = store.get(&hash).unwrap();
+        let path = store.path_of(&hash);
+        // flip one bit at several positions across the blob
+        for pos in [0, clean.len() / 2, clean.len() - 1] {
+            let mut bad = clean.clone();
+            bad[pos] ^= 0x01;
+            fs::write(&path, &bad).unwrap();
+            match store.get(&hash) {
+                Err(StoreError::Corrupt { hash: h, actual }) => {
+                    assert_eq!(h, hash);
+                    assert_ne!(actual, hash);
+                }
+                other => panic!("expected Corrupt at byte {pos}, \
+                                 got {other:?}"),
+            }
+            assert!(store.get_front(&hash).is_err());
+        }
+        // restore and it loads again
+        fs::write(&path, &clean).unwrap();
+        assert!(store.get_front(&hash).is_ok());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn missing_and_malformed_addresses_are_typed() {
+        let dir = tmp_dir("missing");
+        let store = BlobStore::open(&dir).unwrap();
+        let absent = super::super::sha256::sha256_hex(b"never stored");
+        assert!(matches!(store.get(&absent),
+                         Err(StoreError::Missing(_))));
+        assert!(matches!(store.get("zz"),
+                         Err(StoreError::Malformed(_))));
+        assert!(!store.contains("zz"));
+        // removing a missing blob is a no-op, not an error
+        store.remove(&absent).unwrap();
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn schema_mismatch_is_typed() {
+        let dir = tmp_dir("schema");
+        let store = BlobStore::open(&dir).unwrap();
+        let front = sample_front(5, 4);
+        let hash = store.put_front(&front).unwrap();
+        match store.get_json(&hash, RUN_REPORT_SCHEMA) {
+            Err(StoreError::Schema { expected, found }) => {
+                assert_eq!(expected, RUN_REPORT_SCHEMA);
+                assert_eq!(found, FRONT_SCHEMA);
+            }
+            other => panic!("expected Schema error, got {other:?}"),
+        }
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

@@ -1,0 +1,434 @@
+//! The indexed catalog over the blob store: a manifest
+//! (`ae-llm.manifest/v1`) mapping (model, task, platform, scenario)
+//! keys to blob addresses, plus the *seeded similarity ranking* that
+//! lets `adapt` warm-start from the best prior front for a *similar*
+//! scenario — the paper's scenario-dependence claim turned into a
+//! lookup rule.
+//!
+//! Similarity is hierarchical: matching the model matters more than
+//! the task, the task more than the platform, the platform more than
+//! the workload scenario (weights 8/4/2/1).  Exact-score ties are
+//! broken by a seeded stream consumed *only* on a tie — the same
+//! idiom as the cluster router — so same-seed lookups are
+//! byte-reproducible without making the ranking secretly
+//! insertion-ordered.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+use crate::util::Rng;
+
+/// Schema tag of the serialized manifest (docs/SCHEMAS.md).
+pub const MANIFEST_SCHEMA: &str = "ae-llm.manifest/v1";
+
+/// Salt for the catalog tie-break stream, decorrelating it from the
+/// search and serve streams at the same seed.
+const CATALOG_SALT: u64 = 0xCA7A_1060_5EED_BA5E;
+
+/// What kind of document a catalog entry points at.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BlobKind {
+    /// An `ae-llm.front/v1` Pareto front.
+    Front,
+    /// An `ae-llm.run-report/v2` run report.
+    RunReport,
+}
+
+impl BlobKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            BlobKind::Front => "front",
+            BlobKind::RunReport => "run-report",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<BlobKind> {
+        match name {
+            "front" => Some(BlobKind::Front),
+            "run-report" => Some(BlobKind::RunReport),
+            _ => None,
+        }
+    }
+}
+
+/// The scenario coordinates an artifact was produced under.  `scenario`
+/// is the workload kind for `adapt`/`serve` artifacts and `"-"` for
+/// plain searches (which have no workload dimension).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CatalogKey {
+    pub model: String,
+    pub task: String,
+    pub platform: String,
+    pub scenario: String,
+}
+
+impl CatalogKey {
+    pub fn new(model: &str, task: &str, platform: &str, scenario: &str)
+               -> CatalogKey {
+        CatalogKey {
+            model: model.to_string(),
+            task: task.to_string(),
+            platform: platform.to_string(),
+            scenario: scenario.to_string(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("model".into(), Json::Str(self.model.clone()));
+        m.insert("task".into(), Json::Str(self.task.clone()));
+        m.insert("platform".into(), Json::Str(self.platform.clone()));
+        m.insert("scenario".into(), Json::Str(self.scenario.clone()));
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<CatalogKey, String> {
+        Ok(CatalogKey {
+            model: j.req_str("model")?,
+            task: j.req_str("task")?,
+            platform: j.req_str("platform")?,
+            scenario: j.req_str("scenario")?,
+        })
+    }
+}
+
+/// Hierarchical scenario similarity in `[0, 15]`: model 8, task 4,
+/// platform 2, scenario 1.  The weights are powers of two, so any
+/// model match outranks every model mismatch no matter how the minor
+/// dimensions fall — warm-starting a different model's front is never
+/// preferred over the same model's (transfer across models goes
+/// through `transfer_fit`, not through warm entries).
+pub fn similarity(query: &CatalogKey, candidate: &CatalogKey) -> u32 {
+    let mut score = 0;
+    if query.model == candidate.model {
+        score += 8;
+    }
+    if query.task == candidate.task {
+        score += 4;
+    }
+    if query.platform == candidate.platform {
+        score += 2;
+    }
+    if query.scenario == candidate.scenario {
+        score += 1;
+    }
+    score
+}
+
+/// One manifest row: a blob address plus the coordinates and seed it
+/// was produced under.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CatalogEntry {
+    /// Monotonic insertion number (unique within a manifest).
+    pub seq: u64,
+    pub kind: BlobKind,
+    pub key: CatalogKey,
+    /// Seed of the run that produced the artifact.
+    pub seed: u64,
+    /// Content address of the blob.
+    pub hash: String,
+    /// Entry count of the stored front (0 for run reports) — shown by
+    /// `store ls` so a fleet operator can see catalog health at a
+    /// glance.
+    pub front_size: usize,
+}
+
+impl CatalogEntry {
+    fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        // seq/seed as strings: Json numbers are f64 and would corrupt
+        // values above 2^53 (same rule as run-report seeds).
+        m.insert("seq".into(), Json::Str(self.seq.to_string()));
+        m.insert("kind".into(), Json::Str(self.kind.name().into()));
+        m.insert("key".into(), self.key.to_json());
+        m.insert("seed".into(), Json::Str(self.seed.to_string()));
+        m.insert("hash".into(), Json::Str(self.hash.clone()));
+        m.insert("front_size".into(),
+                 Json::Num(self.front_size as f64));
+        Json::Obj(m)
+    }
+
+    fn from_json(j: &Json) -> Result<CatalogEntry, String> {
+        let seq = j
+            .req_str("seq")?
+            .parse::<u64>()
+            .map_err(|e| format!("bad seq: {e}"))?;
+        let kind_name = j.req_str("kind")?;
+        let kind = BlobKind::by_name(&kind_name)
+            .ok_or_else(|| format!("unknown blob kind {kind_name:?}"))?;
+        let key = CatalogKey::from_json(
+            j.get("key").ok_or("entry missing key")?)?;
+        let seed = j
+            .req_str("seed")?
+            .parse::<u64>()
+            .map_err(|e| format!("bad seed: {e}"))?;
+        let hash = j.req_str("hash")?;
+        let front_size = j.req_u64("front_size")? as usize;
+        Ok(CatalogEntry { seq, kind, key, seed, hash, front_size })
+    }
+}
+
+/// The manifest: every catalog entry in insertion order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Manifest {
+    next_seq: u64,
+    entries: Vec<CatalogEntry>,
+}
+
+impl Manifest {
+    pub fn new() -> Manifest {
+        Manifest::default()
+    }
+
+    pub fn entries(&self) -> &[CatalogEntry] {
+        &self.entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Append an entry; returns its assigned `seq`.
+    pub fn record(&mut self, kind: BlobKind, key: CatalogKey, seed: u64,
+                  hash: String, front_size: usize) -> u64 {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        self.entries.push(CatalogEntry {
+            seq,
+            kind,
+            key,
+            seed,
+            hash,
+            front_size,
+        });
+        seq
+    }
+
+    /// Every blob address the manifest references (the `gc` root set).
+    pub fn referenced_hashes(&self)
+                             -> std::collections::BTreeSet<String> {
+        self.entries.iter().map(|e| e.hash.clone()).collect()
+    }
+
+    /// Entries of `kind` ranked for `query`: similarity descending,
+    /// newest (`seq`) first within a score.  Zero-score entries — no
+    /// dimension in common — are excluded; an unrelated front is worse
+    /// than a cold start because the warm re-measure budget is finite.
+    pub fn ranked(&self, query: &CatalogKey, kind: BlobKind)
+                  -> Vec<&CatalogEntry> {
+        let mut hits: Vec<&CatalogEntry> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == kind && similarity(query, &e.key) > 0)
+            .collect();
+        hits.sort_by(|a, b| {
+            similarity(query, &b.key)
+                .cmp(&similarity(query, &a.key))
+                .then(b.seq.cmp(&a.seq))
+        });
+        hits
+    }
+
+    /// The best entry of `kind` for `query`, with exact top-score ties
+    /// broken by a seeded stream.  The stream is consumed *only* on an
+    /// actual tie (cluster-router idiom), so a manifest with a unique
+    /// best hit resolves identically at every seed.
+    pub fn best_match(&self, query: &CatalogKey, kind: BlobKind,
+                      seed: u64) -> Option<&CatalogEntry> {
+        let ranked = self.ranked(query, kind);
+        let top = similarity(query, &ranked.first()?.key);
+        let ties: Vec<&&CatalogEntry> = ranked
+            .iter()
+            .take_while(|e| similarity(query, &e.key) == top)
+            .collect();
+        if ties.len() == 1 {
+            Some(*ties[0])
+        } else {
+            let mut rng = Rng::new(seed ^ CATALOG_SALT);
+            Some(*ties[rng.below(ties.len())])
+        }
+    }
+
+    /// Serialize (schema [`MANIFEST_SCHEMA`]).  Like every schema in
+    /// docs/SCHEMAS.md, the shape is frozen and the bytes are
+    /// canonical: sorted keys, one number form — so two writers
+    /// recording the same entries produce identical files.
+    pub fn to_json(&self) -> Json {
+        let mut root = BTreeMap::new();
+        root.insert("schema".into(), Json::Str(MANIFEST_SCHEMA.into()));
+        root.insert("next_seq".into(),
+                    Json::Str(self.next_seq.to_string()));
+        root.insert(
+            "entries".into(),
+            Json::Arr(self.entries.iter().map(CatalogEntry::to_json)
+                          .collect()),
+        );
+        Json::Obj(root)
+    }
+
+    /// Parse back from [`to_json`](Self::to_json)'s form
+    /// (schema-checked); entries are restored verbatim, in order.
+    pub fn from_json(j: &Json) -> Result<Manifest, String> {
+        let schema = j.req_str("schema")?;
+        if schema != MANIFEST_SCHEMA {
+            return Err(format!("unexpected schema {schema:?}"));
+        }
+        let next_seq = j
+            .req_str("next_seq")?
+            .parse::<u64>()
+            .map_err(|e| format!("bad next_seq: {e}"))?;
+        let raw = j
+            .get("entries")
+            .and_then(Json::as_arr)
+            .ok_or("missing/invalid entries array")?;
+        let mut entries = Vec::with_capacity(raw.len());
+        for e in raw {
+            entries.push(CatalogEntry::from_json(e)?);
+        }
+        Ok(Manifest { next_seq, entries })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(model: &str, task: &str, platform: &str, scenario: &str)
+           -> CatalogKey {
+        CatalogKey::new(model, task, platform, scenario)
+    }
+
+    fn fake_hash(tag: u8) -> String {
+        super::super::sha256::sha256_hex(&[tag])
+    }
+
+    #[test]
+    fn similarity_is_hierarchical() {
+        let q = key("Phi-2", "GSM8K", "A100-80GB", "bursty");
+        assert_eq!(similarity(&q, &q), 15);
+        // model match alone beats everything-but-model
+        let model_only = key("Phi-2", "x", "y", "z");
+        let all_but_model = key("other", "GSM8K", "A100-80GB", "bursty");
+        assert_eq!(similarity(&q, &model_only), 8);
+        assert_eq!(similarity(&q, &all_but_model), 7);
+        assert!(similarity(&q, &model_only)
+                > similarity(&q, &all_but_model));
+        let unrelated = key("a", "b", "c", "d");
+        assert_eq!(similarity(&q, &unrelated), 0);
+    }
+
+    #[test]
+    fn ranked_orders_by_score_then_recency_and_drops_unrelated() {
+        let mut m = Manifest::new();
+        let q = key("Phi-2", "GSM8K", "A100-80GB", "bursty");
+        m.record(BlobKind::Front, key("a", "b", "c", "d"), 1,
+                 fake_hash(0), 3);
+        m.record(BlobKind::Front, key("Phi-2", "x", "y", "z"), 1,
+                 fake_hash(1), 3);
+        m.record(BlobKind::Front, q.clone(), 1, fake_hash(2), 3);
+        m.record(BlobKind::Front, q.clone(), 1, fake_hash(3), 3);
+        // a run report under the exact key must not rank as a front
+        m.record(BlobKind::RunReport, q.clone(), 1, fake_hash(4), 0);
+        let ranked = m.ranked(&q, BlobKind::Front);
+        assert_eq!(
+            ranked.iter().map(|e| e.hash.clone()).collect::<Vec<_>>(),
+            // exact matches first (newest of them first), model-only
+            // match after; the unrelated entry is gone
+            vec![fake_hash(3), fake_hash(2), fake_hash(1)],
+        );
+    }
+
+    #[test]
+    fn best_match_is_deterministic_without_ties() {
+        let mut m = Manifest::new();
+        let q = key("Phi-2", "GSM8K", "A100-80GB", "bursty");
+        m.record(BlobKind::Front, key("Phi-2", "x", "y", "z"), 1,
+                 fake_hash(1), 3);
+        m.record(BlobKind::Front, q.clone(), 1, fake_hash(2), 3);
+        for seed in 0..32 {
+            assert_eq!(m.best_match(&q, BlobKind::Front, seed)
+                           .unwrap().hash,
+                       fake_hash(2));
+        }
+        assert!(m.best_match(&key("a", "b", "c", "d"), BlobKind::Front, 0)
+                    .is_none());
+        assert!(Manifest::new().best_match(&q, BlobKind::Front, 0)
+                    .is_none());
+    }
+
+    #[test]
+    fn best_match_tie_break_is_seeded_and_stable() {
+        let mut m = Manifest::new();
+        let q = key("Phi-2", "GSM8K", "A100-80GB", "bursty");
+        // two entries with the same (exact) score
+        m.record(BlobKind::Front, q.clone(), 1, fake_hash(1), 3);
+        m.record(BlobKind::Front, q.clone(), 2, fake_hash(2), 3);
+        // same seed → same pick; the pick is one of the tied entries
+        for seed in 0..64u64 {
+            let a = m.best_match(&q, BlobKind::Front, seed).unwrap().hash
+                .clone();
+            let b = m.best_match(&q, BlobKind::Front, seed).unwrap().hash
+                .clone();
+            assert_eq!(a, b);
+            assert!(a == fake_hash(1) || a == fake_hash(2));
+        }
+        // the tie-break actually uses the seed: across many seeds both
+        // entries get picked at least once
+        let picks: std::collections::BTreeSet<String> = (0..64u64)
+            .map(|s| m.best_match(&q, BlobKind::Front, s).unwrap().hash
+                .clone())
+            .collect();
+        assert_eq!(picks.len(), 2, "tie-break never varied: {picks:?}");
+    }
+
+    #[test]
+    fn manifest_json_roundtrip_is_exact_and_canonical() {
+        let mut m = Manifest::new();
+        m.record(BlobKind::Front,
+                 key("Phi-2", "GSM8K", "A100-80GB", "bursty"),
+                 u64::MAX, fake_hash(1), 12);
+        m.record(BlobKind::RunReport,
+                 key("LLaMA-2-7B", "MMLU", "RTX-4090", "-"),
+                 7, fake_hash(2), 0);
+        let text = m.to_json().dump();
+        let back =
+            Manifest::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back, m);
+        // canonical: re-dumping the parsed form is byte-identical
+        assert_eq!(back.to_json().dump(), text);
+        // u64::MAX survived the string-typed seed field
+        assert_eq!(back.entries()[0].seed, u64::MAX);
+    }
+
+    #[test]
+    fn from_json_rejects_wrong_schema_and_bad_entries() {
+        assert!(Manifest::from_json(
+            &Json::parse(r#"{"schema":"nope"}"#).unwrap()).is_err());
+        let bad_kind = r#"{"schema":"ae-llm.manifest/v1","next_seq":"1",
+            "entries":[{"seq":"0","kind":"blob","seed":"1",
+            "hash":"x","front_size":0,
+            "key":{"model":"m","task":"t","platform":"p",
+                   "scenario":"s"}}]}"#;
+        assert!(Manifest::from_json(&Json::parse(bad_kind).unwrap())
+                    .is_err());
+    }
+
+    #[test]
+    fn record_assigns_monotonic_seqs() {
+        let mut m = Manifest::new();
+        let k = key("m", "t", "p", "s");
+        assert_eq!(m.record(BlobKind::Front, k.clone(), 1, fake_hash(1),
+                            1), 0);
+        assert_eq!(m.record(BlobKind::Front, k.clone(), 1, fake_hash(2),
+                            1), 1);
+        // seq survives a round trip and keeps counting from next_seq
+        let mut back =
+            Manifest::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.record(BlobKind::Front, k, 1, fake_hash(3), 1),
+                   2);
+    }
+}

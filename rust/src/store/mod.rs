@@ -1,0 +1,525 @@
+//! S14: the persistent artifact store (DESIGN.md §14) — a
+//! content-addressed blob store ([`BlobStore`]) plus an indexed
+//! catalog ([`Manifest`]) that turns per-process warm re-search into
+//! fleet-wide transfer: every searched Pareto front is filed under its
+//! SHA-256 and indexed by (model, task, platform, scenario), so any
+//! later `adapt` on any node can warm-start from the best prior front
+//! for a *similar* scenario, and a different model's front can seed
+//! [`crate::surrogate::transfer::transfer_fit`] as a source corpus.
+//!
+//! Layout under the store root (CLI: `--store DIR` / `AE_LLM_STORE`):
+//!
+//! ```text
+//! <root>/manifest.json          ae-llm.manifest/v1 (the catalog)
+//! <root>/objects/<2 hex>/<62 hex>   immutable blobs, hash-named
+//! ```
+//!
+//! Every load re-hashes the bytes; corruption is a typed
+//! [`StoreError::Corrupt`], never a silently wrong front.  The store
+//! only exists because the repo's serialization is canonical
+//! (docs/SCHEMAS.md): deterministic bytes make content addressing
+//! well-defined and deduplicating.
+
+pub mod blob;
+pub mod catalog;
+pub mod sha256;
+
+use std::fmt;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::models;
+use crate::search::archive::{Entry, ParetoArchive, FRONT_SCHEMA};
+use crate::surrogate::transfer::SourceCorpus;
+use crate::tasks;
+
+pub use blob::{BlobStore, RUN_REPORT_SCHEMA};
+pub use catalog::{similarity, BlobKind, CatalogEntry, CatalogKey,
+                  Manifest, MANIFEST_SCHEMA};
+
+// ---------------------------------------------------------------------------
+// Typed errors
+// ---------------------------------------------------------------------------
+
+/// Typed store failures.  `Corrupt` is the load-bearing one: a blob
+/// whose bytes no longer hash to their address must fail loudly — a
+/// silently wrong Pareto front would poison every warm-start
+/// downstream of it.
+#[derive(Debug)]
+pub enum StoreError {
+    Io(std::io::Error),
+    /// The blob at `hash` re-hashed to `actual` — on-disk corruption.
+    Corrupt { hash: String, actual: String },
+    /// No blob at this address.
+    Missing(String),
+    /// Unparseable address, non-UTF-8/non-JSON blob, or a bad
+    /// manifest.
+    Malformed(String),
+    /// The blob parsed but carries the wrong `schema` tag.
+    Schema { expected: String, found: String },
+}
+
+impl fmt::Display for StoreError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            StoreError::Io(e) => write!(f, "store I/O error: {e}"),
+            StoreError::Corrupt { hash, actual } => write!(
+                f,
+                "corrupt blob {hash}: content hashes to {actual}"
+            ),
+            StoreError::Missing(hash) => {
+                write!(f, "no blob at {hash}")
+            }
+            StoreError::Malformed(msg) => {
+                write!(f, "malformed store data: {msg}")
+            }
+            StoreError::Schema { expected, found } => write!(
+                f,
+                "schema mismatch: expected {expected:?}, found {found:?}"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for StoreError {}
+
+impl From<std::io::Error> for StoreError {
+    fn from(e: std::io::Error) -> StoreError {
+        StoreError::Io(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reports
+// ---------------------------------------------------------------------------
+
+/// What `store verify` found.
+#[derive(Debug, Default)]
+pub struct VerifyReport {
+    /// Distinct blobs checked (manifest-referenced plus on-disk).
+    pub checked: usize,
+    /// Human-readable descriptions of every problem found.
+    pub problems: Vec<String>,
+}
+
+impl VerifyReport {
+    pub fn ok(&self) -> bool {
+        self.problems.is_empty()
+    }
+}
+
+/// What `store gc` did.
+#[derive(Debug, Default)]
+pub struct GcReport {
+    /// Blobs still referenced by the manifest (kept).
+    pub kept: usize,
+    /// Addresses of the unreferenced blobs that were removed.
+    pub removed: Vec<String>,
+}
+
+// ---------------------------------------------------------------------------
+// The facade
+// ---------------------------------------------------------------------------
+
+/// Blob store + catalog under one root directory.
+#[derive(Debug)]
+pub struct Store {
+    root: PathBuf,
+    blobs: BlobStore,
+    manifest: Manifest,
+}
+
+impl Store {
+    /// Open (creating if needed) the store at `root`, loading the
+    /// manifest if one exists.
+    pub fn open(root: &Path) -> Result<Store, StoreError> {
+        fs::create_dir_all(root)?;
+        let blobs = BlobStore::open(root)?;
+        let manifest_path = root.join("manifest.json");
+        let manifest = if manifest_path.exists() {
+            let text = fs::read_to_string(&manifest_path)?;
+            let j = crate::util::json::Json::parse(&text).map_err(|e| {
+                StoreError::Malformed(format!("manifest.json: {e}"))
+            })?;
+            Manifest::from_json(&j).map_err(|e| {
+                StoreError::Malformed(format!("manifest.json: {e}"))
+            })?
+        } else {
+            Manifest::new()
+        };
+        Ok(Store { root: root.to_path_buf(), blobs, manifest })
+    }
+
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn blobs(&self) -> &BlobStore {
+        &self.blobs
+    }
+
+    /// Atomically rewrite `manifest.json` (temp + rename, like blob
+    /// writes: a crash never leaves a truncated manifest).
+    fn save_manifest(&self) -> Result<(), StoreError> {
+        let path = self.root.join("manifest.json");
+        let tmp = self.root.join("manifest.json.tmp");
+        fs::write(&tmp, self.manifest.to_json().dump())?;
+        fs::rename(&tmp, &path)?;
+        Ok(())
+    }
+
+    // -- writing --------------------------------------------------------
+
+    /// Store a front under `key` and index it; returns the blob
+    /// address.
+    pub fn put_front(&mut self, key: &CatalogKey, seed: u64,
+                     front: &ParetoArchive) -> Result<String, StoreError> {
+        let hash = self.blobs.put_front(front)?;
+        self.manifest.record(BlobKind::Front, key.clone(), seed,
+                             hash.clone(), front.len());
+        self.save_manifest()?;
+        Ok(hash)
+    }
+
+    /// Store a run report under `key` and index it; returns the blob
+    /// address.
+    pub fn put_run_report(&mut self, key: &CatalogKey,
+                          report: &crate::coordinator::RunReport)
+                          -> Result<String, StoreError> {
+        let hash =
+            self.blobs.put(report.to_json().dump().as_bytes())?;
+        self.manifest.record(BlobKind::RunReport, key.clone(),
+                             report.seed, hash.clone(), 0);
+        self.save_manifest()?;
+        Ok(hash)
+    }
+
+    // -- reading --------------------------------------------------------
+
+    /// Load + verify + parse a stored front by address.
+    pub fn load_front(&self, hash: &str)
+                      -> Result<ParetoArchive, StoreError> {
+        self.blobs.get_front(hash)
+    }
+
+    /// The best stored front for a scenario similar to `key`
+    /// ([`Manifest::best_match`] semantics), loaded and verified.
+    /// `None` when nothing in the catalog shares any dimension.
+    pub fn best_front(&self, key: &CatalogKey, seed: u64)
+                      -> Result<Option<(CatalogEntry, ParetoArchive)>,
+                                StoreError> {
+        match self.manifest.best_match(key, BlobKind::Front, seed) {
+            None => Ok(None),
+            Some(entry) => {
+                let front = self.load_front(&entry.hash)?;
+                Ok(Some((entry.clone(), front)))
+            }
+        }
+    }
+
+    /// Warm-start entries for `key`: the best similar front's entries,
+    /// or empty when the catalog has no relevant front.  Feeding the
+    /// empty case to `optimize_with_observer_warm` is byte-for-byte
+    /// the cold path, so callers need no branch.
+    pub fn warm_entries(&self, key: &CatalogKey, seed: u64)
+                        -> Result<Vec<Entry>, StoreError> {
+        Ok(self
+            .best_front(key, seed)?
+            .map(|(_, front)| front.entries().to_vec())
+            .unwrap_or_default())
+    }
+
+    /// A transfer corpus from the best *other-model* front for `key`:
+    /// cross-model catalog hits cannot seed warm entries (the configs
+    /// were priced on a different model) but they can seed
+    /// [`crate::surrogate::transfer::transfer_fit`].  Candidates are
+    /// ranked by
+    /// the minor dimensions (task 4 / platform 2 / scenario 1), newest
+    /// first; entries whose model name the zoo no longer knows are
+    /// skipped.
+    pub fn source_corpus(&self, key: &CatalogKey)
+                         -> Result<Option<SourceCorpus>, StoreError> {
+        let mut candidates: Vec<&CatalogEntry> = self
+            .manifest
+            .entries()
+            .iter()
+            .filter(|e| {
+                e.kind == BlobKind::Front
+                    && e.key.model != key.model
+                    && e.front_size > 0
+                    && models::by_name(&e.key.model).is_some()
+            })
+            .collect();
+        let minor = |k: &CatalogKey| -> u32 {
+            let mut s = 0;
+            if k.task == key.task {
+                s += 4;
+            }
+            if k.platform == key.platform {
+                s += 2;
+            }
+            if k.scenario == key.scenario {
+                s += 1;
+            }
+            s
+        };
+        candidates.sort_by(|a, b| {
+            minor(&b.key).cmp(&minor(&a.key)).then(b.seq.cmp(&a.seq))
+        });
+        let Some(entry) = candidates.first() else {
+            return Ok(None);
+        };
+        let front = self.load_front(&entry.hash)?;
+        let model = models::by_name(&entry.key.model)
+            .expect("filtered to known models above");
+        let task = tasks::by_name(&entry.key.task)
+            .unwrap_or_else(tasks::blended_task);
+        Ok(Some(SourceCorpus::from_entries(model, task,
+                                           front.entries())))
+    }
+
+    /// Catalog listing, in insertion order (what `store ls` prints).
+    pub fn ls(&self) -> &[CatalogEntry] {
+        self.manifest.entries()
+    }
+
+    // -- maintenance ----------------------------------------------------
+
+    /// Check every blob: each manifest-referenced blob must exist,
+    /// hash to its address, and parse under its recorded kind's
+    /// schema; every on-disk blob (referenced or not) must hash to its
+    /// filename.  Read-only — reports, never repairs.
+    pub fn verify(&self) -> Result<VerifyReport, StoreError> {
+        let mut report = VerifyReport::default();
+        let mut seen = std::collections::BTreeSet::new();
+        for entry in self.manifest.entries() {
+            if seen.insert(entry.hash.clone()) {
+                report.checked += 1;
+            }
+            let result = match entry.kind {
+                BlobKind::Front => self
+                    .blobs
+                    .get_json(&entry.hash, FRONT_SCHEMA)
+                    .and_then(|j| {
+                        ParetoArchive::from_json(&j).map(|_| ()).map_err(
+                            |e| StoreError::Malformed(format!(
+                                "blob {}: {e}", entry.hash)))
+                    }),
+                BlobKind::RunReport => self
+                    .blobs
+                    .get_json(&entry.hash, RUN_REPORT_SCHEMA)
+                    .map(|_| ()),
+            };
+            if let Err(e) = result {
+                report.problems.push(format!(
+                    "entry {} ({} for {}): {e}",
+                    entry.seq,
+                    entry.kind.name(),
+                    entry.key.model
+                ));
+            }
+        }
+        // Unreferenced blobs still live at content addresses; a
+        // corrupted one is a real problem `gc` would otherwise sweep
+        // under the rug.
+        for hash in self.blobs.list()? {
+            if seen.contains(&hash) {
+                continue;
+            }
+            report.checked += 1;
+            if let Err(e) = self.blobs.get(&hash) {
+                report.problems.push(format!("unreferenced blob: {e}"));
+            }
+        }
+        Ok(report)
+    }
+
+    /// Remove every blob the manifest does not reference.  The
+    /// manifest is the root set, so a referenced blob is *never*
+    /// collected.
+    pub fn gc(&mut self) -> Result<GcReport, StoreError> {
+        let referenced = self.manifest.referenced_hashes();
+        let mut report = GcReport::default();
+        for hash in self.blobs.list()? {
+            if referenced.contains(&hash) {
+                report.kept += 1;
+            } else {
+                self.blobs.remove(&hash)?;
+                report.removed.push(hash);
+            }
+        }
+        Ok(report)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::oracle::Objectives;
+    use crate::util::Rng;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("ae-llm-store-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn sample_front(seed: u64, n: u64) -> ParetoArchive {
+        let mut a = ParetoArchive::new(32);
+        let mut rng = Rng::new(seed);
+        for _ in 0..n {
+            let c: Config = crate::config::enumerate::sample(&mut rng);
+            a.insert(c, Objectives {
+                accuracy: 50.0 + 40.0 * rng.f64(),
+                latency_ms: 5.0 + 50.0 * rng.f64(),
+                memory_gb: 1.0 + 10.0 * rng.f64(),
+                energy_j: 0.1 + rng.f64(),
+            });
+        }
+        a
+    }
+
+    fn key(model: &str, scenario: &str) -> CatalogKey {
+        CatalogKey::new(model, "GSM8K", "A100-80GB", scenario)
+    }
+
+    #[test]
+    fn store_reopens_with_its_catalog() {
+        let dir = tmp_dir("reopen");
+        let front = sample_front(1, 20);
+        let hash = {
+            let mut store = Store::open(&dir).unwrap();
+            store.put_front(&key("Phi-2", "bursty"), 7, &front).unwrap()
+        };
+        // a second process (fresh handle) sees the same catalog and
+        // loads the identical front
+        let store = Store::open(&dir).unwrap();
+        assert_eq!(store.ls().len(), 1);
+        assert_eq!(store.ls()[0].hash, hash);
+        assert_eq!(store.ls()[0].seed, 7);
+        assert_eq!(store.ls()[0].front_size, front.len());
+        let back = store.load_front(&hash).unwrap();
+        assert_eq!(back.to_json().dump(), front.to_json().dump());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn best_front_prefers_similar_scenarios() {
+        let dir = tmp_dir("best");
+        let mut store = Store::open(&dir).unwrap();
+        let other = sample_front(2, 8);
+        let exact = sample_front(3, 8);
+        store.put_front(&key("LLaMA-2-7B", "bursty"), 1, &other)
+            .unwrap();
+        let exact_hash = store
+            .put_front(&key("Phi-2", "bursty"), 1, &exact)
+            .unwrap();
+        let (entry, front) =
+            store.best_front(&key("Phi-2", "bursty"), 9).unwrap()
+                .unwrap();
+        assert_eq!(entry.hash, exact_hash);
+        assert_eq!(front.to_json().dump(), exact.to_json().dump());
+        // warm_entries mirrors best_front; unrelated keys come up empty
+        assert_eq!(store.warm_entries(&key("Phi-2", "bursty"), 9)
+                       .unwrap().len(),
+                   exact.len());
+        let nothing = CatalogKey::new("x", "y", "z", "w");
+        assert!(store.best_front(&nothing, 9).unwrap().is_none());
+        assert!(store.warm_entries(&nothing, 9).unwrap().is_empty());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn source_corpus_comes_from_another_model() {
+        let dir = tmp_dir("corpus");
+        let mut store = Store::open(&dir).unwrap();
+        // same-model front must NOT be a transfer source
+        store.put_front(&key("Phi-2", "bursty"), 1,
+                        &sample_front(4, 10)).unwrap();
+        assert!(store.source_corpus(&key("Phi-2", "bursty")).unwrap()
+                    .is_none());
+        // a different model's front is
+        let src = sample_front(5, 10);
+        store.put_front(&key("LLaMA-2-7B", "bursty"), 1, &src).unwrap();
+        let corpus =
+            store.source_corpus(&key("Phi-2", "bursty")).unwrap()
+                .unwrap();
+        assert_eq!(corpus.model.name, "LLaMA-2-7B");
+        assert_eq!(corpus.evaluations.len(), src.len());
+        // a model name the zoo doesn't know is skipped, not an error
+        store.put_front(&key("SomeForeignModel", "bursty"), 1,
+                        &sample_front(6, 10)).unwrap();
+        let corpus =
+            store.source_corpus(&key("Phi-2", "bursty")).unwrap()
+                .unwrap();
+        assert_eq!(corpus.model.name, "LLaMA-2-7B");
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn gc_never_collects_referenced_blobs() {
+        let dir = tmp_dir("gc");
+        let mut store = Store::open(&dir).unwrap();
+        let kept = sample_front(7, 12);
+        let kept_hash =
+            store.put_front(&key("Phi-2", "bursty"), 1, &kept).unwrap();
+        // an orphan blob: stored directly, never indexed
+        let orphan_hash =
+            store.blobs.put(b"{\"schema\":\"orphan\"}").unwrap();
+        let report = store.gc().unwrap();
+        assert_eq!(report.kept, 1);
+        assert_eq!(report.removed, vec![orphan_hash.clone()]);
+        assert!(store.blobs.contains(&kept_hash));
+        assert!(!store.blobs.contains(&orphan_hash));
+        // idempotent: a second sweep removes nothing
+        let report = store.gc().unwrap();
+        assert_eq!(report.kept, 1);
+        assert!(report.removed.is_empty());
+        assert_eq!(store.load_front(&kept_hash).unwrap().to_json()
+                       .dump(),
+                   kept.to_json().dump());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn verify_catches_corruption_and_passes_clean_stores() {
+        let dir = tmp_dir("verify");
+        let mut store = Store::open(&dir).unwrap();
+        let front = sample_front(8, 12);
+        let hash =
+            store.put_front(&key("Phi-2", "bursty"), 1, &front).unwrap();
+        let report = store.verify().unwrap();
+        assert!(report.ok(), "{:?}", report.problems);
+        assert_eq!(report.checked, 1);
+        // flip a byte in the object file
+        let path = dir.join("objects").join(&hash[..2]).join(&hash[2..]);
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[10] ^= 0x01;
+        fs::write(&path, &bytes).unwrap();
+        let report = store.verify().unwrap();
+        assert!(!report.ok());
+        assert!(report.problems[0].contains("corrupt"),
+                "{:?}", report.problems);
+        // a deleted blob is also caught
+        fs::remove_file(&path).unwrap();
+        let report = store.verify().unwrap();
+        assert!(!report.ok());
+        fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_rejects_a_garbage_manifest() {
+        let dir = tmp_dir("badmanifest");
+        fs::create_dir_all(&dir).unwrap();
+        fs::write(dir.join("manifest.json"), "not json").unwrap();
+        assert!(matches!(Store::open(&dir),
+                         Err(StoreError::Malformed(_))));
+        fs::remove_dir_all(&dir).unwrap();
+    }
+}

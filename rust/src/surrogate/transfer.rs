@@ -39,6 +39,22 @@ impl SourceCorpus {
             .collect();
         SourceCorpus { model: model.clone(), task: task.clone(), evaluations }
     }
+
+    /// Build a corpus from already-measured archive entries — how a
+    /// stored Pareto front ([`crate::store::Store::source_corpus`])
+    /// becomes transfer training data without spending a single fresh
+    /// source-model evaluation.  Front entries are fewer but *better*
+    /// than random samples: they trace the non-dominated surface,
+    /// which is exactly the region the target search will explore.
+    pub fn from_entries(model: ModelSpec, task: TaskSpec,
+                        entries: &[crate::search::archive::Entry])
+                        -> SourceCorpus {
+        let evaluations = entries
+            .iter()
+            .map(|e| (e.config, e.objectives))
+            .collect();
+        SourceCorpus { model, task, evaluations }
+    }
 }
 
 /// Fit a surrogate for `target` using the source corpus plus only

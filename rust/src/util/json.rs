@@ -281,6 +281,12 @@ impl<'a> Parser<'a> {
                                     )
                                     .map_err(|e| e.to_string())?;
                                     self.pos += 6;
+                                    // The second escape must be a low
+                                    // surrogate, or `low - 0xDC00`
+                                    // underflows.
+                                    if !(0xDC00..0xE000).contains(&low) {
+                                        return Err("lone surrogate".into());
+                                    }
                                     let c = 0x10000
                                         + ((code - 0xD800) << 10)
                                         + (low - 0xDC00);
@@ -412,6 +418,56 @@ mod tests {
             Json::parse(r#""é😀""#).unwrap(),
             Json::Str("é😀".into())
         );
+    }
+
+    #[test]
+    fn escaping_round_trips_hostile_strings() {
+        // Strings that can land in catalog key fields (model / task /
+        // platform / scenario names) must dump → parse byte-stably:
+        // control chars, quotes, backslashes, non-ASCII, and the
+        // astral plane.
+        let hostile = [
+            "plain",
+            "with \"quotes\" and \\backslashes\\",
+            "tabs\tnewlines\nreturns\r",
+            "low controls \u{1} \u{b} \u{1f}",
+            "del \u{7f} is legal unescaped",
+            "non-ascii: café-β-模型",
+            "astral: 😀𐍈",
+            "",
+        ];
+        for s in hostile {
+            let j = Json::Str(s.to_string());
+            let dumped = j.dump();
+            let back = Json::parse(&dumped)
+                .unwrap_or_else(|e| panic!("{dumped}: {e}"));
+            assert_eq!(back, j, "round-trip of {s:?}");
+            // byte-stable: dumping the re-parsed value is identical,
+            // so content addresses of catalog blobs are well-defined
+            assert_eq!(back.dump(), dumped, "canonical form of {s:?}");
+        }
+    }
+
+    #[test]
+    fn escaped_control_chars_use_canonical_forms() {
+        // Named short escapes for the common controls...
+        assert_eq!(Json::Str("a\nb\tc\rd\"e\\f".into()).dump(),
+                   r#""a\nb\tc\rd\"e\\f""#);
+        // ...\u00xx for the rest, and raw UTF-8 for non-ASCII.
+        assert_eq!(Json::Str("\u{1}".into()).dump(), r#""\u0001""#);
+        assert_eq!(Json::Str("é".into()).dump(), "\"é\"");
+    }
+
+    #[test]
+    fn surrogate_escapes_parse_or_fail_cleanly() {
+        // A valid surrogate pair decodes to the astral char.
+        assert_eq!(Json::parse(r#""\ud83d\ude00""#).unwrap(),
+                   Json::Str("😀".into()));
+        // A high surrogate not followed by a low one is an error, not
+        // a panic or a corrupted string.
+        assert!(Json::parse(r#""\ud800""#).is_err());
+        assert!(Json::parse(r#""\ud800A""#).is_err());
+        assert!(Json::parse(r#""\udc00""#).is_err());
     }
 
     #[test]

@@ -1,0 +1,234 @@
+//! Integration tests for the content-addressed artifact store
+//! (DESIGN.md §14): byte-identical blob round-trips, single-bit
+//! corruption detection, gc safety, and the headline contract — an
+//! `adapt` warm-started from a catalog hit reproduces the in-memory
+//! warm-start byte-for-byte, sequentially and on 4 workers.
+//!
+//! Everything runs on the simulated stack (virtual time, no
+//! artifacts), so CI executes all of it.
+
+use std::path::{Path, PathBuf};
+
+use ae_llm::coordinator::{AdaptParams, AeLlm};
+use ae_llm::runtime::WorkloadKind;
+use ae_llm::store::{BlobKind, Store, StoreError};
+use ae_llm::util::{Parallelism, Rng};
+
+fn session(model: &str, seed: u64, par: Parallelism) -> AeLlm {
+    let params = ae_llm::coordinator::AeLlmParams {
+        parallelism: par,
+        ..ae_llm::coordinator::AeLlmParams::small()
+    };
+    AeLlm::for_model(model).unwrap().params(params).seed(seed)
+}
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("ae-llm-store-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// On-disk address of a blob — the layout contract from DESIGN.md §14
+/// (`objects/<first two hex>/<remaining 62>`).
+fn blob_path(root: &Path, hash: &str) -> PathBuf {
+    root.join("objects").join(&hash[..2]).join(&hash[2..])
+}
+
+#[test]
+fn front_and_run_report_blobs_round_trip_byte_identically() {
+    let root = tmp_root("roundtrip");
+    let mut store = Store::open(&root).unwrap();
+    for seed in [7u64, 42] {
+        let s = session("Phi-2", seed, Parallelism::Auto);
+        let report = s.run_testbed();
+        let key = s.store_key("-");
+        let front_bytes =
+            report.outcome.pareto.to_json().dump().into_bytes();
+        let report_bytes = report.to_json().dump().into_bytes();
+
+        let fh =
+            store.put_front(&key, seed, &report.outcome.pareto).unwrap();
+        let rh = store.put_run_report(&key, &report).unwrap();
+        assert_eq!(store.blobs().get(&fh).unwrap(), front_bytes,
+                   "front blob bytes (seed {seed})");
+        assert_eq!(store.blobs().get(&rh).unwrap(), report_bytes,
+                   "run-report blob bytes (seed {seed})");
+
+        // parsed round trip restores the front verbatim
+        let loaded = store.load_front(&fh).unwrap();
+        assert_eq!(loaded.to_json().dump().into_bytes(), front_bytes);
+
+        // content addressing: re-putting identical bytes dedups to
+        // the same address
+        let again =
+            store.put_front(&key, seed, &report.outcome.pareto).unwrap();
+        assert_eq!(again, fh);
+    }
+    assert!(store.verify().unwrap().ok());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn any_single_bit_flip_is_detected_on_load() {
+    let root = tmp_root("bitflip");
+    let mut store = Store::open(&root).unwrap();
+    let s = session("Phi-2", 7, Parallelism::Auto);
+    let outcome = s.run_testbed_outcome();
+    let fh = store.put_front(&s.store_key("-"), 7, &outcome.pareto)
+        .unwrap();
+
+    let path = blob_path(&root, &fh);
+    let clean = std::fs::read(&path).unwrap();
+    // flip single bits at a spread of byte positions, first and last
+    // included
+    let positions =
+        [0, clean.len() / 3, clean.len() / 2, clean.len() - 1];
+    for &pos in &positions {
+        for bit in [0u8, 3, 7] {
+            let mut evil = clean.clone();
+            evil[pos] ^= 1 << bit;
+            std::fs::write(&path, &evil).unwrap();
+            match store.load_front(&fh) {
+                Err(StoreError::Corrupt { hash, .. }) => {
+                    assert_eq!(hash, fh);
+                }
+                other => panic!(
+                    "bit {bit} of byte {pos}: expected Corrupt, got \
+                     {other:?}"
+                ),
+            }
+            // verify() reports the problem instead of erroring out
+            let vr = store.verify().unwrap();
+            assert!(!vr.ok(), "verify missed a flip at byte {pos}");
+        }
+    }
+    // restoring the original bytes heals the store
+    std::fs::write(&path, &clean).unwrap();
+    assert!(store.verify().unwrap().ok());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn gc_never_collects_a_manifest_referenced_blob() {
+    let root = tmp_root("gc");
+    let mut store = Store::open(&root).unwrap();
+    let s = session("Phi-2", 7, Parallelism::Auto);
+    let outcome = s.run_testbed_outcome();
+    let fh = store.put_front(&s.store_key("-"), 7, &outcome.pareto)
+        .unwrap();
+    // an orphan blob, written directly past the catalog
+    let orphan = store.blobs().put(b"{\"schema\":\"junk/v0\"}").unwrap();
+
+    let gcr = store.gc().unwrap();
+    assert_eq!(gcr.removed, vec![orphan.clone()]);
+    assert_eq!(gcr.kept, 1);
+    assert!(store.blobs().contains(&fh));
+    assert!(!store.blobs().contains(&orphan));
+    // the referenced front still loads byte-perfect after the sweep
+    assert_eq!(store.load_front(&fh).unwrap().to_json().dump(),
+               outcome.pareto.to_json().dump());
+    // and a second sweep finds nothing to do
+    assert!(store.gc().unwrap().removed.is_empty());
+    let _ = std::fs::remove_dir_all(&root);
+}
+
+#[test]
+fn catalog_warm_adapt_matches_in_memory_warm_start_byte_for_byte() {
+    // The ISSUE's acceptance bar: `adapt` warm-started from a catalog
+    // hit must reproduce the in-memory warm-start byte-for-byte, at
+    // Parallelism 1 and 4 — persistence must never perturb a result.
+    let kind = WorkloadKind::RegimeShift;
+    let params = AdaptParams {
+        epochs: 3,
+        requests_per_epoch: 120,
+        ..AdaptParams::default()
+    };
+    let run = |tag: &str, par: Parallelism| -> (String, String) {
+        let root = tmp_root(tag);
+        // seed the catalog: an earlier run's front under the same
+        // (model, task, platform, scenario) coordinates
+        {
+            let mut store = Store::open(&root).unwrap();
+            let prev = session("Phi-2", 7, par);
+            let front = prev.run_testbed_outcome().pareto;
+            store.put_front(&prev.store_key(kind.name()), 7, &front)
+                .unwrap();
+        }
+        let s = session("Phi-2", 11, par);
+        // reference: the same warm-start wholly in memory, from the
+        // identical catalog state
+        let reference = {
+            let store = Store::open(&root).unwrap();
+            let warm = store.warm_entries(&s.store_key(kind.name()), 11)
+                .unwrap();
+            assert!(!warm.is_empty(), "expected a catalog hit");
+            let outcome = s.run_testbed_outcome_warm(&warm);
+            ae_llm::coordinator::run_adapt_from(&s, 11, kind, &params,
+                                                &outcome)
+                .unwrap()
+                .to_json()
+                .dump()
+        };
+        // the store-driven path
+        let mut store = Store::open(&root).unwrap();
+        let report = s.adapt_stored(kind, &params, &mut store).unwrap();
+        // the catalog's newest front is the run's final front, verbatim
+        let newest = store
+            .ls()
+            .iter()
+            .filter(|e| e.kind == BlobKind::Front)
+            .last()
+            .unwrap();
+        assert_eq!(store.load_front(&newest.hash).unwrap()
+                       .to_json().dump(),
+                   report.final_front.to_json().dump(),
+                   "catalog tail must equal the report's final front");
+        let stored = report.to_json().dump();
+        let _ = std::fs::remove_dir_all(&root);
+        (reference, stored)
+    };
+
+    let (ref_seq, stored_seq) = run("warm-seq", Parallelism::Sequential);
+    assert_eq!(stored_seq, ref_seq,
+               "catalog warm-start diverged from in-memory (sequential)");
+    let (ref_par, stored_par) = run("warm-par4", Parallelism::Threads(4));
+    assert_eq!(stored_par, ref_par,
+               "catalog warm-start diverged from in-memory (4 workers)");
+    assert_eq!(stored_seq, stored_par,
+               "parallelism changed the stored-warm adapt report");
+}
+
+#[test]
+fn stored_fronts_seed_cross_model_transfer() {
+    use ae_llm::surrogate::transfer::transfer_fit;
+    use ae_llm::surrogate::GbtParams;
+
+    let root = tmp_root("transfer");
+    let mut store = Store::open(&root).unwrap();
+    // source: a Phi-2 front in the catalog
+    let src = session("Phi-2", 7, Parallelism::Auto);
+    let front = src.run_testbed_outcome().pareto;
+    store.put_front(&src.store_key("-"), 7, &front).unwrap();
+
+    // target: a different model sees the Phi-2 front as a corpus
+    let tgt = session("LLaMA-2-7B", 11, Parallelism::Auto);
+    let corpus = store
+        .source_corpus(&tgt.store_key("-"))
+        .unwrap()
+        .expect("cross-model catalog hit");
+    assert_eq!(corpus.model.name, "Phi-2");
+    assert_eq!(corpus.evaluations.len(), front.len());
+
+    // and it actually trains a transfer surrogate from stored data
+    let sc = tgt.scenario();
+    let (_set, n_evals) = transfer_fit(&corpus, &sc.testbed, &sc.model,
+                                       &sc.task, 8, GbtParams::fast(),
+                                       &mut Rng::new(3));
+    assert_eq!(n_evals, 8,
+               "transfer spends only the requested fresh evaluations");
+
+    // the source model's own query must not see itself as a corpus
+    assert!(store.source_corpus(&src.store_key("-")).unwrap().is_none());
+    let _ = std::fs::remove_dir_all(&root);
+}
