@@ -1,0 +1,136 @@
+#!/usr/bin/env python3
+"""Bench-regression gate: compare this run's BENCH_*.json throughput
+against the previous run's artifact and fail on a large drop.
+
+Usage: bench_gate.py --prev DIR --curr DIR [--threshold 0.8]
+
+* Reports are matched by file name (``BENCH_<short>.json``), searched
+  recursively under each directory (artifact downloads nest them one
+  level deep).
+* Only keys ending in ``_per_sec`` are compared — those are the
+  throughput metrics of the ae-llm.bench/v1 schema (higher is better);
+  wall-ms and count keys are informational.
+* A key regresses when ``curr < prev * threshold`` (default 0.8, i.e.
+  a >20% throughput drop).  Keys present on only one side are listed
+  but never fail the gate (benches gain and lose metrics across PRs).
+* Comparisons are only meaningful within one mode: if the two runs'
+  ``mode`` fields differ (quick vs full) the pair is skipped.
+* Soft pass: no previous reports found (first run on a branch, expired
+  artifact) exits 0 with a notice — the gate needs history to bite.
+
+Writes a per-key markdown table to ``$GITHUB_STEP_SUMMARY`` when set.
+"""
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+
+def find_reports(root: str) -> dict:
+    out = {}
+    for path in sorted(glob.glob(os.path.join(root, "**", "BENCH_*.json"),
+                                 recursive=True)):
+        out[os.path.basename(path)] = path
+    return out
+
+
+def per_sec_keys(rep: dict) -> dict:
+    return {
+        k: float(v) for k, v in rep.items()
+        if k.endswith("_per_sec") and isinstance(v, (int, float))
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--prev", required=True)
+    ap.add_argument("--curr", required=True)
+    ap.add_argument("--threshold", type=float, default=0.8,
+                    help="fail when curr < prev * threshold")
+    args = ap.parse_args()
+
+    prev = find_reports(args.prev)
+    curr = find_reports(args.curr)
+    if not curr:
+        print(f"no current BENCH_*.json under {args.curr}", file=sys.stderr)
+        return 2
+    if not prev:
+        print("no previous bench reports found — soft pass "
+              "(first run, or the prior artifact expired)")
+        summarize([], soft=True)
+        return 0
+
+    rows = []   # (bench, key, prev, curr, ratio, status)
+    failures = 0
+    for name, cpath in sorted(curr.items()):
+        with open(cpath) as f:
+            crep = json.load(f)
+        if name not in prev:
+            rows.append((name, "(new bench)", None, None, None, "new"))
+            continue
+        with open(prev[name]) as f:
+            prep = json.load(f)
+        if prep.get("mode") != crep.get("mode"):
+            rows.append((name, f"(mode {prep.get('mode')} vs "
+                         f"{crep.get('mode')})", None, None, None,
+                         "skipped"))
+            continue
+        pkeys, ckeys = per_sec_keys(prep), per_sec_keys(crep)
+        for key in sorted(set(pkeys) | set(ckeys)):
+            p, c = pkeys.get(key), ckeys.get(key)
+            if p is None or c is None:
+                rows.append((name, key, p, c, None,
+                             "new" if p is None else "removed"))
+                continue
+            ratio = c / p if p > 0 else float("inf")
+            if ratio < args.threshold:
+                failures += 1
+                status = "REGRESSED"
+            else:
+                status = "ok"
+            rows.append((name, key, p, c, ratio, status))
+
+    for bench, key, p, c, ratio, status in rows:
+        fmt = lambda v: "-" if v is None else f"{v:,.1f}"
+        r = "-" if ratio is None else f"{ratio:.2f}x"
+        print(f"{status:>9}  {bench:<22} {key:<44} "
+              f"prev={fmt(p):>14} curr={fmt(c):>14} {r}")
+    summarize(rows, threshold=args.threshold, failures=failures)
+
+    if failures:
+        print(f"\n{failures} throughput key(s) regressed by more than "
+              f"{100 * (1 - args.threshold):.0f}% — failing the gate",
+              file=sys.stderr)
+        return 1
+    print("\nbench gate passed")
+    return 0
+
+
+def summarize(rows, threshold: float = 0.8, failures: int = 0,
+              soft: bool = False):
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    with open(path, "a") as f:
+        f.write("## Bench regression gate\n\n")
+        if soft:
+            f.write("No previous bench artifact — soft pass (the gate "
+                    "compares against the last successful run).\n")
+            return
+        f.write(f"Threshold: fail below {threshold:.2f}x of the previous "
+                f"run's throughput. Result: "
+                f"{'**' + str(failures) + ' regression(s)**' if failures else 'no regressions'}.\n\n")
+        f.write("| bench | key | previous | current | ratio | status |\n")
+        f.write("|---|---|---:|---:|---:|---|\n")
+        for bench, key, p, c, ratio, status in rows:
+            fmt = lambda v: "-" if v is None else f"{v:,.1f}"
+            r = "-" if ratio is None else f"{ratio:.2f}x"
+            flag = "❌" if status == "REGRESSED" else ""
+            f.write(f"| {bench} | `{key}` | {fmt(p)} | {fmt(c)} | {r} "
+                    f"| {status} {flag} |\n")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,77 @@
+#!/usr/bin/env python3
+"""Validate BENCH_*.json files against the ae-llm.bench/v1 schema.
+
+Usage: check_bench_schema.py BENCH_search.json [BENCH_serve.json ...]
+
+Every report must carry the shared envelope written by
+`rust/src/util/bench.rs::write_report` (see docs/SCHEMAS.md):
+
+* ``schema``  == "ae-llm.bench/v1"
+* ``name``    == "perf_<short>" and must match the file name
+  (``BENCH_<short>.json``)
+* ``mode``    in {"quick", "full"}
+* legacy aliases: ``bench`` == ``name``, ``quick`` is a bool consistent
+  with ``mode``
+* at least one numeric ``*_per_sec`` throughput key (the regression
+  gate compares exactly those)
+"""
+
+import json
+import os
+import sys
+
+SCHEMA = "ae-llm.bench/v1"
+
+
+def check(path: str) -> list:
+    errors = []
+    base = os.path.basename(path)
+    if not (base.startswith("BENCH_") and base.endswith(".json")):
+        return [f"unexpected file name {base!r}"]
+    short = base[len("BENCH_"):-len(".json")]
+    with open(path) as f:
+        rep = json.load(f)
+    if not isinstance(rep, dict):
+        return ["report is not a JSON object"]
+    if rep.get("schema") != SCHEMA:
+        errors.append(f"schema is {rep.get('schema')!r}, want {SCHEMA!r}")
+    want_name = f"perf_{short}"
+    if rep.get("name") != want_name:
+        errors.append(f"name is {rep.get('name')!r}, want {want_name!r}")
+    if rep.get("mode") not in ("quick", "full"):
+        errors.append(f"mode is {rep.get('mode')!r}, want quick|full")
+    if rep.get("bench") != rep.get("name"):
+        errors.append("legacy alias 'bench' != 'name'")
+    if rep.get("quick") is not (rep.get("mode") == "quick"):
+        errors.append("legacy alias 'quick' inconsistent with 'mode'")
+    per_sec = {
+        k: v for k, v in rep.items()
+        if k.endswith("_per_sec") and isinstance(v, (int, float))
+    }
+    if not per_sec:
+        errors.append("no numeric *_per_sec throughput keys")
+    for k, v in per_sec.items():
+        if not (v == v and v > 0):  # NaN or non-positive
+            errors.append(f"throughput key {k!r} is {v!r}")
+    return errors
+
+
+def main(argv: list) -> int:
+    if not argv:
+        print("usage: check_bench_schema.py BENCH_*.json", file=sys.stderr)
+        return 2
+    bad = 0
+    for path in argv:
+        errs = check(path)
+        if errs:
+            bad += 1
+            for e in errs:
+                print(f"FAIL {path}: {e}")
+        else:
+            n = len(json.load(open(path)))
+            print(f"ok   {path} ({n} keys)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -9,7 +9,7 @@ use std::collections::BTreeMap;
 
 use ae_llm::coordinator::{AdaptParams, AeLlm};
 use ae_llm::runtime::WorkloadKind;
-use ae_llm::util::bench::{self, time_it};
+use ae_llm::util::bench::{self, per_sec, time_it};
 use ae_llm::util::json::Json;
 
 fn main() {
@@ -49,15 +49,16 @@ fn main() {
                           Json::Num(rep.overall.slo_violation_rate));
             report.insert(format!("{label} redeployments"),
                           Json::Num(rep.redeployments as f64));
+            // ae-llm.bench/v1 throughput key (CI gate compares these):
+            // virtual requests simulated per wall second over the whole
+            // adaptation run.
+            let total = (p.epochs * p.requests_per_epoch) as f64;
+            report.insert(
+                format!("adapt_{}_{}_requests_per_sec", kind.name(),
+                        if adaptive { "continual" } else { "one_shot" }),
+                Json::Num(per_sec(total, tm.mean_ms)));
         }
     }
 
-    report.insert("bench".into(), Json::Str("perf_adapt".into()));
-    report.insert("quick".into(), Json::Bool(quick));
-    let out = std::env::var("AE_LLM_BENCH_OUT").unwrap_or_else(|_| ".".into());
-    let path = std::path::Path::new(&out).join("BENCH_adapt.json");
-    match std::fs::write(&path, Json::Obj(report).dump()) {
-        Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
-    }
+    bench::write_report("adapt", report);
 }

@@ -81,13 +81,10 @@ fn main() {
     report.insert("event vs polled speedup".into(), Json::Num(speedup));
     report.insert("slo violation rate (event)".into(),
                   Json::Num(event_rep.overall.slo_violation_rate));
+    // ae-llm.bench/v1 throughput keys (CI gate compares these; the
+    // spaced spellings above stay as legacy aliases).
+    report.insert("event_requests_per_sec".into(), Json::Num(event_rps));
+    report.insert("polled_requests_per_sec".into(), Json::Num(polled_rps));
 
-    report.insert("bench".into(), Json::Str("perf_cluster".into()));
-    report.insert("quick".into(), Json::Bool(quick));
-    let out = std::env::var("AE_LLM_BENCH_OUT").unwrap_or_else(|_| ".".into());
-    let path = std::path::Path::new(&out).join("BENCH_cluster.json");
-    match std::fs::write(&path, Json::Obj(report).dump()) {
-        Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
-    }
+    bench::write_report("cluster", report);
 }

@@ -16,7 +16,7 @@ use std::collections::BTreeMap;
 use ae_llm::config::{enumerate, Config};
 use ae_llm::oracle::Testbed;
 use ae_llm::runtime::{self, Request, Server};
-use ae_llm::util::bench::{self, time_it, time_once};
+use ae_llm::util::bench::{self, per_sec, time_it, time_once};
 use ae_llm::util::json::Json;
 use ae_llm::util::pool::{self, Parallelism};
 use ae_llm::util::Rng;
@@ -39,14 +39,7 @@ fn main() {
         report.insert("pjrt".into(), Json::Str("skipped: no artifacts".into()));
     }
 
-    report.insert("bench".into(), Json::Str("perf_runtime".into()));
-    report.insert("quick".into(), Json::Bool(quick));
-    let out = std::env::var("AE_LLM_BENCH_OUT").unwrap_or_else(|_| ".".into());
-    let path = std::path::Path::new(&out).join("BENCH_runtime.json");
-    match std::fs::write(&path, Json::Obj(report).dump()) {
-        Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
-    }
+    bench::write_report("runtime", report);
 }
 
 /// Raw pool overhead + scaling on a synthetic CPU-bound workload.
@@ -76,6 +69,11 @@ fn pool_section(report: &mut BTreeMap<String, Json>, quick: bool) {
     report.insert("pool sequential (ms)".into(), Json::Num(seq.mean_ms));
     report.insert("pool parallel x4 (ms)".into(), Json::Num(par4.mean_ms));
     report.insert("pool speedup x4".into(), Json::Num(speedup));
+    // ae-llm.bench/v1 throughput keys (CI gate compares these).
+    report.insert("pool_sequential_items_per_sec".into(),
+                  Json::Num(per_sec(items.len() as f64, seq.mean_ms)));
+    report.insert("pool_parallel_x4_items_per_sec".into(),
+                  Json::Num(per_sec(items.len() as f64, par4.mean_ms)));
 }
 
 /// Oracle measurement fan-out: the Algorithm 1 line-5 batch.
@@ -103,6 +101,10 @@ fn oracle_section(report: &mut BTreeMap<String, Json>, quick: bool) {
                   Json::Num(par4.mean_ms));
     report.insert("measure_batch speedup x4".into(),
                   Json::Num(seq.mean_ms / par4.mean_ms.max(1e-9)));
+    report.insert("measure_batch_sequential_configs_per_sec".into(),
+                  Json::Num(per_sec(cs.len() as f64, seq.mean_ms)));
+    report.insert("measure_batch_parallel_x4_configs_per_sec".into(),
+                  Json::Num(per_sec(cs.len() as f64, par4.mean_ms)));
 }
 
 /// PJRT sections (only with built artifacts + a real xla backend).

@@ -13,13 +13,16 @@ use std::collections::BTreeMap;
 use ae_llm::config::{encode, enumerate, Config};
 use ae_llm::coordinator::{AeLlm, AeLlmParams, Scenario};
 use ae_llm::models;
-use ae_llm::oracle::Testbed;
+use ae_llm::oracle::{Objectives, Testbed};
+use ae_llm::search::archive::ReferenceArchive;
 use ae_llm::search::dominance;
 use ae_llm::search::nsga2::{self, Nsga2Params, Toggles};
-use ae_llm::search::StrategyKind;
-use ae_llm::surrogate::{collect_samples, GbtParams, SurrogateSet};
+use ae_llm::search::{ParetoArchive, StrategyKind};
+use ae_llm::surrogate::reference::ref_gbt_fit;
+use ae_llm::surrogate::{collect_samples, Gbt, GbtParams, Matrix,
+                        SurrogateSet};
 use ae_llm::tasks;
-use ae_llm::util::bench::{self, time_it, time_once};
+use ae_llm::util::bench::{self, per_sec, time_it, time_once};
 use ae_llm::util::json::Json;
 use ae_llm::util::pool::Parallelism;
 use ae_llm::util::Rng;
@@ -49,6 +52,8 @@ fn main() {
         i += 1;
     });
     record(&mut report, &tm);
+    report.insert("oracle_eval_per_sec".into(),
+                  Json::Num(per_sec(1.0, tm.mean_ms)));
 
     // -- encoding ---------------------------------------------------------
     let mut i = 0;
@@ -58,6 +63,8 @@ fn main() {
         i += 1;
     });
     record(&mut report, &tm);
+    report.insert("encode_per_sec".into(),
+                  Json::Num(per_sec(1.0, tm.mean_ms)));
 
     // -- surrogate fit + predict -------------------------------------------
     let samples = collect_samples(&tb, &m, &t, 300, &mut rng);
@@ -84,6 +91,119 @@ fn main() {
         i += 1;
     });
     record(&mut report, &tm);
+    report.insert("surrogate_predict_per_sec".into(),
+                  Json::Num(per_sec(1.0, tm.mean_ms)));
+
+    // -- indexed archive vs naive reference ---------------------------------
+    // Before/after microbench of the §15 archive rewrite: the same
+    // insertion stream through the indexed `ParetoArchive` and the
+    // retained `ReferenceArchive` (the pre-rewrite linear-scan code).
+    // Both must accept the exact same entries — the bench doubles as a
+    // live equivalence check.
+    let mut rng3 = Rng::new(5);
+    let stream: Vec<(Config, Objectives)> = (0..if quick { 500 } else
+                                                { 3000 })
+        .map(|_| {
+            let c = enumerate::sample(&mut rng3);
+            let o = tb.true_objectives(&c, &m, &t);
+            (c, o)
+        })
+        .collect();
+    let n_stream = stream.len();
+    let cap = 256;
+    let tm_new = time_it(&format!("archive insert x{n_stream} (indexed)"),
+                         2, 20, || {
+        let mut a = ParetoArchive::new(cap);
+        for (c, o) in &stream {
+            a.insert(*c, *o);
+        }
+        std::hint::black_box(a.len());
+    });
+    let tm_ref = time_it(&format!("archive insert x{n_stream} (reference)"),
+                         2, 20, || {
+        let mut a = ReferenceArchive::new(cap);
+        for (c, o) in &stream {
+            a.insert(*c, *o);
+        }
+        std::hint::black_box(a.len());
+    });
+    {
+        let mut a = ParetoArchive::new(cap);
+        let mut b = ReferenceArchive::new(cap);
+        for (c, o) in &stream {
+            a.insert(*c, *o);
+            b.insert(*c, *o);
+        }
+        assert!(
+            a.entries().iter().map(|e| e.config).eq(
+                b.entries().iter().map(|e| e.config)),
+            "indexed archive diverged from the reference implementation");
+    }
+    let archive_speedup = tm_ref.mean_ms / tm_new.mean_ms.max(1e-9);
+    println!("  archive insertion speedup vs reference: \
+              {archive_speedup:.2}x");
+    report.insert("archive_insert_per_sec".into(),
+                  Json::Num(per_sec(n_stream as f64, tm_new.mean_ms)));
+    report.insert("archive_insert_ref_per_sec".into(),
+                  Json::Num(per_sec(n_stream as f64, tm_ref.mean_ms)));
+    report.insert("archive insert speedup".into(),
+                  Json::Num(archive_speedup));
+
+    // -- flat-matrix GBT vs reference ---------------------------------------
+    // Before/after microbench of the §15 surrogate-kernel rewrite: same
+    // rows, targets, params and RNG seed through the flat row-major
+    // kernels and the retained row-of-Vec reference.  Predictions are
+    // asserted bitwise equal.
+    let mut rng4 = Rng::new(6);
+    let n_rows = if quick { 400 } else { 4000 };
+    let rows: Vec<Vec<f64>> = (0..n_rows)
+        .map(|_| (0..8).map(|_| rng4.f64()).collect())
+        .collect();
+    let targets: Vec<f64> = rows
+        .iter()
+        .map(|r| r.iter().sum::<f64>() + 0.1 * rng4.f64())
+        .collect();
+    let mat = Matrix::from_rows(&rows);
+    let gp = GbtParams { parallelism: Parallelism::Sequential,
+                         ..GbtParams::fast() };
+    let tm_flat = time_it("gbt fit (flat kernels)", 1, 10, || {
+        std::hint::black_box(Gbt::fit_matrix(&mat, &targets, &gp,
+                                             &mut Rng::new(8)));
+    });
+    let tm_refg = time_it("gbt fit (reference)", 1, 10, || {
+        std::hint::black_box(ref_gbt_fit(&rows, &targets, &gp,
+                                         &mut Rng::new(8)));
+    });
+    let gbt_fit_speedup = tm_refg.mean_ms / tm_flat.mean_ms.max(1e-9);
+    println!("  gbt fit speedup vs reference: {gbt_fit_speedup:.2}x");
+    report.insert("gbt_fit_rows_per_sec".into(),
+                  Json::Num(per_sec(n_rows as f64, tm_flat.mean_ms)));
+    report.insert("gbt_fit_ref_rows_per_sec".into(),
+                  Json::Num(per_sec(n_rows as f64, tm_refg.mean_ms)));
+    report.insert("gbt fit speedup".into(), Json::Num(gbt_fit_speedup));
+
+    let gbt = Gbt::fit_matrix(&mat, &targets, &gp, &mut Rng::new(8));
+    let refg = ref_gbt_fit(&rows, &targets, &gp, &mut Rng::new(8));
+    for r in rows.iter().take(64) {
+        assert_eq!(gbt.predict(r).to_bits(), refg.predict(r).to_bits(),
+                   "flat GBT prediction diverged from reference");
+    }
+    let mut i = 0;
+    let tm_p = time_it("gbt predict (flat)", 200, 20000, || {
+        std::hint::black_box(gbt.predict(&rows[i % n_rows]));
+        i += 1;
+    });
+    let mut i = 0;
+    let tm_pr = time_it("gbt predict (reference)", 200, 20000, || {
+        std::hint::black_box(refg.predict(&rows[i % n_rows]));
+        i += 1;
+    });
+    report.insert("gbt_predict_per_sec".into(),
+                  Json::Num(per_sec(1.0, tm_p.mean_ms)));
+    report.insert("gbt_predict_ref_per_sec".into(),
+                  Json::Num(per_sec(1.0, tm_pr.mean_ms)));
+    report.insert("gbt predict speedup".into(),
+                  Json::Num(tm_pr.mean_ms / tm_p.mean_ms.max(1e-9)));
 
     // -- dominance machinery ------------------------------------------------
     let mut rng2 = Rng::new(3);
@@ -181,16 +301,5 @@ fn main() {
                       Json::Num(out.testbed_evals as f64));
     }
 
-    write_report(report, quick);
-}
-
-fn write_report(mut report: BTreeMap<String, Json>, quick: bool) {
-    report.insert("bench".into(), Json::Str("perf_search".into()));
-    report.insert("quick".into(), Json::Bool(quick));
-    let dir = std::env::var("AE_LLM_BENCH_OUT").unwrap_or_else(|_| ".".into());
-    let path = std::path::Path::new(&dir).join("BENCH_search.json");
-    match std::fs::write(&path, Json::Obj(report).dump()) {
-        Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
-    }
+    bench::write_report("search", report);
 }

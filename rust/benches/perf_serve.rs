@@ -10,7 +10,7 @@ use std::collections::BTreeMap;
 use ae_llm::coordinator::AeLlm;
 use ae_llm::runtime::workload::default_rate_rps;
 use ae_llm::runtime::{Workload, WorkloadKind};
-use ae_llm::util::bench::{self, time_it};
+use ae_llm::util::bench::{self, per_sec, time_it};
 use ae_llm::util::json::Json;
 use ae_llm::util::pool::Parallelism;
 
@@ -51,6 +51,9 @@ fn main() {
                       Json::Num(sim_rps));
         report.insert(format!("serve {} virtual rps", kind.name()),
                       Json::Num(last_rps));
+        // ae-llm.bench/v1 throughput key (CI gate compares these).
+        report.insert(format!("serve_{}_requests_per_sec", kind.name()),
+                      Json::Num(sim_rps));
     }
 
     // Parallelism of batch execution (wall time only; results are
@@ -69,13 +72,10 @@ fn main() {
     report.insert("serve parallel x4 (ms)".into(), Json::Num(par.mean_ms));
     report.insert("serve speedup x4".into(),
                   Json::Num(seq.mean_ms / par.mean_ms.max(1e-9)));
+    report.insert("serve_sequential_requests_per_sec".into(),
+                  Json::Num(per_sec(n as f64, seq.mean_ms)));
+    report.insert("serve_parallel_x4_requests_per_sec".into(),
+                  Json::Num(per_sec(n as f64, par.mean_ms)));
 
-    report.insert("bench".into(), Json::Str("perf_serve".into()));
-    report.insert("quick".into(), Json::Bool(quick));
-    let out = std::env::var("AE_LLM_BENCH_OUT").unwrap_or_else(|_| ".".into());
-    let path = std::path::Path::new(&out).join("BENCH_serve.json");
-    match std::fs::write(&path, Json::Obj(report).dump()) {
-        Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
-    }
+    bench::write_report("serve", report);
 }

@@ -82,13 +82,11 @@ fn main() {
     report.insert("get wall ms".into(), Json::Num(get_ms));
     report.insert("puts per wall s".into(), Json::Num(puts_per_s));
     report.insert("gets per wall s".into(), Json::Num(gets_per_s));
+    // ae-llm.bench/v1 throughput keys (the CI gate compares these;
+    // the spaced spellings above stay as legacy aliases).
+    report.insert("sha256_mb_per_sec".into(), Json::Num(mb_per_s));
+    report.insert("blob_puts_per_sec".into(), Json::Num(puts_per_s));
+    report.insert("blob_gets_per_sec".into(), Json::Num(gets_per_s));
 
-    report.insert("bench".into(), Json::Str("perf_store".into()));
-    report.insert("quick".into(), Json::Bool(quick));
-    let out = std::env::var("AE_LLM_BENCH_OUT").unwrap_or_else(|_| ".".into());
-    let path = std::path::Path::new(&out).join("BENCH_store.json");
-    match std::fs::write(&path, Json::Obj(report).dump()) {
-        Ok(()) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write {}: {e}", path.display()),
-    }
+    bench::write_report("store", report);
 }

@@ -71,6 +71,12 @@ impl<T> Batcher<T> {
         self.pending.push_back((item, arrival));
     }
 
+    /// Capacity hint: make room for `n` more pending items up front
+    /// (workload sizes are known at the fleet call sites).
+    pub fn reserve(&mut self, n: usize) {
+        self.pending.reserve(n);
+    }
+
     /// Put items back at the *front* of the queue in the given order
     /// (error-path requeue; arrivals are preserved).
     pub fn requeue_front(&mut self, items: Vec<(T, f64)>) {

@@ -103,6 +103,13 @@ impl<E> EventQueue<E> {
         EventQueue { heap: BinaryHeap::new(), next_seq: 0 }
     }
 
+    /// A queue whose backing heap is pre-sized for `cap` concurrently
+    /// scheduled events (capacity hint only; the queue still grows
+    /// past it if needed).
+    pub fn with_capacity(cap: usize) -> EventQueue<E> {
+        EventQueue { heap: BinaryHeap::with_capacity(cap), next_seq: 0 }
+    }
+
     /// Schedule `event` at `time_ms`; returns the sequence number that
     /// breaks ties against other events at the same time (monotonically
     /// increasing, so later pushes lose ties to earlier ones).

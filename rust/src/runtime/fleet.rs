@@ -590,6 +590,15 @@ impl Deployment {
         let mut servers: Vec<_> = (0..self.slots.len())
             .map(|i| self.make_server(i, seed, par))
             .collect();
+        // Pre-count per-slot routing so every server sizes its queues
+        // and logs once, before the first submit.
+        let mut counts = vec![0usize; servers.len()];
+        for r in requests {
+            counts[self.route_index(r.slo)] += 1;
+        }
+        for (s, &n) in servers.iter_mut().zip(&counts) {
+            s.reserve_requests(n);
+        }
         for r in requests {
             servers[self.route_index(r.slo)].submit(r.clone());
         }
@@ -745,6 +754,11 @@ pub struct EpochFleet {
     exec_mark: Vec<usize>,
     arr_mark: Vec<usize>,
     energy_mark: Vec<f64>,
+    // Reused per-epoch delta scratch (cleared each close, never
+    // reallocated — DESIGN.md §15).
+    epoch_arrivals: Vec<Arrival>,
+    epoch_completions: Vec<Completion>,
+    epoch_exec: Vec<f64>,
     // Whole-run accumulation (survives redeploys).
     all_completions: Vec<Completion>,
     all_exec: Vec<f64>,
@@ -773,6 +787,9 @@ impl EpochFleet {
             exec_mark: vec![0; n],
             arr_mark: vec![0; n],
             energy_mark: vec![0.0; n],
+            epoch_arrivals: Vec::new(),
+            epoch_completions: Vec::new(),
+            epoch_exec: Vec::new(),
             all_completions: Vec::new(),
             all_exec: Vec::new(),
             total_energy_j: 0.0,
@@ -816,6 +833,15 @@ impl EpochFleet {
     /// [`close_epoch`](Self::close_epoch).
     pub fn serve_epoch(&mut self, epoch: usize, requests: &[Request])
                        -> EpochOutcome {
+        // Pre-count routing so each server reserves its queue and log
+        // capacity once for the whole epoch.
+        let mut counts = vec![0usize; self.servers.len()];
+        for r in requests {
+            counts[self.deployment.route_index(r.slo)] += 1;
+        }
+        for (s, &n) in self.servers.iter_mut().zip(&counts) {
+            s.reserve_requests(n);
+        }
         for r in requests {
             self.submit(r.clone());
         }
@@ -848,10 +874,17 @@ impl EpochFleet {
                 .expect("simulated backend is infallible");
         }
 
-        // Collect this epoch's deltas, per server in slot order.
-        let mut arrivals: Vec<Arrival> = Vec::new();
-        let mut completions: Vec<Completion> = Vec::new();
-        let mut exec: Vec<f64> = Vec::new();
+        // Collect this epoch's deltas, per server in slot order, into
+        // the persistent scratch buffers (cleared, not reallocated —
+        // the per-epoch Vec churn this replaces showed up in
+        // BENCH_adapt).  `mem::take` detaches them so the server
+        // borrows below don't conflict; they're restored at the end.
+        let mut arrivals = std::mem::take(&mut self.epoch_arrivals);
+        let mut completions = std::mem::take(&mut self.epoch_completions);
+        let mut exec = std::mem::take(&mut self.epoch_exec);
+        arrivals.clear();
+        completions.clear();
+        exec.clear();
         let mut energy = 0.0;
         let mut tokens = 0usize;
         for (i, s) in self.servers.iter().enumerate() {
@@ -896,10 +929,14 @@ impl EpochFleet {
             &completions, exec.len(), &exec, energy, span, tokens);
         let telemetry = EpochTelemetry::from_epoch(
             epoch, &arrivals, &completions, energy);
-        self.all_completions.extend(completions);
-        self.all_exec.extend(exec);
+        self.all_completions.extend_from_slice(&completions);
+        self.all_exec.extend_from_slice(&exec);
         self.total_energy_j += energy;
         self.total_tokens += tokens;
+        // Hand the scratch buffers back for the next epoch.
+        self.epoch_arrivals = arrivals;
+        self.epoch_completions = completions;
+        self.epoch_exec = exec;
         EpochOutcome { report, telemetry }
     }
 

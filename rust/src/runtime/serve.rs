@@ -257,6 +257,9 @@ pub struct Server<B: ExecBackend, C: Clock> {
     energy_j: f64,
     /// Earliest-free time per serving lane (simulated device replicas).
     lane_free: Vec<f64>,
+    /// Reused flattened-token buffer for the inline batch path
+    /// (cleared per batch, never reallocated — DESIGN.md §15).
+    flat_scratch: Vec<i32>,
     first_arrival_ms: Option<f64>,
     last_done_ms: f64,
     /// Worker count for executing independent batches concurrently in
@@ -308,6 +311,7 @@ impl<B: ExecBackend, C: Clock> Server<B, C> {
             batch_exec_ms: Vec::new(),
             energy_j: 0.0,
             lane_free: vec![0.0],
+            flat_scratch: Vec::new(),
             first_arrival_ms: None,
             last_done_ms: 0.0,
             parallelism: Parallelism::Auto,
@@ -349,6 +353,18 @@ impl<B: ExecBackend, C: Clock> Server<B, C> {
 
     pub fn seq_len(&self) -> usize {
         self.shape.seq
+    }
+
+    /// Capacity hint for an incoming workload of `n` requests: sizes
+    /// the arrival/completion logs, the per-batch accounting and the
+    /// batcher queue up front so the serve loop never regrows them
+    /// (call-site counts are known before submission — see
+    /// `Deployment::serve_with`).
+    pub fn reserve_requests(&mut self, n: usize) {
+        self.arrivals.reserve(n);
+        self.completions.reserve(n);
+        self.batch_exec_ms.reserve(n / self.shape.batch.max(1) + 1);
+        self.batcher.reserve(n);
     }
 
     /// Enqueue a request: pads/truncates the prompt, clamps token ids,
@@ -401,17 +417,23 @@ impl<B: ExecBackend, C: Clock> Server<B, C> {
         if pending.is_empty() {
             return Ok(());
         }
-        let mut queue: EventQueue<Event> = EventQueue::new();
-        let mut waiting: Vec<Option<(Item, f64)>> = Vec::new();
+        // Capacity hints sized from the workload: the heap peaks near
+        // one Arrival per pending item, and the side tables hold one
+        // slot per formed batch.
+        let n_batches = pending.len() / self.shape.batch.max(1) + 1;
+        let mut queue: EventQueue<Event> =
+            EventQueue::with_capacity(pending.len() + 2);
+        let mut waiting: Vec<Option<(Item, f64)>> =
+            Vec::with_capacity(pending.len());
         for (item, arrival) in pending {
             queue.push(arrival, Event::Arrival { index: waiting.len() });
             waiting.push(Some((item, arrival)));
         }
         // Side table of closed-but-not-yet-executed batches, indexed by
         // the `BatchClose` payload.
-        let mut closed: Vec<Option<Batch<Item>>> = Vec::new();
+        let mut closed: Vec<Option<Batch<Item>>> = Vec::with_capacity(n_batches);
         // Completion times, indexed by the `BatchComplete` payload.
-        let mut done_at: Vec<f64> = Vec::new();
+        let mut done_at: Vec<f64> = Vec::with_capacity(n_batches);
         while let Some((now, _seq, ev)) = queue.pop() {
             match ev {
                 Event::Arrival { index } => {
@@ -551,12 +573,16 @@ impl<B: ExecBackend, C: Clock> Server<B, C> {
     fn run_batch(&mut self, b: Batch<Item>)
                  -> Result<f64, (anyhow::Error, Batch<Item>)> {
         let BatchShape { batch, seq, .. } = self.shape;
-        let mut flat: Vec<i32> = Vec::with_capacity(batch * seq);
+        // Scratch reuse: the flattened-token buffer persists across
+        // batches (clear + refill, no per-batch allocation).
+        self.flat_scratch.clear();
+        self.flat_scratch.reserve(batch * seq);
         for (item, _) in &b.items {
-            flat.extend_from_slice(&item.tokens);
+            self.flat_scratch.extend_from_slice(&item.tokens);
         }
-        flat.resize(batch * seq, 0); // padding rows
-        let res = match self.backend.execute_batch(&self.variant, &flat,
+        self.flat_scratch.resize(batch * seq, 0); // padding rows
+        let res = match self.backend.execute_batch(&self.variant,
+                                                   &self.flat_scratch,
                                                    b.items.len()) {
             Ok(ok) => ok,
             Err(e) => return Err((e, b)),
@@ -581,10 +607,12 @@ impl<B: ExecBackend, C: Clock> Server<B, C> {
             })
             .collect();
         let backend = &self.backend;
-        let variant = self.variant.clone();
+        // Borrow, don't clone: the pool's scoped threads end before the
+        // mutable accounting below, so a shared reference suffices.
+        let variant = &self.variant;
         let results: Vec<anyhow::Result<BatchResult>> =
             pool::parallel_map(self.parallelism, &jobs, |(flat, rows)| {
-                backend.execute_batch(&variant, flat, *rows)
+                backend.execute_batch(variant, flat, *rows)
             });
 
         let mut batches_iter = batches.into_iter();

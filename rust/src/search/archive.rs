@@ -1,10 +1,31 @@
 //! Pareto archive: the non-dominated set maintained across generations
 //! and refinement iterations (§3.3.2 "maintaining a Pareto archive of
 //! non-dominated solutions").
+//!
+//! Two implementations live here (DESIGN.md §15 "Hot-path inventory"):
+//!
+//! * [`ParetoArchive`] — the production archive.  It keeps two caches
+//!   alongside the entry list: a persistent `Config -> position` index
+//!   (duplicate detection in O(log n) instead of a linear scan per
+//!   candidate) and the min-convention objective matrix
+//!   (`Objectives::as_min_vec` computed once per entry, not once per
+//!   dominance comparison or eviction round).  `insert_batch`
+//!   additionally sorts the cached matrix by first objective once per
+//!   batch so the parallel pre-filter scans only the prefix that could
+//!   possibly dominate each candidate.
+//! * [`ReferenceArchive`] — the pre-index implementation, retained
+//!   verbatim as the differential-testing oracle and the "before" row
+//!   of `benches/perf_search.rs` (same idiom as
+//!   `Server::drain_polled`).  The `indexed_archive_matches_reference*`
+//!   property tests hold the two against each other — identical
+//!   acceptance booleans, entry order and eviction victims — across
+//!   dup-heavy and tight-capacity streams at every parallelism level.
+
+use std::collections::BTreeMap;
 
 use crate::config::Config;
 use crate::oracle::Objectives;
-use crate::search::dominance;
+use crate::search::dominance::{self, MinVec};
 use crate::util::json::Json;
 use crate::util::pool::{self, Parallelism};
 
@@ -19,42 +40,104 @@ pub struct Entry {
     pub objectives: Objectives,
 }
 
-/// Bounded non-dominated archive.
+/// Bounded non-dominated archive (indexed; see module docs).
+///
+/// Invariants (checked by the differential tests):
+/// * `min_vecs[i] == entries[i].objectives.as_min_vec()` for every i;
+/// * `index[c] == i` iff `entries[i].config == c`, for every entry.
 #[derive(Clone, Debug, Default)]
 pub struct ParetoArchive {
     entries: Vec<Entry>,
     capacity: usize,
+    /// Cached min-convention objective vectors, parallel to `entries`.
+    min_vecs: Vec<MinVec>,
+    /// Persistent duplicate-config index: config -> position.
+    index: BTreeMap<Config, usize>,
+}
+
+/// Sort key for the first-objective prefix pruning: NaN maps to -inf so
+/// a NaN-coordinate entry is always inside the scanned prefix (the
+/// prefix must be a *superset* of possible dominators; the exact
+/// dominance test runs on everything it admits).
+fn first_coord_key(x: f64) -> f64 {
+    if x.is_nan() { f64::NEG_INFINITY } else { x }
 }
 
 impl ParetoArchive {
     pub fn new(capacity: usize) -> Self {
-        ParetoArchive { entries: Vec::new(), capacity }
+        ParetoArchive {
+            entries: Vec::new(),
+            capacity,
+            min_vecs: Vec::new(),
+            index: BTreeMap::new(),
+        }
+    }
+
+    /// Rebuild the caches from an entry list (deserialization path).
+    fn from_parts(entries: Vec<Entry>, capacity: usize) -> ParetoArchive {
+        let min_vecs =
+            entries.iter().map(|e| e.objectives.as_min_vec()).collect();
+        let index = entries
+            .iter()
+            .enumerate()
+            .map(|(i, e)| (e.config, i))
+            .collect();
+        ParetoArchive { entries, capacity, min_vecs, index }
+    }
+
+    /// Drop every entry whose `keep` flag is false, preserving order,
+    /// fixing both caches in the same single pass (replaces the old
+    /// `Vec::retain` + full re-scan).
+    fn compact(&mut self, keep: &[bool]) {
+        debug_assert_eq!(keep.len(), self.entries.len());
+        let mut w = 0;
+        for r in 0..keep.len() {
+            if keep[r] {
+                if w != r {
+                    self.entries.swap(w, r);
+                    self.min_vecs.swap(w, r);
+                }
+                *self.index.get_mut(&self.entries[w].config).unwrap() = w;
+                w += 1;
+            } else {
+                self.index.remove(&self.entries[r].config);
+            }
+        }
+        self.entries.truncate(w);
+        self.min_vecs.truncate(w);
     }
 
     /// Insert; returns true if the candidate made it into the archive.
     /// Dominated incumbents are evicted; duplicates (same config) are
     /// replaced by fresher objective values.
     pub fn insert(&mut self, config: Config, objectives: Objectives) -> bool {
-        // Replace stale duplicate if present.
-        if let Some(pos) =
-            self.entries.iter().position(|e| e.config == config)
-        {
+        // Replace stale duplicate if present (O(log n) via the index;
+        // previously a linear scan per candidate).
+        if let Some(&pos) = self.index.get(&config) {
             self.entries[pos].objectives = objectives;
+            self.min_vecs[pos] = objectives.as_min_vec();
             self.prune_dominated();
-            return self.entries.iter().any(|e| e.config == config);
+            return self.index.contains_key(&config);
         }
-        // Reject if dominated by anything in the archive.
-        if self
-            .entries
-            .iter()
-            .any(|e| e.objectives.dominates(&objectives))
-        {
+        let cand = objectives.as_min_vec();
+        // Reject if dominated by anything in the archive (cached
+        // min-vec matrix; `dominance::dominates` on min-vecs is exactly
+        // `Objectives::dominates`, NaN cases included).
+        if self.min_vecs.iter().any(|mv| dominance::dominates(mv, &cand)) {
             return false;
         }
         // Evict whatever the candidate dominates.
-        self.entries
-            .retain(|e| !objectives.dominates(&e.objectives));
+        if self.min_vecs.iter().any(|mv| dominance::dominates(&cand, mv)) {
+            let keep: Vec<bool> = self
+                .min_vecs
+                .iter()
+                .map(|mv| !dominance::dominates(&cand, mv))
+                .collect();
+            self.compact(&keep);
+        }
+        self.index.insert(config, self.entries.len());
         self.entries.push(Entry { config, objectives });
+        self.min_vecs.push(cand);
         if self.entries.len() > self.capacity {
             self.truncate_by_crowding();
         }
@@ -88,20 +171,26 @@ impl ParetoArchive {
     ///    by a point that dominates it; dominance is transitive, so a
     ///    candidate dominated by the snapshot is still dominated by
     ///    something at its own turn.
+    ///
+    /// The snapshot scan is pruned by first objective: the cached
+    /// min-vec matrix is sorted by its first coordinate once per batch,
+    /// and each candidate only scans the prefix with first coordinate
+    /// `<=` its own — a dominator must be `<=` in *every* coordinate,
+    /// so nothing outside that prefix can dominate (NaN coordinates
+    /// sort into the prefix conservatively; see [`first_coord_key`]).
     pub fn insert_batch(&mut self, items: &[(Config, Objectives)],
                         par: Parallelism) -> Vec<bool> {
         // Below this size the pre-filter costs more than it saves.
         const MIN_PARALLEL_BATCH: usize = 32;
-        // Cheap guards first; the collision scan allocates and is only
-        // worth computing once the batch could actually take the
-        // parallel path.
+        // Cheap guards first; the collision scan is only worth
+        // computing once the batch could actually take the parallel
+        // path (archived configs come straight off the persistent
+        // index now — no per-call set rebuild).
         let has_collision = || {
-            let archived: std::collections::BTreeSet<&Config> =
-                self.entries.iter().map(|e| &e.config).collect();
             let mut seen = std::collections::BTreeSet::new();
             items
                 .iter()
-                .any(|(c, _)| archived.contains(c) || !seen.insert(c))
+                .any(|(c, _)| self.index.contains_key(c) || !seen.insert(*c))
         };
         if items.len() < MIN_PARALLEL_BATCH
             || !par.is_parallel()
@@ -113,10 +202,18 @@ impl ParetoArchive {
                 .map(|(c, o)| self.insert(*c, *o))
                 .collect();
         }
-        let snapshot: Vec<Objectives> =
-            self.entries.iter().map(|e| e.objectives).collect();
+        let mut sorted: Vec<(f64, MinVec)> =
+            Vec::with_capacity(self.min_vecs.len());
+        sorted.extend(self.min_vecs.iter().map(|mv| (first_coord_key(mv[0]),
+                                                     *mv)));
+        sorted.sort_by(|a, b| a.0.total_cmp(&b.0));
         let keep: Vec<bool> = pool::parallel_map(par, items, |(_, o)| {
-            !snapshot.iter().any(|e| e.dominates(o))
+            let cand = o.as_min_vec();
+            let hi = if cand[0].is_nan() { f64::INFINITY } else { cand[0] };
+            let prefix = sorted.partition_point(|(k, _)| *k <= hi);
+            !sorted[..prefix]
+                .iter()
+                .any(|(_, mv)| dominance::dominates(mv, &cand))
         });
         // A pre-filtered candidate is dominated by the pre-batch
         // snapshot, so the sequential loop would also have returned
@@ -129,34 +226,39 @@ impl ParetoArchive {
     }
 
     fn prune_dominated(&mut self) {
-        let objs: Vec<_> =
-            self.entries.iter().map(|e| e.objectives.as_min_vec()).collect();
-        let keep: std::collections::BTreeSet<usize> =
-            dominance::pareto_front(&objs).into_iter().collect();
-        let mut i = 0;
-        self.entries.retain(|_| {
-            let k = keep.contains(&i);
-            i += 1;
-            k
-        });
+        let keep_set: std::collections::BTreeSet<usize> =
+            dominance::pareto_front(&self.min_vecs).into_iter().collect();
+        if keep_set.len() == self.entries.len() {
+            return;
+        }
+        let keep: Vec<bool> =
+            (0..self.entries.len()).map(|i| keep_set.contains(&i)).collect();
+        self.compact(&keep);
     }
 
-    /// Drop the most crowded members until within capacity.
+    /// Drop the most crowded member when over capacity.  `insert` adds
+    /// one entry at a time, so this runs exactly one crowding pass per
+    /// overflow (the `while` guards the general case); the pass reuses
+    /// the cached min-vec matrix instead of re-collecting
+    /// `as_min_vec` per round, and fixes the config index in the same
+    /// sweep that removes the victim.
     fn truncate_by_crowding(&mut self) {
         while self.entries.len() > self.capacity {
-            let objs: Vec<_> = self
-                .entries
-                .iter()
-                .map(|e| e.objectives.as_min_vec())
-                .collect();
-            let front: Vec<usize> = (0..objs.len()).collect();
-            let dist = dominance::crowding_distance(&objs, &front);
+            let front: Vec<usize> = (0..self.min_vecs.len()).collect();
+            let dist = dominance::crowding_distance(&self.min_vecs, &front);
+            // First minimum — `Iterator::min_by` semantics, which the
+            // reference implementation relies on for victim ties.
             let (victim, _) = dist
                 .iter()
                 .enumerate()
                 .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                 .unwrap();
+            self.index.remove(&self.entries[victim].config);
             self.entries.remove(victim);
+            self.min_vecs.remove(victim);
+            for (i, e) in self.entries.iter().enumerate().skip(victim) {
+                *self.index.get_mut(&e.config).unwrap() = i;
+            }
         }
     }
 
@@ -231,7 +333,142 @@ impl ParetoArchive {
                 e.get("objectives").ok_or("entry missing objectives")?)?;
             entries.push(Entry { config, objectives });
         }
-        Ok(ParetoArchive { entries, capacity })
+        Ok(ParetoArchive::from_parts(entries, capacity))
+    }
+
+    /// Cache-consistency check used by the differential tests.
+    #[cfg(test)]
+    fn check_invariants(&self) {
+        assert_eq!(self.entries.len(), self.min_vecs.len());
+        assert_eq!(self.entries.len(), self.index.len());
+        for (i, e) in self.entries.iter().enumerate() {
+            assert_eq!(self.min_vecs[i], e.objectives.as_min_vec());
+            assert_eq!(self.index.get(&e.config), Some(&i));
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ReferenceArchive: the retained pre-index implementation
+// ---------------------------------------------------------------------------
+
+/// The pre-index archive, retained verbatim as the differential-testing
+/// oracle and the "before" row of the `perf_search` archive-insertion
+/// microbench (DESIGN.md §15).  Not for production use: every insert
+/// pays a linear duplicate scan, every batch rebuilds its config set,
+/// and every eviction round re-collects the objective matrix.
+#[derive(Clone, Debug, Default)]
+pub struct ReferenceArchive {
+    entries: Vec<Entry>,
+    capacity: usize,
+}
+
+impl ReferenceArchive {
+    pub fn new(capacity: usize) -> Self {
+        ReferenceArchive { entries: Vec::new(), capacity }
+    }
+
+    /// [`ParetoArchive::insert`], pre-index implementation.
+    pub fn insert(&mut self, config: Config, objectives: Objectives) -> bool {
+        if let Some(pos) =
+            self.entries.iter().position(|e| e.config == config)
+        {
+            self.entries[pos].objectives = objectives;
+            self.prune_dominated();
+            return self.entries.iter().any(|e| e.config == config);
+        }
+        if self
+            .entries
+            .iter()
+            .any(|e| e.objectives.dominates(&objectives))
+        {
+            return false;
+        }
+        self.entries
+            .retain(|e| !objectives.dominates(&e.objectives));
+        self.entries.push(Entry { config, objectives });
+        if self.entries.len() > self.capacity {
+            self.truncate_by_crowding();
+        }
+        true
+    }
+
+    /// [`ParetoArchive::insert_batch`], pre-index implementation
+    /// (per-call config-set rebuild, unsorted full-snapshot scan).
+    pub fn insert_batch(&mut self, items: &[(Config, Objectives)],
+                        par: Parallelism) -> Vec<bool> {
+        const MIN_PARALLEL_BATCH: usize = 32;
+        let has_collision = || {
+            let archived: std::collections::BTreeSet<&Config> =
+                self.entries.iter().map(|e| &e.config).collect();
+            let mut seen = std::collections::BTreeSet::new();
+            items
+                .iter()
+                .any(|(c, _)| archived.contains(c) || !seen.insert(c))
+        };
+        if items.len() < MIN_PARALLEL_BATCH
+            || !par.is_parallel()
+            || self.entries.len() + items.len() > self.capacity
+            || has_collision()
+        {
+            return items
+                .iter()
+                .map(|(c, o)| self.insert(*c, *o))
+                .collect();
+        }
+        let snapshot: Vec<Objectives> =
+            self.entries.iter().map(|e| e.objectives).collect();
+        let keep: Vec<bool> = pool::parallel_map(par, items, |(_, o)| {
+            !snapshot.iter().any(|e| e.dominates(o))
+        });
+        items
+            .iter()
+            .zip(&keep)
+            .map(|((c, o), &k)| k && self.insert(*c, *o))
+            .collect()
+    }
+
+    fn prune_dominated(&mut self) {
+        let objs: Vec<_> =
+            self.entries.iter().map(|e| e.objectives.as_min_vec()).collect();
+        let keep: std::collections::BTreeSet<usize> =
+            dominance::pareto_front(&objs).into_iter().collect();
+        let mut i = 0;
+        self.entries.retain(|_| {
+            let k = keep.contains(&i);
+            i += 1;
+            k
+        });
+    }
+
+    fn truncate_by_crowding(&mut self) {
+        while self.entries.len() > self.capacity {
+            let objs: Vec<_> = self
+                .entries
+                .iter()
+                .map(|e| e.objectives.as_min_vec())
+                .collect();
+            let front: Vec<usize> = (0..objs.len()).collect();
+            let dist = dominance::crowding_distance(&objs, &front);
+            let (victim, _) = dist
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            self.entries.remove(victim);
+        }
+    }
+
+    pub fn entries(&self) -> &[Entry] {
+        &self.entries
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
     }
 }
 
@@ -319,6 +556,7 @@ mod tests {
                     || x.config == y.config);
             }
         }
+        a.check_invariants();
     }
 
     #[test]
@@ -364,6 +602,76 @@ mod tests {
                 assert_eq!(key(&seq), key(&bat),
                            "diverged at capacity {capacity} dup {dup} \
                             round {round}");
+                seq.check_invariants();
+                bat.check_invariants();
+            }
+        }
+    }
+
+    /// The satellite property test: the indexed archive against the
+    /// retained reference, per-item inserts and whole batches, across
+    /// dup-heavy and tight-capacity streams at Parallelism 1/4/8 —
+    /// identical acceptance booleans, entry order (hence identical
+    /// eviction victims) and final contents, every round.
+    #[test]
+    fn indexed_archive_matches_reference_archive() {
+        let pars = [Parallelism::Sequential,
+                    Parallelism::Threads(4),
+                    Parallelism::Threads(8)];
+        let regimes = [(2048usize, false), (64, true), (12, true)];
+        for par in pars {
+            for (capacity, dup) in regimes {
+                let mut rng = crate::util::Rng::new(31);
+                let mut fast = ParetoArchive::new(capacity);
+                let mut refr = ReferenceArchive::new(capacity);
+                for round in 0..5u64 {
+                    let items: Vec<(Config, Objectives)> = (0..90u64)
+                        .map(|i| {
+                            let c = if dup {
+                                cfg(round * 3 + i % 25)
+                            } else {
+                                cfg(10_000 * round + i)
+                            };
+                            (c, Objectives {
+                                accuracy: 50.0 + 40.0 * rng.f64(),
+                                latency_ms: 5.0 + 50.0 * rng.f64(),
+                                memory_gb: 1.0 + 10.0 * rng.f64(),
+                                energy_j: 0.1 + rng.f64(),
+                            })
+                        })
+                        .collect();
+                    // Alternate between the batch API and per-item
+                    // inserts so both code paths face both archives.
+                    let (a_fast, a_ref): (Vec<bool>, Vec<bool>) =
+                        if round % 2 == 0 {
+                            (fast.insert_batch(&items, par),
+                             refr.insert_batch(&items, par))
+                        } else {
+                            (items.iter()
+                                  .map(|(c, o)| fast.insert(*c, *o))
+                                  .collect(),
+                             items.iter()
+                                  .map(|(c, o)| refr.insert(*c, *o))
+                                  .collect())
+                        };
+                    assert_eq!(a_fast, a_ref,
+                               "acceptance diverged: par {par:?} capacity \
+                                {capacity} dup {dup} round {round}");
+                    let kf: Vec<(Config, String)> = fast
+                        .entries()
+                        .iter()
+                        .map(|e| (e.config, format!("{:?}", e.objectives)))
+                        .collect();
+                    let kr: Vec<(Config, String)> = refr
+                        .entries()
+                        .iter()
+                        .map(|e| (e.config, format!("{:?}", e.objectives)))
+                        .collect();
+                    assert_eq!(kf, kr,
+                               "entries diverged: par {par:?} capacity \
+                                {capacity} dup {dup} round {round}");
+                    fast.check_invariants();
+                }
             }
         }
     }
@@ -401,6 +709,7 @@ mod tests {
             let back = ParetoArchive::from_json(&a.to_json()).unwrap();
             assert_eq!(key(&a), key(&back), "seed {seed}");
             assert_eq!(back.capacity(), capacity);
+            back.check_invariants();
             let text = a.to_json().dump();
             let reparsed = ParetoArchive::from_json(
                 &crate::util::json::Json::parse(&text).unwrap()).unwrap();

@@ -8,6 +8,7 @@
 //! for the refinement loop.
 
 use super::gbt::{Gbt, GbtParams};
+use super::matrix::Matrix;
 use crate::config::encode;
 use crate::config::Config;
 use crate::models::ModelSpec;
@@ -33,7 +34,7 @@ pub struct Ensemble {
 /// bit-identical to a sequential fit at any parallelism level.  Workers
 /// fit whole models, so nested within-fit parallelism is disabled to
 /// keep the pool from oversubscribing.
-fn fit_jobs(rows: &[Vec<f64>], targets: &[&[f64]], jobs: &[(usize, Rng)],
+fn fit_jobs(m: &Matrix, targets: &[&[f64]], jobs: &[(usize, Rng)],
             params: &GbtParams) -> Vec<Gbt> {
     let inner = GbtParams {
         parallelism: Parallelism::Sequential,
@@ -41,7 +42,7 @@ fn fit_jobs(rows: &[Vec<f64>], targets: &[&[f64]], jobs: &[(usize, Rng)],
     };
     pool::parallel_map(params.parallelism, jobs, |(target, seed)| {
         let mut child = seed.clone();
-        Gbt::fit(rows, targets[*target], &inner, &mut child)
+        Gbt::fit_matrix(m, targets[*target], &inner, &mut child)
     })
 }
 
@@ -51,7 +52,9 @@ impl Ensemble {
                rng: &mut Rng) -> Ensemble {
         let jobs: Vec<(usize, Rng)> =
             (0..ENSEMBLE_SIZE).map(|_| (0, rng.split())).collect();
-        Ensemble { members: fit_jobs(rows, &[targets], &jobs, params) }
+        // Flatten once; every member fit shares the matrix.
+        let m = Matrix::from_rows(rows);
+        Ensemble { members: fit_jobs(&m, &[targets], &jobs, params) }
     }
 
     /// Mean prediction.
@@ -116,8 +119,12 @@ impl SurrogateSet {
     pub fn fit(samples: Vec<Sample>, params: GbtParams,
                rng: &mut Rng) -> SurrogateSet {
         assert!(!samples.is_empty());
-        let rows: Vec<Vec<f64>> =
-            samples.iter().map(|s| s.features.clone()).collect();
+        // Flatten the features once (row-major Matrix); all 16 member
+        // fits below share it instead of re-chasing row pointers.
+        let mut rows = Matrix::new(samples[0].features.len());
+        for s in &samples {
+            rows.push_row(&s.features);
+        }
         // Latency/energy are trained in log space: they span orders of
         // magnitude across models and the multiplicative noise becomes
         // additive there.

@@ -8,6 +8,7 @@
 //! use fewer rounds since the target functions here are smoother than
 //! real benchmark surfaces).
 
+use super::matrix::Matrix;
 use super::tree::{Tree, TreeParams};
 use crate::util::pool::{self, Parallelism};
 use crate::util::stats;
@@ -66,12 +67,21 @@ pub struct Gbt {
 }
 
 impl Gbt {
-    /// Fit to (rows, targets).
+    /// Fit to (rows, targets) — flattens the rows into a [`Matrix`]
+    /// once and defers to [`fit_matrix`](Self::fit_matrix).
     pub fn fit(rows: &[Vec<f64>], targets: &[f64], params: &GbtParams,
                rng: &mut Rng) -> Gbt {
-        assert_eq!(rows.len(), targets.len());
         assert!(!rows.is_empty(), "empty training set");
-        let n = rows.len();
+        Gbt::fit_matrix(&Matrix::from_rows(rows), targets, params, rng)
+    }
+
+    /// Fit to a pre-flattened feature matrix (the ensemble layer
+    /// converts once and shares the matrix across every member fit).
+    pub fn fit_matrix(m: &Matrix, targets: &[f64], params: &GbtParams,
+                      rng: &mut Rng) -> Gbt {
+        assert_eq!(m.n_rows(), targets.len());
+        assert!(!m.is_empty(), "empty training set");
+        let n = m.n_rows();
         let base = stats::mean(targets);
         let mut residuals: Vec<f64> = targets.iter().map(|t| t - base).collect();
         let mut trees = Vec::new();
@@ -81,7 +91,7 @@ impl Gbt {
         for _round in 0..params.n_estimators {
             let k = ((n as f64 * params.subsample).round() as usize).clamp(1, n);
             let indices = rng.sample_indices(n, k);
-            let tree = Tree::fit(rows, &residuals, &indices, &params.tree, rng);
+            let tree = Tree::fit(m, &residuals, &indices, &params.tree, rng);
             // Residual refresh is element-wise, so it can fan out over
             // row chunks without changing a single bit of the result.
             // Only worth it on big training sets; the chunk floor keeps
@@ -93,7 +103,7 @@ impl Gbt {
                 |offset, chunk| {
                     for (j, r) in chunk.iter_mut().enumerate() {
                         *r -= params.learning_rate
-                            * tree.predict(&rows[offset + j]);
+                            * tree.predict(m.row(offset + j));
                     }
                 },
             );

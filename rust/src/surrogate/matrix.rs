@@ -1,0 +1,103 @@
+//! Flat row-major feature matrix for the surrogate stack (DESIGN.md
+//! §15).
+//!
+//! The tree and boosting fits used to take `&[Vec<f64>]` — one heap
+//! allocation per training row, so every split scan pointer-chased
+//! through scattered `Vec` headers.  [`Matrix`] stores all features
+//! contiguously (`data[row * cols + col]`), converted **once** per
+//! ensemble fit and shared by every tree; `row(i)` hands out plain
+//! slices, so predictions and split scans walk one cache-friendly
+//! buffer.
+
+/// A dense row-major `n_rows x cols` matrix of `f64` features.
+#[derive(Clone, Debug)]
+pub struct Matrix {
+    data: Vec<f64>,
+    cols: usize,
+}
+
+impl Matrix {
+    /// An empty matrix with `cols` columns.
+    pub fn new(cols: usize) -> Matrix {
+        assert!(cols > 0, "feature matrix needs at least one column");
+        Matrix { data: Vec::new(), cols }
+    }
+
+    /// Flatten a row-of-Vec feature set (all rows must share a width).
+    pub fn from_rows(rows: &[Vec<f64>]) -> Matrix {
+        assert!(!rows.is_empty(), "empty feature set");
+        let cols = rows[0].len();
+        let mut m = Matrix {
+            data: Vec::with_capacity(rows.len() * cols),
+            cols,
+        };
+        for r in rows {
+            m.push_row(r);
+        }
+        m
+    }
+
+    /// Append one row (must match the column count).
+    pub fn push_row(&mut self, row: &[f64]) {
+        assert_eq!(row.len(), self.cols, "row width mismatch");
+        self.data.extend_from_slice(row);
+    }
+
+    /// Row `i` as a contiguous slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Single cell (row-major).
+    #[inline]
+    pub fn get(&self, row: usize, col: usize) -> f64 {
+        self.data[row * self.cols + col]
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.data.len() / self.cols
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_rows_round_trips() {
+        let rows = vec![vec![1.0, 2.0], vec![3.0, 4.0], vec![5.0, 6.0]];
+        let m = Matrix::from_rows(&rows);
+        assert_eq!(m.n_rows(), 3);
+        assert_eq!(m.cols(), 2);
+        for (i, r) in rows.iter().enumerate() {
+            assert_eq!(m.row(i), r.as_slice());
+        }
+        assert_eq!(m.get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn push_row_extends() {
+        let mut m = Matrix::new(3);
+        assert!(m.is_empty());
+        m.push_row(&[1.0, 2.0, 3.0]);
+        m.push_row(&[4.0, 5.0, 6.0]);
+        assert_eq!(m.n_rows(), 2);
+        assert_eq!(m.row(1), &[4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut m = Matrix::new(2);
+        m.push_row(&[1.0, 2.0, 3.0]);
+    }
+}

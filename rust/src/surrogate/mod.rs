@@ -7,10 +7,13 @@
 
 pub mod ensemble;
 pub mod gbt;
+pub mod matrix;
+pub mod reference;
 pub mod transfer;
 pub mod tree;
 
 pub use ensemble::{collect_samples, Ensemble, Prediction, Sample,
                    SurrogateSet, ENSEMBLE_SIZE};
 pub use gbt::{Gbt, GbtParams};
+pub use matrix::Matrix;
 pub use tree::{Tree, TreeParams};

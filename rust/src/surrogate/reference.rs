@@ -1,0 +1,351 @@
+//! The retained pre-Matrix surrogate implementation (DESIGN.md §15).
+//!
+//! [`RefTree`] and [`ref_gbt_fit`] are the row-of-Vec, enum-node,
+//! sort-per-node implementations that `surrogate::tree` /
+//! `surrogate::gbt` replaced, kept verbatim as (a) the exact-equality
+//! oracle — the tests below require the flat-matrix fits to reproduce
+//! their predictions **bit for bit** on seeded data — and (b) the
+//! "before" rows of the `perf_search` GBT microbenches (same idiom as
+//! `Server::drain_polled` and `search::archive::ReferenceArchive`).
+//! Not for production use.
+
+use super::gbt::GbtParams;
+use super::tree::TreeParams;
+use crate::util::stats;
+use crate::util::Rng;
+
+/// The pre-Matrix regression tree (enum nodes, per-node sorting).
+#[derive(Clone, Debug)]
+pub struct RefTree {
+    nodes: Vec<RefNode>,
+}
+
+#[derive(Clone, Debug)]
+enum RefNode {
+    Leaf {
+        value: f64,
+    },
+    Split {
+        feature: usize,
+        threshold: f64,
+        left: usize,
+        right: usize,
+    },
+}
+
+impl RefTree {
+    /// The pre-Matrix `Tree::fit`: row-of-Vec features, fresh `vals`
+    /// sort per (node, feature).
+    pub fn fit(
+        rows: &[Vec<f64>],
+        targets: &[f64],
+        indices: &[usize],
+        params: &TreeParams,
+        rng: &mut Rng,
+    ) -> RefTree {
+        assert_eq!(rows.len(), targets.len());
+        assert!(!indices.is_empty(), "empty training subsample");
+        let mut tree = RefTree { nodes: Vec::new() };
+        tree.grow(rows, targets, indices.to_vec(), 0, params, rng);
+        tree
+    }
+
+    fn grow(
+        &mut self,
+        rows: &[Vec<f64>],
+        targets: &[f64],
+        indices: Vec<usize>,
+        depth: usize,
+        params: &TreeParams,
+        rng: &mut Rng,
+    ) -> usize {
+        let mean: f64 = indices.iter().map(|&i| targets[i]).sum::<f64>()
+            / indices.len() as f64;
+
+        if depth >= params.max_depth
+            || indices.len() < 2 * params.min_samples_leaf
+        {
+            self.nodes.push(RefNode::Leaf { value: mean });
+            return self.nodes.len() - 1;
+        }
+
+        match best_split(rows, targets, &indices, params, rng) {
+            None => {
+                self.nodes.push(RefNode::Leaf { value: mean });
+                self.nodes.len() - 1
+            }
+            Some((feature, threshold)) => {
+                let (li, ri): (Vec<usize>, Vec<usize>) = indices
+                    .iter()
+                    .partition(|&&i| rows[i][feature] <= threshold);
+                if li.len() < params.min_samples_leaf
+                    || ri.len() < params.min_samples_leaf
+                {
+                    self.nodes.push(RefNode::Leaf { value: mean });
+                    return self.nodes.len() - 1;
+                }
+                // reserve our slot, then grow children
+                let my = self.nodes.len();
+                self.nodes.push(RefNode::Leaf { value: mean }); // placeholder
+                let left = self.grow(rows, targets, li, depth + 1, params, rng);
+                let right = self.grow(rows, targets, ri, depth + 1, params, rng);
+                self.nodes[my] =
+                    RefNode::Split { feature, threshold, left, right };
+                my
+            }
+        }
+    }
+
+    /// Predict a single feature vector.
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        let mut idx = 0;
+        loop {
+            match &self.nodes[idx] {
+                RefNode::Leaf { value } => return *value,
+                RefNode::Split { feature, threshold, left, right } => {
+                    idx = if x[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+}
+
+/// The pre-Matrix `best_split`: allocates and sorts a fresh `vals` Vec
+/// per (node, feature).
+fn best_split(
+    rows: &[Vec<f64>],
+    targets: &[f64],
+    indices: &[usize],
+    params: &TreeParams,
+    rng: &mut Rng,
+) -> Option<(usize, f64)> {
+    let n_features = rows[0].len();
+    let n_consider =
+        ((n_features as f64 * params.colsample).ceil() as usize).clamp(1, n_features);
+    let features = rng.sample_indices(n_features, n_consider);
+
+    let total_sum: f64 = indices.iter().map(|&i| targets[i]).sum();
+    let total_sq: f64 = indices.iter().map(|&i| targets[i] * targets[i]).sum();
+    let n = indices.len() as f64;
+    let parent_score = total_sq - total_sum * total_sum / n;
+
+    let mut best: Option<(usize, f64, f64)> = None; // (feat, thr, score)
+
+    let mut vals: Vec<(f64, f64)> = Vec::with_capacity(indices.len());
+    for &feature in &features {
+        vals.clear();
+        vals.extend(indices.iter().map(|&i| (rows[i][feature], targets[i])));
+        vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        if vals[0].0 == vals[vals.len() - 1].0 {
+            continue; // constant feature
+        }
+
+        let step = (vals.len() / (params.n_bins + 1)).max(1);
+        let mut left_sum = 0.0;
+        let mut left_sq = 0.0;
+        let mut left_n = 0.0;
+        let mut next_check = step;
+        for (pos, &(v, t)) in vals.iter().enumerate() {
+            left_sum += t;
+            left_sq += t * t;
+            left_n += 1.0;
+            if pos + 1 >= vals.len() {
+                break;
+            }
+            if pos + 1 >= next_check {
+                next_check += step;
+                let nv = vals[pos + 1].0;
+                if nv == v {
+                    continue; // can't split between equal values
+                }
+                let right_n = n - left_n;
+                if left_n < params.min_samples_leaf as f64
+                    || right_n < params.min_samples_leaf as f64
+                {
+                    continue;
+                }
+                let right_sum = total_sum - left_sum;
+                let right_sq = total_sq - left_sq;
+                let score = (left_sq - left_sum * left_sum / left_n)
+                    + (right_sq - right_sum * right_sum / right_n);
+                if score < best.map_or(parent_score - 1e-12, |b| b.2) {
+                    best = Some((feature, (v + nv) / 2.0, score));
+                }
+            }
+        }
+    }
+    best.map(|(f, t, _)| (f, t))
+}
+
+/// The pre-Matrix boosted ensemble: base prediction plus shrunken tree
+/// sum, exactly as `Gbt::fit` builds it.
+#[derive(Clone, Debug)]
+pub struct RefGbt {
+    base: f64,
+    trees: Vec<RefTree>,
+    learning_rate: f64,
+}
+
+impl RefGbt {
+    pub fn predict(&self, x: &[f64]) -> f64 {
+        self.base
+            + self.learning_rate
+                * self.trees.iter().map(|t| t.predict(x)).sum::<f64>()
+    }
+
+    pub fn n_trees(&self) -> usize {
+        self.trees.len()
+    }
+}
+
+/// The pre-Matrix `Gbt::fit` boosting loop: identical RNG consumption
+/// (one `sample_indices` per round, per-node feature sampling inside
+/// the tree fit), identical residual arithmetic, identical early-stop.
+/// The residual refresh runs sequentially — it is element-wise, so the
+/// pooled refresh in the production fit is bit-identical to it.
+pub fn ref_gbt_fit(rows: &[Vec<f64>], targets: &[f64], params: &GbtParams,
+                   rng: &mut Rng) -> RefGbt {
+    assert_eq!(rows.len(), targets.len());
+    assert!(!rows.is_empty(), "empty training set");
+    let n = rows.len();
+    let base = stats::mean(targets);
+    let mut residuals: Vec<f64> = targets.iter().map(|t| t - base).collect();
+    let mut trees = Vec::new();
+    let mut last_rmse = f64::INFINITY;
+    let mut stall = 0;
+
+    for _round in 0..params.n_estimators {
+        let k = ((n as f64 * params.subsample).round() as usize).clamp(1, n);
+        let indices = rng.sample_indices(n, k);
+        let tree = RefTree::fit(rows, &residuals, &indices, &params.tree, rng);
+        for (j, r) in residuals.iter_mut().enumerate() {
+            *r -= params.learning_rate * tree.predict(&rows[j]);
+        }
+        trees.push(tree);
+
+        if params.early_stop_tol > 0.0 {
+            let rmse = (residuals.iter().map(|r| r * r).sum::<f64>()
+                / n as f64)
+                .sqrt();
+            if last_rmse - rmse < params.early_stop_tol * last_rmse.max(1e-12) {
+                stall += 1;
+                if stall >= 10 {
+                    break;
+                }
+            } else {
+                stall = 0;
+            }
+            last_rmse = rmse;
+        }
+    }
+    RefGbt { base, trees, learning_rate: params.learning_rate }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::surrogate::gbt::Gbt;
+    use crate::surrogate::matrix::Matrix;
+    use crate::surrogate::tree::Tree;
+    use crate::util::Parallelism;
+
+    /// Synthetic surface with categorical-like features, interactions,
+    /// curvature and duplicated feature values (tie-ordering stress).
+    fn synth(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        let mut rng = Rng::new(seed);
+        let mut rows = Vec::new();
+        let mut ys = Vec::new();
+        for _ in 0..n {
+            let cat = rng.below(4) as f64;
+            let a = rng.f64();
+            let b = rng.f64();
+            let dup = rng.below(8) as f64; // few distinct values: ties
+            let x = vec![cat, a, b, dup];
+            let y = 3.0 * (cat == 2.0) as u8 as f64 + 2.0 * a * b
+                + (4.0 * a).sin() - 0.5 * b + 0.25 * dup;
+            rows.push(x);
+            ys.push(y);
+        }
+        (rows, ys)
+    }
+
+    #[test]
+    fn flat_tree_predictions_exactly_equal_reference() {
+        // The satellite exact-equality test: same seed, same subsample
+        // -> the flat-matrix pre-sorted tree must produce the *same
+        // f64 bits* as the row-of-Vec sort-per-node reference, across
+        // parameter shapes that exercise depth limits, tie-heavy
+        // features and colsample randomness.
+        let (rows, ys) = synth(500, 11);
+        let m = Matrix::from_rows(&rows);
+        let idx: Vec<usize> = (0..rows.len()).collect();
+        let shapes = [
+            TreeParams::default(),
+            TreeParams { max_depth: 3, ..Default::default() },
+            TreeParams { colsample: 0.5, ..Default::default() },
+            TreeParams { n_bins: 4, min_samples_leaf: 7,
+                         ..Default::default() },
+        ];
+        for (si, params) in shapes.iter().enumerate() {
+            for seed in [0u64, 1, 9] {
+                let new = Tree::fit(&m, &ys, &idx, params,
+                                    &mut Rng::new(seed));
+                let old = RefTree::fit(&rows, &ys, &idx, params,
+                                       &mut Rng::new(seed));
+                assert_eq!(new.n_nodes(), old.n_nodes(),
+                           "shape {si} seed {seed}: node counts differ");
+                for (i, r) in rows.iter().enumerate() {
+                    let (p_new, p_old) = (new.predict(r), old.predict(r));
+                    assert!(p_new == p_old,
+                            "shape {si} seed {seed} row {i}: \
+                             {p_new:?} != {p_old:?} (bitwise)");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn flat_gbt_predictions_exactly_equal_reference() {
+        let (rows, ys) = synth(400, 12);
+        let (test_rows, _) = synth(150, 13);
+        for seed in [0u64, 7] {
+            let params = GbtParams {
+                n_estimators: 40,
+                parallelism: Parallelism::Sequential,
+                ..GbtParams::fast()
+            };
+            let new = Gbt::fit(&rows, &ys, &params, &mut Rng::new(seed));
+            let old = ref_gbt_fit(&rows, &ys, &params, &mut Rng::new(seed));
+            assert_eq!(new.n_trees(), old.n_trees(),
+                       "seed {seed}: early stop diverged");
+            for (i, r) in rows.iter().chain(test_rows.iter()).enumerate() {
+                let (p_new, p_old) = (new.predict(r), old.predict(r));
+                assert!(p_new == p_old,
+                        "seed {seed} row {i}: {p_new:?} != {p_old:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn flat_gbt_matches_reference_under_parallel_refresh() {
+        // The pooled residual refresh engages above 2 x 4096 rows; the
+        // flat fit must still match the sequential reference bitwise.
+        let (rows, ys) = synth(9000, 14);
+        let params = GbtParams {
+            n_estimators: 4,
+            parallelism: Parallelism::Threads(4),
+            ..GbtParams::fast()
+        };
+        let new = Gbt::fit(&rows, &ys, &params, &mut Rng::new(3));
+        let seq_params =
+            GbtParams { parallelism: Parallelism::Sequential, ..params };
+        let old = ref_gbt_fit(&rows, &ys, &seq_params, &mut Rng::new(3));
+        for r in rows.iter().take(100) {
+            assert_eq!(new.predict(r), old.predict(r));
+        }
+    }
+}

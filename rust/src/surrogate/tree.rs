@@ -4,7 +4,20 @@
 //! thresholds.  Candidate thresholds come from feature quantiles
 //! (histogram-style), which both bounds the split search cost and
 //! handles the one-hot/ordinal mix of the configuration encoding well.
+//!
+//! Hot-path layout (DESIGN.md §15): fits read a flat row-major
+//! [`Matrix`] instead of `&[Vec<f64>]`; each fit stable-sorts every
+//! feature column **once** at the root and filters those index
+//! permutations down the split recursion (a filtered stable permutation
+//! of a parent list *is* the stable sort of the child's subset, so
+//! every split, threshold and floating-point accumulation is
+//! bit-identical to sorting per node — `surrogate::reference` holds the
+//! old implementation against this one in exact-equality tests).  The
+//! fitted tree is a flat [`struct@Node`] array with children in adjacent
+//! slots, so traversal picks a child by arithmetic instead of matching
+//! an enum.
 
+use super::matrix::Matrix;
 use crate::util::Rng;
 
 /// A fitted regression tree (flattened node array).
@@ -13,18 +26,22 @@ pub struct Tree {
     nodes: Vec<Node>,
 }
 
-#[derive(Clone, Debug)]
-enum Node {
-    Leaf {
-        value: f64,
-    },
-    Split {
-        feature: usize,
-        threshold: f64,
-        /// children indices into `nodes`
-        left: usize,
-        right: usize,
-    },
+/// Flattened node.  Slot 0 is always the root and never a child, so
+/// `left == 0` marks a leaf (`value` holds the prediction).  Split
+/// children always occupy the adjacent pair `(left, left + 1)`, which
+/// is what lets [`Tree::predict`] index the next node arithmetically.
+#[derive(Clone, Copy, Debug)]
+struct Node {
+    feature: u32,
+    threshold: f64,
+    value: f64,
+    left: u32,
+}
+
+impl Node {
+    fn leaf(value: f64) -> Node {
+        Node { feature: 0, threshold: 0.0, value, left: 0 }
+    }
 }
 
 /// Tree-growing hyperparameters.
@@ -50,77 +67,120 @@ impl Default for TreeParams {
 }
 
 impl Tree {
-    /// Fit to (rows, targets) where `rows[i]` is a feature vector.
-    /// `indices` selects the subsample of rows used (bagging).
+    /// Fit to (features, targets) where `m.row(i)` is a feature vector.
+    /// `indices` selects the subsample of rows used (bagging); its
+    /// members must be distinct (the boosting loop's `sample_indices`
+    /// guarantees that).
     pub fn fit(
-        rows: &[Vec<f64>],
+        m: &Matrix,
         targets: &[f64],
         indices: &[usize],
         params: &TreeParams,
         rng: &mut Rng,
     ) -> Tree {
-        assert_eq!(rows.len(), targets.len());
+        assert_eq!(m.n_rows(), targets.len());
         assert!(!indices.is_empty(), "empty training subsample");
-        let mut tree = Tree { nodes: Vec::new() };
-        tree.grow(rows, targets, indices.to_vec(), 0, params, rng);
+        // One stable sort per feature column for the whole fit; split
+        // recursion filters these instead of re-sorting per node.
+        let perms: Vec<Vec<usize>> = (0..m.cols())
+            .map(|f| {
+                let mut p = indices.to_vec();
+                p.sort_by(|&a, &b| {
+                    m.get(a, f).partial_cmp(&m.get(b, f)).unwrap()
+                });
+                p
+            })
+            .collect();
+        let mut tree = Tree { nodes: vec![Node::leaf(0.0)] };
+        tree.grow(0, m, targets, indices.to_vec(), perms, 0, params, rng);
         tree
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn grow(
         &mut self,
-        rows: &[Vec<f64>],
+        into: usize,
+        m: &Matrix,
         targets: &[f64],
         indices: Vec<usize>,
+        perms: Vec<Vec<usize>>,
         depth: usize,
         params: &TreeParams,
         rng: &mut Rng,
-    ) -> usize {
-        let mean: f64 =
-            indices.iter().map(|&i| targets[i]).sum::<f64>() / indices.len() as f64;
+    ) {
+        let mean: f64 = indices.iter().map(|&i| targets[i]).sum::<f64>()
+            / indices.len() as f64;
 
         if depth >= params.max_depth
             || indices.len() < 2 * params.min_samples_leaf
         {
-            self.nodes.push(Node::Leaf { value: mean });
-            return self.nodes.len() - 1;
+            self.nodes[into] = Node::leaf(mean);
+            return;
         }
 
-        match best_split(rows, targets, &indices, params, rng) {
+        match best_split(m, targets, &indices, &perms, params, rng) {
             None => {
-                self.nodes.push(Node::Leaf { value: mean });
-                self.nodes.len() - 1
+                self.nodes[into] = Node::leaf(mean);
             }
             Some((feature, threshold)) => {
                 let (li, ri): (Vec<usize>, Vec<usize>) = indices
                     .iter()
-                    .partition(|&&i| rows[i][feature] <= threshold);
+                    .partition(|&&i| m.get(i, feature) <= threshold);
                 if li.len() < params.min_samples_leaf
                     || ri.len() < params.min_samples_leaf
                 {
-                    self.nodes.push(Node::Leaf { value: mean });
-                    return self.nodes.len() - 1;
+                    self.nodes[into] = Node::leaf(mean);
+                    return;
                 }
-                // reserve our slot, then grow children
-                let my = self.nodes.len();
-                self.nodes.push(Node::Leaf { value: mean }); // placeholder
-                let left = self.grow(rows, targets, li, depth + 1, params, rng);
-                let right = self.grow(rows, targets, ri, depth + 1, params, rng);
-                self.nodes[my] = Node::Split { feature, threshold, left, right };
-                my
+                // Split each feature permutation by the same predicate:
+                // a filtered stable permutation is exactly the stable
+                // sort of the child subset.
+                let mut lp = Vec::with_capacity(perms.len());
+                let mut rp = Vec::with_capacity(perms.len());
+                for p in &perms {
+                    let mut l = Vec::with_capacity(li.len());
+                    let mut r = Vec::with_capacity(ri.len());
+                    for &i in p {
+                        if m.get(i, feature) <= threshold {
+                            l.push(i);
+                        } else {
+                            r.push(i);
+                        }
+                    }
+                    lp.push(l);
+                    rp.push(r);
+                }
+                drop(perms);
+                // Reserve the adjacent child pair, then grow into it.
+                let base = self.nodes.len();
+                self.nodes.push(Node::leaf(0.0));
+                self.nodes.push(Node::leaf(0.0));
+                self.nodes[into] = Node {
+                    feature: feature as u32,
+                    threshold,
+                    value: mean,
+                    left: base as u32,
+                };
+                self.grow(base, m, targets, li, lp, depth + 1, params, rng);
+                self.grow(base + 1, m, targets, ri, rp, depth + 1, params,
+                          rng);
             }
         }
     }
 
     /// Predict a single feature vector.
     pub fn predict(&self, x: &[f64]) -> f64 {
-        let mut idx = 0;
+        let mut idx = 0usize;
         loop {
-            match &self.nodes[idx] {
-                Node::Leaf { value } => return *value,
-                Node::Split { feature, threshold, left, right } => {
-                    idx = if x[*feature] <= *threshold { *left } else { *right };
-                }
+            let n = self.nodes[idx];
+            if n.left == 0 {
+                return n.value;
             }
+            // Children are adjacent: left for `<= threshold`, left + 1
+            // otherwise (the negated `<=` keeps NaN routing identical
+            // to the reference implementation).
+            idx = n.left as usize
+                + !(x[n.feature as usize] <= n.threshold) as usize;
         }
     }
 
@@ -130,11 +190,12 @@ impl Tree {
 
     pub fn depth(&self) -> usize {
         fn rec(nodes: &[Node], idx: usize) -> usize {
-            match &nodes[idx] {
-                Node::Leaf { .. } => 0,
-                Node::Split { left, right, .. } => {
-                    1 + rec(nodes, *left).max(rec(nodes, *right))
-                }
+            let n = nodes[idx];
+            if n.left == 0 {
+                0
+            } else {
+                let l = n.left as usize;
+                1 + rec(nodes, l).max(rec(nodes, l + 1))
             }
         }
         rec(&self.nodes, 0)
@@ -142,14 +203,17 @@ impl Tree {
 }
 
 /// Find the (feature, threshold) with the best variance reduction.
+/// `perms[f]` is this node's index list stably sorted by feature `f`,
+/// inherited pre-sorted from the parent (see [`Tree::fit`]).
 fn best_split(
-    rows: &[Vec<f64>],
+    m: &Matrix,
     targets: &[f64],
     indices: &[usize],
+    perms: &[Vec<usize>],
     params: &TreeParams,
     rng: &mut Rng,
 ) -> Option<(usize, f64)> {
-    let n_features = rows[0].len();
+    let n_features = m.cols();
     let n_consider =
         ((n_features as f64 * params.colsample).ceil() as usize).clamp(1, n_features);
     let features = rng.sample_indices(n_features, n_consider);
@@ -161,31 +225,30 @@ fn best_split(
 
     let mut best: Option<(usize, f64, f64)> = None; // (feat, thr, score)
 
-    let mut vals: Vec<(f64, f64)> = Vec::with_capacity(indices.len());
     for &feature in &features {
-        vals.clear();
-        vals.extend(indices.iter().map(|&i| (rows[i][feature], targets[i])));
-        vals.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
-        if vals[0].0 == vals[vals.len() - 1].0 {
+        let perm = &perms[feature];
+        if m.get(perm[0], feature) == m.get(perm[perm.len() - 1], feature) {
             continue; // constant feature
         }
 
         // Candidate thresholds at quantile positions (histogram split).
-        let step = (vals.len() / (params.n_bins + 1)).max(1);
+        let step = (perm.len() / (params.n_bins + 1)).max(1);
         let mut left_sum = 0.0;
         let mut left_sq = 0.0;
         let mut left_n = 0.0;
         let mut next_check = step;
-        for (pos, &(v, t)) in vals.iter().enumerate() {
+        for (pos, &i) in perm.iter().enumerate() {
+            let t = targets[i];
             left_sum += t;
             left_sq += t * t;
             left_n += 1.0;
-            if pos + 1 >= vals.len() {
+            if pos + 1 >= perm.len() {
                 break;
             }
             if pos + 1 >= next_check {
                 next_check += step;
-                let nv = vals[pos + 1].0;
+                let v = m.get(i, feature);
+                let nv = m.get(perm[pos + 1], feature);
                 if nv == v {
                     continue; // can't split between equal values
                 }
@@ -231,8 +294,8 @@ mod tests {
         let rows: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
         let ys = vec![3.5; 20];
         let idx: Vec<usize> = (0..20).collect();
-        let t = Tree::fit(&rows, &ys, &idx, &TreeParams::default(),
-                          &mut Rng::new(0));
+        let t = Tree::fit(&Matrix::from_rows(&rows), &ys, &idx,
+                          &TreeParams::default(), &mut Rng::new(0));
         assert_eq!(t.predict(&[7.0]), 3.5);
     }
 
@@ -242,8 +305,8 @@ mod tests {
         let ys: Vec<f64> =
             (0..100).map(|i| if i < 50 { -1.0 } else { 1.0 }).collect();
         let idx: Vec<usize> = (0..100).collect();
-        let t = Tree::fit(&rows, &ys, &idx, &TreeParams::default(),
-                          &mut Rng::new(0));
+        let t = Tree::fit(&Matrix::from_rows(&rows), &ys, &idx,
+                          &TreeParams::default(), &mut Rng::new(0));
         assert_eq!(t.predict(&[10.0]), -1.0);
         assert_eq!(t.predict(&[90.0]), 1.0);
     }
@@ -253,7 +316,8 @@ mod tests {
         let (rows, ys) = xor_data();
         let idx: Vec<usize> = (0..rows.len()).collect();
         let params = TreeParams { colsample: 1.0, ..Default::default() };
-        let t = Tree::fit(&rows, &ys, &idx, &params, &mut Rng::new(0));
+        let t = Tree::fit(&Matrix::from_rows(&rows), &ys, &idx, &params,
+                          &mut Rng::new(0));
         let preds: Vec<f64> = rows.iter().map(|r| t.predict(r)).collect();
         let r2 = crate::util::stats::r_squared(&ys, &preds);
         assert!(r2 > 0.9, "r2={r2}");
@@ -264,7 +328,8 @@ mod tests {
         let (rows, ys) = xor_data();
         let idx: Vec<usize> = (0..rows.len()).collect();
         let params = TreeParams { max_depth: 3, ..Default::default() };
-        let t = Tree::fit(&rows, &ys, &idx, &params, &mut Rng::new(0));
+        let t = Tree::fit(&Matrix::from_rows(&rows), &ys, &idx, &params,
+                          &mut Rng::new(0));
         assert!(t.depth() <= 3, "depth={}", t.depth());
     }
 
@@ -273,7 +338,8 @@ mod tests {
         let (rows, ys) = xor_data();
         let idx: Vec<usize> = (0..rows.len()).collect();
         let params = TreeParams { max_depth: 0, ..Default::default() };
-        let t = Tree::fit(&rows, &ys, &idx, &params, &mut Rng::new(0));
+        let t = Tree::fit(&Matrix::from_rows(&rows), &ys, &idx, &params,
+                          &mut Rng::new(0));
         assert_eq!(t.n_nodes(), 1);
         let mean = crate::util::stats::mean(&ys);
         assert!((t.predict(&[0.3, 0.4]) - mean).abs() < 1e-12);
@@ -285,21 +351,40 @@ mod tests {
         let mut ys = vec![0.0; 10];
         ys[9] = 1000.0; // excluded outlier
         let idx: Vec<usize> = (0..9).collect();
-        let t = Tree::fit(&rows, &ys, &idx, &TreeParams::default(),
-                          &mut Rng::new(0));
+        let t = Tree::fit(&Matrix::from_rows(&rows), &ys, &idx,
+                          &TreeParams::default(), &mut Rng::new(0));
         assert_eq!(t.predict(&[9.0]), 0.0);
     }
 
     #[test]
     fn deterministic_given_seed() {
         let (rows, ys) = xor_data();
+        let m = Matrix::from_rows(&rows);
         let idx: Vec<usize> = (0..rows.len()).collect();
-        let t1 = Tree::fit(&rows, &ys, &idx, &TreeParams::default(),
+        let t1 = Tree::fit(&m, &ys, &idx, &TreeParams::default(),
                            &mut Rng::new(5));
-        let t2 = Tree::fit(&rows, &ys, &idx, &TreeParams::default(),
+        let t2 = Tree::fit(&m, &ys, &idx, &TreeParams::default(),
                            &mut Rng::new(5));
         for r in rows.iter().take(50) {
             assert_eq!(t1.predict(r), t2.predict(r));
+        }
+    }
+
+    #[test]
+    fn children_are_adjacent_slots() {
+        // The layout invariant predict() relies on: every split's right
+        // child is its left child + 1, and no child ever points at the
+        // root slot.
+        let (rows, ys) = xor_data();
+        let idx: Vec<usize> = (0..rows.len()).collect();
+        let t = Tree::fit(&Matrix::from_rows(&rows), &ys, &idx,
+                          &TreeParams::default(), &mut Rng::new(2));
+        assert!(t.n_nodes() % 2 == 1, "root + adjacent child pairs");
+        for n in &t.nodes {
+            if n.left != 0 {
+                // right child (left + 1) must be a valid slot
+                assert!((n.left as usize) + 1 < t.nodes.len());
+            }
         }
     }
 }

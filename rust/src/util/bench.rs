@@ -13,7 +13,47 @@
 //! plumbing; [`quick`] is public for benches that want to also shrink
 //! their workload shape (fewer generations, smaller populations).
 
+use std::collections::BTreeMap;
 use std::time::Instant;
+
+use super::json::Json;
+
+/// Schema tag every `benches/perf_*.rs` report carries (see
+/// docs/SCHEMAS.md): a flat JSON object with `schema`, `name`, `mode`
+/// (`"quick"` or `"full"`) and free-form numeric metric keys.  Keys
+/// ending in `_per_sec` are throughput (higher is better) — the CI
+/// bench-regression gate (`.github/scripts/bench_gate.py`) compares
+/// exactly those against the previous run's artifact and fails on a
+/// >20% drop.  Legacy keys stay alongside as aliases for longitudinal
+/// comparability.
+pub const BENCH_SCHEMA: &str = "ae-llm.bench/v1";
+
+/// Stamp the shared envelope fields onto a bench report and write it
+/// as `BENCH_<name>.json` to `$AE_LLM_BENCH_OUT` (or the current
+/// directory).  `name` is the bench's short name (`"search"`,
+/// `"serve"`, ...).  The legacy `bench`/`quick` keys are kept as
+/// aliases of `name`/`mode`.
+pub fn write_report(name: &str, mut report: BTreeMap<String, Json>) {
+    let q = quick();
+    report.insert("schema".into(), Json::Str(BENCH_SCHEMA.into()));
+    report.insert("name".into(), Json::Str(format!("perf_{name}")));
+    report.insert("mode".into(),
+                  Json::Str(if q { "quick" } else { "full" }.into()));
+    // Legacy aliases (pre-v1 reports carried only these two).
+    report.insert("bench".into(), Json::Str(format!("perf_{name}")));
+    report.insert("quick".into(), Json::Bool(q));
+    let out = std::env::var("AE_LLM_BENCH_OUT").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&out).join(format!("BENCH_{name}.json"));
+    match std::fs::write(&path, Json::Obj(report).dump()) {
+        Ok(()) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+}
+
+/// Throughput in operations per wall-clock second (guards ms == 0).
+pub fn per_sec(ops: f64, wall_ms: f64) -> f64 {
+    ops / (wall_ms / 1e3).max(1e-9)
+}
 
 /// True when the process runs in reduced-iteration smoke mode
 /// (`AE_LLM_BENCH_QUICK=1` / `true` / `yes`, or a `--quick` argument).
