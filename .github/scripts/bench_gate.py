@@ -9,7 +9,10 @@ Usage: bench_gate.py --prev DIR --curr DIR [--threshold 0.8]
   level deep).
 * Only keys ending in ``_per_sec`` are compared — those are the
   throughput metrics of the ae-llm.bench/v1 schema (higher is better);
-  wall-ms and count keys are informational.
+  wall-ms and count keys are informational.  New keys ride the glob
+  automatically: e.g. BENCH_cluster.json's ``sequential_requests_per_sec``
+  / ``parallel_requests_per_sec`` pair (the sharded event-core split)
+  is gated by naming alone, no script change needed.
 * A key regresses when ``curr < prev * threshold`` (default 0.8, i.e.
   a >20% throughput drop).  Keys present on only one side are listed
   but never fail the gate (benches gain and lose metrics across PRs).

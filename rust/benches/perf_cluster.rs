@@ -1,13 +1,19 @@
 //! Before/after microbenchmark of the discrete-event core at cluster
-//! scale (DESIGN.md §13): the same workload served through
+//! scale (DESIGN.md §13, §16): the same workload served through
 //! `Cluster::serve` (event heap) and `Cluster::serve_polled` (the
 //! pre-refactor fixed-step tick loop), reported as requests simulated
-//! per wall-clock second.  The polled loop's cost grows with virtual
-//! time swept × nodes; the event core's with events processed — the
-//! speedup is the whole point of the refactor.
+//! per wall-clock second — plus the sharded event core run both
+//! sequentially and in parallel, to measure the PR-9 node-shard
+//! speedup.  The polled loop's cost grows with virtual time swept ×
+//! nodes; the event core's with events processed; the parallel shard
+//! divides the simulate phase across worker threads with
+//! byte-identical reports (asserted below).
 //!
 //! Emits `BENCH_cluster.json` (to `$AE_LLM_BENCH_OUT` or the current
 //! directory); `AE_LLM_BENCH_QUICK=1` / `--quick` shrinks the fleet.
+//! All `*_per_sec` keys — including the new `sequential_…`/
+//! `parallel_…` pair — are throughput-gated against the previous run
+//! by `.github/scripts/bench_gate.py`.
 
 use std::collections::BTreeMap;
 
@@ -28,28 +34,43 @@ fn main() {
     let outcome = session.run_testbed_outcome();
     let deployment = session.deploy(&outcome).unwrap();
 
-    let params = ClusterParams {
-        nodes: if quick { 8 } else { 64 },
+    // Quick mode keeps 8 nodes so even a 4-thread shard still works
+    // ≥ 2 nodes per worker — the parallel path is genuinely exercised
+    // rather than degenerating to one node per thread with idle slack.
+    let nodes = if quick { 8 } else { 64 };
+    // Quick CI runners may report few cores; pin 4 threads there so
+    // the parallel measurement is stable.  Full mode sizes to the
+    // machine.
+    let par = if quick { Parallelism::Threads(4) } else { Parallelism::Auto };
+    let seq_params = ClusterParams {
+        nodes,
         tick_ms: if quick { 5.0 } else { 1.0 },
+        par: Parallelism::Sequential,
         ..ClusterParams::default()
     };
+    let par_params = ClusterParams { par, ..seq_params };
     let n = if quick { 5_000 } else { 100_000 };
-    let rate = params.nodes as f64
+    let rate = nodes as f64
         * default_rate_rps(outcome.reference.default.latency_ms);
     let requests =
         Workload::new(WorkloadKind::Steady, rate, n, 7).generate();
     println!(
-        "  {} nodes, {} requests at {:.0} req/s (tick {} ms)",
-        params.nodes, n, rate, params.tick_ms
+        "  {} nodes, {} requests at {:.0} req/s (tick {} ms, {} threads \
+         when parallel)",
+        nodes, n, rate, seq_params.tick_ms, par.threads()
     );
 
-    let cluster = Cluster::new(deployment, params, 7, Parallelism::Auto);
+    let seq_cluster = Cluster::new(deployment.clone(), seq_params, 7);
+    let par_cluster = Cluster::new(deployment, par_params, 7);
     let (event_rep, event_ms) =
-        time_once("cluster serve (event core)",
-                  || cluster.serve(&requests, "steady"));
+        time_once("cluster serve (event core, sequential)",
+                  || seq_cluster.serve(&requests, "steady"));
+    let (par_rep, par_ms) =
+        time_once("cluster serve (event core, parallel)",
+                  || par_cluster.serve(&requests, "steady"));
     let (polled_rep, polled_ms) =
         time_once("cluster serve (polled ticks)",
-                  || cluster.serve_polled(&requests, "steady"));
+                  || seq_cluster.serve_polled(&requests, "steady"));
 
     assert_eq!(event_rep.overall.completed, n,
                "event core dropped requests");
@@ -57,34 +78,62 @@ fn main() {
                "polled loop dropped requests");
     assert_eq!(event_rep.routed, polled_rep.routed,
                "drivers diverged on routing");
+    // The shard contract (DESIGN.md §16): parallelism never changes
+    // the report — not per-node stats, not a single serialized byte.
+    assert_eq!(event_rep.to_json().dump(), par_rep.to_json().dump(),
+               "parallel shard diverged from the sequential event core");
 
     let event_rps = n as f64 / (event_ms / 1e3).max(1e-9);
+    let par_rps = n as f64 / (par_ms / 1e3).max(1e-9);
     let polled_rps = n as f64 / (polled_ms / 1e3).max(1e-9);
     let speedup = event_rps / polled_rps.max(1e-9);
+    let shard_speedup = par_rps / event_rps.max(1e-9);
     println!(
-        "    event core : {event_rps:.0} requests simulated / wall s"
+        "    event core (seq): {event_rps:.0} requests simulated / wall s"
     );
     println!(
-        "    polled loop: {polled_rps:.0} requests simulated / wall s"
+        "    event core (par): {par_rps:.0} requests simulated / wall s"
     );
-    println!("    speedup    : {speedup:.1}x");
+    println!(
+        "    polled loop     : {polled_rps:.0} requests simulated / wall s"
+    );
+    println!("    event vs polled : {speedup:.1}x");
+    println!("    par vs seq      : {shard_speedup:.1}x");
 
-    report.insert("nodes".into(), Json::Num(params.nodes as f64));
+    // Full mode on a real multi-core runner must show the shard paying
+    // for itself: 64 nodes across ≥ 4 workers should go ≥ 2x faster.
+    // Quick mode and starved runners only check byte-identity above.
+    if !quick && Parallelism::Auto.threads() >= 4 {
+        assert!(shard_speedup >= 2.0,
+                "node shard too slow: {shard_speedup:.2}x < 2x \
+                 ({event_ms:.0} ms seq vs {par_ms:.0} ms par)");
+    }
+
+    report.insert("nodes".into(), Json::Num(nodes as f64));
     report.insert("requests".into(), Json::Num(n as f64));
-    report.insert("tick_ms".into(), Json::Num(params.tick_ms));
+    report.insert("tick_ms".into(), Json::Num(seq_params.tick_ms));
+    report.insert("par_threads".into(), Json::Num(par.threads() as f64));
     report.insert("event wall ms".into(), Json::Num(event_ms));
+    report.insert("parallel wall ms".into(), Json::Num(par_ms));
     report.insert("polled wall ms".into(), Json::Num(polled_ms));
     report.insert("event requests per wall s".into(),
                   Json::Num(event_rps));
     report.insert("polled requests per wall s".into(),
                   Json::Num(polled_rps));
     report.insert("event vs polled speedup".into(), Json::Num(speedup));
+    report.insert("parallel shard speedup".into(),
+                  Json::Num(shard_speedup));
     report.insert("slo violation rate (event)".into(),
                   Json::Num(event_rep.overall.slo_violation_rate));
     // ae-llm.bench/v1 throughput keys (CI gate compares these; the
-    // spaced spellings above stay as legacy aliases).
+    // spaced spellings above stay as legacy aliases).  `sequential_…`
+    // and `parallel_…` are the PR-9 shard pair; `event_…` doubles as
+    // the sequential alias the PR-8 gate already tracks.
     report.insert("event_requests_per_sec".into(), Json::Num(event_rps));
     report.insert("polled_requests_per_sec".into(), Json::Num(polled_rps));
+    report.insert("sequential_requests_per_sec".into(),
+                  Json::Num(event_rps));
+    report.insert("parallel_requests_per_sec".into(), Json::Num(par_rps));
 
     bench::write_report("cluster", report);
 }

@@ -27,7 +27,7 @@ use crate::models;
 use crate::search::strategy::StrategyKind;
 use crate::tasks;
 use crate::util::json::Json;
-use crate::util::Rng;
+use crate::util::{Parallelism, Rng};
 
 use super::algorithm1::{optimize_with_observer, AeLlmParams, Outcome};
 use super::observer::{IterationEvent, NullObserver, RunObserver};
@@ -141,6 +141,7 @@ pub struct AeLlm {
     scenario: Scenario,
     params: AeLlmParams,
     seed: u64,
+    par: Parallelism,
 }
 
 impl AeLlm {
@@ -153,7 +154,8 @@ impl AeLlm {
     /// Start from an already-built scenario (platform objects,
     /// custom testbeds, `noiseless()`, ...).
     pub fn from_scenario(scenario: Scenario) -> AeLlm {
-        AeLlm { scenario, params: AeLlmParams::default(), seed: 42 }
+        AeLlm { scenario, params: AeLlmParams::default(), seed: 42,
+                par: Parallelism::Auto }
     }
 
     pub fn task(mut self, name: &str) -> Result<AeLlm, AeLlmError> {
@@ -210,6 +212,19 @@ impl AeLlm {
     pub fn seed(mut self, seed: u64) -> AeLlm {
         self.seed = seed;
         self
+    }
+
+    /// Parallelism of everything this session fans out — today the
+    /// cluster simulate phase ([`cluster`](Self::cluster), DESIGN.md
+    /// §16).  A wall-clock knob only: every result is byte-identical
+    /// at every level.  Defaults to [`Parallelism::Auto`].
+    pub fn parallelism(mut self, par: Parallelism) -> AeLlm {
+        self.par = par;
+        self
+    }
+
+    pub fn par(&self) -> Parallelism {
+        self.par
     }
 
     pub fn scenario(&self) -> &Scenario {
@@ -390,6 +405,43 @@ impl AeLlm {
         let report = self.run_testbed();
         let deployment = self.deploy(&report.outcome)?;
         Ok((report, deployment))
+    }
+
+    /// Deploy a search outcome across an N-node simulated cluster
+    /// (see [`crate::runtime::Cluster`], DESIGN.md §16): every node
+    /// serves this session's deployment under its own derived seed,
+    /// behind the seeded least-loaded router.  The session's
+    /// [`parallelism`](Self::parallelism) and seed override the
+    /// corresponding `params` fields, so one session configures its
+    /// whole stack in one place.
+    ///
+    /// ```
+    /// use ae_llm::coordinator::AeLlm;
+    /// use ae_llm::runtime::{ClusterParams, Workload, WorkloadKind};
+    /// use ae_llm::util::Parallelism;
+    ///
+    /// # fn main() -> Result<(), ae_llm::coordinator::AeLlmError> {
+    /// let session = AeLlm::for_model("Phi-2")?
+    ///     .quick()
+    ///     .seed(7)
+    ///     .parallelism(Parallelism::Threads(2));
+    /// let outcome = session.run_testbed_outcome();
+    /// let cluster = session.cluster(
+    ///     &outcome, ClusterParams { nodes: 2, ..Default::default() })?;
+    /// let requests =
+    ///     Workload::new(WorkloadKind::Steady, 40.0, 60, 7).generate();
+    /// let report = cluster.serve(&requests, "steady");
+    /// assert_eq!(report.overall.completed, 60);
+    /// # Ok(()) }
+    /// ```
+    pub fn cluster(&self, outcome: &Outcome,
+                   params: crate::runtime::ClusterParams)
+                   -> Result<crate::runtime::Cluster, AeLlmError> {
+        let deployment = self.deploy(outcome)?;
+        Ok(crate::runtime::Cluster::new(
+            deployment,
+            crate::runtime::ClusterParams { par: self.par, ..params },
+            self.seed))
     }
 
     // -- continual adaptation (DESIGN.md §12) --------------------------

@@ -10,7 +10,8 @@
 //! ae-llm figure  --id 1|2|3|4 [--quick] [--seed N] [--out reports/]
 //! ae-llm e2e     [--repeats N] [--seed N]  # hardware-in-the-loop Algorithm 1
 //! ae-llm serve   [--model M] [--scenario steady|diurnal|bursty|heavytail]
-//!                [--strategy S] [--requests N] [--quick] [--seed N]
+//!                [--strategy S] [--requests N] [--par N|auto|seq]
+//!                [--quick] [--seed N]
 //!                [--json OUT.json]        # simulated fleet, artifact-free
 //! ae-llm serve   --variant V [--requests N] [--seed N]  # live PJRT path
 //! ae-llm adapt   [--model M] [--scenario regime_shift|ramp|...]
@@ -19,8 +20,9 @@
 //!                # continual adaptation: drift-triggered re-search
 //! ae-llm cluster [--model M] [--scenario S] [--strategy S]
 //!                [--requests N] [--nodes N] [--capacity N] [--epochs N]
-//!                [--quick] [--seed N] [--json OUT.json]
-//!                # cluster-scale serving on the event core
+//!                [--par N|auto|seq] [--quick] [--seed N] [--json OUT.json]
+//!                # cluster-scale serving on the sharded event core;
+//!                # reports are byte-identical at every --par level
 //! ae-llm store   ls|gc|verify [--store DIR]
 //!                # content-addressed artifact store: list the catalog,
 //!                # sweep unreferenced blobs, verify blob integrity
@@ -178,6 +180,29 @@ fn parse_strategy(name: &str)
     })
 }
 
+/// Resolve a `--par` value: a positive thread count, `auto` (size the
+/// pool to the machine), or `seq`/`sequential` (no pool).  The pool
+/// contract (DESIGN.md §14) makes every level byte-identical, so this
+/// only trades wall-clock time.  Shared by `serve` and `cluster`.
+fn parse_parallelism(v: &str)
+                     -> anyhow::Result<ae_llm::util::Parallelism> {
+    use ae_llm::util::Parallelism;
+    match v {
+        "auto" => Ok(Parallelism::Auto),
+        "seq" | "sequential" => Ok(Parallelism::Sequential),
+        _ => match v.parse::<usize>() {
+            Ok(0) => anyhow::bail!(
+                "--par expects a positive thread count (or auto, seq)"
+            ),
+            Ok(n) => Ok(Parallelism::Threads(n)),
+            Err(_) => anyhow::bail!(
+                "{} (or a thread count, e.g. --par 4)",
+                unknown_value_msg("parallelism", v, &["auto", "seq"])
+            ),
+        },
+    }
+}
+
 /// Plain Levenshtein distance (small inputs; O(|a|·|b|)).
 fn edit_distance(a: &str, b: &str) -> usize {
     let a: Vec<char> = a.chars().collect();
@@ -207,13 +232,13 @@ fn run(args: &[String]) -> anyhow::Result<()> {
         "figure" => (&["id", "seed", "out"], &["quick"]),
         "e2e" => (&["repeats", "seed"], &[]),
         "serve" => (&["requests", "variant", "seed", "model", "scenario",
-                      "strategy", "json"],
+                      "strategy", "par", "json"],
                     &["quick"]),
         "adapt" => (&["requests", "epochs", "seed", "model", "scenario",
                       "strategy", "json", "store"],
                     &["quick", "one-shot"]),
         "cluster" => (&["requests", "nodes", "capacity", "epochs", "seed",
-                        "model", "scenario", "strategy", "json"],
+                        "model", "scenario", "strategy", "par", "json"],
                       &["quick"]),
         "check" | "space" => (&[], &[]),
         // `store` takes a positional action (`store ls`), which the
@@ -484,11 +509,11 @@ fn cmd_serve(opts: &Opts, seed: u64) -> anyhow::Result<()> {
 fn cmd_serve_simulated(opts: &Opts, seed: u64) -> anyhow::Result<()> {
     use ae_llm::runtime::workload::default_rate_rps;
     use ae_llm::runtime::Workload;
-    use ae_llm::util::Parallelism;
 
     let model = opts.get("model").unwrap_or("LLaMA-2-7B");
     let kind = parse_scenario(opts.get("scenario").unwrap_or("steady"))?;
     let n = opts.u64_or("requests", 800)? as usize;
+    let par = parse_parallelism(opts.get("par").unwrap_or("auto"))?;
 
     let mut session = AeLlm::for_model(model)?
         .params(Budget { quick: opts.flag("quick") }.ae_params())
@@ -507,8 +532,7 @@ fn cmd_serve_simulated(opts: &Opts, seed: u64) -> anyhow::Result<()> {
     let rate = default_rate_rps(outcome.reference.default.latency_ms);
     let workload = Workload::new(kind, rate, n, seed);
     let requests = workload.generate();
-    let deploy_report = deployment.serve(&requests, kind.name(), seed,
-                                         Parallelism::Auto);
+    let deploy_report = deployment.serve(&requests, kind.name(), seed, par);
 
     if let Some(path) = opts.get("json") {
         std::fs::write(path, deploy_report.to_json().dump())?;
@@ -644,12 +668,12 @@ fn cmd_adapt(opts: &Opts, seed: u64) -> anyhow::Result<()> {
 /// deterministic `ClusterReport` (schema `ae-llm.cluster-report/v1`).
 fn cmd_cluster(opts: &Opts, seed: u64) -> anyhow::Result<()> {
     use ae_llm::runtime::workload::default_rate_rps;
-    use ae_llm::runtime::{Cluster, ClusterParams, Workload};
-    use ae_llm::util::Parallelism;
+    use ae_llm::runtime::{ClusterParams, Workload};
 
     let model = opts.get("model").unwrap_or("LLaMA-2-7B");
     let kind = parse_scenario(opts.get("scenario").unwrap_or("steady"))?;
     let n = opts.u64_or("requests", 4000)? as usize;
+    let par = parse_parallelism(opts.get("par").unwrap_or("auto"))?;
     let defaults = ClusterParams::default();
     let params = ClusterParams {
         nodes: opts.u64_or("nodes", defaults.nodes as u64)? as usize,
@@ -661,7 +685,8 @@ fn cmd_cluster(opts: &Opts, seed: u64) -> anyhow::Result<()> {
 
     let mut session = AeLlm::for_model(model)?
         .params(Budget { quick: opts.flag("quick") }.ae_params())
-        .seed(seed);
+        .seed(seed)
+        .parallelism(par);
     if let Some(s) = opts.get("strategy") {
         session = session.strategy(parse_strategy(s)?);
     }
@@ -671,13 +696,12 @@ fn cmd_cluster(opts: &Opts, seed: u64) -> anyhow::Result<()> {
         model, session.params_ref().strategy.name(), params.nodes
     );
     let outcome = session.run_testbed_outcome();
-    let deployment = session.deploy(&outcome)?;
     // Offered load scales with the fleet: rate per node x nodes.
     let rate = params.nodes as f64
         * default_rate_rps(outcome.reference.default.latency_ms);
     let requests = Workload::new(kind, rate, n, seed).generate();
-    let report = Cluster::new(deployment, params, seed, Parallelism::Auto)
-        .serve(&requests, kind.name());
+    let report =
+        session.cluster(&outcome, params)?.serve(&requests, kind.name());
 
     if let Some(path) = opts.get("json") {
         std::fs::write(path, report.to_json().dump())?;
@@ -901,7 +925,7 @@ fn print_help() {
          figure  --id 1|2|3|4 [--quick] [--seed N] [--out DIR]\n  \
          e2e     [--repeats N] [--seed N]   hardware-in-the-loop + serving\n  \
          serve   [--model M] [--scenario S] [--strategy S] [--requests N]\n  \
-         \x20       [--quick] [--seed N] [--json OUT.json]\n  \
+         \x20       [--par N|auto|seq] [--quick] [--seed N] [--json OUT.json]\n  \
          \x20       (simulated fleet; --variant V switches to live PJRT)\n  \
          adapt   [--model M] [--scenario S] [--strategy S] [--epochs N]\n  \
          \x20       [--requests N/epoch] [--one-shot] [--quick] [--seed N]\n  \
@@ -910,10 +934,11 @@ fn print_help() {
          \x20        warm re-search, fleet hot-swap; --store warm-seeds\n  \
          \x20        from the catalog and persists each epoch's front)\n  \
          cluster [--model M] [--scenario S] [--strategy S] [--requests N]\n  \
-         \x20       [--nodes N] [--capacity N] [--epochs N] [--quick]\n  \
-         \x20       [--seed N] [--json OUT.json]\n  \
-         \x20       (N fleet nodes behind a seeded least-loaded router,\n  \
-         \x20        on the discrete-event core)\n  \
+         \x20       [--nodes N] [--capacity N] [--epochs N]\n  \
+         \x20       [--par N|auto|seq] [--quick] [--seed N] [--json OUT.json]\n  \
+         \x20       (N fleet nodes behind a seeded least-loaded router, on\n  \
+         \x20        the sharded discrete-event core; --par only changes\n  \
+         \x20        wall-clock time, never the report bytes)\n  \
          store   ls|gc|verify [--store DIR]\n  \
          \x20       (content-addressed artifact store: list the catalog,\n  \
          \x20        sweep unreferenced blobs, verify blob integrity;\n  \
@@ -1110,6 +1135,39 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("did you mean bursty?"), "{err}");
+        // `--par` is recognised (typo'd key gets the suggestion)
+        let err = run(&args(&["cluster", "--pra", "4"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean --par?"), "{err}");
+    }
+
+    #[test]
+    fn par_values_parse_and_reject_with_did_you_mean() {
+        use ae_llm::util::Parallelism;
+        assert_eq!(parse_parallelism("auto").unwrap(), Parallelism::Auto);
+        assert_eq!(parse_parallelism("seq").unwrap(),
+                   Parallelism::Sequential);
+        assert_eq!(parse_parallelism("sequential").unwrap(),
+                   Parallelism::Sequential);
+        assert_eq!(parse_parallelism("4").unwrap(),
+                   Parallelism::Threads(4));
+        // zero threads is nonsense, not Sequential-by-accident
+        let err = parse_parallelism("0").unwrap_err().to_string();
+        assert!(err.contains("positive thread count"), "{err}");
+        // typo'd keyword: nearest-match suggestion + thread-count hint
+        let err = parse_parallelism("ato").unwrap_err().to_string();
+        assert!(err.contains("did you mean auto?"), "{err}");
+        assert!(err.contains("--par 4"), "{err}");
+        // the shared helper is wired into both subcommands
+        let err = run(&args(&["cluster", "--par", "sqe"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("did you mean seq?"), "{err}");
+        let err = run(&args(&["serve", "--par", "0"]))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("positive thread count"), "{err}");
     }
 
     #[test]

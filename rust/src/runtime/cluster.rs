@@ -1,5 +1,6 @@
-//! Cluster-scale serving (DESIGN.md §13): N fleet nodes behind a
-//! deterministic cross-node router, driven by the discrete-event core.
+//! Cluster-scale serving (DESIGN.md §13, §16): N fleet nodes behind a
+//! deterministic cross-node router, driven by the discrete-event core
+//! and simulated **in parallel across nodes** between epoch boundaries.
 //!
 //! One [`super::fleet::EpochFleet`] models a single machine's slot
 //! servers.  A [`Cluster`] stacks N of them — each node gets its own
@@ -22,6 +23,24 @@
 //!                  Backend        Backend        Backend
 //! ```
 //!
+//! **Sharded simulation.** Both drivers run each epoch in two phases
+//! (DESIGN.md §16).  A cheap sequential *route phase* assigns every
+//! arrival in the epoch to a node, consuming the router RNG exactly as
+//! the original interleaved loop did: a node's `pending()` moves only
+//! at `submit` and at `close_epoch`, so mid-epoch every routing input
+//! is reproducible from the epoch-start snapshot plus this epoch's own
+//! assignments — a plain counter mirror, no node state touched.  A
+//! *simulate phase* then drains each node's epoch in parallel
+//! ([`crate::util::pool::parallel_for_each_mut`]; each node is an
+//! independent `&mut` shard) and refreshes the mirror from the real
+//! `pending()` counts at the boundary.  Reports merge in node order,
+//! so output is byte-identical to the sequential loop at every
+//! [`Parallelism`] level — the golden tests sweep
+//! Sequential/Threads(4)/Threads(8) over all six workload scenarios,
+//! and the retained pre-shard loops ([`Cluster::serve_interleaved`],
+//! [`Cluster::serve_polled_interleaved`]) back a randomized
+//! differential test of per-request assignments.
+//!
 //! Two drivers serve the same workload:
 //!
 //! * [`Cluster::serve`] — the event core: arrivals and epoch
@@ -43,7 +62,7 @@
 //! byte-identical at every parallelism level.
 
 use crate::util::json::Json;
-use crate::util::pool::Parallelism;
+use crate::util::pool::{self, Parallelism};
 use crate::util::rng::Rng;
 
 use super::events::{Event, EventQueue};
@@ -71,11 +90,16 @@ pub struct ClusterParams {
     pub epochs: usize,
     /// Virtual-time step of the tick-polled reference driver, ms.
     pub tick_ms: f64,
+    /// Parallelism of the simulate phase: how many nodes drain their
+    /// epoch concurrently.  Purely a wall-clock knob — reports are
+    /// byte-identical at every level (DESIGN.md §16).
+    pub par: Parallelism,
 }
 
 impl Default for ClusterParams {
     fn default() -> ClusterParams {
-        ClusterParams { nodes: 4, capacity: 64, epochs: 4, tick_ms: 1.0 }
+        ClusterParams { nodes: 4, capacity: 64, epochs: 4, tick_ms: 1.0,
+                        par: Parallelism::Auto }
     }
 }
 
@@ -88,12 +112,11 @@ pub struct Cluster {
     deployment: Deployment,
     params: ClusterParams,
     seed: u64,
-    par: Parallelism,
 }
 
 impl Cluster {
-    pub fn new(deployment: Deployment, params: ClusterParams, seed: u64,
-               par: Parallelism) -> Cluster {
+    pub fn new(deployment: Deployment, params: ClusterParams, seed: u64)
+               -> Cluster {
         Cluster {
             deployment,
             params: ClusterParams {
@@ -105,9 +128,9 @@ impl Cluster {
                 } else {
                     1.0
                 },
+                par: params.par,
             },
             seed,
-            par,
         }
     }
 
@@ -117,8 +140,9 @@ impl Cluster {
 
     /// Serve a timestamped workload across the cluster on the event
     /// core and aggregate per-node + merged statistics (schema
-    /// `ae-llm.cluster-report/v1`).  Deterministic per seed at every
-    /// parallelism level.
+    /// `ae-llm.cluster-report/v1`).  Routing runs sequentially, node
+    /// epochs simulate in parallel per `params.par` (DESIGN.md §16);
+    /// deterministic per seed at every parallelism level.
     ///
     /// ```
     /// use ae_llm::config::enumerate::sample;
@@ -142,22 +166,35 @@ impl Cluster {
     ///         .at(i as f64 * 8.0)
     ///         .class(SloClass::Interactive))
     ///     .collect();
-    /// let cluster = Cluster::new(deployment,
-    ///                            ClusterParams { nodes: 2,
-    ///                                            ..Default::default() },
-    ///                            7, Parallelism::Sequential);
+    /// let cluster = Cluster::new(
+    ///     deployment,
+    ///     ClusterParams { nodes: 2,
+    ///                     par: Parallelism::Threads(2),
+    ///                     ..Default::default() },
+    ///     7);
     /// let report = cluster.serve(&requests, "steady");
     /// assert_eq!(report.overall.completed, 40);
     /// assert_eq!(report.routed.iter().sum::<usize>(), 40);
     /// ```
     pub fn serve(&self, requests: &[Request], scenario: &str)
                  -> ClusterReport {
+        self.serve_assignments(requests, scenario).0
+    }
+
+    /// [`serve`](Self::serve) plus the route phase's decisions:
+    /// `assignments[i]` is the node request `i` was routed to.  The
+    /// differential tests hold it against the retained
+    /// [`serve_interleaved`](Self::serve_interleaved) loop.
+    pub fn serve_assignments(&self, requests: &[Request], scenario: &str)
+                             -> (ClusterReport, Vec<usize>) {
         let mut nodes = self.make_nodes(super::serve::DrainDriver::Event);
         let mut rng = Rng::new(self.seed ^ ROUTE_SALT);
         let mut routed = vec![0usize; nodes.len()];
+        let mut assignments = vec![usize::MAX; requests.len()];
 
         let per = chunk_len(requests.len(), self.params.epochs);
-        let mut queue: EventQueue<Event> = EventQueue::new();
+        let mut queue: EventQueue<Event> =
+            EventQueue::with_capacity(requests.len() + self.params.epochs);
         let mut boundary = 0.0f64;
         for (epoch, chunk) in requests.chunks(per).enumerate() {
             let base = epoch * per;
@@ -175,11 +212,180 @@ impl Cluster {
             queue.push(boundary, Event::EpochBoundary { epoch });
         }
 
+        // Route-phase mirror of each node's `pending()`: epoch-start
+        // snapshot plus this epoch's own assignments.  Exact because
+        // `pending()` moves only at submit (+1, mirrored here) and at
+        // `close_epoch` (refreshed below) — never mid-epoch.
+        let mut pending: Vec<usize> =
+            nodes.iter().map(|n| n.pending()).collect();
+        // Per-node arrival indices awaiting the simulate phase, in heap
+        // pop order — exactly the order the interleaved loop submitted.
+        let mut buckets: Vec<Vec<usize>> = vec![Vec::new(); nodes.len()];
+
         while let Some((_, _, ev)) = queue.pop() {
             match ev {
                 Event::Arrival { index } => {
-                    let n = route(&nodes, self.params.capacity, &mut rng);
+                    let n = route(&pending, self.params.capacity, &mut rng);
+                    pending[n] += 1;
                     routed[n] += 1;
+                    assignments[index] = n;
+                    buckets[n].push(index);
+                }
+                Event::EpochBoundary { epoch } => {
+                    // Simulate phase: each node is an independent
+                    // `&mut` shard — submit its epoch's arrivals in
+                    // route order, then drain at the boundary.
+                    pool::parallel_for_each_mut(
+                        self.params.par, &mut nodes, |i, node| {
+                            for &idx in &buckets[i] {
+                                node.submit(requests[idx].clone());
+                            }
+                            node.close_epoch(epoch);
+                        });
+                    for b in &mut buckets {
+                        b.clear();
+                    }
+                    for (p, node) in pending.iter_mut().zip(&nodes) {
+                        *p = node.pending();
+                    }
+                }
+                Event::BatchClose { .. } | Event::BatchComplete { .. } => {
+                    unreachable!("batch events live inside server drains")
+                }
+            }
+        }
+        (self.build_report(scenario, nodes, routed), assignments)
+    }
+
+    /// [`serve`](Self::serve) through the pre-event-core tick loop:
+    /// virtual time advances in fixed `tick_ms` steps and every node is
+    /// polled at every tick — wall-clock cost proportional to virtual
+    /// time swept times nodes, the cost profile the event core removes.
+    /// Kept as the before-side of `benches/perf_cluster.rs` and as a
+    /// routing cross-check (both drivers make identical routing
+    /// decisions; see the module docs for why reports may differ in
+    /// mid-epoch dispatch timing).  Sharded like [`serve`](Self::serve):
+    /// each node replays its own tick sweep in parallel.
+    pub fn serve_polled(&self, requests: &[Request], scenario: &str)
+                        -> ClusterReport {
+        self.serve_polled_assignments(requests, scenario).0
+    }
+
+    /// [`serve_polled`](Self::serve_polled) plus the per-request node
+    /// assignments (see [`serve_assignments`](Self::serve_assignments)).
+    pub fn serve_polled_assignments(&self, requests: &[Request],
+                                    scenario: &str)
+                                    -> (ClusterReport, Vec<usize>) {
+        let mut nodes = self.make_nodes(super::serve::DrainDriver::Polled);
+        let mut rng = Rng::new(self.seed ^ ROUTE_SALT);
+        let mut routed = vec![0usize; nodes.len()];
+        let mut assignments = vec![usize::MAX; requests.len()];
+
+        let per = chunk_len(requests.len(), self.params.epochs);
+        let tick = self.params.tick_ms;
+        let mut t = 0.0f64;
+        let mut boundary = 0.0f64;
+        let mut pending: Vec<usize> =
+            nodes.iter().map(|n| n.pending()).collect();
+        // Per-node (submit-gate time, arrival index) pairs for one
+        // epoch, in chunk order.
+        let mut buckets: Vec<Vec<(f64, usize)>> =
+            vec![Vec::new(); nodes.len()];
+        for (epoch, chunk) in requests.chunks(per).enumerate() {
+            let base = epoch * per;
+            boundary = chunk
+                .last()
+                .map(|r| r.arrival_ms)
+                .unwrap_or(boundary)
+                .max(boundary);
+            // Route phase, in chunk order.  The interleaved loop blocks
+            // on the first not-yet-due request, so a request's submit
+            // tick is gated by the *prefix max* of arrival times (equal
+            // to its own arrival for the monotone generated workloads).
+            let mut gate = f64::NEG_INFINITY;
+            for (k, r) in chunk.iter().enumerate() {
+                gate = gate.max(r.arrival_ms);
+                let n = route(&pending, self.params.capacity, &mut rng);
+                pending[n] += 1;
+                routed[n] += 1;
+                assignments[base + k] = n;
+                buckets[n].push((gate, base + k));
+            }
+            // Simulate phase: each node replays the tick sweep over its
+            // own shard — submit what comes due, poll, step — exactly
+            // the per-node projection of the interleaved loop (other
+            // nodes' submissions and polls never touch this node).
+            let t0 = t;
+            let bdry = boundary;
+            pool::parallel_for_each_mut(
+                self.params.par, &mut nodes, |i, node| {
+                    let mine = &buckets[i];
+                    let mut tn = t0;
+                    let mut next = 0usize;
+                    while tn < bdry {
+                        while next < mine.len() && mine[next].0 <= tn {
+                            node.submit(requests[mine[next].1].clone());
+                            next += 1;
+                        }
+                        node.poll(tn);
+                        tn += tick;
+                    }
+                    for &(_, idx) in &mine[next..] {
+                        node.submit(requests[idx].clone());
+                    }
+                    node.close_epoch(epoch);
+                });
+            // Advance the shared clock with the same float operations
+            // every node performed, so all timelines agree exactly.
+            while t < boundary {
+                t += tick;
+            }
+            for b in &mut buckets {
+                b.clear();
+            }
+            for (p, node) in pending.iter_mut().zip(&nodes) {
+                *p = node.pending();
+            }
+        }
+        (self.build_report(scenario, nodes, routed), assignments)
+    }
+
+    /// The pre-shard event loop, retained as the reference
+    /// implementation (route and simulate interleaved on one thread,
+    /// routing off the nodes' live `pending()`): the differential tests
+    /// hold [`serve`](Self::serve) against it — per-request
+    /// assignments, routed counts and report bytes must all match.
+    /// Returns the report plus the per-request node assignments.
+    pub fn serve_interleaved(&self, requests: &[Request], scenario: &str)
+                             -> (ClusterReport, Vec<usize>) {
+        let mut nodes = self.make_nodes(super::serve::DrainDriver::Event);
+        let mut rng = Rng::new(self.seed ^ ROUTE_SALT);
+        let mut routed = vec![0usize; nodes.len()];
+        let mut assignments = vec![usize::MAX; requests.len()];
+
+        let per = chunk_len(requests.len(), self.params.epochs);
+        let mut queue: EventQueue<Event> = EventQueue::new();
+        let mut boundary = 0.0f64;
+        for (epoch, chunk) in requests.chunks(per).enumerate() {
+            let base = epoch * per;
+            for (k, r) in chunk.iter().enumerate() {
+                queue.push(r.arrival_ms, Event::Arrival { index: base + k });
+            }
+            boundary = chunk
+                .last()
+                .map(|r| r.arrival_ms)
+                .unwrap_or(boundary)
+                .max(boundary);
+            queue.push(boundary, Event::EpochBoundary { epoch });
+        }
+
+        while let Some((_, _, ev)) = queue.pop() {
+            match ev {
+                Event::Arrival { index } => {
+                    let n = route_live(&nodes, self.params.capacity,
+                                       &mut rng);
+                    routed[n] += 1;
+                    assignments[index] = n;
                     nodes[n].submit(requests[index].clone());
                 }
                 Event::EpochBoundary { epoch } => {
@@ -192,27 +398,25 @@ impl Cluster {
                 }
             }
         }
-        self.build_report(scenario, nodes, routed)
+        (self.build_report(scenario, nodes, routed), assignments)
     }
 
-    /// [`serve`](Self::serve) through the pre-event-core tick loop:
-    /// virtual time advances in fixed `tick_ms` steps and every node is
-    /// polled at every tick — wall-clock cost proportional to virtual
-    /// time swept times nodes, the cost profile the event core removes.
-    /// Kept as the before-side of `benches/perf_cluster.rs` and as a
-    /// routing cross-check (both drivers make identical routing
-    /// decisions; see the module docs for why reports may differ in
-    /// mid-epoch dispatch timing).
-    pub fn serve_polled(&self, requests: &[Request], scenario: &str)
-                        -> ClusterReport {
+    /// The pre-shard polled loop, retained as the reference for
+    /// [`serve_polled`](Self::serve_polled) (see
+    /// [`serve_interleaved`](Self::serve_interleaved)).
+    pub fn serve_polled_interleaved(&self, requests: &[Request],
+                                    scenario: &str)
+                                    -> (ClusterReport, Vec<usize>) {
         let mut nodes = self.make_nodes(super::serve::DrainDriver::Polled);
         let mut rng = Rng::new(self.seed ^ ROUTE_SALT);
         let mut routed = vec![0usize; nodes.len()];
+        let mut assignments = vec![usize::MAX; requests.len()];
 
         let per = chunk_len(requests.len(), self.params.epochs);
         let mut t = 0.0f64;
         let mut boundary = 0.0f64;
         for (epoch, chunk) in requests.chunks(per).enumerate() {
+            let base = epoch * per;
             boundary = chunk
                 .last()
                 .map(|r| r.arrival_ms)
@@ -223,8 +427,10 @@ impl Cluster {
                 while next < chunk.len()
                     && chunk[next].arrival_ms <= t
                 {
-                    let n = route(&nodes, self.params.capacity, &mut rng);
+                    let n = route_live(&nodes, self.params.capacity,
+                                       &mut rng);
                     routed[n] += 1;
+                    assignments[base + next] = n;
                     nodes[n].submit(chunk[next].clone());
                     next += 1;
                 }
@@ -233,25 +439,36 @@ impl Cluster {
                 }
                 t += self.params.tick_ms;
             }
-            for r in &chunk[next..] {
-                let n = route(&nodes, self.params.capacity, &mut rng);
+            for (off, r) in chunk[next..].iter().enumerate() {
+                let n = route_live(&nodes, self.params.capacity, &mut rng);
                 routed[n] += 1;
+                assignments[base + next + off] = n;
                 nodes[n].submit(r.clone());
             }
             for node in &mut nodes {
                 node.close_epoch(epoch);
             }
         }
-        self.build_report(scenario, nodes, routed)
+        (self.build_report(scenario, nodes, routed), assignments)
     }
 
     fn make_nodes(&self, driver: super::serve::DrainDriver)
                   -> Vec<EpochFleet> {
+        // The shard axis is the node: giving every node the whole pool
+        // for intra-node batch execution too would oversubscribe the
+        // cores, so multi-node clusters keep their nodes' execution
+        // sequential.  Bit-identical either way — the server pool's
+        // ordered reduce guarantees it (util/pool.rs contract).
+        let node_par = if self.params.nodes > 1 {
+            Parallelism::Sequential
+        } else {
+            self.params.par
+        };
         (0..self.params.nodes)
             .map(|i| {
                 let seed = self.seed
                     ^ ((i as u64) + 1).wrapping_mul(SEED_STRIDE);
-                EpochFleet::new(self.deployment.clone(), seed, self.par)
+                EpochFleet::new(self.deployment.clone(), seed, node_par)
                     .with_driver(driver)
             })
             .collect()
@@ -298,19 +515,20 @@ fn chunk_len(len: usize, epochs: usize) -> usize {
     (len.div_ceil(epochs.max(1))).max(1)
 }
 
-/// Least-loaded routing with a soft capacity cap: candidates are the
-/// nodes under `capacity` pending (all nodes when saturated); among
-/// candidates, minimum `pending()` wins, and exact ties are broken by
-/// the seeded stream — `rng` is consumed *only* on a tie, so the
-/// stream stays aligned across runs that make the same decisions.
-fn route(nodes: &[EpochFleet], capacity: usize, rng: &mut Rng) -> usize {
-    let pending: Vec<usize> = nodes.iter().map(|n| n.pending()).collect();
+/// Least-loaded routing with a soft capacity cap, over a slice of
+/// per-node pending counts (the route phase's mirror, or a live
+/// snapshot via [`route_live`]): candidates are the nodes under
+/// `capacity` pending (all nodes when saturated); among candidates,
+/// minimum pending wins, and exact ties are broken by the seeded
+/// stream — `rng` is consumed *only* on a tie, so the stream stays
+/// aligned across runs that make the same decisions.
+fn route(pending: &[usize], capacity: usize, rng: &mut Rng) -> usize {
     let candidates: Vec<usize> = {
-        let under: Vec<usize> = (0..nodes.len())
+        let under: Vec<usize> = (0..pending.len())
             .filter(|&i| pending[i] < capacity)
             .collect();
         if under.is_empty() {
-            (0..nodes.len()).collect()
+            (0..pending.len()).collect()
         } else {
             under
         }
@@ -329,6 +547,14 @@ fn route(nodes: &[EpochFleet], capacity: usize, rng: &mut Rng) -> usize {
     } else {
         ties[rng.below(ties.len())]
     }
+}
+
+/// [`route`] over the nodes' live `pending()` counts — the interleaved
+/// reference loops' router.
+fn route_live(nodes: &[EpochFleet], capacity: usize, rng: &mut Rng)
+              -> usize {
+    let pending: Vec<usize> = nodes.iter().map(|n| n.pending()).collect();
+    route(&pending, capacity, rng)
 }
 
 // ---------------------------------------------------------------------------
@@ -356,7 +582,8 @@ pub struct ClusterReport {
 
 impl ClusterReport {
     /// Serialize (schema `ae-llm.cluster-report/v1`; field reference in
-    /// docs/SCHEMAS.md).  Same-seed runs dump byte-identical JSON.
+    /// docs/SCHEMAS.md).  Same-seed runs dump byte-identical JSON at
+    /// every parallelism level.
     pub fn to_json(&self) -> Json {
         let mut root = std::collections::BTreeMap::new();
         root.insert("schema".into(),
@@ -410,14 +637,16 @@ mod tests {
             .unwrap()
     }
 
+    fn params(nodes: usize, par: Parallelism) -> ClusterParams {
+        ClusterParams { nodes, par, ..Default::default() }
+    }
+
     #[test]
     fn same_seed_cluster_serve_is_byte_identical() {
         let reqs = Workload::new(WorkloadKind::Bursty, 60.0, 300, 9)
             .generate();
         let go = |par| {
-            Cluster::new(deployment(),
-                         ClusterParams { nodes: 3, ..Default::default() },
-                         11, par)
+            Cluster::new(deployment(), params(3, par), 11)
                 .serve(&reqs, "bursty")
                 .to_json()
                 .dump()
@@ -432,13 +661,110 @@ mod tests {
     }
 
     #[test]
+    fn golden_sharded_serve_matches_sequential_on_all_scenarios() {
+        // The determinism contract of the shard (DESIGN.md §16):
+        // byte-identical reports at Sequential / Threads(4) /
+        // Threads(8), on every workload scenario, and equal to the
+        // retained pre-shard interleaved loop.
+        let d = deployment();
+        for kind in WorkloadKind::ALL {
+            let reqs =
+                Workload::new(kind, 50.0, 240, 17).generate();
+            let go = |par: Parallelism| {
+                Cluster::new(d.clone(),
+                             ClusterParams { nodes: 4, capacity: 16,
+                                             par,
+                                             ..Default::default() },
+                             13)
+                    .serve(&reqs, kind.name())
+                    .to_json()
+                    .dump()
+            };
+            let seq = go(Parallelism::Sequential);
+            assert_eq!(seq, go(Parallelism::Threads(4)),
+                       "Threads(4) diverged on {}", kind.name());
+            assert_eq!(seq, go(Parallelism::Threads(8)),
+                       "Threads(8) diverged on {}", kind.name());
+            let (reference, _) =
+                Cluster::new(d.clone(),
+                             ClusterParams { nodes: 4, capacity: 16,
+                                             par: Parallelism::Threads(4),
+                                             ..Default::default() },
+                             13)
+                    .serve_interleaved(&reqs, kind.name());
+            assert_eq!(seq, reference.to_json().dump(),
+                       "shard diverged from the interleaved reference \
+                        on {}", kind.name());
+        }
+    }
+
+    #[test]
+    fn sharded_polled_driver_matches_its_interleaved_reference() {
+        let d = deployment();
+        for kind in [WorkloadKind::Bursty, WorkloadKind::Ramp] {
+            let reqs = Workload::new(kind, 60.0, 200, 7).generate();
+            let p = ClusterParams { nodes: 3, capacity: 16, tick_ms: 2.0,
+                                    par: Parallelism::Threads(4),
+                                    ..Default::default() };
+            let cluster = Cluster::new(d.clone(), p, 19);
+            let (sharded, asg) =
+                cluster.serve_polled_assignments(&reqs, kind.name());
+            let (reference, asg_ref) =
+                cluster.serve_polled_interleaved(&reqs, kind.name());
+            assert_eq!(asg, asg_ref,
+                       "polled shard re-routed on {}", kind.name());
+            assert_eq!(sharded.to_json().dump(),
+                       reference.to_json().dump(),
+                       "polled shard diverged on {}", kind.name());
+        }
+    }
+
+    #[test]
+    fn property_sharded_routing_matches_interleaved_across_seeds() {
+        // Randomized differential: across seeds × node counts ×
+        // parallelism 1/4/8, the route-then-simulate split reproduces
+        // the retained interleaved loop exactly — per-request
+        // assignment order, per-node routed counts, and report bytes.
+        // A small capacity forces the saturated fallback and pending
+        // ties, so the RNG tie-break stream is genuinely exercised.
+        let d = deployment();
+        let mut meta = Rng::new(0xC1A5);
+        for trial in 0..4usize {
+            let seed = meta.below(1 << 20) as u64;
+            let kind = WorkloadKind::ALL[meta.below(WorkloadKind::ALL.len())];
+            let nodes = [2, 3, 5][trial % 3];
+            let reqs =
+                Workload::new(kind, 70.0, 180, seed ^ 0xA5).generate();
+            let base = ClusterParams { nodes, capacity: 8, epochs: 3,
+                                       par: Parallelism::Sequential,
+                                       ..Default::default() };
+            let (reference, asg_ref) =
+                Cluster::new(d.clone(), base, seed)
+                    .serve_interleaved(&reqs, kind.name());
+            let ref_dump = reference.to_json().dump();
+            for par in [Parallelism::Threads(1), Parallelism::Threads(4),
+                        Parallelism::Threads(8)] {
+                let (rep, asg) = Cluster::new(
+                    d.clone(), ClusterParams { par, ..base }, seed)
+                    .serve_assignments(&reqs, kind.name());
+                assert_eq!(asg, asg_ref,
+                           "assignments diverged: trial {trial} {par:?}");
+                assert_eq!(rep.routed, reference.routed,
+                           "routed counts diverged: trial {trial} {par:?}");
+                assert_eq!(rep.to_json().dump(), ref_dump,
+                           "report diverged: trial {trial} {par:?}");
+            }
+        }
+    }
+
+    #[test]
     fn event_and_polled_drivers_route_identically_and_complete_all() {
         let reqs = Workload::new(WorkloadKind::Steady, 50.0, 240, 5)
             .generate();
         let params = ClusterParams { nodes: 4, capacity: 32, epochs: 3,
-                                     tick_ms: 2.0 };
-        let cluster =
-            Cluster::new(deployment(), params, 7, Parallelism::Sequential);
+                                     tick_ms: 2.0,
+                                     par: Parallelism::Sequential };
+        let cluster = Cluster::new(deployment(), params, 7);
         let event = cluster.serve(&reqs, "steady");
         let polled = cluster.serve_polled(&reqs, "steady");
         // pending() moves only at epoch boundaries on both drivers, so
@@ -462,8 +788,10 @@ mod tests {
             .generate();
         let report = Cluster::new(
             deployment(),
-            ClusterParams { nodes: 4, capacity: 16, ..Default::default() },
-            13, Parallelism::Sequential)
+            ClusterParams { nodes: 4, capacity: 16,
+                            par: Parallelism::Sequential,
+                            ..Default::default() },
+            13)
             .serve(&reqs, "steady");
         assert_eq!(report.routed.len(), 4);
         assert!(report.routed.iter().all(|&n| n > 0),
@@ -486,8 +814,10 @@ mod tests {
             .generate();
         let report = Cluster::new(
             deployment(),
-            ClusterParams { nodes: 1, epochs: 2, ..Default::default() },
-            21, Parallelism::Sequential)
+            ClusterParams { nodes: 1, epochs: 2,
+                            par: Parallelism::Sequential,
+                            ..Default::default() },
+            21)
             .serve(&reqs, "diurnal");
         assert_eq!(report.routed, vec![reqs.len()]);
         assert_eq!(report.per_node.len(), 1);
@@ -504,8 +834,9 @@ mod tests {
             .collect();
         let j = Cluster::new(
             deployment(),
-            ClusterParams { nodes: 2, ..Default::default() },
-            5, Parallelism::Sequential)
+            ClusterParams { nodes: 2, par: Parallelism::Sequential,
+                            ..Default::default() },
+            5)
             .serve(&reqs, "steady")
             .to_json();
         assert_eq!(j.get("schema").and_then(Json::as_str),

@@ -133,6 +133,28 @@ impl<E> EventQueue<E> {
         self.heap.peek().map(|Reverse(k)| k.time_ms)
     }
 
+    /// Drop every queued event and reset the tie-break counter, keeping
+    /// the backing heap's allocation — a queue reused across epochs (or
+    /// across [`drain`](super::serve) calls) allocates once at its
+    /// high-water mark instead of rebuilding per cycle (the zero-churn
+    /// pass, DESIGN.md §15).  Resetting `next_seq` is behavior-neutral:
+    /// only the *relative* order of sequence numbers within one fill
+    /// ever matters.
+    pub fn clear(&mut self) {
+        self.heap.clear();
+        self.next_seq = 0;
+    }
+
+    /// Events the backing heap can hold without reallocating.
+    pub fn capacity(&self) -> usize {
+        self.heap.capacity()
+    }
+
+    /// Reserve room for at least `additional` more events.
+    pub fn reserve(&mut self, additional: usize) {
+        self.heap.reserve(additional);
+    }
+
     pub fn len(&self) -> usize {
         self.heap.len()
     }
@@ -228,6 +250,37 @@ mod tests {
     #[should_panic(expected = "NaN")]
     fn nan_times_are_rejected() {
         EventQueue::new().push(f64::NAN, 0usize);
+    }
+
+    #[test]
+    fn clear_retains_capacity_and_resets_the_tie_break() {
+        let mut q = EventQueue::new();
+        for i in 0..256usize {
+            q.push(i as f64, i);
+        }
+        let cap = q.capacity();
+        assert!(cap >= 256);
+        q.clear();
+        assert!(q.is_empty());
+        assert_eq!(q.capacity(), cap, "clear must keep the allocation");
+        // The tie-break counter restarts, and a refill of the same size
+        // never grows the heap.
+        assert_eq!(q.push(1.0, 0usize), 0);
+        for i in 1..256usize {
+            q.push(1.0, i);
+        }
+        assert_eq!(q.capacity(), cap, "refill within capacity reallocated");
+        let order: Vec<usize> =
+            std::iter::from_fn(|| q.pop()).map(|(_, _, e)| e).collect();
+        assert_eq!(order, (0..256).collect::<Vec<_>>(),
+                   "submission order must survive a clear");
+    }
+
+    #[test]
+    fn reserve_grows_capacity_up_front() {
+        let mut q: EventQueue<usize> = EventQueue::new();
+        q.reserve(100);
+        assert!(q.capacity() >= 100);
     }
 
     #[test]

@@ -1284,6 +1284,45 @@ mod tests {
     }
 
     #[test]
+    fn epoch_fleet_reuses_drain_heaps_across_epochs() {
+        // Zero-churn pass (DESIGN.md §15): identically sized epochs
+        // after the first must not regrow any server's drain heap —
+        // the allocation is made once at the high-water mark and
+        // recycled by `EventQueue::clear`.
+        let front = specialist_front();
+        let m = by_name("LLaMA-2-7B").unwrap();
+        let t = blended_task();
+        let d = Deployment::from_front(&front, &SloPolicy::default(), &m,
+                                       &t, &hardware::a100()).unwrap();
+        let mk = |epoch: u64| -> Vec<Request> {
+            (0..45u64)
+                .map(|i| {
+                    Request::new(epoch * 45 + i, vec![(i as i32) % 11; 64])
+                        .at(epoch as f64 * 500.0 + i as f64 * 10.0)
+                        .class(SloClass::ALL[(i % 3) as usize])
+                })
+                .collect()
+        };
+        let mut fleet =
+            EpochFleet::new(d, 5, Parallelism::Sequential);
+        fleet.serve_epoch(0, &mk(0));
+        let caps: Vec<usize> = fleet.servers.iter()
+            .map(|s| s.drain_queue_capacity())
+            .collect();
+        assert!(caps.iter().any(|&c| c > 0),
+                "first epoch never sized a drain heap: {caps:?}");
+        for epoch in 1..4u64 {
+            fleet.serve_epoch(epoch as usize, &mk(epoch));
+            let now: Vec<usize> = fleet.servers.iter()
+                .map(|s| s.drain_queue_capacity())
+                .collect();
+            assert_eq!(now, caps,
+                       "a drain heap reallocated on epoch {epoch}");
+        }
+        assert_eq!(fleet.overall_report().completed, 180);
+    }
+
+    #[test]
     fn epoch_fleet_accounts_epochs_exactly_once() {
         let front = specialist_front();
         let m = by_name("LLaMA-2-7B").unwrap();

@@ -260,6 +260,11 @@ pub struct Server<B: ExecBackend, C: Clock> {
     /// Reused flattened-token buffer for the inline batch path
     /// (cleared per batch, never reallocated — DESIGN.md §15).
     flat_scratch: Vec<i32>,
+    /// Reused event heap for [`drain`](Self::drain): cleared and
+    /// refilled per drain, so a server drained once per epoch allocates
+    /// the heap once at its high-water mark instead of rebuilding it
+    /// every epoch (DESIGN.md §15).
+    drain_queue: EventQueue<Event>,
     first_arrival_ms: Option<f64>,
     last_done_ms: f64,
     /// Worker count for executing independent batches concurrently in
@@ -312,6 +317,7 @@ impl<B: ExecBackend, C: Clock> Server<B, C> {
             energy_j: 0.0,
             lane_free: vec![0.0],
             flat_scratch: Vec::new(),
+            drain_queue: EventQueue::new(),
             first_arrival_ms: None,
             last_done_ms: 0.0,
             parallelism: Parallelism::Auto,
@@ -394,6 +400,13 @@ impl<B: ExecBackend, C: Clock> Server<B, C> {
         self.batcher.len()
     }
 
+    /// Capacity of the reusable [`drain`](Self::drain) event heap —
+    /// exposed so the zero-churn tests can assert the allocation is
+    /// retained across epochs rather than rebuilt per drain.
+    pub fn drain_queue_capacity(&self) -> usize {
+        self.drain_queue.capacity()
+    }
+
     /// Form and execute every batch the queue implies (size- or
     /// deadline-triggered, final partial flushed), on the discrete-
     /// event core (DESIGN.md §13).
@@ -421,8 +434,9 @@ impl<B: ExecBackend, C: Clock> Server<B, C> {
         // one Arrival per pending item, and the side tables hold one
         // slot per formed batch.
         let n_batches = pending.len() / self.shape.batch.max(1) + 1;
-        let mut queue: EventQueue<Event> =
-            EventQueue::with_capacity(pending.len() + 2);
+        let mut queue = std::mem::take(&mut self.drain_queue);
+        queue.clear();
+        queue.reserve(pending.len() + 2);
         let mut waiting: Vec<Option<(Item, f64)>> =
             Vec::with_capacity(pending.len());
         for (item, arrival) in pending {
@@ -459,6 +473,7 @@ impl<B: ExecBackend, C: Clock> Server<B, C> {
                             self.requeue_after_failure(
                                 failed, &mut queue, &mut closed,
                                 &mut waiting, &done_at);
+                            self.drain_queue = queue;
                             return Err(e);
                         }
                     }
@@ -473,6 +488,9 @@ impl<B: ExecBackend, C: Clock> Server<B, C> {
                 }
             }
         }
+        // Hand the (now empty) heap back so the next drain reuses its
+        // allocation.
+        self.drain_queue = queue;
         // Flush the tail the deadline never closed (ready at its last
         // member's arrival, exactly as the one-shot formation).
         let tail = self.batcher.drain_batches();
@@ -756,6 +774,32 @@ mod tests {
         assert_eq!(rep_seq.batches, 5);
         assert!(rep_seq.p95_latency_ms >= rep_seq.p50_latency_ms);
         assert!(rep_seq.energy_j > 0.0);
+    }
+
+    #[test]
+    fn drain_reuses_its_event_heap_across_epochs() {
+        // Same-sized submit/drain cycles after the first must never
+        // regrow the drain heap: the allocation is made once at the
+        // high-water mark and recycled (DESIGN.md §15).
+        let mut s = sim_server(0.0);
+        assert_eq!(s.drain_queue_capacity(), 0);
+        let mut serve_epoch = |epoch: u64| {
+            for i in 0..60u64 {
+                let id = epoch * 60 + i;
+                s.submit(Request::new(id, vec![1; 80])
+                    .at(epoch as f64 * 1000.0 + i as f64 * 2.0));
+            }
+            s.drain().unwrap();
+        };
+        serve_epoch(0);
+        let cap = s.drain_queue_capacity();
+        assert!(cap >= 60, "first drain sized the heap: {cap}");
+        for epoch in 1..4 {
+            serve_epoch(epoch);
+            assert_eq!(s.drain_queue_capacity(), cap,
+                       "drain heap reallocated on epoch {epoch}");
+        }
+        assert_eq!(s.completions().len(), 240);
     }
 
     #[test]

@@ -169,6 +169,23 @@ pub fn parallel_chunks_mut<T, F>(
     });
 }
 
+/// Apply `f` to every element of `data` in parallel, passing the
+/// element's global index.  [`parallel_chunks_mut`] at per-element
+/// granularity — the cluster layer's shard primitive: each fleet node
+/// is an independent `&mut` shard, visited by exactly one worker, so
+/// per-node mutation is deterministic at every [`Parallelism`] level.
+pub fn parallel_for_each_mut<T, F>(par: Parallelism, data: &mut [T], f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut T) + Sync,
+{
+    parallel_chunks_mut(par, data, 1, |offset, chunk| {
+        for (k, item) in chunk.iter_mut().enumerate() {
+            f(offset + k, item);
+        }
+    });
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -294,6 +311,26 @@ mod tests {
             chunk.fill(7);
         });
         assert_eq!(data, vec![7; 4]);
+    }
+
+    #[test]
+    fn for_each_mut_visits_every_element_once_with_its_index() {
+        for par in [
+            Parallelism::Sequential,
+            Parallelism::Threads(3),
+            Parallelism::Threads(8),
+        ] {
+            let mut data: Vec<usize> = (0..37).collect();
+            let visits = AtomicUsize::new(0);
+            parallel_for_each_mut(par, &mut data, |i, v| {
+                assert_eq!(*v, i, "index bookkeeping");
+                visits.fetch_add(1, Ordering::Relaxed);
+                *v = i * 10;
+            });
+            assert_eq!(visits.load(Ordering::Relaxed), 37);
+            assert_eq!(data,
+                       (0..37).map(|i| i * 10).collect::<Vec<_>>());
+        }
     }
 
     #[test]
