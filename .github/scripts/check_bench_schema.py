@@ -14,6 +14,9 @@ Every report must carry the shared envelope written by
   with ``mode``
 * at least one numeric ``*_per_sec`` throughput key (the regression
   gate compares exactly those)
+* for benches with a known kernel inventory (``REQUIRED_PER_SEC``),
+  every listed throughput key must be present — a rewrite that silently
+  drops its before/after microbench would otherwise escape the gate
 """
 
 import json
@@ -21,6 +24,25 @@ import os
 import sys
 
 SCHEMA = "ae-llm.bench/v1"
+
+# Throughput keys each bench must emit.  "search" covers the kernel
+# rewrites of DESIGN.md §15 (archive, GBT) and §17 (non-dominated sort,
+# crowding, hypervolume): each ships a new/reference key pair so
+# bench_gate.py tracks both sides.
+REQUIRED_PER_SEC = {
+    "search": [
+        "nds_sort_per_sec",
+        "nds_sort_ref_per_sec",
+        "crowding_per_sec",
+        "crowding_ref_per_sec",
+        "hypervolume_per_sec",
+        "hypervolume_ref_per_sec",
+        "archive_insert_per_sec",
+        "archive_insert_ref_per_sec",
+        "gbt_fit_rows_per_sec",
+        "gbt_fit_ref_rows_per_sec",
+    ],
+}
 
 
 def check(path: str) -> list:
@@ -53,6 +75,9 @@ def check(path: str) -> list:
     for k, v in per_sec.items():
         if not (v == v and v > 0):  # NaN or non-positive
             errors.append(f"throughput key {k!r} is {v!r}")
+    for k in REQUIRED_PER_SEC.get(short, []):
+        if k not in per_sec:
+            errors.append(f"missing required throughput key {k!r}")
     return errors
 
 

@@ -11,11 +11,13 @@
 use std::collections::BTreeMap;
 
 use ae_llm::config::{encode, enumerate, Config};
-use ae_llm::coordinator::{AeLlm, AeLlmParams, Scenario};
+use ae_llm::coordinator::{AeLlm, AeLlmParams, CollectingObserver, Scenario};
 use ae_llm::models;
 use ae_llm::oracle::{Objectives, Testbed};
 use ae_llm::search::archive::ReferenceArchive;
 use ae_llm::search::dominance;
+use ae_llm::search::hypervolume::{self, HvScratch};
+use ae_llm::search::reference as sref;
 use ae_llm::search::nsga2::{self, Nsga2Params, Toggles};
 use ae_llm::search::{ParetoArchive, StrategyKind};
 use ae_llm::surrogate::reference::ref_gbt_fit;
@@ -205,20 +207,100 @@ fn main() {
     report.insert("gbt predict speedup".into(),
                   Json::Num(tm_pr.mean_ms / tm_p.mean_ms.max(1e-9)));
 
-    // -- dominance machinery ------------------------------------------------
+    // -- search kernels vs references (DESIGN.md §17) ------------------------
+    // Before/after microbenches of the §17 search-kernel rewrite: the
+    // pruned bitset non-dominated sort, the scratch-reusing crowding
+    // distance, and the arena hypervolume, each against its retained
+    // reference in `search::reference`.  Quantized objectives so the
+    // workload has the duplicate/tie structure the pruning exploits —
+    // and so the benches double as live bit-identity checks.
+    let n_pts = if quick { 128 } else { 256 };
     let mut rng2 = Rng::new(3);
-    let objs: Vec<[f64; 4]> = (0..200)
-        .map(|_| [rng2.f64(), rng2.f64(), rng2.f64(), rng2.f64()])
+    let objs: Vec<[f64; 4]> = (0..n_pts)
+        .map(|_| {
+            [(rng2.f64() * 8.0).floor() / 8.0,
+             (rng2.f64() * 8.0).floor() / 8.0,
+             rng2.f64(),
+             rng2.f64()]
+        })
         .collect();
-    let tm = time_it("non-dominated sort (N=200, M=4)", 20, 200, || {
-        std::hint::black_box(dominance::non_dominated_sort(&objs));
+    let mut sort_scratch = dominance::SortScratch::default();
+    let tm_sort = time_it(&format!("non-dominated sort (N={n_pts}, pruned)"),
+                          20, 200, || {
+        std::hint::black_box(
+            dominance::non_dominated_sort_with(&mut sort_scratch, &objs));
     });
-    record(&mut report, &tm);
-    let front: Vec<usize> = (0..200).collect();
-    let tm = time_it("crowding distance (N=200)", 20, 500, || {
-        std::hint::black_box(dominance::crowding_distance(&objs, &front));
+    let tm_sref = time_it(&format!("non-dominated sort (N={n_pts}, \
+                                    reference)"), 20, 200, || {
+        std::hint::black_box(sref::ref_non_dominated_sort(&objs));
     });
-    record(&mut report, &tm);
+    let fronts = dominance::non_dominated_sort_with(&mut sort_scratch, &objs);
+    assert_eq!(fronts, sref::ref_non_dominated_sort(&objs),
+               "pruned sort diverged from the reference implementation");
+    let sort_speedup = tm_sref.mean_ms / tm_sort.mean_ms.max(1e-9);
+    println!("  non-dominated sort speedup vs reference: {sort_speedup:.2}x");
+    report.insert("nds_sort_per_sec".into(),
+                  Json::Num(per_sec(1.0, tm_sort.mean_ms)));
+    report.insert("nds_sort_ref_per_sec".into(),
+                  Json::Num(per_sec(1.0, tm_sref.mean_ms)));
+    report.insert("nds sort speedup".into(), Json::Num(sort_speedup));
+
+    let front: Vec<usize> = (0..n_pts).collect();
+    let mut crowd_scratch = dominance::CrowdingScratch::default();
+    let tm_crowd = time_it(&format!("crowding distance (N={n_pts}, \
+                                     scratch)"), 20, 500, || {
+        std::hint::black_box(dominance::crowding_distance_with(
+            &mut crowd_scratch, &objs, &front));
+    });
+    let tm_cref = time_it(&format!("crowding distance (N={n_pts}, \
+                                    reference)"), 20, 500, || {
+        std::hint::black_box(sref::ref_crowding_distance(&objs, &front));
+    });
+    {
+        let a = dominance::crowding_distance_with(&mut crowd_scratch, &objs,
+                                                  &front);
+        let b = sref::ref_crowding_distance(&objs, &front);
+        assert!(a.iter().map(|x| x.to_bits()).eq(
+                    b.iter().map(|x| x.to_bits())),
+                "crowding distance diverged from the reference");
+    }
+    let crowd_speedup = tm_cref.mean_ms / tm_crowd.mean_ms.max(1e-9);
+    println!("  crowding distance speedup vs reference: {crowd_speedup:.2}x");
+    report.insert("crowding_per_sec".into(),
+                  Json::Num(per_sec(1.0, tm_crowd.mean_ms)));
+    report.insert("crowding_ref_per_sec".into(),
+                  Json::Num(per_sec(1.0, tm_cref.mean_ms)));
+    report.insert("crowding speedup".into(), Json::Num(crowd_speedup));
+
+    // Hypervolume on the Pareto-front subset (the shape the observer
+    // loop computes every iteration).  The reference recursion clones
+    // at every level, so keep the iteration count modest.
+    let hv_pts: Vec<[f64; 4]> =
+        fronts[0].iter().map(|&i| objs[i]).collect();
+    let hv_r = [1.5f64; 4];
+    let mut hv_scratch = HvScratch::new();
+    let tm_hv = time_it(&format!("hypervolume (front of {n_pts}, arena)"),
+                        3, 30, || {
+        std::hint::black_box(hypervolume::hypervolume_with(
+            &mut hv_scratch, &hv_pts, &hv_r));
+    });
+    let tm_hvref = time_it(&format!("hypervolume (front of {n_pts}, \
+                                     reference)"), 1, 10, || {
+        std::hint::black_box(sref::ref_hypervolume(&hv_pts, &hv_r));
+    });
+    let hv_new = hypervolume::hypervolume_with(&mut hv_scratch, &hv_pts,
+                                               &hv_r);
+    let hv_ref = sref::ref_hypervolume(&hv_pts, &hv_r);
+    assert_eq!(hv_new.to_bits(), hv_ref.to_bits(),
+               "arena hypervolume diverged from the reference");
+    let hv_speedup = tm_hvref.mean_ms / tm_hv.mean_ms.max(1e-9);
+    println!("  hypervolume speedup vs reference: {hv_speedup:.2}x \
+              (front size {})", hv_pts.len());
+    report.insert("hypervolume_per_sec".into(),
+                  Json::Num(per_sec(1.0, tm_hv.mean_ms)));
+    report.insert("hypervolume_ref_per_sec".into(),
+                  Json::Num(per_sec(1.0, tm_hvref.mean_ms)));
+    report.insert("hypervolume speedup".into(), Json::Num(hv_speedup));
 
     // -- sequential vs parallel NSGA-II -------------------------------------
     // Surrogate-evaluated NSGA-II, the phase-2 hot path.  Evolutionary
@@ -299,6 +381,34 @@ fn main() {
                       Json::Num(ms));
         report.insert(format!("strategy {} testbed evals", kind.name()),
                       Json::Num(out.testbed_evals as f64));
+    }
+
+    // -- observer-loop hypervolume gate (DESIGN.md §17) ----------------------
+    // An observed run computes the exact 4-D hypervolume every
+    // iteration; the change gate reuses the previous value whenever the
+    // archive version is unchanged.  Record how much work it saves.
+    {
+        let params = AeLlmParams {
+            refine_iters: if quick { 4 } else { 8 },
+            evals_per_iter: 4,
+            ..AeLlmParams::small()
+        };
+        let mut obs = CollectingObserver::default();
+        let report_run = AeLlm::from_scenario(scenario.clone())
+            .params(params)
+            .seed(7)
+            .run_testbed_observed(&mut obs);
+        let out = &report_run.outcome;
+        println!(
+            "  hv gate: {} recomputes over {} observed iterations \
+             ({} reused)",
+            out.hv_recomputes, out.hv_queries,
+            out.hv_queries - out.hv_recomputes
+        );
+        report.insert("hv gate iterations".into(),
+                      Json::Num(out.hv_queries as f64));
+        report.insert("hv gate recomputes".into(),
+                      Json::Num(out.hv_recomputes as f64));
     }
 
     bench::write_report("search", report);

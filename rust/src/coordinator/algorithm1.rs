@@ -38,7 +38,7 @@ use crate::metrics::{efficiency_score, utility, Reference};
 use crate::oracle::Objectives;
 use crate::search::archive::{Entry, ParetoArchive};
 use crate::search::dominance::MinVec;
-use crate::search::hypervolume;
+use crate::search::hypervolume::{self, HvScratch};
 use crate::search::nsga2::{Nsga2Params, Toggles};
 use crate::search::strategy::{SearchStrategy, StrategyCx, StrategyKind};
 use crate::surrogate::{GbtParams, Sample, SurrogateSet};
@@ -138,6 +138,15 @@ pub struct Outcome {
     /// (racing rungs, direct-measurement NSGA-II); a subset of
     /// `testbed_evals`.
     pub strategy_evals: usize,
+    /// Observer hypervolume queries this run answered (one per observed
+    /// refinement iteration; 0 under a disabled observer, which skips
+    /// the snapshot entirely).
+    pub hv_queries: usize,
+    /// How many of those queries actually recomputed the hypervolume:
+    /// iterations whose measurement batch left the measured archive
+    /// untouched reuse the previous value, change-gated on
+    /// [`ParetoArchive::version`] (see [`HvGate`]).
+    pub hv_recomputes: usize,
 }
 
 /// Reference-point factor for the observer's normalized hypervolume:
@@ -152,6 +161,14 @@ pub const HV_REF_FACTOR: f64 = 4.0;
 /// than the reference box contribute nothing.
 pub fn pareto_hypervolume(archive: &ParetoArchive,
                           reference: &Reference) -> f64 {
+    pareto_hypervolume_with(&mut HvScratch::default(), archive, reference)
+}
+
+/// [`pareto_hypervolume`] through a caller-owned arena — the
+/// zero-allocation form for repeated queries (the observer loop).
+pub fn pareto_hypervolume_with(scratch: &mut HvScratch,
+                               archive: &ParetoArchive,
+                               reference: &Reference) -> f64 {
     let d = reference.default;
     let denom = |v: f64| if v.abs() < 1e-12 { 1.0 } else { v };
     let pts: Vec<MinVec> = archive
@@ -168,7 +185,73 @@ pub fn pareto_hypervolume(archive: &ParetoArchive,
         })
         .collect();
     let r: MinVec = [0.0, HV_REF_FACTOR, HV_REF_FACTOR, HV_REF_FACTOR];
-    hypervolume::hypervolume(&pts, &r)
+    hypervolume::hypervolume_with(scratch, &pts, &r)
+}
+
+/// Change-gated per-iteration hypervolume for the observer loop.
+///
+/// [`pareto_hypervolume`] is a pure function of the archive's entry
+/// list and the reference, and [`ParetoArchive::version`] changes
+/// whenever that list does — so a query at an unchanged version can
+/// return the previously computed value, which is trivially
+/// bitwise-equal to what a recomputation would produce.  Iterations
+/// whose measurement batch was entirely rejected (every candidate
+/// dominated or infeasible) therefore skip the exact 4-D hypervolume
+/// sweep.
+///
+/// One gate serves one (archive instance, reference) pair: versions
+/// are per-instance counters, so reusing a gate across archives could
+/// alias them.
+pub struct HvGate {
+    scratch: HvScratch,
+    last: Option<(u64, f64)>,
+    queries: usize,
+    recomputes: usize,
+}
+
+impl HvGate {
+    pub fn new() -> Self {
+        HvGate {
+            scratch: HvScratch::default(),
+            last: None,
+            queries: 0,
+            recomputes: 0,
+        }
+    }
+
+    /// The hypervolume of `archive` — recomputed only when its version
+    /// moved since the last query.
+    pub fn value(&mut self, archive: &ParetoArchive,
+                 reference: &Reference) -> f64 {
+        self.queries += 1;
+        let version = archive.version();
+        if let Some((seen, hv)) = self.last {
+            if seen == version {
+                return hv;
+            }
+        }
+        self.recomputes += 1;
+        let hv = pareto_hypervolume_with(&mut self.scratch, archive,
+                                         reference);
+        self.last = Some((version, hv));
+        hv
+    }
+
+    /// Queries answered (reused + recomputed).
+    pub fn queries(&self) -> usize {
+        self.queries
+    }
+
+    /// Queries that ran the full hypervolume sweep.
+    pub fn recomputes(&self) -> usize {
+        self.recomputes
+    }
+}
+
+impl Default for HvGate {
+    fn default() -> Self {
+        HvGate::new()
+    }
 }
 
 /// Run Algorithm 1 on a scenario against its testbed oracle.  Testbed
@@ -383,6 +466,10 @@ pub fn optimize_with_strategy_warm(
 
     let iters = strategy.rounds(params).max(1);
 
+    // Change-gated observer hypervolume: iterations that leave the
+    // measured archive untouched reuse the previous value.
+    let mut hv_gate = HvGate::new();
+
     for iteration in 0..iters {
         // ---- lines 3+4: the strategy proposes this round's candidates ---
         let round = {
@@ -432,7 +519,7 @@ pub fn optimize_with_strategy_warm(
                 iteration: iteration + 1,
                 total_iterations: iters,
                 front_size: measured.len(),
-                hypervolume: pareto_hypervolume(&measured, &reference),
+                hypervolume: hv_gate.value(&measured, &reference),
                 testbed_evals,
                 surrogate_evals,
             });
@@ -469,6 +556,8 @@ pub fn optimize_with_strategy_warm(
         surrogate_evals,
         strategy: strategy.name(),
         strategy_evals,
+        hv_queries: hv_gate.queries(),
+        hv_recomputes: hv_gate.recomputes(),
     }
 }
 
@@ -685,6 +774,108 @@ mod tests {
              out.testbed_evals, out.surrogate_evals)
         };
         assert_eq!(run(true), run(false));
+    }
+
+    #[test]
+    fn hv_gate_reuses_value_only_while_archive_is_unchanged() {
+        let s = scenario().noiseless();
+        let reference = Reference {
+            default: s.testbed.true_objectives(
+                &Config::default_baseline(), &s.model, &s.task),
+        };
+        let mut archive = ParetoArchive::new(16);
+        archive.insert(Config::default_baseline(), reference.default);
+        let mut gate = HvGate::new();
+
+        // First query computes; an unchanged archive reuses the value
+        // bitwise.
+        let hv0 = gate.value(&archive, &reference);
+        let hv1 = gate.value(&archive, &reference);
+        assert_eq!(hv0.to_bits(), hv1.to_bits());
+        assert_eq!((gate.queries(), gate.recomputes()), (2, 1));
+        assert_eq!(hv0.to_bits(),
+                   pareto_hypervolume(&archive, &reference).to_bits());
+
+        // A rejected (dominated) candidate leaves the version alone.
+        let worse = Objectives {
+            accuracy: reference.default.accuracy - 1.0,
+            latency_ms: reference.default.latency_ms * 2.0,
+            memory_gb: reference.default.memory_gb * 2.0,
+            energy_j: reference.default.energy_j * 2.0,
+        };
+        let mut c = Config::default_baseline();
+        c.inf.precision = Precision::Int4;
+        let v = archive.version();
+        assert!(!archive.insert(c, worse));
+        assert_eq!(archive.version(), v);
+        gate.value(&archive, &reference);
+        assert_eq!((gate.queries(), gate.recomputes()), (3, 1));
+
+        // An accepted candidate bumps the version and forces a
+        // recompute that matches the ungated function bitwise.
+        let better = Objectives {
+            accuracy: reference.default.accuracy + 1.0,
+            latency_ms: reference.default.latency_ms * 0.5,
+            memory_gb: reference.default.memory_gb * 0.5,
+            energy_j: reference.default.energy_j * 0.5,
+        };
+        let mut c2 = Config::default_baseline();
+        c2.inf.precision = Precision::Int8;
+        assert!(archive.insert(c2, better));
+        assert!(archive.version() > v);
+        let hv2 = gate.value(&archive, &reference);
+        assert_eq!((gate.queries(), gate.recomputes()), (4, 2));
+        assert_eq!(hv2.to_bits(),
+                   pareto_hypervolume(&archive, &reference).to_bits());
+        assert!(hv2 > hv0);
+    }
+
+    #[test]
+    fn observed_run_counts_gate_activity() {
+        let s = scenario();
+        let params = AeLlmParams::small();
+        let mut evaluator = s.testbed.clone();
+        let mut obs = CollectingObserver::default();
+        let mut rng = Rng::new(29);
+        let out = optimize_with_observer(&s, &params, &mut evaluator,
+                                         &mut obs, &mut rng);
+        // One query per observed refinement iteration, never more
+        // recomputes than queries.
+        assert_eq!(out.hv_queries, params.refine_iters);
+        assert!(out.hv_recomputes >= 1);
+        assert!(out.hv_recomputes <= out.hv_queries);
+        // A disabled observer skips the snapshot (and the gate) fully.
+        let mut rng2 = Rng::new(29);
+        let mut ev2 = s.testbed.clone();
+        let silent = optimize_with_observer(&s, &params, &mut ev2,
+                                            &mut NullObserver, &mut rng2);
+        assert_eq!(silent.hv_queries, 0);
+        assert_eq!(silent.hv_recomputes, 0);
+        // The gate is invisible to everything else.
+        assert_eq!(out.chosen, silent.chosen);
+        assert_eq!(out.testbed_evals, silent.testbed_evals);
+    }
+
+    #[test]
+    fn run_report_json_is_byte_identical_across_parallelism() {
+        // The full-pipeline contract behind `search --json`: the
+        // serialized report (wall-clock zeroed — the one field that
+        // legitimately differs) is byte-identical at Parallelism 1
+        // and 4, observer events and their gated hypervolumes
+        // included.
+        use super::super::AeLlm;
+        let dump = |par: Parallelism| -> String {
+            let p = AeLlmParams { parallelism: par, ..AeLlmParams::small() };
+            let mut report = AeLlm::for_model("LLaMA-2-7B")
+                .unwrap()
+                .params(p)
+                .seed(41)
+                .run_testbed();
+            report.wall_ms = 0.0;
+            report.to_json().dump()
+        };
+        assert_eq!(dump(Parallelism::Sequential),
+                   dump(Parallelism::Threads(4)));
     }
 
     #[test]

@@ -22,7 +22,8 @@ pub mod session;
 
 pub use algorithm1::{optimize_with_observer, optimize_with_observer_warm,
                      optimize_with_strategy, optimize_with_strategy_warm,
-                     pareto_hypervolume, AeLlmParams, Outcome};
+                     pareto_hypervolume, pareto_hypervolume_with,
+                     AeLlmParams, HvGate, Outcome};
 pub use controller::{run_adapt, run_adapt_from, run_adapt_stored,
                      AdaptParams, AdaptReport, EpochRecord,
                      ADAPT_REPORT_SCHEMA};

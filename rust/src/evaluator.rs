@@ -28,7 +28,7 @@
 //! Backends that need per-item noise split one child RNG per config
 //! *sequentially* before fanning out (see `Testbed::measure_batch`).
 
-use std::collections::{BTreeMap, VecDeque};
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
 
 use crate::config::Config;
 use crate::models::ModelSpec;
@@ -218,9 +218,12 @@ impl<E: Evaluator> Evaluator for CachingEvaluator<E> {
                      rng: &mut Rng) -> Vec<Objectives> {
         // Partition the batch: first sighting of an uncached config is a
         // miss; cached configs and intra-batch duplicates are hits.
+        // The duplicate check is a set probe, not a linear scan of
+        // `fresh` — that scan made duplicate-heavy batches O(batch²).
         let mut fresh: Vec<Config> = Vec::new();
+        let mut fresh_set: BTreeSet<Config> = BTreeSet::new();
         for c in cs {
-            if self.cache.contains_key(c) || fresh.contains(c) {
+            if self.cache.contains_key(c) || !fresh_set.insert(*c) {
                 self.hits += 1;
             } else {
                 self.misses += 1;
@@ -458,6 +461,40 @@ mod tests {
         assert_eq!(ev.evals(), 5);
         // Inner backend only ever measured the two distinct configs.
         assert_eq!(Evaluator::evals(ev.inner()), 2);
+    }
+
+    #[test]
+    fn caching_duplicate_heavy_batch_accounting() {
+        // Regression test for the O(n^2) `fresh.contains` partition:
+        // a large batch dominated by intra-batch duplicates must still
+        // produce exact hit/miss counts, measure each distinct config
+        // exactly once on the inner backend, and replay the memoized
+        // objective values positionally.
+        let (m, t) = ctx_parts();
+        let mut ev = CachingEvaluator::new(Testbed::noiseless(hardware::a100()));
+        let ctx = EvalContext::new(&m, &t, Parallelism::Sequential);
+        let mut rng = Rng::new(14);
+        let mut distinct: Vec<Config> = Vec::new();
+        while distinct.len() < 10 {
+            let c = enumerate::sample(&mut rng);
+            if !distinct.contains(&c) {
+                distinct.push(c);
+            }
+        }
+        let batch: Vec<Config> =
+            (0..1000).map(|i| distinct[i % distinct.len()]).collect();
+        let out = ev.measure_batch(&batch, &ctx, &mut rng);
+        assert_eq!(out.len(), batch.len());
+        assert_eq!(ev.misses(), distinct.len());
+        assert_eq!(ev.hits(), batch.len() - distinct.len());
+        assert_eq!(ev.cached(), distinct.len());
+        // The inner backend measured each distinct config exactly once.
+        assert_eq!(Evaluator::evals(ev.inner()), distinct.len());
+        // Every duplicate replays the first occurrence's value bitwise.
+        for (i, c) in batch.iter().enumerate() {
+            let first = batch.iter().position(|x| x == c).unwrap();
+            assert_eq!(out[i], out[first]);
+        }
     }
 
     #[test]

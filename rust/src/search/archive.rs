@@ -25,7 +25,7 @@ use std::collections::BTreeMap;
 
 use crate::config::Config;
 use crate::oracle::Objectives;
-use crate::search::dominance::{self, MinVec};
+use crate::search::dominance::{self, first_coord_key, MinVec};
 use crate::util::json::Json;
 use crate::util::pool::{self, Parallelism};
 
@@ -53,15 +53,17 @@ pub struct ParetoArchive {
     min_vecs: Vec<MinVec>,
     /// Persistent duplicate-config index: config -> position.
     index: BTreeMap<Config, usize>,
+    /// Monotone mutation counter: bumped by every [`insert`](Self::insert)
+    /// that changes the archive (accepted candidates and duplicate-config
+    /// refreshes; rejections leave it untouched).  Derived values that
+    /// are pure functions of the entry list — the observer's
+    /// per-iteration hypervolume — key their memoization on it (see
+    /// `coordinator::algorithm1::HvGate`).
+    version: u64,
 }
 
-/// Sort key for the first-objective prefix pruning: NaN maps to -inf so
-/// a NaN-coordinate entry is always inside the scanned prefix (the
-/// prefix must be a *superset* of possible dominators; the exact
-/// dominance test runs on everything it admits).
-fn first_coord_key(x: f64) -> f64 {
-    if x.is_nan() { f64::NEG_INFINITY } else { x }
-}
+// The first-objective prefix-pruning key (`first_coord_key`) is shared
+// with the dominance kernels; see `dominance::first_coord_key`.
 
 impl ParetoArchive {
     pub fn new(capacity: usize) -> Self {
@@ -70,6 +72,7 @@ impl ParetoArchive {
             capacity,
             min_vecs: Vec::new(),
             index: BTreeMap::new(),
+            version: 0,
         }
     }
 
@@ -82,7 +85,7 @@ impl ParetoArchive {
             .enumerate()
             .map(|(i, e)| (e.config, i))
             .collect();
-        ParetoArchive { entries, capacity, min_vecs, index }
+        ParetoArchive { entries, capacity, min_vecs, index, version: 0 }
     }
 
     /// Drop every entry whose `keep` flag is false, preserving order,
@@ -114,6 +117,7 @@ impl ParetoArchive {
         // Replace stale duplicate if present (O(log n) via the index;
         // previously a linear scan per candidate).
         if let Some(&pos) = self.index.get(&config) {
+            self.version += 1;
             self.entries[pos].objectives = objectives;
             self.min_vecs[pos] = objectives.as_min_vec();
             self.prune_dominated();
@@ -135,6 +139,7 @@ impl ParetoArchive {
                 .collect();
             self.compact(&keep);
         }
+        self.version += 1;
         self.index.insert(config, self.entries.len());
         self.entries.push(Entry { config, objectives });
         self.min_vecs.push(cand);
@@ -142,6 +147,14 @@ impl ParetoArchive {
             self.truncate_by_crowding();
         }
         true
+    }
+
+    /// Monotone mutation counter (see the field docs): equal versions
+    /// of the *same* archive instance guarantee identical entries, so
+    /// derived pure functions of the entry list can be change-gated on
+    /// it.
+    pub fn version(&self) -> u64 {
+        self.version
     }
 
     /// Insert a whole evaluated batch; returns the per-item acceptance
@@ -247,11 +260,14 @@ impl ParetoArchive {
             let front: Vec<usize> = (0..self.min_vecs.len()).collect();
             let dist = dominance::crowding_distance(&self.min_vecs, &front);
             // First minimum — `Iterator::min_by` semantics, which the
-            // reference implementation relies on for victim ties.
+            // reference implementation relies on for victim ties
+            // (total_cmp: same victim as the historical partial_cmp on
+            // the +inf/finite distances crowding produces, minus the
+            // NaN abort).
             let (victim, _) = dist
                 .iter()
                 .enumerate()
-                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .min_by(|a, b| a.1.total_cmp(b.1))
                 .unwrap();
             self.index.remove(&self.entries[victim].config);
             self.entries.remove(victim);

@@ -1,5 +1,34 @@
 //! Pareto dominance machinery: fast non-dominated sorting and crowding
 //! distance (Deb et al. 2002), the core of the modified NSGA-II.
+//!
+//! Two generations of kernels live in the search layer (DESIGN.md §15
+//! "Hot-path inventory", §17 "Search-kernel inventory"):
+//!
+//! * this module — the production kernels.  `non_dominated_sort` sorts
+//!   candidates by first objective once so the pairwise dominance pass
+//!   tests one direction per pair instead of two (a dominator must be
+//!   `<=` in *every* coordinate, so only the key-`<=` half-space can
+//!   dominate), and stores the dominance graph in a reusable flat
+//!   bitset ([`SortScratch`]) instead of per-call `Vec<Vec<usize>>`
+//!   adjacency lists.  `crowding_distance` gathers each objective
+//!   column into a reusable scratch ([`CrowdingScratch`]) so the
+//!   per-objective argsort re-sorts a flat key array instead of
+//!   chasing `objs[front[a]][obj]` through two indirections per
+//!   comparison.  Both are *bit-identical* to the retained textbook
+//!   implementations in [`super::reference`] — front order, tie
+//!   order and every float — which the differential tests enforce
+//!   with exact `.to_bits()` equality.
+//! * [`super::reference`] — the pre-rewrite kernels, retained verbatim
+//!   as the differential-testing oracle and the "before" rows of
+//!   `benches/perf_search.rs`.
+//!
+//! Comparator note: these kernels order floats with `f64::total_cmp`
+//! where the references used `partial_cmp(..).unwrap()`.  The orders
+//! agree on every input that did not previously panic, except that
+//! `total_cmp` distinguishes `-0.0 < +0.0` where `partial_cmp` ties
+//! them (objective vectors never produce a meaningful ±0 split), and a
+//! NaN objective now sorts deterministically instead of aborting the
+//! process (see `nan_objectives_do_not_panic`).
 
 /// Objective vectors are in *minimization* convention ([f64; 4] from
 /// `Objectives::as_min_vec`).
@@ -19,36 +48,106 @@ pub fn dominates(a: &MinVec, b: &MinVec) -> bool {
     strict
 }
 
+/// Sort key for the first-objective prefix pruning: NaN maps to -inf so
+/// a NaN-coordinate entry is always inside the scanned prefix (the
+/// prefix must be a *superset* of possible dominators; the exact
+/// dominance test runs on everything it admits).  Shared with the
+/// archive's batched pre-filter.
+pub(crate) fn first_coord_key(x: f64) -> f64 {
+    if x.is_nan() { f64::NEG_INFINITY } else { x }
+}
+
+/// Reusable scratch for [`non_dominated_sort_with`]: the first-objective
+/// sort keys, the sorted candidate order, the dominance graph as a flat
+/// bitset (row i = the set of indices i dominates) and the per-index
+/// dominator counts.  One instance amortizes every allocation across
+/// the generations of a search run; [`non_dominated_sort`] wraps a
+/// throwaway one for call sites without a loop to carry it through.
+#[derive(Clone, Debug, Default)]
+pub struct SortScratch {
+    keys: Vec<f64>,
+    order: Vec<u32>,
+    bits: Vec<u64>,
+    dom_count: Vec<u32>,
+}
+
 /// Fast non-dominated sort: returns fronts as index lists, best first.
-/// O(M·N²) as in the paper's complexity analysis.
-pub fn non_dominated_sort(objs: &[MinVec]) -> Vec<Vec<usize>> {
+/// O(M·N²) pairwise tests as in the paper's complexity analysis, but
+/// the candidates are sorted by first objective once so each pair is
+/// tested in one direction only (the reverse direction is impossible
+/// unless the first coordinates tie; NaN first coordinates are handled
+/// conservatively via [`first_coord_key`]).
+///
+/// The front decomposition — *including the index order within each
+/// front and the order of the fronts* — is bit-identical to
+/// [`super::reference::ref_non_dominated_sort`].  That order is part
+/// of the contract: environmental selection in `nsga2.rs` walks fronts
+/// in order and breaks capacity ties by stable crowding sorts, so any
+/// reordering here would change search trajectories.  The flat bitset
+/// reproduces it exactly because a bitset row is iterated in ascending
+/// index order, which is provably the order the reference's adjacency
+/// lists are built in (dominators at outer index i push smaller
+/// indices before larger ones).
+pub fn non_dominated_sort_with(s: &mut SortScratch,
+                               objs: &[MinVec]) -> Vec<Vec<usize>> {
     let n = objs.len();
     if n == 0 {
         return Vec::new();
     }
-    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
-    let mut dom_count = vec![0usize; n]; // how many dominate i
-    for i in 0..n {
-        for j in (i + 1)..n {
-            if dominates(&objs[i], &objs[j]) {
-                dominated_by[i].push(j);
-                dom_count[j] += 1;
-            } else if dominates(&objs[j], &objs[i]) {
-                dominated_by[j].push(i);
-                dom_count[i] += 1;
+    s.keys.clear();
+    s.keys.extend(objs.iter().map(|o| first_coord_key(o[0])));
+    s.order.clear();
+    s.order.extend(0..n as u32);
+    {
+        let keys = &s.keys;
+        // Stable, so equal keys stay in ascending index order.
+        s.order.sort_by(|&a, &b| {
+            keys[a as usize].total_cmp(&keys[b as usize])
+        });
+    }
+    let wpr = (n + 63) / 64; // bitset words per row
+    s.bits.clear();
+    s.bits.resize(n * wpr, 0);
+    s.dom_count.clear();
+    s.dom_count.resize(n, 0);
+    for q in 1..n {
+        let iq = s.order[q] as usize;
+        let oq = &objs[iq];
+        let kq = s.keys[iq];
+        for p in 0..q {
+            let ip = s.order[p] as usize;
+            let op = &objs[ip];
+            if dominates(op, oq) {
+                s.bits[ip * wpr + (iq >> 6)] |= 1u64 << (iq & 63);
+                s.dom_count[iq] += 1;
+            } else if (s.keys[ip] == kq || op[0].is_nan())
+                && dominates(oq, op)
+            {
+                // The later-sorted point can only dominate the earlier
+                // one when their first-coordinate keys tie, or when the
+                // earlier point's first coordinate is NaN (it compares
+                // false against everything, so it constrains nothing).
+                s.bits[iq * wpr + (ip >> 6)] |= 1u64 << (ip & 63);
+                s.dom_count[ip] += 1;
             }
         }
     }
     let mut fronts: Vec<Vec<usize>> = Vec::new();
     let mut current: Vec<usize> =
-        (0..n).filter(|&i| dom_count[i] == 0).collect();
+        (0..n).filter(|&i| s.dom_count[i] == 0).collect();
     while !current.is_empty() {
         let mut next = Vec::new();
         for &i in &current {
-            for &j in &dominated_by[i] {
-                dom_count[j] -= 1;
-                if dom_count[j] == 0 {
-                    next.push(j);
+            let row = &s.bits[i * wpr..(i + 1) * wpr];
+            for (w, &bits) in row.iter().enumerate() {
+                let mut word = bits;
+                while word != 0 {
+                    let j = (w << 6) | word.trailing_zeros() as usize;
+                    word &= word - 1;
+                    s.dom_count[j] -= 1;
+                    if s.dom_count[j] == 0 {
+                        next.push(j);
+                    }
                 }
             }
         }
@@ -57,43 +156,98 @@ pub fn non_dominated_sort(objs: &[MinVec]) -> Vec<Vec<usize>> {
     fronts
 }
 
+/// [`non_dominated_sort_with`] through a throwaway scratch, for call
+/// sites without a search loop to amortize one across.
+pub fn non_dominated_sort(objs: &[MinVec]) -> Vec<Vec<usize>> {
+    non_dominated_sort_with(&mut SortScratch::default(), objs)
+}
+
+/// Reusable scratch for [`crowding_distance_with`]: the cumulative
+/// argsort permutation and the gathered objective column.
+#[derive(Clone, Debug, Default)]
+pub struct CrowdingScratch {
+    order: Vec<u32>,
+    keys: Vec<f64>,
+}
+
 /// Crowding distance of each member within one front (diversity
 /// preservation §3.3.2).  Boundary solutions get +inf.
-pub fn crowding_distance(objs: &[MinVec], front: &[usize]) -> Vec<f64> {
+///
+/// Bit-identical to [`super::reference::ref_crowding_distance`]: the
+/// argsort permutation is initialized to identity once per call and
+/// then *cumulatively* re-sorted per objective (stable sorts of the
+/// previous permutation — resetting it would change tie ordering), and
+/// the distance contributions are added in the same order with the
+/// same operands, so every output float matches to the bit.
+pub fn crowding_distance_with(s: &mut CrowdingScratch, objs: &[MinVec],
+                              front: &[usize]) -> Vec<f64> {
     let n = front.len();
-    let mut dist = vec![0.0f64; n];
     if n <= 2 {
         return vec![f64::INFINITY; n];
     }
+    let mut dist = vec![0.0f64; n];
     let m = objs[0].len();
-    let mut order: Vec<usize> = (0..n).collect();
+    s.order.clear();
+    s.order.extend(0..n as u32);
     for obj in 0..m {
-        order.sort_by(|&a, &b| {
-            objs[front[a]][obj]
-                .partial_cmp(&objs[front[b]][obj])
-                .unwrap()
+        s.keys.clear();
+        s.keys.extend(front.iter().map(|&i| objs[i][obj]));
+        let keys = &s.keys;
+        s.order.sort_by(|&a, &b| {
+            keys[a as usize].total_cmp(&keys[b as usize])
         });
-        let lo = objs[front[order[0]]][obj];
-        let hi = objs[front[order[n - 1]]][obj];
-        dist[order[0]] = f64::INFINITY;
-        dist[order[n - 1]] = f64::INFINITY;
+        let lo = keys[s.order[0] as usize];
+        let hi = keys[s.order[n - 1] as usize];
+        dist[s.order[0] as usize] = f64::INFINITY;
+        dist[s.order[n - 1] as usize] = f64::INFINITY;
         let span = hi - lo;
         if span <= 0.0 {
             continue;
         }
         for k in 1..n - 1 {
-            let prev = objs[front[order[k - 1]]][obj];
-            let next = objs[front[order[k + 1]]][obj];
-            dist[order[k]] += (next - prev) / span;
+            let prev = keys[s.order[k - 1] as usize];
+            let next = keys[s.order[k + 1] as usize];
+            dist[s.order[k] as usize] += (next - prev) / span;
         }
     }
     dist
 }
 
+/// [`crowding_distance_with`] through a throwaway scratch.
+pub fn crowding_distance(objs: &[MinVec], front: &[usize]) -> Vec<f64> {
+    crowding_distance_with(&mut CrowdingScratch::default(), objs, front)
+}
+
 /// Extract the non-dominated subset of a set of objective vectors
-/// (indices into `objs`).
+/// (indices into `objs`, ascending — exactly front 0 of
+/// [`non_dominated_sort`], computed without building the full front
+/// decomposition: each candidate scans only the first-objective prefix
+/// that could dominate it).
 pub fn pareto_front(objs: &[MinVec]) -> Vec<usize> {
-    non_dominated_sort(objs).into_iter().next().unwrap_or_default()
+    let n = objs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut by_key: Vec<(f64, u32)> = (0..n)
+        .map(|i| (first_coord_key(objs[i][0]), i as u32))
+        .collect();
+    by_key.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let mut front = Vec::new();
+    'cand: for i in 0..n {
+        let hi = if objs[i][0].is_nan() {
+            f64::INFINITY
+        } else {
+            objs[i][0]
+        };
+        let prefix = by_key.partition_point(|&(k, _)| k <= hi);
+        for &(_, j) in &by_key[..prefix] {
+            if j as usize != i && dominates(&objs[j as usize], &objs[i]) {
+                continue 'cand;
+            }
+        }
+        front.push(i);
+    }
+    front
 }
 
 #[cfg(test)]
@@ -170,6 +324,31 @@ mod tests {
     }
 
     #[test]
+    fn scratch_reuse_matches_fresh_scratch() {
+        // The same SortScratch carried across differently-sized calls
+        // must behave exactly like a fresh one each time.
+        let mut rng = crate::util::Rng::new(8);
+        let mut scratch = SortScratch::default();
+        let mut crowd = CrowdingScratch::default();
+        for n in [40usize, 7, 0, 120, 1, 40] {
+            let objs: Vec<MinVec> = (0..n)
+                .map(|_| [rng.f64(), rng.f64(), rng.f64(), rng.f64()])
+                .collect();
+            let reused = non_dominated_sort_with(&mut scratch, &objs);
+            let fresh = non_dominated_sort(&objs);
+            assert_eq!(reused, fresh, "n={n}");
+            for front in &fresh {
+                let a = crowding_distance_with(&mut crowd, &objs, front);
+                let b = crowding_distance(&objs, front);
+                let bits = |v: &[f64]| -> Vec<u64> {
+                    v.iter().map(|x| x.to_bits()).collect()
+                };
+                assert_eq!(bits(&a), bits(&b), "n={n}");
+            }
+        }
+    }
+
+    #[test]
     fn crowding_boundaries_infinite() {
         let objs = vec![
             [0.0, 3.0, 0.0, 0.0],
@@ -219,5 +398,47 @@ mod tests {
                 assert!(!dominates(&objs[i], &objs[j]) || i == j);
             }
         }
+    }
+
+    #[test]
+    fn pareto_front_is_front_zero_of_the_sort() {
+        let mut rng = crate::util::Rng::new(12);
+        for n in [0usize, 1, 2, 33, 150] {
+            let objs: Vec<MinVec> = (0..n)
+                .map(|_| {
+                    // quantized to force duplicate coordinates and ties
+                    let q = |v: f64| (v * 8.0).floor() / 8.0;
+                    [q(rng.f64()), q(rng.f64()), q(rng.f64()), q(rng.f64())]
+                })
+                .collect();
+            let direct = pareto_front(&objs);
+            let via_sort = non_dominated_sort(&objs)
+                .into_iter()
+                .next()
+                .unwrap_or_default();
+            assert_eq!(direct, via_sort, "n={n}");
+        }
+    }
+
+    /// Satellite regression: a NaN objective used to abort the process
+    /// through `partial_cmp(..).unwrap()` in the crowding comparator.
+    /// With `total_cmp` the kernels stay total-ordered and terminate.
+    #[test]
+    fn nan_objectives_do_not_panic() {
+        let objs = vec![
+            [0.1, 0.9, 0.2, 0.3],
+            [f64::NAN, 0.5, 0.5, 0.5],
+            [0.4, f64::NAN, 0.1, 0.9],
+            [0.4, 0.4, 0.4, 0.4],
+            [f64::NAN, f64::NAN, f64::NAN, f64::NAN],
+        ];
+        let fronts = non_dominated_sort(&objs);
+        let total: usize = fronts.iter().map(|f| f.len()).sum();
+        assert_eq!(total, objs.len());
+        let front: Vec<usize> = (0..objs.len()).collect();
+        let d = crowding_distance(&objs, &front);
+        assert_eq!(d.len(), objs.len());
+        let pf = pareto_front(&objs);
+        assert!(!pf.is_empty());
     }
 }

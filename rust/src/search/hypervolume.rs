@@ -1,78 +1,149 @@
 //! Hypervolume indicator: the standard scalar quality measure of a
 //! Pareto front (volume of objective space dominated by the front,
 //! bounded by a reference point).  Used by the ablation benches to
-//! compare search variants beyond the single chosen-config score, and
-//! by tests as a convergence invariant.
+//! compare search variants beyond the single chosen-config score, by
+//! the observer's per-iteration convergence snapshot, and by tests as
+//! a convergence invariant.
 //!
 //! Exact computation in 4-D is implemented by recursive dimension
 //! sweep (WFG-style slicing) — fine for front sizes ≤ a few hundred.
+//! Since the search-kernel speed pass (DESIGN.md §17) the recursion
+//! runs on an arena of flat row-major buffers ([`HvScratch`]), one per
+//! recursion level, instead of cloning `Vec<Vec<f64>>` at every level;
+//! the sweep order, the slab-sum order and every float operation are
+//! unchanged, so the result is bit-identical to the retained
+//! [`super::reference::ref_hypervolume`] (differential-tested with
+//! exact `.to_bits()` equality).
 
 use super::dominance::MinVec;
+
+/// Per-recursion-level buffers: the active point set accumulated by
+/// the sweep, its non-dominated subset (rebuilt per slab), and the
+/// argsort over the level's last dimension.  All flat row-major with
+/// the level's point width as stride.
+#[derive(Clone, Debug, Default)]
+struct LevelScratch {
+    active: Vec<f64>,
+    nd: Vec<f64>,
+    order: Vec<usize>,
+}
+
+/// Reusable arena for [`hypervolume_with`]: the clipped top-level point
+/// set plus one [`LevelScratch`] per recursion level below the top.
+/// One instance amortizes every allocation across repeated hypervolume
+/// queries (the observer loop, benches); [`hypervolume`] wraps a
+/// throwaway one.
+#[derive(Clone, Debug)]
+pub struct HvScratch {
+    top: Vec<f64>,
+    levels: Vec<LevelScratch>,
+}
+
+impl HvScratch {
+    pub fn new() -> Self {
+        HvScratch {
+            top: Vec::new(),
+            // Levels are consumed at d = 4, 3, 2 (d = 1 is the closed
+            // base case), so three suffice for MinVec input.
+            levels: (0..3).map(|_| LevelScratch::default()).collect(),
+        }
+    }
+}
+
+impl Default for HvScratch {
+    fn default() -> Self {
+        HvScratch::new()
+    }
+}
 
 /// Exact hypervolume of `points` (minimization convention) with respect
 /// to reference point `r` (must be dominated by every point).
 /// Points outside the reference box are clipped.
 pub fn hypervolume(points: &[MinVec], r: &MinVec) -> f64 {
-    // Keep only points that strictly dominate the reference somewhere.
-    let pts: Vec<Vec<f64>> = points
-        .iter()
-        .filter(|p| p.iter().zip(r).all(|(a, b)| a <= b))
-        .map(|p| p.to_vec())
-        .collect();
-    hv_rec(&pts, &r.to_vec())
+    hypervolume_with(&mut HvScratch::default(), points, r)
 }
 
-fn hv_rec(points: &[Vec<f64>], r: &[f64]) -> f64 {
-    let d = r.len();
-    if points.is_empty() {
+/// [`hypervolume`] through a caller-owned arena — the zero-allocation
+/// form for call sites with a loop to amortize one across.
+pub fn hypervolume_with(s: &mut HvScratch, points: &[MinVec],
+                        r: &MinVec) -> f64 {
+    // Keep only points inside the reference box (a NaN coordinate
+    // fails the `<=` test, so NaN points never enter the recursion).
+    s.top.clear();
+    for p in points {
+        if p.iter().zip(r).all(|(a, b)| a <= b) {
+            s.top.extend_from_slice(p);
+        }
+    }
+    hv_level(&s.top, 4, r, &mut s.levels)
+}
+
+/// One recursion level over flat rows of width `d`.  Mirrors the
+/// reference `ref_hv_rec` exactly: ascending sweep over the last
+/// dimension — after including the k-th point, the slab
+/// [z_k, z_{k+1}) (z_{n+1} = r_z) has a cross-section equal to the
+/// (d-1)-dim hypervolume of the first k points.
+fn hv_level(pts: &[f64], d: usize, r: &[f64],
+            levels: &mut [LevelScratch]) -> f64 {
+    let n = pts.len() / d;
+    if n == 0 {
         return 0.0;
     }
     if d == 1 {
-        let best = points
-            .iter()
-            .map(|p| p[0])
-            .fold(f64::INFINITY, f64::min);
+        let best = pts.iter().copied().fold(f64::INFINITY, f64::min);
         return (r[0] - best).max(0.0);
     }
-    // Ascending sweep over the last dimension: after including the k-th
-    // point, the slab [z_k, z_{k+1}) (z_{n+1} = r_z) has a cross-section
-    // equal to the (d-1)-dim hypervolume of the first k points.
-    let mut order: Vec<usize> = (0..points.len()).collect();
-    order.sort_by(|&a, &b| {
-        points[a][d - 1].partial_cmp(&points[b][d - 1]).unwrap()
+    let (level, rest) = levels.split_first_mut()
+        .expect("HvScratch arena shallower than the recursion");
+    level.order.clear();
+    level.order.extend(0..n);
+    level.order.sort_by(|&a, &b| {
+        pts[a * d + d - 1].total_cmp(&pts[b * d + d - 1])
     });
+    level.active.clear();
     let mut volume = 0.0;
-    let mut active: Vec<Vec<f64>> = Vec::new();
-    for (k, &i) in order.iter().enumerate() {
-        active.push(points[i][..d - 1].to_vec());
-        let z_lo = points[i][d - 1];
-        let z_hi = if k + 1 < order.len() {
-            points[order[k + 1]][d - 1]
+    for k in 0..n {
+        let i = level.order[k];
+        level.active.extend_from_slice(&pts[i * d..i * d + d - 1]);
+        let z_lo = pts[i * d + d - 1];
+        let z_hi = if k + 1 < n {
+            pts[level.order[k + 1] * d + d - 1]
         } else {
             r[d - 1]
         };
         if z_hi > z_lo {
-            let slice = hv_rec(&nondominated(&active), &r[..d - 1].to_vec());
+            nondominated_into(&level.active, d - 1, &mut level.nd);
+            let slice = hv_level(&level.nd, d - 1, &r[..d - 1], rest);
             volume += slice * (z_hi - z_lo);
         }
     }
     volume
 }
 
-/// Strip dominated points (minimization, arbitrary dimension).
-fn nondominated(points: &[Vec<f64>]) -> Vec<Vec<f64>> {
-    let mut keep = Vec::new();
-    'outer: for (i, p) in points.iter().enumerate() {
-        for (j, q) in points.iter().enumerate() {
-            if i != j && dominates_vec(q, p) {
+/// Write the non-dominated subset of `pts` (flat rows of width `d`)
+/// into `out`, preserving row order and keeping the first of any run
+/// of duplicate rows.  One fused scan replaces the reference's
+/// dominance pass + `keep.contains` duplicate re-scan: a duplicate of
+/// a *dominated* row is itself dominated (dominance depends only on
+/// coordinate values), so dropping a row when an earlier *equal* row
+/// exists filters exactly the duplicates the reference's kept-set
+/// lookup did.
+fn nondominated_into(pts: &[f64], d: usize, out: &mut Vec<f64>) {
+    out.clear();
+    let n = pts.len() / d;
+    'outer: for i in 0..n {
+        let p = &pts[i * d..(i + 1) * d];
+        for j in 0..n {
+            if j == i {
+                continue;
+            }
+            let q = &pts[j * d..(j + 1) * d];
+            if dominates_vec(q, p) || (j < i && q == p) {
                 continue 'outer;
             }
         }
-        if !keep.contains(p) {
-            keep.push(p.clone());
-        }
+        out.extend_from_slice(p);
     }
-    keep
 }
 
 fn dominates_vec(a: &[f64], b: &[f64]) -> bool {
@@ -168,6 +239,39 @@ mod tests {
         let worse = hypervolume(&[[1.0, 1.0, 1.0, 1.0]], &r);
         let better = hypervolume(&[[0.5, 1.0, 1.0, 1.0]], &r);
         assert!(better > worse);
+    }
+
+    #[test]
+    fn duplicate_points_add_nothing() {
+        let r = [3.0, 3.0, 1.0, 1.0];
+        let one = hypervolume(&[[1.0, 1.0, 0.0, 0.0]], &r);
+        let two = hypervolume(
+            &[[1.0, 1.0, 0.0, 0.0], [1.0, 1.0, 0.0, 0.0]], &r);
+        assert_eq!(one.to_bits(), two.to_bits());
+    }
+
+    #[test]
+    fn scratch_reuse_matches_fresh_scratch() {
+        let mut rng = crate::util::Rng::new(21);
+        let mut scratch = HvScratch::default();
+        let r = [2.0, 2.0, 2.0, 2.0];
+        for n in [0usize, 1, 5, 40, 12] {
+            let pts: Vec<MinVec> = (0..n)
+                .map(|_| [rng.f64(), rng.f64(), rng.f64(), rng.f64()])
+                .collect();
+            let reused = hypervolume_with(&mut scratch, &pts, &r);
+            let fresh = hypervolume(&pts, &r);
+            assert_eq!(reused.to_bits(), fresh.to_bits(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn nan_points_are_clipped_not_fatal() {
+        let r = [3.0, 3.0, 1.0, 1.0];
+        let clean = hypervolume(&[[1.0, 1.0, 0.0, 0.0]], &r);
+        let with_nan = hypervolume(
+            &[[1.0, 1.0, 0.0, 0.0], [f64::NAN, 0.5, 0.5, 0.5]], &r);
+        assert_eq!(clean.to_bits(), with_nan.to_bits());
     }
 
     #[test]

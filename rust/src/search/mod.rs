@@ -10,6 +10,7 @@ pub mod dominance;
 pub mod hypervolume;
 pub mod nsga2;
 pub mod operators;
+pub mod reference;
 pub mod strategy;
 
 pub use archive::{Entry, ParetoArchive, FRONT_SCHEMA};

@@ -202,6 +202,12 @@ where
     let mut archive = ParetoArchive::new(params.archive_capacity);
     insert_feasible(&mut archive, &pop, &objs, feasible, params.parallelism);
 
+    // Kernel scratch carried across generations (DESIGN.md §17): the
+    // sort's dominance bitset and crowding's argsort/column buffers
+    // are allocated once per run instead of twice per generation.
+    let mut sort_scratch = dominance::SortScratch::default();
+    let mut crowd_scratch = dominance::CrowdingScratch::default();
+
     for _gen in 0..params.generations {
         // Rank + crowding of the current population (feasibility as a
         // death penalty: infeasible points get pushed behind all fronts).
@@ -210,11 +216,13 @@ where
             .zip(&objs)
             .map(|(c, o)| penalized(c, o, feasible))
             .collect();
-        let fronts = dominance::non_dominated_sort(&min_vecs);
+        let fronts =
+            dominance::non_dominated_sort_with(&mut sort_scratch, &min_vecs);
         let mut rank = vec![0usize; n];
         let mut crowding = vec![0.0f64; n];
         for (r, front) in fronts.iter().enumerate() {
-            let d = dominance::crowding_distance(&min_vecs, front);
+            let d = dominance::crowding_distance_with(&mut crowd_scratch,
+                                                      &min_vecs, front);
             for (k, &i) in front.iter().enumerate() {
                 rank[i] = r;
                 crowding[i] = d[k];
@@ -240,7 +248,9 @@ where
             .zip(&union_objs)
             .map(|(c, o)| penalized(c, o, feasible))
             .collect();
-        let fronts = dominance::non_dominated_sort(&union_vecs);
+        let fronts =
+            dominance::non_dominated_sort_with(&mut sort_scratch,
+                                               &union_vecs);
 
         let mut next_pop = Vec::with_capacity(n);
         let mut next_objs = Vec::with_capacity(n);
@@ -252,9 +262,13 @@ where
                 }
             } else {
                 // partial fill by descending crowding distance
-                let d = dominance::crowding_distance(&union_vecs, front);
+                // (total_cmp: same order as the historical partial_cmp
+                // on the +inf/finite values crowding produces, minus
+                // the NaN abort)
+                let d = dominance::crowding_distance_with(&mut crowd_scratch,
+                                                          &union_vecs, front);
                 let mut order: Vec<usize> = (0..front.len()).collect();
-                order.sort_by(|&a, &b| d[b].partial_cmp(&d[a]).unwrap());
+                order.sort_by(|&a, &b| d[b].total_cmp(&d[a]));
                 for &k in &order {
                     if next_pop.len() >= n {
                         break 'outer;

@@ -1,0 +1,323 @@
+//! Retained reference implementations of the search kernels
+//! (DESIGN.md §15/§17 idiom): the textbook non-dominated sort, crowding
+//! distance and WFG-style hypervolume exactly as they ran before the
+//! speed pass, kept as the differential-testing oracle and the
+//! "before" rows of `benches/perf_search.rs`.
+//!
+//! Not for production use: the sort allocates `Vec<Vec<usize>>`
+//! adjacency lists and tests every pair in both directions, crowding
+//! re-sorts through two levels of indirection per comparison, and the
+//! hypervolume recursion clones `Vec<Vec<f64>>` at every level.
+//!
+//! The only deliberate difference from the historical text is the
+//! comparator: `f64::total_cmp` instead of `partial_cmp(..).unwrap()`,
+//! the same NaN-abort fix the production kernels carry, so the
+//! differential tests can include NaN regimes.  On every input that
+//! did not previously panic the ordering is unchanged (modulo the
+//! `-0.0 < +0.0` distinction noted in [`super::dominance`]).
+//!
+//! These are `pub` rather than `#[cfg(test)]` because the bench
+//! binaries compile against the library without its test cfg.
+
+use super::dominance::{dominates, MinVec};
+
+/// [`super::dominance::non_dominated_sort`], pre-rewrite
+/// implementation: per-call adjacency lists, both dominance directions
+/// tested per pair.
+pub fn ref_non_dominated_sort(objs: &[MinVec]) -> Vec<Vec<usize>> {
+    let n = objs.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut dom_count = vec![0usize; n];
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if dominates(&objs[i], &objs[j]) {
+                dominated_by[i].push(j);
+                dom_count[j] += 1;
+            } else if dominates(&objs[j], &objs[i]) {
+                dominated_by[j].push(i);
+                dom_count[i] += 1;
+            }
+        }
+    }
+    let mut fronts: Vec<Vec<usize>> = Vec::new();
+    let mut current: Vec<usize> =
+        (0..n).filter(|&i| dom_count[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                dom_count[j] -= 1;
+                if dom_count[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::replace(&mut current, next));
+    }
+    fronts
+}
+
+/// [`super::dominance::crowding_distance`], pre-rewrite
+/// implementation: the argsort comparator reads
+/// `objs[front[a]][obj]` through both indirections on every
+/// comparison.
+pub fn ref_crowding_distance(objs: &[MinVec], front: &[usize]) -> Vec<f64> {
+    let n = front.len();
+    let mut dist = vec![0.0f64; n];
+    if n <= 2 {
+        return vec![f64::INFINITY; n];
+    }
+    let m = objs[0].len();
+    let mut order: Vec<usize> = (0..n).collect();
+    for obj in 0..m {
+        order.sort_by(|&a, &b| {
+            objs[front[a]][obj].total_cmp(&objs[front[b]][obj])
+        });
+        let lo = objs[front[order[0]]][obj];
+        let hi = objs[front[order[n - 1]]][obj];
+        dist[order[0]] = f64::INFINITY;
+        dist[order[n - 1]] = f64::INFINITY;
+        let span = hi - lo;
+        if span <= 0.0 {
+            continue;
+        }
+        for k in 1..n - 1 {
+            let prev = objs[front[order[k - 1]]][obj];
+            let next = objs[front[order[k + 1]]][obj];
+            dist[order[k]] += (next - prev) / span;
+        }
+    }
+    dist
+}
+
+/// [`super::dominance::pareto_front`], pre-rewrite implementation
+/// (front 0 of the full sort).
+pub fn ref_pareto_front(objs: &[MinVec]) -> Vec<usize> {
+    ref_non_dominated_sort(objs).into_iter().next().unwrap_or_default()
+}
+
+/// [`super::hypervolume::hypervolume`], pre-rewrite implementation:
+/// clones the point set into `Vec<Vec<f64>>` and re-clones at every
+/// recursion level.
+pub fn ref_hypervolume(points: &[MinVec], r: &MinVec) -> f64 {
+    let pts: Vec<Vec<f64>> = points
+        .iter()
+        .filter(|p| p.iter().zip(r).all(|(a, b)| a <= b))
+        .map(|p| p.to_vec())
+        .collect();
+    ref_hv_rec(&pts, &r.to_vec())
+}
+
+fn ref_hv_rec(points: &[Vec<f64>], r: &[f64]) -> f64 {
+    let d = r.len();
+    if points.is_empty() {
+        return 0.0;
+    }
+    if d == 1 {
+        let best = points
+            .iter()
+            .map(|p| p[0])
+            .fold(f64::INFINITY, f64::min);
+        return (r[0] - best).max(0.0);
+    }
+    let mut order: Vec<usize> = (0..points.len()).collect();
+    order.sort_by(|&a, &b| points[a][d - 1].total_cmp(&points[b][d - 1]));
+    let mut volume = 0.0;
+    let mut active: Vec<Vec<f64>> = Vec::new();
+    for (k, &i) in order.iter().enumerate() {
+        active.push(points[i][..d - 1].to_vec());
+        let z_lo = points[i][d - 1];
+        let z_hi = if k + 1 < order.len() {
+            points[order[k + 1]][d - 1]
+        } else {
+            r[d - 1]
+        };
+        if z_hi > z_lo {
+            let slice =
+                ref_hv_rec(&ref_nondominated(&active), &r[..d - 1].to_vec());
+            volume += slice * (z_hi - z_lo);
+        }
+    }
+    volume
+}
+
+/// Strip dominated points (minimization, arbitrary dimension) — the
+/// pre-rewrite helper with its O(n²) `keep.contains` duplicate scan.
+fn ref_nondominated(points: &[Vec<f64>]) -> Vec<Vec<f64>> {
+    let mut keep = Vec::new();
+    'outer: for (i, p) in points.iter().enumerate() {
+        for (j, q) in points.iter().enumerate() {
+            if i != j && dominates_vec(q, p) {
+                continue 'outer;
+            }
+        }
+        if !keep.contains(p) {
+            keep.push(p.clone());
+        }
+    }
+    keep
+}
+
+fn dominates_vec(a: &[f64], b: &[f64]) -> bool {
+    let mut strict = false;
+    for (x, y) in a.iter().zip(b) {
+        if x > y {
+            return false;
+        }
+        if x < y {
+            strict = true;
+        }
+    }
+    strict
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::search::dominance::{
+        crowding_distance_with, non_dominated_sort_with, pareto_front,
+        CrowdingScratch, SortScratch,
+    };
+    use crate::search::hypervolume::{hypervolume_with, HvScratch};
+    use crate::util::Rng;
+
+    /// The tie/duplicate regimes the differential tests sweep.  Regime
+    /// 1 is all-tied (one repeated point), 2 a strictly dominated
+    /// chain, 3 quantized coordinates (heavy per-coordinate ties and
+    /// exact duplicate points), 4 sprinkles NaN coordinates.
+    fn gen_objs(rng: &mut Rng, n: usize, regime: u8) -> Vec<MinVec> {
+        (0..n)
+            .map(|i| match regime {
+                0 => [rng.f64(), rng.f64(), rng.f64(), rng.f64()],
+                1 => [0.5, 0.25, 0.75, 0.125],
+                2 => {
+                    let x = i as f64;
+                    [x, x, x, x]
+                }
+                3 => {
+                    let mut q = || (rng.f64() * 4.0).floor() / 4.0;
+                    [q(), q(), q(), q()]
+                }
+                _ => {
+                    let mut v = || {
+                        let x = rng.f64();
+                        if x < 0.15 { f64::NAN } else { x }
+                    };
+                    [v(), v(), v(), v()]
+                }
+            })
+            .collect()
+    }
+
+    fn bits(v: &[f64]) -> Vec<u64> {
+        v.iter().map(|x| x.to_bits()).collect()
+    }
+
+    /// The satellite property test: the pruned bitset sort returns the
+    /// *identical* `Vec<Vec<usize>>` — front order included — as the
+    /// retained reference, across random/tied/dominated/duplicate/NaN
+    /// objective sets and the n=0/1/2 edges, with one scratch reused
+    /// across every case.
+    #[test]
+    fn sort_matches_reference_exactly() {
+        let mut scratch = SortScratch::default();
+        for regime in 0..5u8 {
+            for &n in &[0usize, 1, 2, 3, 17, 64, 200] {
+                for seed in 0..3u64 {
+                    let mut rng = Rng::new(1000 * seed + n as u64 + 7);
+                    let objs = gen_objs(&mut rng, n, regime);
+                    let new = non_dominated_sort_with(&mut scratch, &objs);
+                    let old = ref_non_dominated_sort(&objs);
+                    assert_eq!(new, old,
+                               "sort diverged: regime {regime} n {n} \
+                                seed {seed}");
+                    let total: usize = new.iter().map(|f| f.len()).sum();
+                    assert_eq!(total, n, "fronts must partition the set");
+                }
+            }
+        }
+    }
+
+    /// Crowding distances are `.to_bits()`-exact against the reference
+    /// on every front of every regime (same comparator, same float add
+    /// order), with one scratch reused throughout.
+    #[test]
+    fn crowding_matches_reference_bitwise() {
+        let mut scratch = CrowdingScratch::default();
+        for regime in 0..5u8 {
+            for &n in &[0usize, 1, 2, 3, 17, 64, 200] {
+                let mut rng = Rng::new(40 + n as u64);
+                let objs = gen_objs(&mut rng, n, regime);
+                // every front of the decomposition, plus the whole set
+                // as one synthetic front
+                let mut fronts = ref_non_dominated_sort(&objs);
+                fronts.push((0..n).collect());
+                for front in &fronts {
+                    let new =
+                        crowding_distance_with(&mut scratch, &objs, front);
+                    let old = ref_crowding_distance(&objs, front);
+                    assert_eq!(bits(&new), bits(&old),
+                               "crowding diverged: regime {regime} n {n} \
+                                front len {}", front.len());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pareto_front_matches_reference() {
+        for regime in 0..5u8 {
+            for &n in &[0usize, 1, 2, 3, 17, 64, 200] {
+                let mut rng = Rng::new(90 + n as u64);
+                let objs = gen_objs(&mut rng, n, regime);
+                assert_eq!(pareto_front(&objs), ref_pareto_front(&objs),
+                           "pareto_front diverged: regime {regime} n {n}");
+            }
+        }
+    }
+
+    /// Hypervolume is `.to_bits()`-exact against the reference (same
+    /// sweep order, same slab-sum order), with one arena reused across
+    /// every case.
+    #[test]
+    fn hypervolume_matches_reference_bitwise() {
+        let mut scratch = HvScratch::default();
+        let r: MinVec = [60.0, 60.0, 60.0, 60.0];
+        for regime in 0..5u8 {
+            for &n in &[0usize, 1, 2, 3, 17, 48] {
+                for seed in 0..2u64 {
+                    let mut rng = Rng::new(500 * seed + n as u64 + 13);
+                    let objs = gen_objs(&mut rng, n, regime);
+                    let new = hypervolume_with(&mut scratch, &objs, &r);
+                    let old = ref_hypervolume(&objs, &r);
+                    assert_eq!(new.to_bits(), old.to_bits(),
+                               "hv diverged: regime {regime} n {n} seed \
+                                {seed} ({new} vs {old})");
+                    assert!(new >= 0.0 || new.is_nan());
+                }
+            }
+        }
+    }
+
+    /// The public throwaway-scratch wrappers agree with the `_with`
+    /// forms (and therefore with the references) on a mixed workload.
+    #[test]
+    fn wrappers_agree_with_scratch_forms() {
+        use crate::search::dominance::{crowding_distance,
+                                       non_dominated_sort};
+        use crate::search::hypervolume::hypervolume;
+        let mut rng = Rng::new(77);
+        let objs = gen_objs(&mut rng, 64, 3);
+        assert_eq!(non_dominated_sort(&objs),
+                   ref_non_dominated_sort(&objs));
+        let front: Vec<usize> = (0..objs.len()).collect();
+        assert_eq!(bits(&crowding_distance(&objs, &front)),
+                   bits(&ref_crowding_distance(&objs, &front)));
+        let r = [60.0; 4];
+        assert_eq!(hypervolume(&objs, &r).to_bits(),
+                   ref_hypervolume(&objs, &r).to_bits());
+    }
+}
